@@ -1,0 +1,54 @@
+//! Compare every circuit-discovery method on one task — a Table-1-style
+//! row computed live: ACDC (FP32), RTN-Q, PAHQ, EAP, HISP, SP.
+//!
+//! Run: `cargo run --release --example compare_methods -- [--model M] [--task T]`
+
+use anyhow::Result;
+use pahq::baselines::{eap, hisp, sp};
+use pahq::eval;
+use pahq::metrics::Objective;
+use pahq::patching::{PatchedForward, Policy};
+use pahq::quant::FP8_E4M3;
+use pahq::report::Table;
+use pahq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "redwood2l-sim");
+    let task = args.get_or("task", "ioi");
+    // a light threshold grid keeps this example interactive
+    let taus: Vec<f32> = pahq::acdc::paper_thresholds().into_iter().step_by(3).collect();
+
+    println!("comparing methods on {model}/{task} ({} thresholds)", taus.len());
+    let mut table = Table::new(
+        &format!("AUC-ROC on {model}/{task}"),
+        &["method", "KL div", "Task", "evals/exec"],
+    );
+
+    for method in ["acdc", "rtn-q", "pahq", "eap", "hisp", "sp"] {
+        let mut aucs = Vec::new();
+        let mut execs = String::new();
+        for obj in [Objective::Kl, Objective::LogitDiff] {
+            let mut engine = PatchedForward::new(model, task)?;
+            let gt = eval::ground_truth(&mut engine, model, task, obj)?;
+            let before = engine.forward_count;
+            let auc = match method {
+                "acdc" => eval::sweep_acdc(&mut engine, Policy::fp32(), obj, &gt, &taus)?.auc,
+                "rtn-q" => eval::sweep_acdc(&mut engine, Policy::rtn(FP8_E4M3), obj, &gt, &taus)?.auc,
+                "pahq" => eval::sweep_acdc(&mut engine, Policy::pahq(FP8_E4M3), obj, &gt, &taus)?.auc,
+                "eap" => eval::sweep_scores(&eap::scores(&mut engine, obj)?, &gt).auc,
+                "hisp" => eval::sweep_scores(&hisp::scores(&mut engine, obj)?, &gt).auc,
+                _ => {
+                    let cfg = sp::SpConfig { steps: 50, ..Default::default() };
+                    eval::sweep_scores(&sp::scores(&mut engine, &cfg)?, &gt).auc
+                }
+            };
+            aucs.push(format!("{auc:.2}"));
+            execs = format!("{}", engine.forward_count - before);
+        }
+        table.row(vec![method.into(), aucs[0].clone(), aucs[1].clone(), execs]);
+    }
+    table.print();
+    println!("(expected shape: acdc ≈ pahq >> rtn-q; eap/hisp/sp in between — paper Tab. 1)");
+    Ok(())
+}

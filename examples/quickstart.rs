@@ -1,0 +1,85 @@
+//! Quickstart — the end-to-end driver (DESIGN.md: "end-to-end validation").
+//!
+//! Loads the GPT-2-family sim model, runs PAHQ-accelerated ACDC on the
+//! IOI task through the full three-layer stack (Rust coordinator ->
+//! PJRT-compiled per-layer HLOs -> Pallas-kernel attention), and reports:
+//!   - the discovered circuit and its size,
+//!   - faithfulness against the FP32 ground-truth circuit (TPR/FPR/AUC
+//!     ingredients),
+//!   - runtime (wall, PJRT share, per-eval) and the simulated-H20
+//!     runtime/memory the paper's Tab. 3 is about.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use anyhow::Result;
+use pahq::acdc::{self, AcdcConfig};
+use pahq::eval;
+use pahq::gpu_sim::memory::{memory_model, MethodKind};
+use pahq::gpu_sim::{CostModel, RealArch};
+use pahq::metrics::{confusion, Objective};
+use pahq::patching::{PatchedForward, Policy};
+use pahq::quant::FP8_E4M3;
+use pahq::report::mmss;
+use pahq::scheduler::{predict_run, StreamConfig};
+
+fn main() -> Result<()> {
+    let (model, task, tau) = ("gpt2s-sim", "ioi", 0.01f32);
+    println!("== PAHQ quickstart: {model} / {task} / tau={tau} ==\n");
+
+    // 1. Bring up the engine: manifest + weights + PJRT executables.
+    let t0 = std::time::Instant::now();
+    let mut engine = PatchedForward::new(model, task)?;
+    println!(
+        "engine up in {:.1}s: {} params, {} nodes, {} edges, batch {}",
+        t0.elapsed().as_secs_f64(),
+        engine.manifest.n_params,
+        engine.graph.n_nodes(),
+        engine.graph.n_edges(),
+        engine.manifest.batch,
+    );
+
+    // 2. FP32 ground truth (cached after first run).
+    let gt = eval::ground_truth(&mut engine, model, task, Objective::Kl)?;
+    println!(
+        "FP32 ground-truth circuit: {} / {} edges (tau* = {:.5})\n",
+        gt.n_members(),
+        gt.delta.len(),
+        gt.tau_star
+    );
+
+    // 3. PAHQ-accelerated ACDC.
+    engine.set_session(Policy::pahq(FP8_E4M3))?;
+    let t1 = std::time::Instant::now();
+    let res = acdc::run(&mut engine, &AcdcConfig::new(tau, Objective::Kl))?;
+    let wall = t1.elapsed();
+    let p = confusion(&res.kept, &gt.member);
+    println!("PAHQ-ACDC: kept {} edges in {:.1}s ({} evals, {:.2} ms/eval)",
+             res.n_kept, wall.as_secs_f64(), res.n_evals,
+             wall.as_secs_f64() * 1e3 / res.n_evals as f64);
+    println!("vs ground truth: TPR={:.3} FPR={:.3}", p.tpr, p.fpr);
+    println!("PJRT share of wall: {:.0}%",
+             100.0 * engine.pjrt_time().as_secs_f64() / wall.as_secs_f64());
+
+    println!("\ndiscovered circuit (top of the kept list):");
+    for label in acdc::kept_edge_labels(&engine, &res).iter().take(16) {
+        println!("  {label}");
+    }
+
+    // 4. The paper's headline numbers at the paper's scale (simulated H20).
+    println!("\nsimulated H20 at GPT-2-small scale (paper Tab. 3):");
+    let arch = RealArch::by_name("gpt2").unwrap();
+    let cost = CostModel::default();
+    for (name, kind, cfg) in [
+        ("ACDC ", MethodKind::AcdcFp32, StreamConfig::NONE),
+        ("RTN-Q", MethodKind::RtnQ, StreamConfig::NONE),
+        ("PAHQ ", MethodKind::Pahq, StreamConfig::FULL),
+    ] {
+        let pr = predict_run(&arch, &cost, kind, cfg);
+        let mem = memory_model(&arch, kind);
+        println!("  {name}  {:>7} (m:s)   {:.2} GB", mmss(pr.total_minutes), mem.total_gb());
+    }
+    let acdc_t = predict_run(&arch, &cost, MethodKind::AcdcFp32, StreamConfig::NONE).total_minutes;
+    let pahq_t = predict_run(&arch, &cost, MethodKind::Pahq, StreamConfig::FULL).total_minutes;
+    println!("  runtime cut: {:.0}% (paper: ~80%)", 100.0 * (1.0 - pahq_t / acdc_t));
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""L2 build-time compile path: model, kernels, tasks, quantize, train, aot."""

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (mixed_attn, attn_core, fq) and their pure-jnp oracle (ref)."""

@@ -1,0 +1,65 @@
+"""Pallas kernel for the per-head causal attention core.
+
+One grid step per (batch, head): scores = q k^T / sqrt(K) with a causal
+mask, a numerically-stable softmax, z = probs @ v, and a per-head
+fake-quant of z. Scores/softmax run at full precision, matching the paper's
+Eq. 10 (activations are unified to FP32 for the attention computation after
+MixedAssembly); only the head's output re-enters the quantized lattice.
+
+TPU mapping: q/k/v tiles for one head ([S, K] each, ~5 KiB at the largest
+config here) live in VMEM; scores [S, S] stay in VMEM registers; both
+matmuls hit the MXU. The causal mask is built with ``broadcasted_iota``
+(no host-side constant traffic).
+
+Oracle: ``ref.attn_core``. interpret=True (see mixed_attn.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..quantize import fake_quant
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, qp_ref, o_ref):
+    # One grid step per head, whole batch per tile (see mixed_attn.py for
+    # the MXU / interpret-mode trip-count rationale).
+    q = q_ref[:, 0]  # [B, S, K]
+    k = k_ref[:, 0]
+    v = v_ref[:, 0]
+    _, S, K = q.shape
+    scores = jnp.einsum("bqk,bsk->bqs", q, k) / jnp.sqrt(jnp.float32(K))
+    rows = lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    scores = jnp.where((cols <= rows)[None], scores, -1e9)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    z = jnp.einsum("bqs,bsk->bqk", p, v)
+    qp = qp_ref[0]
+    o_ref[:, 0] = fake_quant(z, qp[0], qp[1], qp[2])
+
+
+def attn_core_pallas(q, k, v, qp):
+    """Causal attention core; signature matches ``ref.attn_core``.
+
+    q,k,v [B,H,S,K], qp [H,3] -> z [B,H,S,K].
+    """
+    B, H, S, K = q.shape
+    spec = pl.BlockSpec((B, 1, S, K), lambda j: (0, j, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(H,),
+        in_specs=[spec, spec, spec, pl.BlockSpec((1, 3), lambda j: (j, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, K), jnp.float32),
+        interpret=True,
+    )(
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        jnp.asarray(qp, jnp.float32),
+    )

@@ -1,0 +1,37 @@
+"""Pallas elementwise fake-quantization kernel.
+
+The simplest of the three L1 kernels: round a tile to the (mbits, emin,
+maxv) lattice. Used standalone for weight/activation re-quantization inside
+the L2 graph and as the bit-exactness anchor between python and Rust
+(``python/tests/test_fq.py`` cross-checks this kernel, the jnp oracle and
+vector files consumed by the Rust quant tests).
+
+TPU mapping (DESIGN.md section 2): elementwise on VPU lanes; the tile is a
+single VMEM block per grid step. Run with ``interpret=True`` here — the CPU
+PJRT client cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quantize import fake_quant
+
+
+def _fq_kernel(x_ref, qp_ref, o_ref):
+    qp = qp_ref[...]
+    o_ref[...] = fake_quant(x_ref[...], qp[0], qp[1], qp[2])
+
+
+def fq_pallas(x, qp):
+    """Fake-quantize ``x`` (any shape) with a single (3,) qp vector."""
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    out = pl.pallas_call(
+        _fq_kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat.astype(jnp.float32), jnp.asarray(qp, jnp.float32))
+    return out.reshape(orig_shape)

@@ -1,0 +1,80 @@
+"""Pallas kernel for PAHQ's mixed-precision per-head projection (paper
+Eq. 7-10).
+
+The paper's CUDA implementation runs two GEMMs per component — an FP8 GEMM
+over all heads (Eq. 7) and an FP32 GEMM for the target head h* (Eq. 8) —
+then selects per head (MixedAssembly, Eq. 9) and casts everything to FP32
+(Eq. 10). On the value lattice those three steps are identical to computing
+*each head once at its assigned precision*, so the TPU rethink fuses them:
+
+- grid over (batch, head): each grid step owns one head's [S, D] residual
+  tile in VMEM, its [D, K] weight tile, and its (mbits, emin, maxv) row;
+- the kernel computes rmsnorm -> MXU matmul -> bias -> fake-quant at the
+  head's own precision, writing the already-"assembled" FP32 tile;
+- head h* simply carries the passthrough qp row, so the high-precision path
+  and the select of Eq. 9 cost nothing extra.
+
+VMEM per grid step (f32): B*S*D + D*K + B*S*K + K + 3 floats. For the
+largest model here (B=16, S=20, D=160, K=20) that is ~230 KiB — far under
+the ~16 MiB VMEM budget, leaving room for double-buffering the H-grid
+(DESIGN.md section 8). Folding the batch into the tile keeps the MXU's M
+dimension at B*S=320 rows instead of 20.
+
+Correctness oracle: ``ref.project_heads``. interpret=True everywhere (CPU
+PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..quantize import fake_quant
+from .ref import RMS_EPS
+
+
+def _project_kernel(x_ref, g_ref, w_ref, b_ref, qp_ref, o_ref):
+    # Blocks: x [B,1,S,D], g [D], w [1,D,K], b [1,K], qp [1,3], o [B,1,S,K].
+    # One grid step per head; the whole batch is processed as a single
+    # MXU-friendly [B*S, D] x [D, K] tile (the batch axis folds into the
+    # GEMM's M dimension — much better MXU occupancy than per-example
+    # tiles, and under interpret=True it keeps the XLA while-loop trip
+    # count at H instead of B*H, which dominates CPU wall time).
+    x = x_ref[:, 0]  # [B, S, D]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    xn = x * lax.rsqrt(ms + RMS_EPS) * g_ref[...]
+    y = jnp.einsum("bsd,dk->bsk", xn, w_ref[0]) + b_ref[0][None, None, :]
+    qp = qp_ref[0]
+    o_ref[:, 0] = fake_quant(y, qp[0], qp[1], qp[2])
+
+
+def project_heads_pallas(x, ln_g, w, b, qp):
+    """Mixed-precision per-head projection; signature matches
+    ``ref.project_heads``.
+
+    x [B,H,S,D], ln_g [D], w [H,D,K], b [H,K], qp [H,3] -> [B,H,S,K].
+    """
+    B, H, S, D = x.shape
+    K = w.shape[-1]
+    return pl.pallas_call(
+        _project_kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((B, 1, S, D), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((D,), lambda j: (0,)),
+            pl.BlockSpec((1, D, K), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, K), lambda j: (j, 0)),
+            pl.BlockSpec((1, 3), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, 1, S, K), lambda j: (0, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, K), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        jnp.asarray(ln_g, jnp.float32),
+        jnp.asarray(w, jnp.float32),
+        jnp.asarray(b, jnp.float32),
+        jnp.asarray(qp, jnp.float32),
+    )

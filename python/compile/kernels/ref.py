@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+Every kernel in this package has a reference implementation here with the
+same signature; ``python/tests/test_kernel.py`` asserts allclose (and for
+the fake-quant lattice, bit-exact equality) between kernel and oracle under
+hypothesis-driven shape/dtype sweeps. The AOT gradient artifacts
+(grads/gate/edge-mask HLOs) are built on these reference paths because
+``pallas_call`` is not differentiable; the forward inference artifacts use
+the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..quantize import fake_quant_qp
+
+RMS_EPS = 1e-6
+
+
+def rmsnorm(x, g):
+    """RMS-normalize over the last axis and scale by gain ``g`` [D]."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * lax.rsqrt(ms + RMS_EPS) * g
+
+
+def project_heads(x, ln_g, w, b, qp):
+    """Per-head normalized projection with per-head fake-quant.
+
+    x    : [B, H, S, D]   per-head assembled residual inputs
+    ln_g : [D]            shared layer-norm gain
+    w    : [H, D, K]      per-head projection
+    b    : [H, K]
+    qp   : [H, 3]         per-head (mbits, emin, maxv)
+    ->     [B, H, S, K]
+
+    This is the oracle for the paper's two-phase mixed-precision projection
+    (Eq. 7-9): computing FP8 for all heads and FP32 for the target head and
+    then selecting (Eq. 9) is value-identical to computing each head at its
+    assigned precision, which is what the parametric ``qp`` does.
+    """
+    xn = rmsnorm(x, ln_g)
+    y = jnp.einsum("bhsd,hdk->bhsk", xn, w) + b[None, :, None, :]
+    return fake_quant_qp(y, qp[None])  # qp [1,H,3] broadcasts over B
+
+
+def attn_core(q, k, v, qp):
+    """Per-head causal attention core with fake-quantized output.
+
+    q,k,v : [B, H, S, K]; qp : [H, 3]  ->  z [B, H, S, K]
+
+    Scores and softmax run at full precision (the paper unifies activations
+    to FP32 for the attention computation after MixedAssembly, Eq. 10); the
+    per-head output z is quantized at the head's precision.
+    """
+    kdim = q.shape[-1]
+    scores = jnp.einsum("bhqk,bhsk->bhqs", q, k) / jnp.sqrt(jnp.float32(kdim))
+    s = q.shape[2]
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(causal[None, None] > 0, scores, -1e9)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    z = jnp.einsum("bhqs,bhsk->bhqk", probs, v)
+    return fake_quant_qp(z, qp[None])
+
+
+def fq_ref(x, qp):
+    """Elementwise fake-quant oracle (matches kernels/fq.py)."""
+    return fake_quant_qp(x, qp)

@@ -1,0 +1,426 @@
+"""L2: the graph-decomposed transformer in JAX.
+
+Circuit discovery views a transformer as a DAG whose nodes are attention
+heads and MLP blocks writing into a shared residual stream, and whose edges
+are (source node output -> destination node input-channel) contributions.
+Everything in this module is written in that decomposed form:
+
+- each attention head h in layer l reads three *channels* (Q, K, V), each of
+  which is an independently-assembled residual sum — this is what makes
+  edge-level activation patching expressible;
+- head outputs are kept per-head (z_h @ W_O[h]) and never pre-summed, so
+  the Rust coordinator can cache node values and assemble arbitrary hybrid
+  inputs;
+- per-head quant parameter rows (mbits, emin, maxv) thread through every
+  attention computation — PAHQ's precision allocation P_t (paper Eq. 3) is
+  a runtime input, not a compile-time constant.
+
+Two families of entry points:
+
+1. Per-layer inference functions (``embed``/``attn_layer``/``mlp_layer``/
+   ``unembed``) — AOT-lowered to HLO text by ``aot.py`` and chained at
+   runtime by the Rust patched-forward engine. These call the Pallas
+   kernels (L1).
+2. Whole-graph differentiable forwards (``forward_full``,
+   ``forward_with_eps``, ``forward_with_gates``, ``forward_edge_masked``) —
+   used for build-time training and for the gradient artifacts powering the
+   EAP / HISP / SP / Edge-Pruning baselines. These use the pure-jnp oracle
+   path (Pallas is not differentiable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.attn_core import attn_core_pallas
+from .kernels.mixed_attn import project_heads_pallas
+from .quantize import FP32, fake_quant_qp
+
+# ---------------------------------------------------------------------------
+# Configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shape family of a model. ``d_mlp == 0`` means attention-only."""
+
+    name: str
+    n_layer: int
+    n_head: int
+    d_model: int
+    d_head: int
+    d_mlp: int
+    seq_len: int
+    vocab: int
+    batch: int  # evaluation batch baked into the AOT shapes
+
+    @property
+    def has_mlp(self) -> bool:
+        return self.d_mlp > 0
+
+    @property
+    def n_nodes(self) -> int:
+        """embed + heads (layer-major) + one MLP per layer (if any)."""
+        return 1 + self.n_layer * self.n_head + (self.n_layer if self.has_mlp else 0)
+
+
+# Layer parameter names, in the order they appear as HLO inputs and in the
+# flat weights.bin blob. Keep in sync with rust/src/model/weights.rs.
+ATTN_PARAMS = ["ln1_g", "wq", "bq", "wk", "bk", "wv", "bv", "wo"]
+MLP_PARAMS = ["ln2_g", "w1", "b1", "w2", "b2"]
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the weights.bin layout."""
+    H, D, K, F = cfg.n_head, cfg.d_model, cfg.d_head, cfg.d_mlp
+    spec: list[tuple[str, tuple[int, ...]]] = [
+        ("wte", (cfg.vocab, D)),
+        ("wpe", (cfg.seq_len, D)),
+    ]
+    for l in range(cfg.n_layer):
+        spec += [
+            (f"l{l}.ln1_g", (D,)),
+            (f"l{l}.wq", (H, D, K)),
+            (f"l{l}.bq", (H, K)),
+            (f"l{l}.wk", (H, D, K)),
+            (f"l{l}.bk", (H, K)),
+            (f"l{l}.wv", (H, D, K)),
+            (f"l{l}.bv", (H, K)),
+            (f"l{l}.wo", (H, K, D)),
+        ]
+        if cfg.has_mlp:
+            spec += [
+                (f"l{l}.ln2_g", (D,)),
+                (f"l{l}.w1", (D, F)),
+                (f"l{l}.b1", (F,)),
+                (f"l{l}.w2", (F, D)),
+                (f"l{l}.b2", (D,)),
+            ]
+    spec += [("lnf_g", (D,)), ("wu", (D, cfg.vocab))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict[str, jnp.ndarray]:
+    """Small-scale GPT-2-style init over the param spec."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, jnp.ndarray] = {}
+    for name, shape in param_spec(cfg):
+        base = name.split(".")[-1]
+        if base.startswith("ln"):
+            arr = np.ones(shape, np.float32)
+        elif base.startswith("b"):
+            arr = np.zeros(shape, np.float32)
+        else:
+            scale = 0.04 if base in ("wo", "w2") else 0.08
+            arr = rng.normal(0.0, scale, size=shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict[str, jnp.ndarray]) -> np.ndarray:
+    return np.concatenate(
+        [np.asarray(params[n], np.float32).reshape(-1) for n, _ in param_spec(cfg)]
+    )
+
+
+def unflatten_params(cfg: ModelConfig, flat: np.ndarray) -> dict[str, jnp.ndarray]:
+    out, off = {}, 0
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        out[name] = jnp.asarray(flat[off : off + n].reshape(shape))
+        off += n
+    assert off == flat.size
+    return out
+
+
+def fp32_qp(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.tile(jnp.asarray(FP32, jnp.float32)[None], (cfg.n_head, 1))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer inference functions (AOT entry points)
+
+
+def embed(onehot, wte, wpe):
+    """onehot [B,S,V] @ wte [V,D] + wpe [S,D] -> [B,S,D].
+
+    Tokens travel as one-hot f32 so the artifact needs no integer gather
+    (keeps the HLO text within what xla_extension 0.5.1 parses trivially,
+    and V is tiny here).
+    """
+    return jnp.einsum("bsv,vd->bsd", onehot, wte) + wpe[None]
+
+
+def attn_layer(qin, kin, vin, ln_g, wq, bq, wk, bk, wv, bv, wo, qp, use_pallas=True):
+    """Per-head attention layer over pre-assembled channel inputs.
+
+    qin/kin/vin [B,H,S,D]: each head's Q/K/V-channel residual input, built
+    by the caller (Rust at runtime; ``forward_full`` at train time).
+    Returns per-head residual contributions [B,H,S,D] (z_h @ W_O[h]) — NOT
+    summed, so every head remains an addressable graph node.
+    """
+    proj = project_heads_pallas if use_pallas else ref.project_heads
+    core = attn_core_pallas if use_pallas else ref.attn_core
+    q = proj(qin, ln_g, wq, bq, qp)
+    k = proj(kin, ln_g, wk, bk, qp)
+    v = proj(vin, ln_g, wv, bv, qp)
+    z = core(q, k, v, qp)
+    return jnp.einsum("bhsk,hkd->bhsd", z, wo)
+
+
+def mlp_layer(xin, ln2_g, w1, b1, w2, b2, qp3):
+    """MLP node: xin [B,S,D] -> [B,S,D]; qp3 is a single (3,) quant row
+    (the paper runs non-attention components at bf16)."""
+    xn = ref.rmsnorm(xin, ln2_g)
+    h = fake_quant_qp(jnp.einsum("bsd,df->bsf", xn, w1) + b1, qp3)
+    h = jax.nn.gelu(h)
+    y = fake_quant_qp(jnp.einsum("bsf,fd->bsd", h, w2) + b2, qp3)
+    return y
+
+
+def unembed(xin, lnf_g, wu):
+    """Final node: xin [B,S,D] -> logits [B,S,V]."""
+    return jnp.einsum("bsd,dv->bsv", ref.rmsnorm(xin, lnf_g), wu)
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph differentiable forwards (training + gradient artifacts)
+
+
+def node_index(cfg: ModelConfig):
+    """Node ordering shared with Rust: 0 = embed; heads layer-major
+    (1 + l*H + h); MLPs after all heads (1 + L*H + l)."""
+    names = ["embed"]
+    for l in range(cfg.n_layer):
+        for h in range(cfg.n_head):
+            names.append(f"a{l}.h{h}")
+    if cfg.has_mlp:
+        for l in range(cfg.n_layer):
+            names.append(f"m{l}")
+    return names
+
+
+def _layer_w(params, l, names):
+    return [params[f"l{l}.{n}"] for n in names]
+
+
+def forward_full(cfg, params, onehot, eps=None, gates=None, collect=False):
+    """Standard decomposed forward (all edges present).
+
+    eps   : optional dict of per-channel input offsets — ``jax.grad`` w.r.t.
+            these yields dL/d(channel input), the quantity EAP needs.
+            Keys: eps_q/eps_k/eps_v [L,B,H,S,D], eps_mlp [L,B,S,D],
+            eps_final [B,S,D], eps_hout [L,B,H,S,D].
+    gates : optional [n_nodes] multiplicative node gates (SP / HISP).
+    collect: also return every node's output tensor.
+
+    Returns logits [B,S,V] (and caches if ``collect``).
+    """
+    B = onehot.shape[0]
+    qp = fp32_qp(cfg)
+    resid = embed(onehot, params["wte"], params["wpe"])
+    caches = {"embed": resid}
+    if gates is not None:
+        resid = resid * 1.0  # embed is not gated (it anchors the stream)
+    for l in range(cfg.n_layer):
+        x = resid[:, None].repeat(cfg.n_head, axis=1)  # [B,H,S,D]
+        xq, xk, xv = x, x, x
+        if eps is not None:
+            xq = xq + eps["eps_q"][l]
+            xk = xk + eps["eps_k"][l]
+            xv = xv + eps["eps_v"][l]
+        houts = attn_layer(xq, xk, xv, *_layer_w(params, l, ATTN_PARAMS), qp,
+                           use_pallas=False)
+        if eps is not None:
+            houts = houts + eps["eps_hout"][l]
+        if gates is not None:
+            g = gates[1 + l * cfg.n_head : 1 + (l + 1) * cfg.n_head]
+            houts = houts * g[None, :, None, None]
+        caches[f"attn{l}"] = houts
+        resid = resid + jnp.sum(houts, axis=1)
+        if cfg.has_mlp:
+            xm = resid
+            if eps is not None:
+                xm = xm + eps["eps_mlp"][l]
+            mout = mlp_layer(xm, *_layer_w(params, l, MLP_PARAMS),
+                             jnp.asarray(FP32, jnp.float32))
+            if gates is not None:
+                g = gates[1 + cfg.n_layer * cfg.n_head + l]
+                mout = mout * g
+            caches[f"mlp{l}"] = mout
+            resid = resid + mout
+    if eps is not None:
+        resid = resid + eps["eps_final"]
+    logits = unembed(resid, params["lnf_g"], params["wu"])
+    return (logits, caches) if collect else logits
+
+
+def zero_eps(cfg: ModelConfig):
+    L, B, H, S, D = cfg.n_layer, cfg.batch, cfg.n_head, cfg.seq_len, cfg.d_model
+    z4 = jnp.zeros((L, B, H, S, D), jnp.float32)
+    z3 = jnp.zeros((L, B, S, D), jnp.float32)
+    return {
+        "eps_q": z4, "eps_k": z4, "eps_v": z4, "eps_hout": z4,
+        "eps_mlp": z3, "eps_final": jnp.zeros((B, S, D), jnp.float32),
+    }
+
+
+# --- metrics on logits ------------------------------------------------------
+
+
+def metric_logit_diff(logits, pos, ans, dis):
+    """Mean over batch of <logits[pos], ans> - <logits[pos], dis>.
+
+    pos [B,S] one-hot answer positions; ans/dis [B,V] (possibly soft)
+    answer/distractor distributions. This is the paper's "task metric"
+    (logit difference; mean-logit gap for Greater-Than's digit sets).
+    """
+    at_pos = jnp.einsum("bs,bsv->bv", pos, logits)
+    return jnp.mean(jnp.sum(at_pos * (ans - dis), axis=-1))
+
+
+def metric_kl(logits, pos, ref_probs):
+    """Mean KL(ref_probs || softmax(logits[pos])) — ACDC's KL metric,
+    measured against the clean run's answer-position distribution."""
+    at_pos = jnp.einsum("bs,bsv->bv", pos, logits)
+    logp = jax.nn.log_softmax(at_pos, axis=-1)
+    ref = jnp.clip(ref_probs, 1e-9, 1.0)
+    return jnp.mean(jnp.sum(ref * (jnp.log(ref) - logp), axis=-1))
+
+
+def combined_metric(logits, pos, ans, dis, ref_probs, sel):
+    """sel=1 -> logit-diff metric; sel=0 -> KL metric. ``sel`` is a runtime
+    scalar input so one gradient artifact serves both metric columns."""
+    return sel * metric_logit_diff(logits, pos, ans, dis) + (1.0 - sel) * metric_kl(
+        logits, pos, ref_probs
+    )
+
+
+# --- gradient-artifact forwards --------------------------------------------
+
+
+def forward_with_eps(cfg, params, onehot, pos, ans, dis, ref_probs, sel, eps):
+    """Scalar metric + node caches as a function of channel offsets ``eps``.
+
+    ``aot.py`` lowers ``jax.value_and_grad`` of this w.r.t. ``eps`` — the
+    resulting artifact returns, in one execution, every node output and
+    every dL/d(channel input), which is all EAP and HISP need.
+    """
+    logits, caches = forward_full(cfg, params, onehot, eps=eps, collect=True)
+    return combined_metric(logits, pos, ans, dis, ref_probs, sel), caches
+
+
+def forward_with_gates(cfg, params, onehot, pos, ans, dis, ref_probs, sel, gates,
+                       corrupt_caches=None):
+    """Metric as a function of node gates (SP).
+
+    With ``corrupt_caches`` (node outputs from a corrupted forward), gate
+    g interpolates node outputs between clean (g=1) and corrupted (g=0)
+    computation — subnetwork probing's mask semantics. Implemented by
+    re-running the decomposed forward with interpolated node outputs.
+    """
+    qp = fp32_qp(cfg)
+    resid = embed(onehot, params["wte"], params["wpe"])
+    for l in range(cfg.n_layer):
+        x = resid[:, None].repeat(cfg.n_head, axis=1)
+        houts = attn_layer(x, x, x, *_layer_w(params, l, ATTN_PARAMS), qp,
+                           use_pallas=False)
+        g = gates[1 + l * cfg.n_head : 1 + (l + 1) * cfg.n_head][None, :, None, None]
+        if corrupt_caches is not None:
+            houts = g * houts + (1.0 - g) * corrupt_caches[f"attn{l}"]
+        else:
+            houts = g * houts
+        resid = resid + jnp.sum(houts, axis=1)
+        if cfg.has_mlp:
+            mout = mlp_layer(resid, *_layer_w(params, l, MLP_PARAMS),
+                             jnp.asarray(FP32, jnp.float32))
+            gm = gates[1 + cfg.n_layer * cfg.n_head + l]
+            if corrupt_caches is not None:
+                mout = gm * mout + (1.0 - gm) * corrupt_caches[f"mlp{l}"]
+            else:
+                mout = gm * mout
+            resid = resid + mout
+    logits = unembed(resid, params["lnf_g"], params["wu"])
+    return combined_metric(logits, pos, ans, dis, ref_probs, sel)
+
+
+def forward_edge_masked(cfg, params, onehot_clean, masks, corrupt_nodes):
+    """Edge-Pruning forward: every (source node -> destination channel) edge
+    carries a mask m in [0,1]; the channel input is
+    sum_src m * clean_contribution + (1 - m) * corrupt_contribution.
+
+    corrupt_nodes: [N, B, S, D] node outputs from the corrupted run
+    (embed + heads layer-major + mlps — Rust supplies its caches).
+    masks: dict with mq/mk/mv [L, H, N], mm [L, N], mf [N]. Entries for
+    causally-invalid sources are ignored (their clean contribution is used,
+    and Rust keeps them fixed at 1).
+
+    Returns logits [B,S,V]; aot.py lowers value_and_grad of a metric of
+    this w.r.t. ``masks``.
+    """
+    H = cfg.n_head
+    qp = fp32_qp(cfg)
+
+    def node_id(kind, l, h=0):
+        if kind == "embed":
+            return 0
+        if kind == "head":
+            return 1 + l * H + h
+        return 1 + cfg.n_layer * H + l  # mlp
+
+    emb = embed(onehot_clean, params["wte"], params["wpe"])
+    clean_nodes = [emb]  # grows as nodes are computed (same index order)
+
+    def channel_input(mask_row, n_valid):
+        """mask_row [N]; mixes the first n_valid nodes. -> [B,S,D]"""
+        acc = 0.0
+        for s in range(n_valid):
+            m = mask_row[s]
+            acc = acc + m * clean_nodes[s] + (1.0 - m) * corrupt_nodes[s]
+        return acc
+
+    for l in range(cfg.n_layer):
+        n_valid = len(clean_nodes)
+        qin = jnp.stack([channel_input(masks["mq"][l, h], n_valid) for h in range(H)], 1)
+        kin = jnp.stack([channel_input(masks["mk"][l, h], n_valid) for h in range(H)], 1)
+        vin = jnp.stack([channel_input(masks["mv"][l, h], n_valid) for h in range(H)], 1)
+        houts = attn_layer(qin, kin, vin, *_layer_w(params, l, ATTN_PARAMS), qp,
+                           use_pallas=False)
+        for h in range(H):
+            clean_nodes.append(houts[:, h])
+        if cfg.has_mlp:
+            xm = channel_input(masks["mm"][l], len(clean_nodes))
+            mout = mlp_layer(xm, *_layer_w(params, l, MLP_PARAMS),
+                             jnp.asarray(FP32, jnp.float32))
+            clean_nodes.append(mout)
+    final = channel_input(masks["mf"], len(clean_nodes))
+    return unembed(final, params["lnf_g"], params["wu"])
+
+
+# ---------------------------------------------------------------------------
+# Model zoo (shape families mirroring the paper's models; see DESIGN.md §1)
+
+CONFIGS = {
+    # paper: redwood-2l (2-layer attention-only)
+    "redwood2l-sim": ModelConfig("redwood2l-sim", 2, 4, 32, 8, 0, 20, 0, 16),
+    # paper: attn-4l (4-layer attention-only)
+    "attn4l-sim": ModelConfig("attn4l-sim", 4, 4, 48, 12, 0, 20, 0, 16),
+    # paper: gpt2-small
+    "gpt2s-sim": ModelConfig("gpt2s-sim", 4, 8, 64, 8, 256, 20, 0, 16),
+    # paper appendix C scale series: gpt2 medium / large / xl. Batch sizes
+    # 6/5/4 mirror Tab. 7's batched edge evaluation on larger models.
+    "gpt2m-sim": ModelConfig("gpt2m-sim", 6, 8, 96, 12, 384, 20, 0, 6),
+    "gpt2l-sim": ModelConfig("gpt2l-sim", 8, 8, 128, 16, 512, 20, 0, 5),
+    "gpt2xl-sim": ModelConfig("gpt2xl-sim", 10, 8, 160, 20, 640, 20, 0, 4),
+}
+
+
+def get_config(name: str, vocab: int) -> ModelConfig:
+    cfg = CONFIGS[name]
+    return dataclasses.replace(cfg, vocab=vocab)

@@ -1,0 +1,153 @@
+"""Parametric fake-quantization (quantize -> dequantize) used to emulate
+low-precision formats on an FP32 substrate.
+
+The paper runs native FP8_E4M3 on H20 tensor cores; this reproduction runs on
+CPU PJRT, so low precision is emulated *bit-exactly on the value lattice*:
+a fake-quantized tensor takes exactly the values representable in the target
+format (round-to-nearest-even, saturating clamp). Underflow and mantissa-loss
+(paper section 2) are properties of that lattice, so they reproduce exactly.
+
+A format is a triple ``(mbits, emin, maxv)``:
+
+- ``mbits``  : number of mantissa bits (3 for E4M3, 1 for E2M1, 7 for bf16,
+               10 for fp16, 23 => passthrough / FP32 sentinel).
+- ``emin``   : minimum unbiased exponent of a *normal* number. Values with
+               floor(log2|x|) < emin quantize on the subnormal grid
+               2**(emin - mbits).
+- ``maxv``   : saturation bound (e.g. 448 for E4M3, 6 for E2M1).
+
+The same triple is interpreted by the Rust side (``rust/src/quant``); the
+python and Rust implementations are property-tested for bit-exact agreement
+(``python/tests/test_fq.py`` writes vectors consumed by
+``rust/src/quant/tests``).
+
+Everything here is plain jnp (frexp/exp2/round/clip/where), so it lowers to
+basic HLO that xla_extension 0.5.1's text parser accepts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# (mbits, emin, maxv) presets. Keep in sync with rust/src/quant/mod.rs.
+FP32 = (99.0, -126.0, 3.4e38)  # passthrough sentinel (mbits >= 23)
+FP16 = (10.0, -14.0, 65504.0)
+BF16 = (7.0, -126.0, 3.39e38)
+FP8_E4M3 = (3.0, -6.0, 448.0)
+FP8_E5M2 = (2.0, -14.0, 57344.0)
+FP4_E2M1 = (1.0, 0.0, 6.0)
+
+PRESETS = {
+    "fp32": FP32,
+    "fp16": FP16,
+    "bf16": BF16,
+    "fp8_e4m3": FP8_E4M3,
+    "fp8_e5m2": FP8_E5M2,
+    "fp4_e2m1": FP4_E2M1,
+}
+
+
+def qp_array(preset_or_triple):
+    """Return a (3,) f32 array for a preset name or an (mbits, emin, maxv)
+    triple, suitable as a runtime HLO input."""
+    if isinstance(preset_or_triple, str):
+        preset_or_triple = PRESETS[preset_or_triple]
+    return jnp.asarray(preset_or_triple, dtype=jnp.float32)
+
+
+def fake_quant(x, mbits, emin, maxv):
+    """Round ``x`` to the nearest representable value of the format.
+
+    ``mbits``/``emin``/``maxv`` may be scalars or arrays broadcastable
+    against ``x`` (e.g. per-head parameters of shape [H, 1, 1] against
+    activations [H, S, D]) — this is what lets a single AOT-lowered HLO
+    serve every precision assignment PAHQ makes at runtime.
+
+    Grid-point rounding (saturate-then-round):
+      xc = clip(x, -maxv, maxv)         (saturate FIRST: keeps every
+                                         intermediate finite, so behaviour
+                                         is identical across jnp / Pallas /
+                                         Rust — no inf-dependent paths)
+      e = floor(log2|xc|)               (exact, via frexp)
+      E = max(e, emin)                  (subnormal floor)
+      q = 2**max(E - mbits, -126)       (quantum; built by *exponent bit
+                                         manipulation*, not jnp.exp2 — XLA
+                                         CPU's exp2 is an approximate
+                                         transcendental and is not exact
+                                         even at integer arguments. The
+                                         -126 floor keeps q a normal f32;
+                                         values whose quantum would be
+                                         subnormal flush toward zero: FTZ
+                                         semantics, mirrored bit-for-bit
+                                         in Rust)
+      y = round_ties_even(xc / q) * q   (xc/q and *q are exact: q is a
+                                         power of two)
+      y = clip(y, -maxv, maxv)          (bf16's maxv is off-grid; re-clamp)
+
+    round-to-nearest-even matches IEEE default rounding and Rust's
+    ``f32::round_ties_even``. ``mbits >= 23`` passes through unchanged.
+
+    Note on the upper binade edge: round-up across a binade (e.g. E4M3
+    447.99 -> 448) lands on an even multiple of the lower binade's quantum,
+    which is also representable in the upper binade, so the one-binade
+    quantum is still correct at the boundary.
+    """
+    from jax import lax
+
+    x = jnp.asarray(x, jnp.float32)
+    xc = jnp.clip(x, -maxv, maxv)
+    ax = jnp.abs(xc)
+    # frexp: ax = m * 2**e with m in [0.5, 1)  =>  floor(log2 ax) = e - 1.
+    _, e = jnp.frexp(ax)
+    e = e.astype(jnp.float32) - 1.0
+    e = jnp.maximum(e, emin)
+    q = _pow2(jnp.maximum(e - mbits, -126.0))
+    y = jnp.round(xc / q) * q  # jnp.round is round-half-to-even
+    y = jnp.clip(y, -maxv, maxv)
+    # Subnormal inputs (biased exponent 0, detected bitwise — XLA CPU's
+    # FTZ makes value comparisons unreliable down here) flush to a
+    # sign-preserving zero; zeros pass through. Mirrored exactly in Rust.
+    subnormal = (lax.bitcast_convert_type(ax, jnp.int32) >> 23) == 0
+    y = jnp.where(subnormal, x * 0.0, y)
+    return jnp.where(mbits >= 23.0, x, y)
+
+
+def _pow2(expo):
+    """Exact 2**expo for integer-valued expo in [-126, 127], by placing the
+    biased exponent bits directly (bitcast) — jnp.exp2/ldexp route through
+    an approximate transcendental on XLA CPU."""
+    from jax import lax
+
+    expo = jnp.clip(expo, -126.0, 127.0)
+    bits = (expo.astype(jnp.int32) + 127) << 23
+    return lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def fake_quant_qp(x, qp):
+    """``fake_quant`` with a packed (..., 3) parameter tensor.
+
+    ``qp[..., 0] = mbits``, ``qp[..., 1] = emin``, ``qp[..., 2] = maxv``.
+    The leading axes of ``qp`` must broadcast against ``x`` after appending
+    singleton axes: e.g. qp [H, 3] applies row h to x[h, ...].
+    """
+    qp = jnp.asarray(qp, jnp.float32)
+    extra = x.ndim - (qp.ndim - 1)
+    shape = qp.shape[:-1] + (1,) * extra
+    mbits = qp[..., 0].reshape(shape)
+    emin = qp[..., 1].reshape(shape)
+    maxv = qp[..., 2].reshape(shape)
+    return fake_quant(x, mbits, emin, maxv)
+
+
+def rtn_int_quant(w, nbits):
+    """Integer round-to-nearest quantization, paper Eq. (23):
+    Q(w) = delta * round(w / delta), delta = max|w| / 2**(N-1).
+
+    Used for the RTN weight-quantization comparison in the quantization
+    strategy appendix; the main RTN-Q baseline uses FP8 fake-quant to match
+    the paper's FP8_E4M3 setting.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    delta = jnp.max(jnp.abs(w)) / (2.0 ** (nbits - 1))
+    delta = jnp.where(delta == 0.0, 1.0, delta)
+    return delta * jnp.round(w / delta)

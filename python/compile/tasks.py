@@ -1,0 +1,189 @@
+"""Synthetic circuit-discovery tasks mirroring the causal template structure
+of the paper's three benchmarks (IOI, Greater-Than, Docstring).
+
+The originals depend on GPT-2's tokenizer and pretraining corpus, neither of
+which is available offline. What circuit discovery actually consumes is the
+*clean/corrupt contrast*: a pair of prompts identical except for the tokens
+that carry the task-critical information, plus a metric that reads the
+behaviour off the logits. These generators preserve exactly that structure:
+
+- IOI        : duplicate-name indirect-object identification (ABB -> ABC
+               corruption, as in Wang et al. 2022).
+- GreaterThan: two-digit year continuation; the model must place probability
+               mass on digits strictly greater than the start digit
+               (corruption resets the start digit to 0, as the paper's "01").
+- Docstring  : argument recall from a def-stub; the model must emit the next
+               ":param" argument name (corruption scrambles the signature).
+
+All tasks share one vocabulary and one padded sequence length so a single
+set of AOT-lowered per-layer HLOs serves every task. The vocabulary and the
+evaluation datasets are exported into the artifact manifest, and the Rust
+side (`rust/src/tasks/`) re-implements the same generators against the same
+vocab for workload-scaling benchmarks; `python/tests/test_tasks.py` checks
+the two agree on the template structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+SEQ_LEN = 20
+
+_NAMES = [f"name{i}" for i in range(8)]
+_ARGS = [f"arg{i}" for i in range(8)]
+_FUNCS = [f"fn{i}" for i in range(4)]
+_DIGITS = [str(d) for d in range(10)]
+_WORDS = [
+    "when", "and", "went", "to", "the", "store", ",", "gave", "a", "gift",
+    "war", "lasted", "from", "year", "17",
+    "def", "(", ")", ":", "param",
+]
+
+VOCAB: list[str] = ["<pad>", "<bos>"] + _NAMES + _ARGS + _FUNCS + _DIGITS + _WORDS
+TOK = {t: i for i, t in enumerate(VOCAB)}
+VOCAB_SIZE = len(VOCAB)
+PAD, BOS = TOK["<pad>"], TOK["<bos>"]
+
+
+def _ids(*toks: str) -> list[int]:
+    return [TOK[t] for t in toks]
+
+
+@dataclasses.dataclass
+class Example:
+    """One clean/corrupt pair.
+
+    ``ans``/``dis`` are sparse distributions over the vocabulary
+    (list of (token_id, weight), weights summing to 1): the task metric is
+    logit_diff = <logits[pos], ans> - <logits[pos], dis>. Single-token tasks
+    use singleton distributions; Greater-Than uses uniform sets, which makes
+    the metric the mean-logit gap between the "greater" and "not greater"
+    digit sets (the ACDC paper's prob-mass metric in logit form).
+    """
+
+    clean: list[int]
+    corrupt: list[int]
+    pos: int  # answer position: predict token pos+1 from logits at pos
+    ans: list[tuple[int, float]]
+    dis: list[tuple[int, float]]
+    label: int  # training target token at pos
+
+    def padded(self, seq_len: int = SEQ_LEN) -> "Example":
+        def pad(x):
+            assert len(x) <= seq_len, (len(x), seq_len)
+            return x + [PAD] * (seq_len - len(x))
+
+        return dataclasses.replace(self, clean=pad(self.clean), corrupt=pad(self.corrupt))
+
+
+def gen_ioi(rng: np.random.Generator) -> Example:
+    """When <X> and <Y> went to the store , <S> gave a gift to -> other(S).
+
+    <S> is the *duplicated* name — uniformly either <X> or <Y> (the ABBA /
+    BABA template mix of Wang et al. 2022). Randomizing which first-clause
+    name repeats is essential: with a fixed template the answer is
+    position-predictable and the model never learns the duplication
+    mechanism, leaving nothing for activation patching to find.
+
+    Corruption (ABC): the duplicated occurrence is replaced by a third
+    name <C>, destroying the signal identifying the indirect object.
+    """
+    a, b, c = rng.choice(len(_NAMES), size=3, replace=False)
+    na, nb, nc = (TOK[_NAMES[i]] for i in (a, b, c))
+    # subject = duplicated name; answer = the other (indirect object)
+    subj, ans = (na, nb) if rng.integers(2) == 0 else (nb, na)
+    head = _ids("<bos>", "when") + [na] + _ids("and") + [nb]
+    mid = _ids("went", "to", "the", "store", ",")
+    clean = head + mid + [subj] + _ids("gave", "a", "gift", "to")
+    corrupt = head + mid + [nc] + _ids("gave", "a", "gift", "to")
+    pos = len(clean) - 1
+    return Example(clean, corrupt, pos, [(ans, 1.0)], [(subj, 1.0)], ans).padded()
+
+
+def gen_greater_than(rng: np.random.Generator) -> Example:
+    """the war lasted from year 17 <D> to year 17 -> digit > <D>.
+
+    Clean start digit D in [2, 8]; corruption resets D to 0 (the paper's
+    "01" corruption), removing the lower bound.
+    """
+    d = int(rng.integers(2, 9))
+    pre = _ids("<bos>", "the", "war", "lasted", "from", "year", "17")
+    post = _ids("to", "year", "17")
+    clean = pre + [TOK[str(d)]] + post
+    corrupt = pre + [TOK["0"]] + post
+    pos = len(clean) - 1
+    greater = [TOK[str(k)] for k in range(d + 1, 10)]
+    lesseq = [TOK[str(k)] for k in range(0, d + 1)]
+    ans = [(t, 1.0 / len(greater)) for t in greater]
+    dis = [(t, 1.0 / len(lesseq)) for t in lesseq]
+    label = int(rng.choice(greater))
+    return Example(clean, corrupt, pos, ans, dis, label).padded()
+
+
+def gen_docstring(rng: np.random.Generator) -> Example:
+    """def <F> ( <A1> , <A2> , <A3> ) : param <A1> : param <A2> : param -> <A3>.
+
+    Corruption re-samples the three signature arguments (keeping the
+    docstring part intact), so the answer can no longer be read off the
+    signature.
+    """
+    f = TOK[_FUNCS[int(rng.integers(len(_FUNCS)))]]
+    a1, a2, a3, b1, b2, b3 = rng.choice(len(_ARGS), size=6, replace=False)
+    A = [TOK[_ARGS[i]] for i in (a1, a2, a3)]
+    B = [TOK[_ARGS[i]] for i in (b1, b2, b3)]
+
+    def stub(args):
+        return (
+            _ids("<bos>", "def") + [f] + _ids("(") + [args[0]] + _ids(",")
+            + [args[1]] + _ids(",") + [args[2]] + _ids(")", ":")
+            + _ids("param") + [A[0]] + _ids(":", "param") + [A[1]]
+            + _ids(":", "param")
+        )
+
+    clean, corrupt = stub(A), stub(B)
+    pos = len(clean) - 1
+    return Example(clean, corrupt, pos, [(A[2], 1.0)], [(A[0], 1.0)], A[2]).padded()
+
+
+GENERATORS: dict[str, Callable[[np.random.Generator], Example]] = {
+    "ioi": gen_ioi,
+    "greater_than": gen_greater_than,
+    "docstring": gen_docstring,
+}
+TASKS = list(GENERATORS)
+
+
+def make_dataset(task: str, n: int, seed: int) -> list[Example]:
+    rng = np.random.default_rng(seed)
+    return [GENERATORS[task](rng) for _ in range(n)]
+
+
+def onehot(tokens: list[int], vocab: int = VOCAB_SIZE) -> np.ndarray:
+    out = np.zeros((len(tokens), vocab), dtype=np.float32)
+    out[np.arange(len(tokens)), tokens] = 1.0
+    return out
+
+
+def dense(dist: list[tuple[int, float]], vocab: int = VOCAB_SIZE) -> np.ndarray:
+    out = np.zeros((vocab,), dtype=np.float32)
+    for tok, w in dist:
+        out[tok] = w
+    return out
+
+
+def batch_arrays(examples: list[Example]):
+    """Stack a dataset into the dense batched arrays the HLO inputs expect:
+    clean/corrupt one-hots [B,S,V], position one-hots [B,S], ans/dis [B,V]."""
+    B = len(examples)
+    clean = np.stack([onehot(e.clean) for e in examples])
+    corrupt = np.stack([onehot(e.corrupt) for e in examples])
+    pos = np.zeros((B, SEQ_LEN), dtype=np.float32)
+    for i, e in enumerate(examples):
+        pos[i, e.pos] = 1.0
+    ans = np.stack([dense(e.ans) for e in examples])
+    dis = np.stack([dense(e.dis) for e in examples])
+    labels = np.array([e.label for e in examples], dtype=np.int32)
+    return clean, corrupt, pos, ans, dis, labels

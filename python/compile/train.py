@@ -1,0 +1,102 @@
+"""Build-time training of the tiny task models.
+
+The paper analyses pretrained HuggingFace checkpoints (GPT-2, attn-4l,
+redwood-2l); offline we train the same shape families from scratch on the
+synthetic tasks (DESIGN.md section 1). Training is deterministic (seeded),
+runs on CPU JAX in seconds-to-minutes, and happens exactly once inside
+``make artifacts`` — python never touches the request path.
+
+Each base model is trained *jointly* on all three tasks (as GPT-2 "knows"
+all three paper tasks); the scale-series models (gpt2m/l/xl-sim) train on
+IOI only, which is all appendix C evaluates. Loss is cross-entropy on the
+answer token at the answer position — this keeps the learned circuit
+crisply tied to the task contrast, which is what patching experiments need.
+
+The optimizer is a self-contained Adam (no optax dependency).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tasks
+from .model import ModelConfig, forward_full, init_params
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def _ce_loss(cfg, params, onehot, pos, labels):
+    logits = forward_full(cfg, params, onehot)  # [B,S,V]
+    at_pos = jnp.einsum("bs,bsv->bv", pos, logits)
+    logp = jax.nn.log_softmax(at_pos, axis=-1)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def _batch(task_names, batch, rng):
+    """Sample a mixed-task training batch."""
+    exs = []
+    for i in range(batch):
+        t = task_names[int(rng.integers(len(task_names)))]
+        exs.append(tasks.GENERATORS[t](rng))
+    clean, _, pos, _, _, labels = tasks.batch_arrays(exs)
+    return jnp.asarray(clean), jnp.asarray(pos), jnp.asarray(labels)
+
+
+def train_model(
+    cfg: ModelConfig,
+    task_names: list[str],
+    steps: int = 1500,
+    batch: int = 32,
+    lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 500,
+):
+    """Train and return (params, final train accuracy per task)."""
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, seed)
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    loss_grad = jax.jit(jax.value_and_grad(lambda p, x, q, y: _ce_loss(cfg, p, x, q, y)))
+
+    tmap = jax.tree_util.tree_map
+
+    @jax.jit
+    def adam(params, m, v, grads, t):
+        lr_t = lr * jnp.sqrt(1 - ADAM_B2**t) / (1 - ADAM_B1**t)
+        m2 = tmap(lambda mm, g: ADAM_B1 * mm + (1 - ADAM_B1) * g, m, grads)
+        v2 = tmap(lambda vv, g: ADAM_B2 * vv + (1 - ADAM_B2) * g * g, v, grads)
+        p2 = tmap(lambda p, mm, vv: p - lr_t * mm / (jnp.sqrt(vv) + ADAM_EPS),
+                  params, m2, v2)
+        return p2, m2, v2
+
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        x, q, y = _batch(task_names, batch, rng)
+        loss, grads = loss_grad(params, x, q, y)
+        params, m, v = adam(params, m, v, grads, step)
+        if step % log_every == 0 or step == steps:
+            print(f"  [{cfg.name}] step {step}/{steps} loss={float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+
+    accs = {t: eval_accuracy(cfg, params, t, seed=seed + 1) for t in task_names}
+    return params, accs
+
+
+def eval_accuracy(cfg: ModelConfig, params, task: str, n: int = 128, seed: int = 1):
+    """Top-1 accuracy of the answer token on held-out samples.
+
+    For Greater-Than, 'correct' means the argmax digit is strictly greater
+    than the start digit (any member of the answer set)."""
+    rng = np.random.default_rng(seed)
+    exs = [tasks.GENERATORS[task](rng) for _ in range(n)]
+    clean, _, pos, ans, _, labels = tasks.batch_arrays(exs)
+    logits = forward_full(cfg, params, jnp.asarray(clean))
+    at_pos = jnp.einsum("bs,bsv->bv", jnp.asarray(pos), logits)
+    pred = np.asarray(jnp.argmax(at_pos, axis=-1))
+    ok = np.array([ans[i, pred[i]] > 0 for i in range(n)])
+    return float(ok.mean())

@@ -1,0 +1,108 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes and precision assignments; every Pallas kernel
+must agree with its ref.py oracle. Tolerances are tight (the kernels do the
+same f32 math, modulo reduction order inside dot)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quantize
+from compile.kernels import ref
+from compile.kernels.attn_core import attn_core_pallas
+from compile.kernels.mixed_attn import project_heads_pallas
+
+PRESETS = ["fp32", "fp8_e4m3", "bf16", "fp4_e2m1"]
+
+
+def rand(rng, *shape):
+    return rng.normal(0, 1, size=shape).astype(np.float32)
+
+
+def qp_rows(rng, h):
+    names = [PRESETS[i] for i in rng.integers(0, len(PRESETS), size=h)]
+    return np.stack([np.asarray(quantize.PRESETS[n], np.float32) for n in names])
+
+
+shapes = st.tuples(
+    st.integers(1, 3),  # B
+    st.integers(1, 4),  # H
+    st.integers(2, 12),  # S
+    st.integers(4, 24),  # D
+    st.integers(2, 8),  # K
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_project_heads_matches_ref(shape, seed):
+    B, H, S, D, K = shape
+    rng = np.random.default_rng(seed)
+    x = rand(rng, B, H, S, D)
+    g = rand(rng, D)
+    w = rand(rng, H, D, K) * 0.3
+    b = rand(rng, H, K) * 0.1
+    qp = qp_rows(rng, H)
+    want = np.asarray(ref.project_heads(jnp.asarray(x), jnp.asarray(g),
+                                        jnp.asarray(w), jnp.asarray(b),
+                                        jnp.asarray(qp)))
+    got = np.asarray(project_heads_pallas(jnp.asarray(x), jnp.asarray(g),
+                                          jnp.asarray(w), jnp.asarray(b),
+                                          jnp.asarray(qp)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_attn_core_matches_ref(shape, seed):
+    B, H, S, _, K = shape
+    rng = np.random.default_rng(seed)
+    q = rand(rng, B, H, S, K)
+    k = rand(rng, B, H, S, K)
+    v = rand(rng, B, H, S, K)
+    qp = qp_rows(rng, H)
+    want = np.asarray(ref.attn_core(*(jnp.asarray(a) for a in (q, k, v)),
+                                    jnp.asarray(qp)))
+    got = np.asarray(attn_core_pallas(*(jnp.asarray(a) for a in (q, k, v)),
+                                      jnp.asarray(qp)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_attn_core_is_causal():
+    """Changing a future token must not affect earlier positions."""
+    rng = np.random.default_rng(0)
+    B, H, S, K = 1, 2, 8, 4
+    q, k, v = (rand(rng, B, H, S, K) for _ in range(3))
+    qp = np.tile(np.asarray(quantize.FP32, np.float32), (H, 1))
+    z1 = np.asarray(attn_core_pallas(*map(jnp.asarray, (q, k, v)), jnp.asarray(qp)))
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, -1] += 10.0
+    v2[:, :, -1] -= 5.0
+    z2 = np.asarray(attn_core_pallas(*map(jnp.asarray, (q, k2, v2)), jnp.asarray(qp)))
+    np.testing.assert_allclose(z1[:, :, :-1], z2[:, :, :-1], rtol=1e-6)
+    assert not np.allclose(z1[:, :, -1], z2[:, :, -1])
+
+
+def test_mixed_assembly_equivalence():
+    """Paper Eq. 7-10: two-phase (FP8-all + FP32-target, then select) equals
+    single-pass per-head precision — the identity PAHQ's kernel fusion
+    relies on (DESIGN.md section 2)."""
+    rng = np.random.default_rng(7)
+    B, H, S, D, K = 2, 4, 6, 16, 8
+    x = rand(rng, B, H, S, D)
+    g, w, b = rand(rng, D), rand(rng, H, D, K) * 0.3, rand(rng, H, K) * 0.1
+    target = 2
+    qp_mixed = np.tile(np.asarray(quantize.FP8_E4M3, np.float32), (H, 1))
+    qp_mixed[target] = quantize.FP32
+    mixed = np.asarray(ref.project_heads(*map(jnp.asarray, (x, g, w, b, qp_mixed))))
+
+    qp8 = np.tile(np.asarray(quantize.FP8_E4M3, np.float32), (H, 1))
+    qp32 = np.tile(np.asarray(quantize.FP32, np.float32), (H, 1))
+    all8 = np.asarray(ref.project_heads(*map(jnp.asarray, (x, g, w, b, qp8))))
+    all32 = np.asarray(ref.project_heads(*map(jnp.asarray, (x, g, w, b, qp32))))
+    two_phase = all8.copy()
+    two_phase[:, target] = all32[:, target]  # MixedAssembly (Eq. 9)
+    np.testing.assert_array_equal(mixed, two_phase)

@@ -1,0 +1,190 @@
+"""L2 model invariants: the decomposed forward must equal a manually
+chained per-layer evaluation (the exact contract the Rust engine relies
+on), gradients must match finite differences, and the gate/edge-mask
+forwards must degenerate correctly."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import tasks
+from compile.model import (
+    attn_layer,
+    combined_metric,
+    embed,
+    forward_edge_masked,
+    forward_full,
+    forward_with_eps,
+    forward_with_gates,
+    fp32_qp,
+    get_config,
+    init_params,
+    mlp_layer,
+    param_spec,
+    flatten_params,
+    unflatten_params,
+    unembed,
+    zero_eps,
+    ATTN_PARAMS,
+    MLP_PARAMS,
+)
+
+CFG = dataclasses.replace(get_config("gpt2s-sim", tasks.VOCAB_SIZE), batch=2)
+CFG_AO = dataclasses.replace(get_config("redwood2l-sim", tasks.VOCAB_SIZE), batch=2)
+
+
+def setup(cfg, seed=0):
+    params = init_params(cfg, seed)
+    exs = tasks.make_dataset("ioi", cfg.batch, seed)
+    clean, corrupt, pos, ans, dis, _ = tasks.batch_arrays(exs)
+    return params, map(jnp.asarray, (clean, corrupt, pos, ans, dis))
+
+
+def chained_forward(cfg, params, onehot):
+    """Reference re-implementation of the Rust engine's chaining: assemble
+    per-channel inputs as the sum of upstream node outputs and call the
+    per-layer entry points."""
+    nodes = [embed(onehot, params["wte"], params["wpe"])]
+    qp = fp32_qp(cfg)
+    for l in range(cfg.n_layer):
+        resid = sum(nodes)
+        x = jnp.broadcast_to(resid[:, None], (cfg.batch, cfg.n_head) + resid.shape[1:])
+        w = [params[f"l{l}.{n}"] for n in ATTN_PARAMS]
+        houts = attn_layer(x, x, x, *w, qp, use_pallas=True)
+        for h in range(cfg.n_head):
+            nodes.append(houts[:, h])
+        if cfg.has_mlp:
+            wm = [params[f"l{l}.{n}"] for n in MLP_PARAMS]
+            nodes.append(mlp_layer(sum(nodes), *wm, jnp.asarray([99.0, -126.0, 3.4e38])))
+    return unembed(sum(nodes), params["lnf_g"], params["wu"])
+
+
+@pytest.mark.parametrize("cfg", [CFG, CFG_AO], ids=["mlp", "attn-only"])
+def test_chained_equals_monolithic(cfg):
+    params, (clean, *_rest) = setup(cfg)
+    mono = forward_full(cfg, params, clean)
+    chain = chained_forward(cfg, params, clean)
+    np.testing.assert_allclose(np.asarray(chain), np.asarray(mono),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_roundtrip():
+    params = init_params(CFG, 3)
+    flat = flatten_params(CFG, params)
+    back = unflatten_params(CFG, flat)
+    for name, _ in param_spec(CFG):
+        np.testing.assert_array_equal(np.asarray(params[name]),
+                                      np.asarray(back[name]))
+
+
+def test_eps_grads_match_finite_difference():
+    """dmetric/d(eps_q) from the grads artifact path equals central
+    finite differences on a few random coordinates."""
+    cfg = dataclasses.replace(CFG_AO, batch=1)
+    params = init_params(cfg, 1)
+    exs = tasks.make_dataset("ioi", 1, 5)
+    clean, _, pos, ans, dis, _ = (jnp.asarray(a) for a in tasks.batch_arrays(exs))
+    ref_probs = jnp.full((1, cfg.vocab), 1.0 / cfg.vocab)
+
+    def f(eps):
+        m, _ = forward_with_eps(cfg, params, clean, pos, ans, dis, ref_probs,
+                                jnp.float32(1.0), eps)
+        return m
+
+    eps0 = zero_eps(cfg)
+    g = jax.grad(f)(eps0)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        l = int(rng.integers(cfg.n_layer))
+        h = int(rng.integers(cfg.n_head))
+        s = int(rng.integers(cfg.seq_len))
+        d = int(rng.integers(cfg.d_model))
+        delta = 1e-3
+        for key in ("eps_q", "eps_k", "eps_v"):
+            ep = {k: v for k, v in eps0.items()}
+            ep[key] = eps0[key].at[l, 0, h, s, d].set(delta)
+            em = {k: v for k, v in eps0.items()}
+            em[key] = eps0[key].at[l, 0, h, s, d].set(-delta)
+            fd = (f(ep) - f(em)) / (2 * delta)
+            an = g[key][l, 0, h, s, d]
+            # f32 central differences carry ~1e-4 cancellation noise on a
+            # metric of O(1); the analytic side is exact AD.
+            np.testing.assert_allclose(float(fd), float(an), rtol=0.15, atol=5e-4)
+
+
+def test_gates_all_ones_is_identity():
+    cfg = CFG
+    params, (clean, corrupt, pos, ans, dis) = setup(cfg)
+    ref_probs = jnp.full((cfg.batch, cfg.vocab), 1.0 / cfg.vocab)
+    _, caches = forward_full(cfg, params, corrupt, collect=True)
+    gates = jnp.ones((cfg.n_nodes,))
+    m = forward_with_gates(cfg, params, clean, pos, ans, dis, ref_probs,
+                           jnp.float32(1.0), gates, corrupt_caches=caches)
+    logits = forward_full(cfg, params, clean)
+    want = combined_metric(logits, pos, ans, dis, ref_probs, jnp.float32(1.0))
+    np.testing.assert_allclose(float(m), float(want), rtol=1e-5)
+
+
+def test_gates_all_zero_is_corrupt_run():
+    """With every gate at 0 and corrupt caches attached, node outputs are
+    the corrupted ones — the metric must equal the corrupted forward's."""
+    cfg = CFG_AO
+    params, (clean, corrupt, pos, ans, dis) = setup(cfg)
+    ref_probs = jnp.full((cfg.batch, cfg.vocab), 1.0 / cfg.vocab)
+    _, caches = forward_full(cfg, params, corrupt, collect=True)
+    gates = jnp.zeros((cfg.n_nodes,))
+    m = forward_with_gates(cfg, params, clean, pos, ans, dis, ref_probs,
+                           jnp.float32(1.0), gates, corrupt_caches=caches)
+    # corrupted node outputs + clean embed anchor == patching every head
+    emb_c = embed(clean, params["wte"], params["wpe"])
+    resid = emb_c
+    for l in range(cfg.n_layer):
+        resid = resid + jnp.sum(caches[f"attn{l}"], axis=1)
+    logits = unembed(resid, params["lnf_g"], params["wu"])
+    want = combined_metric(logits, pos, ans, dis, ref_probs, jnp.float32(1.0))
+    np.testing.assert_allclose(float(m), float(want), rtol=1e-4, atol=1e-5)
+
+
+def test_edge_mask_all_ones_equals_clean():
+    cfg = CFG_AO
+    params, (clean, corrupt, pos, ans, dis) = setup(cfg)
+    N, L, H = cfg.n_nodes, cfg.n_layer, cfg.n_head
+    _, cc = forward_full(cfg, params, corrupt, collect=True)
+    corrupt_nodes = [cc["embed"]]
+    for l in range(L):
+        for h in range(H):
+            corrupt_nodes.append(cc[f"attn{l}"][:, h])
+    corrupt_nodes = jnp.stack(corrupt_nodes)
+    masks = {
+        "mq": jnp.ones((L, H, N)), "mk": jnp.ones((L, H, N)),
+        "mv": jnp.ones((L, H, N)), "mm": jnp.ones((L, N)),
+        "mf": jnp.ones((N,)),
+    }
+    logits = forward_edge_masked(cfg, params, clean, masks, corrupt_nodes)
+    want = forward_full(cfg, params, clean)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_metrics():
+    """KL of identical distributions is 0; logit-diff is linear in logits."""
+    B, S, V = 2, 4, 8
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(B, S, V)).astype(np.float32))
+    pos = np.zeros((B, S), np.float32)
+    pos[:, 2] = 1
+    pos = jnp.asarray(pos)
+    at = jnp.einsum("bs,bsv->bv", pos, logits)
+    probs = jax.nn.softmax(at, axis=-1)
+    from compile.model import metric_kl, metric_logit_diff
+
+    kl = metric_kl(logits, pos, probs)
+    assert abs(float(kl)) < 1e-6
+    ans = jnp.asarray(np.eye(V, dtype=np.float32)[None, 0].repeat(B, 0))
+    dis = jnp.asarray(np.eye(V, dtype=np.float32)[None, 1].repeat(B, 0))
+    ld = metric_logit_diff(logits, pos, ans, dis)
+    want = float(jnp.mean(at[:, 0] - at[:, 1]))
+    np.testing.assert_allclose(float(ld), want, rtol=1e-6)

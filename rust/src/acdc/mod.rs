@@ -1,0 +1,217 @@
+//! ACDC — Automated Circuit Discovery (Conmy et al. 2023), the algorithm
+//! PAHQ accelerates (paper Appendix F gives the integrated version).
+//!
+//! Greedy reverse-topological sweep: for every destination channel (later
+//! layers first) and every incoming edge, tentatively patch the edge with
+//! its corrupted activation; if the metric damage increase over the
+//! current circuit is below the threshold τ, the edge is pruned for good.
+//!
+//! PAHQ integration (paper section 3.1): when the session policy is PAHQ,
+//! each evaluation passes `hi = src(e)` so the investigated edge's source
+//! component — its weights *and* its activations — runs at FP32 while
+//! everything else stays quantized. For ACDC-FP32 and RTN-Q the override
+//! is absent (it would be a no-op / is deliberately missing).
+
+use anyhow::Result;
+
+use crate::metrics::Objective;
+use crate::model::{Edge, NodeId};
+use crate::patching::{PatchMask, PatchedForward, Policy};
+
+/// One recorded sweep step (drives Fig. 3's edge-count curve).
+#[derive(Clone, Debug)]
+pub struct TraceStep {
+    pub step: usize,
+    pub edges_remaining: usize,
+    pub metric: f32,
+    pub removed: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct AcdcResult {
+    /// edges REMOVED from the circuit (patched to corrupt)
+    pub removed: PatchMask,
+    /// kept[i] aligned with `graph.edges()` order: true = in circuit
+    pub kept: Vec<bool>,
+    pub n_kept: usize,
+    pub n_evals: usize,
+    pub trace: Vec<TraceStep>,
+    pub final_metric: f32,
+    pub wall: std::time::Duration,
+}
+
+#[derive(Clone, Debug)]
+pub struct AcdcConfig {
+    pub tau: f32,
+    pub objective: Objective,
+    /// record the Fig. 3 trace (tiny overhead)
+    pub record_trace: bool,
+}
+
+impl AcdcConfig {
+    pub fn new(tau: f32, objective: Objective) -> AcdcConfig {
+        AcdcConfig { tau, objective, record_trace: false }
+    }
+}
+
+/// Does this policy investigate edges at high precision (PAHQ)?
+fn hi_node_for(policy: &Policy, src: NodeId) -> Option<NodeId> {
+    if policy.name.starts_with("pahq") {
+        Some(src)
+    } else {
+        None
+    }
+}
+
+/// Run ACDC under the engine's current session policy.
+pub fn run(engine: &mut PatchedForward, cfg: &AcdcConfig) -> Result<AcdcResult> {
+    let t0 = std::time::Instant::now();
+    let policy = engine.session().clone();
+    let edges = engine.graph.edges();
+    let total_edges = edges.len();
+
+    let mut patches = engine.empty_patches();
+    let mut m_cur = engine.damage(&patches, None, cfg.objective)?;
+    let mut n_evals = 1usize;
+    let mut trace = Vec::new();
+    let mut removed_count = 0usize;
+
+    // reverse topological order: later channels first, then later sources
+    // first within a channel (mirrors the reference implementation)
+    let mut channels = engine.channels.clone();
+    channels.reverse();
+    let mut step = 0usize;
+    for ch in channels {
+        let ci = engine.chan_index(ch);
+        let mut srcs = engine.graph.sources(ch);
+        srcs.reverse();
+        for src in srcs {
+            step += 1;
+            patches.set(ci, src, true);
+            let hi = hi_node_for(&policy, src);
+            let m_new = engine.damage(&patches, hi, cfg.objective)?;
+            n_evals += 1;
+            let removed = m_new - m_cur < cfg.tau;
+            if removed {
+                removed_count += 1;
+                m_cur = m_new;
+            } else {
+                patches.set(ci, src, false);
+            }
+            if cfg.record_trace {
+                trace.push(TraceStep {
+                    step,
+                    edges_remaining: total_edges - removed_count,
+                    metric: m_cur,
+                    removed,
+                });
+            }
+        }
+    }
+
+    let kept: Vec<bool> = edges
+        .iter()
+        .map(|e| !patches.get(engine.chan_index(e.dst), e.src))
+        .collect();
+    let n_kept = kept.iter().filter(|&&k| k).count();
+    Ok(AcdcResult {
+        removed: patches,
+        kept,
+        n_kept,
+        n_evals,
+        trace,
+        final_metric: m_cur,
+        wall: t0.elapsed(),
+    })
+}
+
+/// The 21 log-spaced thresholds the paper sweeps (0.001 .. 3.16).
+pub fn paper_thresholds() -> Vec<f32> {
+    let (lo, hi, n) = (0.001f64.ln(), 3.16f64.ln(), 21);
+    (0..n)
+        .map(|i| (lo + (hi - lo) * i as f64 / (n - 1) as f64).exp() as f32)
+        .collect()
+}
+
+/// Edge labels of the discovered circuit (debugging / CLI output).
+pub fn kept_edge_labels(engine: &PatchedForward, result: &AcdcResult) -> Vec<String> {
+    engine
+        .graph
+        .edges()
+        .iter()
+        .zip(&result.kept)
+        .filter(|(_, &k)| k)
+        .map(|(e, _)| e.label(&engine.graph))
+        .collect()
+}
+
+/// Convenience: kept flags for a caller-supplied edge order.
+pub fn kept_flags(engine: &PatchedForward, result: &AcdcResult, edges: &[Edge]) -> Vec<bool> {
+    edges
+        .iter()
+        .map(|e| !result.removed.get(engine.chan_index(e.dst), e.src))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::FP8_E4M3;
+
+    #[test]
+    fn thresholds_match_paper() {
+        let t = paper_thresholds();
+        assert_eq!(t.len(), 21);
+        assert!((t[0] - 0.001).abs() < 1e-6);
+        assert!((t[20] - 3.16).abs() < 0.01);
+        // log-spaced: ratios constant
+        let r01 = t[1] / t[0];
+        let r19 = t[20] / t[19];
+        assert!((r01 - r19).abs() < 1e-3);
+    }
+
+    fn engine() -> Option<PatchedForward> {
+        PatchedForward::new("redwood2l-sim", "ioi").ok()
+    }
+
+    #[test]
+    fn tiny_tau_keeps_more_than_huge_tau() {
+        let Some(mut e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let strict = run(&mut e, &AcdcConfig::new(1e-5, Objective::Kl)).unwrap();
+        let loose = run(&mut e, &AcdcConfig::new(10.0, Objective::Kl)).unwrap();
+        assert!(strict.n_kept > loose.n_kept, "{} vs {}", strict.n_kept, loose.n_kept);
+        // τ=10 prunes essentially everything
+        assert!(loose.n_kept < e.graph.n_edges() / 10);
+        // evals = edges + 1 baseline
+        assert_eq!(strict.n_evals, e.graph.n_edges() + 1);
+    }
+
+    #[test]
+    fn trace_is_monotone_decreasing() {
+        let Some(mut e) = engine() else { return };
+        let mut cfg = AcdcConfig::new(0.05, Objective::Kl);
+        cfg.record_trace = true;
+        let res = run(&mut e, &cfg).unwrap();
+        assert_eq!(res.trace.len(), e.graph.n_edges());
+        for w in res.trace.windows(2) {
+            assert!(w[1].edges_remaining <= w[0].edges_remaining);
+        }
+        assert_eq!(
+            res.trace.last().unwrap().edges_remaining,
+            res.n_kept,
+            "trace end equals kept count"
+        );
+    }
+
+    #[test]
+    fn pahq_session_runs_and_finds_nonempty_circuit() {
+        let Some(mut e) = engine() else { return };
+        e.set_session(Policy::pahq(FP8_E4M3)).unwrap();
+        let res = run(&mut e, &AcdcConfig::new(0.01, Objective::Kl)).unwrap();
+        assert!(res.n_kept > 0, "circuit is non-empty");
+        assert!(res.n_kept < e.graph.n_edges(), "something was pruned");
+    }
+}

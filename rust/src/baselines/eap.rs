@@ -1,0 +1,82 @@
+//! EAP — Edge Attribution Patching (Syed et al. 2023).
+//!
+//! First-order approximation of every edge's patching effect from a single
+//! forward+backward pair (paper Eq. 22):
+//!
+//!   score(u -> c) = | (z_corrupt_u - z_clean_u) · dL/d input_c |
+//!
+//! For the task metric, gradients are taken on the clean run (standard
+//! EAP). For the KL metric, the clean run sits at the KL minimum (zero
+//! gradient), so gradients are taken at the corrupted input — the
+//! convention of Hanna et al. 2024's KL-EAP.
+//!
+//! This is O(1) model executions vs ACDC's O(|E|); its weakness — the
+//! linear approximation degrading through multi-layer nonlinearities — is
+//! visible in Tab. 1 exactly as the paper reports (EAP trails ACDC/PAHQ on
+//! IOI).
+
+use anyhow::Result;
+
+use crate::metrics::Objective;
+use crate::patching::PatchedForward;
+use crate::tensor::dot;
+
+use super::grads::GradBundle;
+
+/// Per-edge attribution scores aligned with `graph.edges()` order.
+pub fn scores(engine: &mut PatchedForward, obj: Objective) -> Result<Vec<f32>> {
+    let sel = obj == Objective::LogitDiff;
+    let m = engine.manifest.clone();
+    let clean = GradBundle::new(&m, engine.run_grads(false, sel)?)?;
+    let corrupt = GradBundle::new(&m, engine.run_grads(true, sel)?)?;
+    // gradient run: clean for the task metric, corrupt for KL (see docs)
+    let grad_run = match obj {
+        Objective::LogitDiff => &clean,
+        Objective::Kl => &corrupt,
+    };
+    let g = engine.graph.clone();
+    let mut out = Vec::with_capacity(g.n_edges());
+    for e in g.edges() {
+        let zc = clean.node_act(&g, e.src);
+        let zx = corrupt.node_act(&g, e.src);
+        let grad = grad_run.chan_grad(e.dst);
+        // (z' - z) · g without materializing the difference
+        let s = dot(zx, grad) - dot(zc, grad);
+        out.push(s.abs());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scores_align_with_single_edge_patching() {
+        // EAP is a first-order approximation of the exact per-edge ΔL —
+        // rank correlation with the exhaustive ground truth should be
+        // clearly positive (it's the method's entire premise).
+        let Ok(mut e) = PatchedForward::new("redwood2l-sim", "ioi") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let s = scores(&mut e, Objective::LogitDiff).unwrap();
+        assert_eq!(s.len(), e.graph.n_edges());
+        assert!(s.iter().any(|&v| v > 0.0), "some edges matter");
+        let gt = crate::eval::ground_truth(&mut e, "redwood2l-sim", "ioi", Objective::Kl).unwrap();
+        // Spearman-ish check: mean score of true-circuit edges exceeds
+        // mean score of non-circuit edges by a solid factor
+        let (mut in_c, mut out_c, mut n_in, mut n_out) = (0.0f64, 0.0f64, 0, 0);
+        for (i, &m) in gt.member.iter().enumerate() {
+            if m {
+                in_c += s[i] as f64;
+                n_in += 1;
+            } else {
+                out_c += s[i] as f64;
+                n_out += 1;
+            }
+        }
+        let (mi, mo) = (in_c / n_in.max(1) as f64, out_c / n_out.max(1) as f64);
+        assert!(mi > 2.0 * mo, "circuit edges score higher: {mi:.4} vs {mo:.4}");
+    }
+}

@@ -1,0 +1,259 @@
+//! Edge Pruning (Bhaskar et al. 2024): learn a continuous mask per edge
+//! by gradient descent, interpolating each edge between its clean and
+//! corrupted contribution, then binarize.
+//!
+//! Objective:  KL(clean_ref || model(M)) + λ Σ M    (M in [0,1]^|E|)
+//!
+//! optimized with Adam on the AOT `edge_mask_grads` artifact. The Tab. 8
+//! comparison sweeps training steps {400, 800, 1600, 3000} and dataset
+//! sizes: like the original implementation, the step budget is *fixed
+//! regardless of dataset size* (the point the paper's appendix D makes),
+//! with batches rotating through a pool of `dataset_size` examples.
+
+use anyhow::{bail, Result};
+
+use crate::model::Graph;
+use crate::patching::PatchedForward;
+use crate::runtime::Input;
+use crate::tasks::Vocab;
+use crate::util::rng::Rng;
+
+pub struct EpConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub lambda: f32,
+    /// examples in the training pool (paper Tab. 8's "dataset size");
+    /// 0 = just the engine's fixed evaluation batch
+    pub dataset_size: usize,
+    /// rotate the batch every `rotate_every` steps (0 = never)
+    pub rotate_every: usize,
+    pub seed: u64,
+}
+
+impl Default for EpConfig {
+    fn default() -> Self {
+        EpConfig { steps: 400, lr: 0.05, lambda: 0.01, dataset_size: 0, rotate_every: 0, seed: 7 }
+    }
+}
+
+pub struct EpResult {
+    /// learned masks per edge, aligned with `graph.edges()` order
+    pub edge_scores: Vec<f32>,
+    pub final_kl: f32,
+    pub steps_run: usize,
+    pub wall: std::time::Duration,
+}
+
+struct Masks {
+    mq: Vec<f32>, // [L,H,N]
+    mk: Vec<f32>,
+    mv: Vec<f32>,
+    mm: Vec<f32>, // [L,N]
+    mf: Vec<f32>, // [N]
+}
+
+struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+}
+
+impl Adam {
+    fn new(n: usize) -> Adam {
+        Adam { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        self.t += 1;
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        let lr_t = lr * bc2.sqrt() / bc1;
+        for i in 0..params.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * grads[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * grads[i] * grads[i];
+            params[i] = (params[i] - lr_t * self.m[i] / (self.v[i].sqrt() + eps)).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Pack corrupted node outputs into the artifact's [N,B,S,D] layout.
+fn corrupt_nodes(engine: &PatchedForward) -> (Vec<f32>, Vec<usize>) {
+    let m = &engine.manifest;
+    let n = engine.graph.n_nodes();
+    let bsd = m.batch * m.seq_len * m.d_model;
+    let mut out = vec![0.0f32; n * bsd];
+    for node in 0..n {
+        out[node * bsd..(node + 1) * bsd].copy_from_slice(&engine.corrupt_cache[node].data);
+    }
+    (out, vec![n, m.batch, m.seq_len, m.d_model])
+}
+
+pub fn train(engine: &mut PatchedForward, cfg: &EpConfig) -> Result<EpResult> {
+    let t0 = std::time::Instant::now();
+    let m = engine.manifest.clone();
+    if !m.artifacts.iter().any(|a| a == "edge_mask_grads.hlo.txt") {
+        bail!("{}: edge_mask_grads artifact not exported", m.name);
+    }
+    let g = engine.graph.clone();
+    let (l, h, n) = (m.n_layer, m.n_head, g.n_nodes());
+
+    let mut masks = Masks {
+        mq: vec![1.0; l * h * n],
+        mk: vec![1.0; l * h * n],
+        mv: vec![1.0; l * h * n],
+        mm: vec![1.0; l.max(1) * n],
+        mf: vec![1.0; n],
+    };
+    let mut opt = [
+        Adam::new(masks.mq.len()),
+        Adam::new(masks.mk.len()),
+        Adam::new(masks.mv.len()),
+        Adam::new(masks.mm.len()),
+        Adam::new(masks.mf.len()),
+    ];
+
+    // dataset pool for batch rotation
+    let pool = if cfg.dataset_size > 0 {
+        let vocab = Vocab::load()?;
+        Some(vocab.make_dataset(&engine.examples_task_guess(), cfg.dataset_size, cfg.seed)?)
+    } else {
+        None
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0xabcdef);
+
+    let (mut c_nodes, c_shape) = corrupt_nodes(engine);
+    let mut final_kl = 0.0;
+    for step in 0..cfg.steps {
+        if let (Some(pool), true) = (
+            &pool,
+            cfg.rotate_every > 0 && step > 0 && step % cfg.rotate_every == 0,
+        ) {
+            // rotate the evaluation batch through the pool
+            let batch: Vec<_> = (0..m.batch)
+                .map(|_| pool[rng.below(pool.len())].clone())
+                .collect();
+            engine.set_examples(batch)?;
+            let packed = corrupt_nodes(engine);
+            c_nodes = packed.0;
+        }
+        let sh_q = [l, h, n];
+        let sh_m = [l.max(1), n];
+        let sh_f = [n];
+        let outs = {
+            let extras = [
+                Input::new(&c_shape, &c_nodes),
+                Input::new(&sh_q, &masks.mq),
+                Input::new(&sh_q, &masks.mk),
+                Input::new(&sh_q, &masks.mv),
+                Input::new(&sh_m, &masks.mm),
+                Input::new(&sh_f, &masks.mf),
+            ];
+            engine.run_grad_artifact("edge_mask_grads.hlo.txt", false, false, &extras)?
+        };
+        final_kl = outs[0].data[0];
+        // grads + λ, only on causally-valid entries (invalid stay at 1)
+        let lam = cfg.lambda;
+        let apply = |params: &mut [f32], grads: &[f32], opt: &mut Adam| {
+            let gl: Vec<f32> = grads.iter().map(|&d| d + lam).collect();
+            opt.step(params, &gl, cfg.lr);
+        };
+        apply(&mut masks.mq, &outs[1].data, &mut opt[0]);
+        apply(&mut masks.mk, &outs[2].data, &mut opt[1]);
+        apply(&mut masks.mv, &outs[3].data, &mut opt[2]);
+        apply(&mut masks.mm, &outs[4].data, &mut opt[3]);
+        apply(&mut masks.mf, &outs[5].data, &mut opt[4]);
+        reset_invalid(&g, &mut masks);
+    }
+
+    // per-edge scores from the learned masks
+    let mut edge_scores = Vec::with_capacity(g.n_edges());
+    for e in g.edges() {
+        let v = match e.dst {
+            crate::model::Channel::Head { layer, head, comp } => {
+                let base = (layer * h + head) * n + e.src;
+                match comp {
+                    0 => masks.mq[base],
+                    1 => masks.mk[base],
+                    _ => masks.mv[base],
+                }
+            }
+            crate::model::Channel::Mlp { layer } => masks.mm[layer * n + e.src],
+            crate::model::Channel::Final => masks.mf[e.src],
+        };
+        edge_scores.push(v);
+    }
+    Ok(EpResult { edge_scores, final_kl, steps_run: cfg.steps, wall: t0.elapsed() })
+}
+
+/// Entries for causally-invalid (non-)edges must stay pinned at 1 so they
+/// keep contributing the clean activation (they receive spurious zero
+/// gradients plus λ pressure otherwise).
+fn reset_invalid(g: &Graph, masks: &mut Masks) {
+    let n = g.n_nodes();
+    let h = g.n_head;
+    for layer in 0..g.n_layer {
+        let valid = g.sources(crate::model::Channel::Head { layer, head: 0, comp: 0 });
+        for head in 0..h {
+            for src in 0..n {
+                if !valid.contains(&src) {
+                    let base = (layer * h + head) * n + src;
+                    masks.mq[base] = 1.0;
+                    masks.mk[base] = 1.0;
+                    masks.mv[base] = 1.0;
+                }
+            }
+        }
+        if g.has_mlp {
+            let valid = g.sources(crate::model::Channel::Mlp { layer });
+            for src in 0..n {
+                if !valid.contains(&src) {
+                    masks.mm[layer * n + src] = 1.0;
+                }
+            }
+        }
+    }
+}
+
+impl PatchedForward {
+    /// Best-effort task name of the current examples (pool regeneration).
+    /// The engine doesn't persist the task string; infer from prompt
+    /// template length/structure via the dataset artifacts.
+    pub fn examples_task_guess(&self) -> String {
+        // IOI answer position 14, docstring 17, greater-than 10 (template
+        // constants shared with python's tasks.py)
+        match self.examples.first().map(|e| e.pos) {
+            Some(14) => "ioi",
+            Some(17) => "docstring",
+            Some(10) => "greater_than",
+            _ => "ioi",
+        }
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_training_reduces_kl_and_sparsifies() {
+        let Ok(mut e) = PatchedForward::new("redwood2l-sim", "ioi") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let cfg = EpConfig { steps: 25, lr: 0.08, lambda: 0.02, ..Default::default() };
+        let res = train(&mut e, &cfg).unwrap();
+        assert_eq!(res.edge_scores.len(), e.graph.n_edges());
+        assert!(res.edge_scores.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(res.final_kl.is_finite());
+        // λ pressure pushed some masks down
+        assert!(res.edge_scores.iter().any(|&v| v < 0.9));
+    }
+
+    #[test]
+    fn task_guess_matches_loaded_dataset() {
+        let Ok(e) = PatchedForward::new("redwood2l-sim", "greater_than") else { return };
+        assert_eq!(e.examples_task_guess(), "greater_than");
+    }
+}

@@ -1,0 +1,91 @@
+//! Typed view over the `grads.hlo.txt` output tuple.
+//!
+//! Tuple order (see aot.export_grads):
+//!   attn-only: metric, embed [B,S,D], attn [L,H,B,S,D],
+//!              gq, gk, gv, ghout [L,H,B,S,D], gfinal [B,S,D]
+//!   with MLP:  metric, embed, attn, mlp [L,B,S,D],
+//!              gq, gk, gv, ghout, gmlp [L,B,S,D], gfinal
+//!
+//! Per-head tensors are head-major, so every node's [B,S,D] block is a
+//! contiguous slice.
+
+use anyhow::{bail, Result};
+
+use crate::model::{Channel, Graph, Manifest, NodeId};
+use crate::tensor::Tensor;
+
+pub struct GradBundle {
+    pub metric: f32,
+    outs: Vec<Tensor>,
+    has_mlp: bool,
+    bsd: usize,
+    pub n_layer: usize,
+    n_head: usize,
+}
+
+impl GradBundle {
+    pub fn new(m: &Manifest, outs: Vec<Tensor>) -> Result<GradBundle> {
+        let want = if m.has_mlp() { 10 } else { 8 };
+        if outs.len() != want {
+            bail!("grads artifact returned {} outputs, expected {want}", outs.len());
+        }
+        Ok(GradBundle {
+            metric: outs[0].data[0],
+            bsd: m.batch * m.seq_len * m.d_model,
+            has_mlp: m.has_mlp(),
+            n_layer: m.n_layer,
+            n_head: m.n_head,
+            outs,
+        })
+    }
+
+    fn idx(&self, name: &str) -> usize {
+        // attn-only: [metric, embed, attn, gq, gk, gv, ghout, gfinal]
+        // mlp:       [metric, embed, attn, mlp, gq, gk, gv, ghout, gmlp, gfinal]
+        let base: &[&str] = if self.has_mlp {
+            &["metric", "embed", "attn", "mlp", "gq", "gk", "gv", "ghout", "gmlp", "gfinal"]
+        } else {
+            &["metric", "embed", "attn", "gq", "gk", "gv", "ghout", "gfinal"]
+        };
+        base.iter().position(|&n| n == name).unwrap()
+    }
+
+    fn head_slice<'a>(&'a self, name: &str, layer: usize, head: usize) -> &'a [f32] {
+        let t = &self.outs[self.idx(name)];
+        let off = (layer * self.n_head + head) * self.bsd;
+        &t.data[off..off + self.bsd]
+    }
+
+    fn layer_slice<'a>(&'a self, name: &str, layer: usize) -> &'a [f32] {
+        let t = &self.outs[self.idx(name)];
+        &t.data[layer * self.bsd..(layer + 1) * self.bsd]
+    }
+
+    /// Activation of a node's output ([B,S,D] flat).
+    pub fn node_act(&self, g: &Graph, node: NodeId) -> &[f32] {
+        match g.node_kind(node) {
+            crate::model::graph::NodeKind::Embed => &self.outs[self.idx("embed")].data,
+            crate::model::graph::NodeKind::Head { layer, head } => {
+                self.head_slice("attn", layer, head)
+            }
+            crate::model::graph::NodeKind::Mlp { layer } => self.layer_slice("mlp", layer),
+        }
+    }
+
+    /// dL/d(channel input) for a destination channel ([B,S,D] flat).
+    pub fn chan_grad(&self, ch: Channel) -> &[f32] {
+        match ch {
+            Channel::Head { layer, head, comp } => {
+                let name = ["gq", "gk", "gv"][comp as usize];
+                self.head_slice(name, layer, head)
+            }
+            Channel::Mlp { layer } => self.layer_slice("gmlp", layer),
+            Channel::Final => &self.outs[self.idx("gfinal")].data,
+        }
+    }
+
+    /// dL/d(head output) — HISP's importance signal.
+    pub fn head_out_grad(&self, layer: usize, head: usize) -> &[f32] {
+        self.head_slice("ghout", layer, head)
+    }
+}

@@ -1,0 +1,15 @@
+//! Baseline circuit-discovery methods the paper compares against
+//! (Tab. 1 / Tab. 8): EAP, HISP, SP, Edge Pruning. RTN-Q needs no code of
+//! its own — it is ACDC under [`crate::patching::Policy::rtn`].
+//!
+//! All gradient-based baselines consume AOT gradient artifacts (lowered by
+//! `aot.py` from the pure-jnp reference path) executed through PJRT; the
+//! Rust side owns the optimization loops and scoring.
+
+pub mod eap;
+pub mod edge_pruning;
+pub mod grads;
+pub mod hisp;
+pub mod sp;
+
+pub use grads::GradBundle;

@@ -1,0 +1,250 @@
+//! Evaluation: ground-truth circuits, ROC sweeps, and AUC per method.
+//!
+//! **Ground truth.** The paper scores discovered circuits against
+//! manually-identified reference circuits (IOI paper etc.). Those don't
+//! exist for our synthetic models, so the reference circuit is defined by
+//! the noise-free version of the same experiment: exhaustive single-edge
+//! activation patching at FP32. Edge e is in C* iff its standalone
+//! ΔL_KL exceeds τ* = max(1e-4, GT_REL · max_e ΔL) — a relative knee
+//! that keeps C* at the few-percent sparsity the literature reports.
+//! GT_REL is deliberately small: reference circuits (e.g. IOI's backup /
+//! negative name-mover heads) contain *weak-but-real* edges one to two
+//! orders of magnitude below the dominant ones, and those are exactly
+//! the edges FP8 underflow garbles — the contrast Fig. 1 / Tab. 1
+//! measures. Computed once per (model, task) and cached under
+//! `artifacts/groundtruth/`.
+//!
+//! **ROC.** Threshold-sweep methods (ACDC / RTN-Q / PAHQ) contribute one
+//! (FPR, TPR) point per τ in the paper's 21-value grid; score-based
+//! methods (EAP / HISP / SP) sweep their own score thresholds densely.
+//! AUC uses the pessimistic Pareto construction (metrics module).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::acdc::{self, AcdcConfig};
+use crate::metrics::{auc_pessimistic, confusion, Objective, RocPoint};
+use crate::model::Edge;
+use crate::patching::{PatchedForward, Policy};
+use crate::util::json::{obj as json_obj, Json};
+
+/// Relative knee for ground-truth membership (see module docs).
+pub const GT_REL: f32 = 0.002;
+
+/// Per-edge standalone FP32 ΔL, aligned with `graph.edges()` order.
+#[derive(Clone, Debug)]
+pub struct GroundTruth {
+    pub edges: Vec<Edge>,
+    pub delta: Vec<f32>,
+    pub tau_star: f32,
+    pub member: Vec<bool>,
+}
+
+impl GroundTruth {
+    pub fn n_members(&self) -> usize {
+        self.member.iter().filter(|&&m| m).count()
+    }
+}
+
+fn gt_cache_path(model: &str, task: &str, obj: Objective) -> PathBuf {
+    let tag = match obj {
+        Objective::Kl => "kl",
+        Objective::LogitDiff => "task",
+    };
+    crate::artifacts_root()
+        .join("groundtruth")
+        .join(format!("{model}_{task}_{tag}.json"))
+}
+
+/// Compute (or load from cache) the ground-truth circuit.
+///
+/// The engine must be in an FP32 session (asserted): truth is by
+/// definition noise-free.
+pub fn ground_truth(
+    engine: &mut PatchedForward,
+    model: &str,
+    task: &str,
+    obj: Objective,
+) -> Result<GroundTruth> {
+    let edges = engine.graph.edges();
+    let path = gt_cache_path(model, task, obj);
+    if let Ok(j) = Json::parse_file(&path) {
+        if let Ok(delta) = j.get("delta").and_then(|d| d.f32_vec()) {
+            if delta.len() == edges.len() {
+                return Ok(finish(edges, delta));
+            }
+        }
+    }
+
+    assert!(
+        engine.session().name == "acdc-fp32",
+        "ground truth must be computed under the FP32 session"
+    );
+    let mut delta = Vec::with_capacity(edges.len());
+    let mut patches = engine.empty_patches();
+    for e in &edges {
+        let ci = engine.chan_index(e.dst);
+        patches.set(ci, e.src, true);
+        delta.push(engine.damage(&patches, None, obj)?);
+        patches.set(ci, e.src, false);
+    }
+
+    std::fs::create_dir_all(path.parent().unwrap()).ok();
+    let dump = json_obj(vec![
+        ("model", Json::from(model)),
+        ("task", Json::from(task)),
+        ("delta", Json::Arr(delta.iter().map(|&d| Json::Num(d as f64)).collect())),
+    ]);
+    std::fs::write(&path, dump.dump()).with_context(|| format!("writing {}", path.display()))?;
+    Ok(finish(edges, delta))
+}
+
+fn finish(edges: Vec<Edge>, delta: Vec<f32>) -> GroundTruth {
+    let max = delta.iter().copied().fold(0.0f32, f32::max);
+    let tau_star = (GT_REL * max).max(1e-4);
+    let member = delta.iter().map(|&d| d >= tau_star).collect();
+    GroundTruth { edges, delta, tau_star, member }
+}
+
+// ---------------------------------------------------------------------------
+// ROC sweeps
+
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub points: Vec<RocPoint>,
+    pub auc: f64,
+    /// (tau, kept flags) per threshold — reused by Tab. 2's accuracy rows
+    pub circuits: Vec<(f32, Vec<bool>)>,
+}
+
+/// Threshold-sweep ROC for an ACDC-family method (policy decides which).
+pub fn sweep_acdc(
+    engine: &mut PatchedForward,
+    policy: Policy,
+    obj: Objective,
+    truth: &GroundTruth,
+    thresholds: &[f32],
+) -> Result<SweepResult> {
+    engine.set_session(policy)?;
+    let mut points = Vec::new();
+    let mut circuits = Vec::new();
+    for &tau in thresholds {
+        let res = acdc::run(engine, &AcdcConfig::new(tau, obj))?;
+        points.push(confusion(&res.kept, &truth.member));
+        circuits.push((tau, res.kept));
+    }
+    let auc = auc_pessimistic(&points);
+    Ok(SweepResult { points, auc, circuits })
+}
+
+/// Score-based ROC (EAP / HISP / SP): edges with score >= threshold are
+/// "in circuit"; sweep every distinct score.
+pub fn sweep_scores(scores: &[f32], truth: &GroundTruth) -> SweepResult {
+    debug_assert_eq!(scores.len(), truth.member.len());
+    let mut uniq: Vec<f32> = scores.to_vec();
+    uniq.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    uniq.dedup();
+    let mut points = Vec::new();
+    let mut circuits = Vec::new();
+    // cap the sweep density: 64 quantile thresholds is plenty for AUC
+    let step = (uniq.len() / 64).max(1);
+    for th in uniq.iter().step_by(step) {
+        let kept: Vec<bool> = scores.iter().map(|&s| s >= *th).collect();
+        points.push(confusion(&kept, &truth.member));
+        circuits.push((*th, kept));
+    }
+    let auc = auc_pessimistic(&points);
+    SweepResult { points, auc, circuits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::FP8_E4M3;
+
+    fn engine() -> Option<PatchedForward> {
+        PatchedForward::new("redwood2l-sim", "ioi").ok()
+    }
+
+    #[test]
+    fn ground_truth_caches_and_is_sparse() {
+        let Some(mut e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let gt = ground_truth(&mut e, "redwood2l-sim", "ioi", Objective::Kl).unwrap();
+        assert_eq!(gt.delta.len(), e.graph.n_edges());
+        let frac = gt.n_members() as f64 / gt.delta.len() as f64;
+        assert!(frac > 0.005 && frac < 0.6, "circuit fraction {frac}");
+        // cached second call is near-instant (no forward passes)
+        let before = e.forward_count;
+        let t1 = std::time::Instant::now();
+        let gt2 = ground_truth(&mut e, "redwood2l-sim", "ioi", Objective::Kl).unwrap();
+        assert_eq!(e.forward_count, before, "cache hit runs no forwards");
+        assert!(t1.elapsed() < std::time::Duration::from_millis(200));
+        assert_eq!(gt.member, gt2.member);
+    }
+
+    #[test]
+    fn fig1_shape_quantization_ordering() {
+        // The headline qualitative claim (Fig. 1 / Tab. 1 / Tab. 5):
+        // precision ordering of discovery quality. On our build-time
+        // models (trained to saturation, unlike pretrained GPT-2) FP8
+        // RTN-Q degrades mildly rather than catastrophically; the paper's
+        // underflow collapse appears one format level down, at 4 bits,
+        // where the quantum exceeds the activation deltas entirely —
+        // see EXPERIMENTS.md "Divergences". Asserted shape:
+        //   ACDC ≈ PAHQ >= RTN-Q(8b) >> RTN-Q(4b)
+        let Some(mut e) = engine() else { return };
+        let gt = ground_truth(&mut e, "redwood2l-sim", "ioi", Objective::Kl).unwrap();
+        // subsample thresholds for test speed
+        let taus: Vec<f32> = acdc::paper_thresholds().into_iter().step_by(4).collect();
+        let acdc32 = sweep_acdc(&mut e, Policy::fp32(), Objective::Kl, &gt, &taus).unwrap();
+        let rtn8 = sweep_acdc(&mut e, Policy::rtn(FP8_E4M3), Objective::Kl, &gt, &taus).unwrap();
+        let rtn4 =
+            sweep_acdc(&mut e, Policy::rtn(crate::quant::FP4_E2M1), Objective::Kl, &gt, &taus)
+                .unwrap();
+        let pahq = sweep_acdc(&mut e, Policy::pahq(FP8_E4M3), Objective::Kl, &gt, &taus).unwrap();
+        assert!(
+            (acdc32.auc - pahq.auc).abs() < 0.1,
+            "PAHQ {:.3} tracks ACDC {:.3}",
+            pahq.auc,
+            acdc32.auc
+        );
+        assert!(
+            acdc32.auc >= rtn8.auc - 1e-6,
+            "ACDC {:.3} >= RTN-Q-8b {:.3}",
+            acdc32.auc,
+            rtn8.auc
+        );
+        assert!(
+            rtn4.auc < acdc32.auc - 0.2,
+            "4-bit collapse: RTN-4b {:.3} vs ACDC {:.3} (paper Tab. 5 / section 2)",
+            rtn4.auc,
+            acdc32.auc
+        );
+        assert!(
+            pahq.auc > rtn4.auc + 0.2,
+            "PAHQ {:.3} >> RTN-4b {:.3}",
+            pahq.auc,
+            rtn4.auc
+        );
+    }
+
+    #[test]
+    fn score_sweep_is_valid_roc() {
+        let truth = GroundTruth {
+            edges: vec![],
+            delta: vec![0.9, 0.8, 0.0, 0.1, 0.0, 0.0],
+            tau_star: 0.5,
+            member: vec![true, true, false, false, false, false],
+        };
+        // perfectly correlated scores -> AUC 1
+        let s = sweep_scores(&[0.9, 0.8, 0.0, 0.1, 0.05, 0.0], &truth);
+        assert!(s.auc > 0.95, "auc {}", s.auc);
+        // anti-correlated scores -> AUC ~0
+        let s = sweep_scores(&[0.0, 0.1, 0.9, 0.8, 0.7, 0.6], &truth);
+        assert!(s.auc < 0.3, "auc {}", s.auc);
+    }
+}

@@ -1,0 +1,138 @@
+//! The paper's real model architectures, used to run the simulated
+//! experiments at the paper's scale (our runnable sim models are tiny —
+//! the DES doesn't care, it only needs dimensions and edge counts).
+
+use crate::model::Graph;
+
+#[derive(Clone, Debug)]
+pub struct RealArch {
+    pub name: &'static str,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    pub d_head: usize,
+    pub d_mlp: usize,
+    /// tokens in flight per edge evaluation (batch x seq of the ACDC run)
+    pub batch: usize,
+    pub seq: usize,
+    pub n_params: usize,
+}
+
+impl RealArch {
+    pub fn by_name(name: &str) -> Option<RealArch> {
+        Some(match name {
+            // GPT-2 small: 12L x 12H x 768. Batch 256: ACDC evaluates the
+            // metric expectation over a large prompt set per edge.
+            "gpt2" | "gpt2s-sim" => arch("gpt2", 12, 12, 768, 64, 3072, 256, 20),
+            // attn-4l (Heimersheim & Janiak): 4L x 8H x 512, attention-only
+            "attn-4l" | "attn4l-sim" => arch("attn-4l", 4, 8, 512, 64, 0, 256, 20),
+            // redwood-2l: 2L x 8H x 256, attention-only
+            "redwood-2l" | "redwood2l-sim" => arch("redwood-2l", 2, 8, 256, 32, 0, 256, 20),
+            // appendix C scale series
+            "gpt2-medium" | "gpt2m-sim" => arch("gpt2-medium", 24, 16, 1024, 64, 4096, 6, 20),
+            "gpt2-large" | "gpt2l-sim" => arch("gpt2-large", 36, 20, 1280, 64, 5120, 5, 20),
+            "gpt2-xl" | "gpt2xl-sim" => arch("gpt2-xl", 48, 25, 1600, 64, 6400, 4, 20),
+            _ => return None,
+        })
+    }
+
+    pub fn graph(&self) -> Graph {
+        Graph { n_layer: self.n_layer, n_head: self.n_head, has_mlp: self.d_mlp > 0 }
+    }
+
+    /// Edges ACDC must evaluate (one sweep).
+    pub fn n_edges(&self) -> usize {
+        self.graph().n_edges()
+    }
+
+    pub fn has_mlp(&self) -> bool {
+        self.d_mlp > 0
+    }
+
+    /// fp32 bytes of all parameters.
+    pub fn param_bytes(&self) -> usize {
+        self.n_params * 4
+    }
+
+    /// fp32 bytes of one attention head's Q/K/V/O weights (the unit PAHQ
+    /// stages to the device per edge evaluation).
+    pub fn head_bytes(&self) -> usize {
+        4 * (4 * self.d_model * self.d_head + 3 * self.d_head)
+    }
+
+    /// fp32 bytes of one layer's full W_O (also uploaded per the paper's
+    /// Phase 1, Eq. 11).
+    pub fn wo_bytes(&self) -> usize {
+        4 * self.n_head * self.d_head * self.d_model
+    }
+
+    /// Activation-cache bytes per precision byte-width: clean + corrupt
+    /// node-output caches. Caches are kept for a bounded reference batch
+    /// (implementations stream the rest), capped at CACHE_BATCH.
+    pub fn activation_cache_bytes(&self, bytes_per_elem: usize) -> usize {
+        const CACHE_BATCH: usize = 128;
+        let n_nodes = self.graph().n_nodes();
+        2 * n_nodes * self.batch.min(CACHE_BATCH) * self.seq * self.d_model * bytes_per_elem
+    }
+}
+
+fn arch(
+    name: &'static str,
+    n_layer: usize,
+    n_head: usize,
+    d_model: usize,
+    d_head: usize,
+    d_mlp: usize,
+    batch: usize,
+    seq: usize,
+) -> RealArch {
+    // parameter count: embeddings (50257 vocab + 1024 pos for gpt2 family;
+    // folded into a single constant per arch) + per-layer attn + mlp
+    let vocab = 50257usize;
+    let per_layer = 4 * d_model * d_model + 4 * d_model // attn w + b
+        + if d_mlp > 0 { 2 * d_model * d_mlp + d_mlp + d_model } else { 0 }
+        + 4 * d_model; // ln params
+    let n_params = vocab * d_model + 1024 * d_model + n_layer * per_layer;
+    RealArch { name, n_layer, n_head, d_model, d_head, d_mlp, batch, seq, n_params }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_edge_count_matches_paper_fig3() {
+        // paper Fig. 3: the IOI circuit starts from ~35,000 edges
+        let a = RealArch::by_name("gpt2").unwrap();
+        let e = a.n_edges();
+        assert!((30_000..40_000).contains(&e), "gpt2 edges = {e}");
+    }
+
+    #[test]
+    fn gpt2_params_close_to_124m() {
+        let a = RealArch::by_name("gpt2").unwrap();
+        assert!((100e6..140e6).contains(&(a.n_params as f64)), "{}", a.n_params);
+    }
+
+    #[test]
+    fn sim_names_alias_real_archs() {
+        for (simname, real) in [
+            ("gpt2s-sim", "gpt2"),
+            ("attn4l-sim", "attn-4l"),
+            ("redwood2l-sim", "redwood-2l"),
+        ] {
+            assert_eq!(
+                RealArch::by_name(simname).unwrap().name,
+                RealArch::by_name(real).unwrap().name
+            );
+        }
+    }
+
+    #[test]
+    fn scale_series_grows() {
+        let e_s = RealArch::by_name("gpt2").unwrap().n_edges();
+        let e_m = RealArch::by_name("gpt2-medium").unwrap().n_edges();
+        let e_l = RealArch::by_name("gpt2-large").unwrap().n_edges();
+        assert!(e_s < e_m && e_m < e_l);
+    }
+}

@@ -1,0 +1,121 @@
+//! Device-memory model (Tab. 3's "Mem (GB)" column).
+//!
+//! Decomposition per method:
+//!   total = framework overhead (CUDA context, allocator pools, workspace)
+//!         + resident weights at the method's storage precision
+//!         + (PAHQ only) FP32 staging area for one head + one W_O
+//!         + activation caches (clean + corrupt node outputs) at the
+//!           method's activation precision
+//!         + transient forward activations (~2 layers' worth at peak).
+//!
+//! The framework constant is calibrated once against the paper's ACDC
+//! row (GPT-2: 6.23 GB) and shared by every method — differences between
+//! methods come only from the structural terms, which is what the table
+//! is actually about (ACDC > PAHQ ≈ RTN-Q, gap ≈ 1/3).
+
+use super::arch::RealArch;
+
+/// Calibrated PyTorch/CUDA baseline footprint (GB -> bytes).
+pub const FRAMEWORK_BYTES: usize = 2_900_000_000;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    AcdcFp32,
+    RtnQ,
+    Pahq,
+}
+
+#[derive(Clone, Debug)]
+pub struct MemoryBreakdown {
+    pub framework: usize,
+    pub weights: usize,
+    pub staging: usize,
+    pub act_cache: usize,
+    pub transient: usize,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> usize {
+        self.framework + self.weights + self.staging + self.act_cache + self.transient
+    }
+
+    pub fn total_gb(&self) -> f64 {
+        self.total() as f64 / 1e9
+    }
+}
+
+pub fn memory_model(arch: &RealArch, method: MethodKind) -> MemoryBreakdown {
+    let (w_bytes, act_bytes) = match method {
+        MethodKind::AcdcFp32 => (4, 4),
+        MethodKind::RtnQ => (1, 1),
+        // PAHQ: FP8 weights resident; activations unified to FP32 only for
+        // the layer in flight — caches stay at FP8 (paper stores the
+        // low-precision pipeline and re-materializes FP32 per evaluation)
+        MethodKind::Pahq => (1, 1),
+    };
+    let weights = arch.n_params * w_bytes;
+    let staging = match method {
+        MethodKind::Pahq => arch.head_bytes() + arch.wo_bytes(),
+        _ => 0,
+    };
+    let act_cache = arch.activation_cache_bytes(act_bytes);
+    // transient peak: a couple of layers of per-head channel inputs at the
+    // storage precision, plus — for PAHQ — ONE layer's unified-FP32
+    // attention activations (Eq. 10 re-materializes FP32 per layer in
+    // flight, not for the whole network; that is the point of the design)
+    let compute_bytes = match method {
+        MethodKind::AcdcFp32 => 4,
+        _ => 1,
+    };
+    let mut transient =
+        2 * 3 * arch.n_head * arch.batch * arch.seq * arch.d_model * compute_bytes;
+    if method == MethodKind::Pahq {
+        // one layer's q/k/v at FP32 (D already spans all heads)
+        transient += 3 * arch.batch * arch.seq * arch.d_model * 4;
+    }
+    MemoryBreakdown {
+        framework: FRAMEWORK_BYTES,
+        weights,
+        staging,
+        act_cache,
+        transient,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab3_ordering_and_ratio() {
+        // Tab. 3 shape: ACDC > PAHQ >= RTN-Q, PAHQ within ~2-5% of RTN-Q,
+        // and ACDC -> PAHQ saves ≳ 25% (paper: "nearly 1/3").
+        let a = RealArch::by_name("gpt2").unwrap();
+        let acdc = memory_model(&a, MethodKind::AcdcFp32).total_gb();
+        let rtn = memory_model(&a, MethodKind::RtnQ).total_gb();
+        let pahq = memory_model(&a, MethodKind::Pahq).total_gb();
+        assert!(acdc > pahq && pahq >= rtn, "{acdc} {pahq} {rtn}");
+        let saving = 1.0 - pahq / acdc;
+        assert!(saving > 0.2, "PAHQ saves {saving:.2} vs ACDC");
+        // PAHQ's staging overhead over RTN-Q is small
+        assert!((pahq - rtn) / rtn < 0.05, "{pahq} vs {rtn}");
+    }
+
+    #[test]
+    fn gpt2_acdc_near_paper_value() {
+        // calibration sanity: paper reports 6.23 GB for ACDC on GPT-2
+        let a = RealArch::by_name("gpt2").unwrap();
+        let gb = memory_model(&a, MethodKind::AcdcFp32).total_gb();
+        assert!((4.0..9.0).contains(&gb), "ACDC gpt2 = {gb:.2} GB");
+    }
+
+    #[test]
+    fn smaller_models_use_less() {
+        for m in [MethodKind::AcdcFp32, MethodKind::RtnQ, MethodKind::Pahq] {
+            let g = memory_model(&RealArch::by_name("gpt2").unwrap(), m).total();
+            let a4 = memory_model(&RealArch::by_name("attn-4l").unwrap(), m).total();
+            let r2 = memory_model(&RealArch::by_name("redwood-2l").unwrap(), m).total();
+            assert!(g > a4 && a4 > r2);
+        }
+    }
+}

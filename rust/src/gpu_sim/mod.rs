@@ -1,0 +1,29 @@
+//! Discrete-event GPU simulator.
+//!
+//! The paper's runtime/memory claims (Tab. 3, Tab. 4) are measured on an
+//! NVIDIA H20 with CUDA streams and native FP8; none of that exists here,
+//! so this module simulates the *structure* those claims depend on:
+//!
+//! - [`sim`]    — the event core: streams with FIFO ordering, ops with
+//!                dependencies, makespan = max finish time;
+//! - [`cost`]   — a calibrated cost model: GEMM time by precision,
+//!                elementwise kernels, launch overhead, and the crucial
+//!                host→device transfer model (per-chunk overhead dominates
+//!                for the strided per-head row gathers PAHQ performs);
+//! - [`arch`]   — the *paper's* model architectures (GPT-2 small/medium/
+//!                large/XL, attn-4l, redwood-2l) with their true edge
+//!                counts, so simulated totals are at the paper's scale;
+//! - [`memory`] — the device-memory model behind Tab. 3's GB column.
+//!
+//! The simulation is used by [`crate::scheduler`] to predict end-to-end
+//! ACDC / RTN-Q / PAHQ runtimes; the Rust runtime's *real* wall-clock on
+//! the tiny sim models is reported alongside, never conflated.
+
+pub mod arch;
+pub mod cost;
+pub mod memory;
+pub mod sim;
+
+pub use arch::RealArch;
+pub use cost::CostModel;
+pub use sim::{EventId, Sim, StreamId};

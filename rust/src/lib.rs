@@ -1,0 +1,51 @@
+//! # PAHQ — Per-Attention-Head Quantization for Automated Circuit Discovery
+//!
+//! Rust + JAX + Pallas reproduction of *"PAHQ: Accelerating Automated
+//! Circuit Discovery through Mixed-Precision Inference Optimization"*
+//! (Wang et al., 2025). Three-layer architecture:
+//!
+//! - **L3 (this crate)** — the coordinator: the ACDC greedy edge sweep, the
+//!   PAHQ predictive three-stream scheduler over a discrete-event GPU
+//!   simulator, the baselines (RTN-Q / EAP / HISP / SP / Edge-Pruning), the
+//!   metrics/evaluation stack, and the table/figure harness.
+//! - **L2 (python/compile/model.py, build-time only)** — the
+//!   graph-decomposed transformer, AOT-lowered per layer to HLO text.
+//! - **L1 (python/compile/kernels/, build-time only)** — Pallas kernels for
+//!   the mixed-precision per-head projection and attention core.
+//!
+//! At runtime this crate chains the per-layer PJRT executables
+//! ([`runtime`]), owns the residual-stream assembly that makes edge-level
+//! activation patching possible ([`patching`]), and decides — per edge
+//! evaluation — which weight bytes are FP8-resident and which FP32 rows
+//! must cross the (simulated) PCIe bus ([`scheduler`], [`gpu_sim`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod acdc;
+pub mod baselines;
+pub mod eval;
+pub mod gpu_sim;
+pub mod metrics;
+pub mod model;
+pub mod patching;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod tasks;
+pub mod tensor;
+pub mod experiments;
+pub mod util;
+
+/// Repository-relative artifacts root, overridable via `PAHQ_ARTIFACTS`.
+pub fn artifacts_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PAHQ_ARTIFACTS") {
+        return p.into();
+    }
+    // Resolve relative to the crate root so tests/benches/examples work
+    // from any CWD inside the repo.
+    let mut dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    dir.push("artifacts");
+    dir
+}

@@ -1,0 +1,247 @@
+//! `pahq` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   run         one circuit-discovery run (model/task/method/tau/metric)
+//!   table N     regenerate paper Table N (1..8)
+//!   figure N    regenerate paper Figure N (1, 3, 4)
+//!   all         regenerate every table and figure
+//!   groundtruth compute/cache the FP32 reference circuit
+//!   sim         DES runtime/memory prediction for a method on real arches
+//!   info        model/artifact inventory
+
+use anyhow::{bail, Context, Result};
+
+use pahq::acdc::{self, AcdcConfig};
+use pahq::eval;
+use pahq::experiments;
+use pahq::gpu_sim::memory::{memory_model, MethodKind};
+use pahq::gpu_sim::{CostModel, RealArch};
+use pahq::metrics::Objective;
+use pahq::model::Manifest;
+use pahq::patching::{PatchedForward, Policy};
+use pahq::quant::Format;
+use pahq::report::{mmss, Table};
+use pahq::scheduler::{predict_run, StreamConfig};
+use pahq::util::cli::Args;
+
+const USAGE: &str = "\
+pahq — PAHQ: accelerating automated circuit discovery (paper reproduction)
+
+USAGE:
+  pahq run [--model M] [--task T] [--method acdc|rtn-q|pahq] [--tau X]
+           [--metric kl|task] [--bits 4|8|16] [--trace]
+  pahq table <1|2|3|4|5|6|7|8> [--quick]
+  pahq figure <1|3|4> [--quick]
+  pahq all [--quick]
+  pahq groundtruth [--model M] [--task T] [--metric kl|task]
+  pahq sim [--arch gpt2] [--method acdc|rtn-q|pahq] [--streams full|load|split|none]
+  pahq info
+
+Defaults: --model gpt2s-sim --task ioi --method pahq --tau 0.01 --metric kl
+Models: redwood2l-sim attn4l-sim gpt2s-sim gpt2m-sim gpt2l-sim gpt2xl-sim
+Tasks:  ioi greater_than docstring
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "all" => experiments::run_all(args.flag("quick")),
+        "groundtruth" => cmd_groundtruth(&args),
+        "sim" => cmd_sim(&args),
+        "info" => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn objective(args: &Args) -> Result<Objective> {
+    Ok(match args.get_or("metric", "kl") {
+        "kl" => Objective::Kl,
+        "task" => Objective::LogitDiff,
+        other => bail!("unknown metric '{other}' (kl|task)"),
+    })
+}
+
+fn policy(args: &Args) -> Result<Policy> {
+    let bits = args.usize_or("bits", 8)? as u32;
+    Ok(match args.get_or("method", "pahq") {
+        "acdc" => Policy::fp32(),
+        "rtn-q" | "rtn" => Policy::rtn(Format::by_bits(bits)),
+        "pahq" => Policy::pahq(Format::by_bits(bits)),
+        other => bail!("unknown method '{other}' (acdc|rtn-q|pahq)"),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "gpt2s-sim");
+    let task = args.get_or("task", "ioi");
+    let tau = args.f64_or("tau", 0.01)? as f32;
+    let obj = objective(args)?;
+    let pol = policy(args)?;
+    println!("discovering circuit: {model} / {task} / {} / tau={tau} / {}",
+             pol.name, obj.label());
+
+    let mut engine = PatchedForward::new(model, task)?;
+    engine.set_session(pol)?;
+    let mut cfg = AcdcConfig::new(tau, obj);
+    cfg.record_trace = args.flag("trace");
+    let res = acdc::run(&mut engine, &cfg)?;
+
+    println!(
+        "\ncircuit: {} / {} edges kept ({} evals, {:.1}s wall, {:.1}s in PJRT)",
+        res.n_kept,
+        engine.graph.n_edges(),
+        res.n_evals,
+        res.wall.as_secs_f64(),
+        engine.pjrt_time().as_secs_f64(),
+    );
+    println!("final metric damage: {:.4}", res.final_metric);
+    let labels = acdc::kept_edge_labels(&engine, &res);
+    println!("\nkept edges (first 40):");
+    for l in labels.iter().take(40) {
+        println!("  {l}");
+    }
+    if labels.len() > 40 {
+        println!("  ... and {} more", labels.len() - 40);
+    }
+    // compare against ground truth when available
+    engine.set_session(Policy::fp32())?;
+    if let Ok(gt) = eval::ground_truth(&mut engine, model, task, obj) {
+        let p = pahq::metrics::confusion(&res.kept, &gt.member);
+        println!(
+            "\nvs FP32 ground truth (|C*|={}): TPR={:.3} FPR={:.3} acc={:.3}",
+            gt.n_members(),
+            p.tpr,
+            p.fpr,
+            pahq::metrics::edge_accuracy(&res.kept, &gt.member)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional
+        .get(1)
+        .context("usage: pahq table <1..8>")?
+        .parse()?;
+    let quick = args.flag("quick");
+    match n {
+        1 => experiments::table1(quick),
+        2 => experiments::table2(quick),
+        3 => experiments::table3(quick),
+        4 => experiments::table4(quick),
+        5 => experiments::table5(quick),
+        6 => experiments::table6(quick),
+        7 => experiments::table7(quick),
+        8 => experiments::table8(quick),
+        _ => bail!("no table {n} in the paper (1..8)"),
+    }
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional
+        .get(1)
+        .context("usage: pahq figure <1|3|4>")?
+        .parse()?;
+    let quick = args.flag("quick");
+    match n {
+        1 => experiments::figure1(quick),
+        3 => experiments::figure3(quick),
+        4 => experiments::figure4(quick),
+        _ => bail!("figure {n} is not an evaluation figure (1, 3, 4)"),
+    }
+}
+
+fn cmd_groundtruth(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "gpt2s-sim");
+    let task = args.get_or("task", "ioi");
+    let obj = objective(args)?;
+    let mut engine = PatchedForward::new(model, task)?;
+    let gt = eval::ground_truth(&mut engine, model, task, obj)?;
+    println!(
+        "{model}/{task}: {} edges, tau*={:.5}, |C*|={} ({:.1}%)",
+        gt.delta.len(),
+        gt.tau_star,
+        gt.n_members(),
+        100.0 * gt.n_members() as f64 / gt.delta.len() as f64
+    );
+    let mut top: Vec<(usize, f32)> = gt.delta.iter().copied().enumerate().collect();
+    top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("top edges by FP32 ΔL:");
+    for (i, d) in top.into_iter().take(15) {
+        println!("  {:<28} {d:.5}", gt.edges[i].label(&engine.graph));
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let arch_name = args.get_or("arch", "gpt2");
+    let arch = RealArch::by_name(arch_name).context("unknown arch")?;
+    let method = match args.get_or("method", "pahq") {
+        "acdc" => MethodKind::AcdcFp32,
+        "rtn-q" | "rtn" => MethodKind::RtnQ,
+        _ => MethodKind::Pahq,
+    };
+    let streams = match args.get_or("streams", "full") {
+        "full" => StreamConfig::FULL,
+        "load" => StreamConfig::LOAD_ONLY,
+        "split" => StreamConfig::SPLIT_ONLY,
+        _ => StreamConfig::NONE,
+    };
+    let cost = CostModel::default();
+    let p = predict_run(&arch, &cost, method, streams);
+    let mem = memory_model(&arch, method);
+    println!("arch {}: {} edges", arch.name, p.n_edges);
+    println!(
+        "{:?} {streams:?}: per-edge {:.0} µs, total {} (m:s), mem {:.2} GB",
+        method,
+        p.per_edge_us,
+        mmss(p.total_minutes),
+        mem.total_gb()
+    );
+    println!(
+        "stream utilization: load {:.2}, low {:.2}",
+        p.load_utilization, p.low_utilization
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let root = pahq::artifacts_root();
+    println!("artifacts root: {}", root.display());
+    let mut t = Table::new("models", &["name", "layers", "heads", "d_model", "mlp", "params", "edges", "artifacts"]);
+    for name in experiments::BASE_MODELS.iter().chain(experiments::SCALE_MODELS.iter()) {
+        match Manifest::by_name(name) {
+            Ok(m) => {
+                let g = pahq::model::Graph::from_manifest(&m);
+                t.row(vec![
+                    m.name.clone(),
+                    m.n_layer.to_string(),
+                    m.n_head.to_string(),
+                    m.d_model.to_string(),
+                    if m.has_mlp() { "yes".into() } else { "no".into() },
+                    m.n_params.to_string(),
+                    g.n_edges().to_string(),
+                    m.artifacts.len().to_string(),
+                ]);
+            }
+            Err(_) => t.row(vec![
+                name.to_string(),
+                "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                "missing".into(),
+            ]),
+        }
+    }
+    t.print();
+    println!("\nDES cost model: {:?}", CostModel::default());
+    println!("paper thresholds: {:?}", acdc::paper_thresholds());
+    Ok(())
+}

@@ -1,0 +1,312 @@
+//! Loss metrics on logits and circuit-level evaluation curves.
+//!
+//! - KL divergence against the clean run's answer-position distribution
+//!   (ACDC's default objective);
+//! - logit difference <logits, ans> − <logits, dis> (the paper's "task
+//!   metric"; for Greater-Than the distributions are uniform over digit
+//!   sets, making this the mean-logit gap);
+//! - ROC/AUC via the pessimistic Pareto line-segment construction the ACDC
+//!   paper uses (Fawcett 2006);
+//! - the Hanna et al. (2024) normalized faithfulness metric (Tab. 6).
+
+use crate::model::Example;
+use crate::tensor::{softmax_rows, Tensor};
+
+/// Answer-position rows [B, V] extracted from logits [B, S, V].
+pub fn at_positions(logits: &Tensor, examples: &[Example]) -> Vec<f32> {
+    let (b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
+    debug_assert_eq!(b, examples.len());
+    let mut out = vec![0.0; b * v];
+    for (bi, ex) in examples.iter().enumerate() {
+        debug_assert!(ex.pos < s);
+        let src = &logits.data[(bi * s + ex.pos) * v..(bi * s + ex.pos + 1) * v];
+        out[bi * v..(bi + 1) * v].copy_from_slice(src);
+    }
+    out
+}
+
+/// Softmax distributions [B, V] at the answer positions.
+pub fn probs_at_positions(logits: &Tensor, examples: &[Example]) -> Vec<f32> {
+    let v = logits.shape[2];
+    let mut rows = at_positions(logits, examples);
+    softmax_rows(&mut rows, v);
+    rows
+}
+
+/// Mean KL(ref || softmax(logits[pos])) over the batch.
+pub fn kl_divergence(logits: &Tensor, examples: &[Example], ref_probs: &[f32]) -> f32 {
+    let v = logits.shape[2];
+    let rows = probs_at_positions(logits, examples);
+    debug_assert_eq!(rows.len(), ref_probs.len());
+    let mut total = 0.0f64;
+    for (row, rref) in rows.chunks(v).zip(ref_probs.chunks(v)) {
+        let mut kl = 0.0f64;
+        for (&p, &r) in row.iter().zip(rref) {
+            if r > 1e-9 {
+                kl += r as f64 * ((r as f64).ln() - (p.max(1e-9) as f64).ln());
+            }
+        }
+        total += kl;
+    }
+    (total / examples.len() as f64) as f32
+}
+
+/// Mean <logits[pos], ans − dis> over the batch (task metric).
+pub fn logit_diff(logits: &Tensor, examples: &[Example]) -> f32 {
+    let v = logits.shape[2];
+    let rows = at_positions(logits, examples);
+    let mut total = 0.0f64;
+    for (bi, ex) in examples.iter().enumerate() {
+        let row = &rows[bi * v..(bi + 1) * v];
+        let mut ld = 0.0f64;
+        for &(t, w) in &ex.ans {
+            ld += (w * row[t]) as f64;
+        }
+        for &(t, w) in &ex.dis {
+            ld -= (w * row[t]) as f64;
+        }
+        total += ld;
+    }
+    (total / examples.len() as f64) as f32
+}
+
+/// Which objective drives the discovery sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// KL to the clean reference distribution; circuit damage = KL increase.
+    Kl,
+    /// Task logit-diff; circuit damage = |ld − ld_clean|.
+    LogitDiff,
+}
+
+impl Objective {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Objective::Kl => "KL div",
+            Objective::LogitDiff => "Task",
+        }
+    }
+
+    /// Scalar "damage" of a patched run vs the clean reference.
+    pub fn damage(
+        &self,
+        logits: &Tensor,
+        examples: &[Example],
+        ref_probs: &[f32],
+        ref_logit_diff: f32,
+    ) -> f32 {
+        match self {
+            Objective::Kl => kl_divergence(logits, examples, ref_probs),
+            Objective::LogitDiff => (logit_diff(logits, examples) - ref_logit_diff).abs(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ROC / AUC
+
+/// One (false-positive-rate, true-positive-rate) point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RocPoint {
+    pub fpr: f64,
+    pub tpr: f64,
+}
+
+/// TPR/FPR of a predicted edge set against ground truth membership.
+pub fn confusion(pred: &[bool], truth: &[bool]) -> RocPoint {
+    debug_assert_eq!(pred.len(), truth.len());
+    let (mut tp, mut fp, mut p, mut n) = (0u64, 0u64, 0u64, 0u64);
+    for (&pr, &tr) in pred.iter().zip(truth) {
+        if tr {
+            p += 1;
+            if pr {
+                tp += 1;
+            }
+        } else {
+            n += 1;
+            if pr {
+                fp += 1;
+            }
+        }
+    }
+    RocPoint {
+        fpr: if n == 0 { 0.0 } else { fp as f64 / n as f64 },
+        tpr: if p == 0 { 1.0 } else { tp as f64 / p as f64 },
+    }
+}
+
+/// Classification accuracy of a predicted edge set (Tab. 2's accuracy).
+pub fn edge_accuracy(pred: &[bool], truth: &[bool]) -> f64 {
+    let correct = pred.iter().zip(truth).filter(|(a, b)| a == b).count();
+    correct as f64 / pred.len().max(1) as f64
+}
+
+/// AUC by the ACDC paper's construction: anchor at (0,0) and (1,1), keep
+/// the Pareto frontier of measured points, connect with *pessimistic*
+/// (axis-aligned, lower-right) segments, integrate.
+pub fn auc_pessimistic(points: &[RocPoint]) -> f64 {
+    let mut pts: Vec<RocPoint> = points.to_vec();
+    pts.push(RocPoint { fpr: 0.0, tpr: 0.0 });
+    pts.push(RocPoint { fpr: 1.0, tpr: 1.0 });
+    // sort by fpr asc, tpr desc, keep the upper envelope (max tpr so far
+    // must increase as fpr grows)
+    pts.sort_by(|a, b| {
+        a.fpr
+            .partial_cmp(&b.fpr)
+            .unwrap()
+            .then(b.tpr.partial_cmp(&a.tpr).unwrap())
+    });
+    let mut frontier: Vec<RocPoint> = Vec::new();
+    let mut best_tpr = -1.0;
+    for p in pts {
+        if p.tpr > best_tpr {
+            frontier.push(p);
+            best_tpr = p.tpr;
+        }
+    }
+    // close the curve at fpr=1 so a dominant early point (e.g. (0,1))
+    // still integrates over the full fpr range
+    if frontier.last().map(|p| p.fpr < 1.0).unwrap_or(false) {
+        frontier.push(RocPoint { fpr: 1.0, tpr: best_tpr });
+    }
+    // pessimistic step integration: between consecutive frontier points,
+    // assume tpr stays at the left point's value until the right point.
+    let mut auc = 0.0;
+    for w in frontier.windows(2) {
+        auc += (w[1].fpr - w[0].fpr) * w[0].tpr;
+    }
+    auc
+}
+
+/// Top-1 answer accuracy: fraction of examples whose argmax logit at the
+/// answer position lies in the answer set (Fig. 4 / Tab. 5's "Accuracy").
+pub fn answer_accuracy(logits: &Tensor, examples: &[Example]) -> f32 {
+    let v = logits.shape[2];
+    let rows = at_positions(logits, examples);
+    let mut ok = 0usize;
+    for (bi, ex) in examples.iter().enumerate() {
+        let row = &rows[bi * v..(bi + 1) * v];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if ex.ans.iter().any(|&(t, w)| t == argmax && w > 0.0) {
+            ok += 1;
+        }
+    }
+    ok as f32 / examples.len().max(1) as f32
+}
+
+/// Hanna et al. 2024 normalized faithfulness:
+/// (m(circuit) − m(corrupt)) / (m(clean) − m(corrupt)), clipped to [0, 1].
+/// `m` is the task metric (logit diff). 1 = circuit reproduces the model,
+/// 0 = no better than the fully-corrupted run.
+pub fn faithfulness(m_circuit: f32, m_clean: f32, m_corrupt: f32) -> f32 {
+    let denom = m_clean - m_corrupt;
+    if denom.abs() < 1e-9 {
+        return 0.0;
+    }
+    ((m_circuit - m_corrupt) / denom).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(pos: usize, ans: usize, dis: usize) -> Example {
+        Example {
+            clean: vec![0; 4],
+            corrupt: vec![0; 4],
+            pos,
+            ans: vec![(ans, 1.0)],
+            dis: vec![(dis, 1.0)],
+            label: ans,
+        }
+    }
+
+    #[test]
+    fn kl_zero_for_self() {
+        let logits = Tensor::from_vec(&[1, 4, 3], vec![
+            0.0, 0.0, 0.0, 1.0, 2.0, 3.0, 0.5, 0.5, 0.5, 0.0, 0.0, 0.0,
+        ])
+        .unwrap();
+        let examples = vec![ex(1, 2, 0)];
+        let ref_probs = probs_at_positions(&logits, &examples);
+        assert!(kl_divergence(&logits, &examples, &ref_probs).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_positive_for_shifted() {
+        let a = Tensor::from_vec(&[1, 1, 3], vec![3.0, 0.0, 0.0]).unwrap();
+        let b = Tensor::from_vec(&[1, 1, 3], vec![0.0, 3.0, 0.0]).unwrap();
+        let examples = vec![ex(0, 0, 1)];
+        let ref_probs = probs_at_positions(&a, &examples);
+        assert!(kl_divergence(&b, &examples, &ref_probs) > 1.0);
+    }
+
+    #[test]
+    fn logit_diff_signs() {
+        let logits = Tensor::from_vec(&[1, 1, 3], vec![2.0, 5.0, 0.0]).unwrap();
+        assert_eq!(logit_diff(&logits, &[ex(0, 0, 1)]), -3.0);
+        assert_eq!(logit_diff(&logits, &[ex(0, 1, 0)]), 3.0);
+    }
+
+    #[test]
+    fn soft_distributions() {
+        // greater-than style: ans = uniform {1,2}, dis = {0}
+        let logits = Tensor::from_vec(&[1, 1, 3], vec![1.0, 2.0, 4.0]).unwrap();
+        let e = Example {
+            clean: vec![0],
+            corrupt: vec![0],
+            pos: 0,
+            ans: vec![(1, 0.5), (2, 0.5)],
+            dis: vec![(0, 1.0)],
+            label: 1,
+        };
+        assert!((logit_diff(&logits, &[e]) - (3.0 - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let pred = [true, true, false, false];
+        let truth = [true, false, true, false];
+        let p = confusion(&pred, &truth);
+        assert_eq!(p.tpr, 0.5);
+        assert_eq!(p.fpr, 0.5);
+        assert_eq!(edge_accuracy(&pred, &truth), 0.5);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        // perfect classifier: point (0,1) -> AUC 1
+        let auc = auc_pessimistic(&[RocPoint { fpr: 0.0, tpr: 1.0 }]);
+        assert!((auc - 1.0).abs() < 1e-9);
+        // no information beyond anchors: pessimistic AUC 0
+        let auc = auc_pessimistic(&[]);
+        assert!(auc.abs() < 1e-9);
+        // diagonal-ish points
+        let auc = auc_pessimistic(&[
+            RocPoint { fpr: 0.25, tpr: 0.5 },
+            RocPoint { fpr: 0.5, tpr: 0.75 },
+        ]);
+        assert!(auc > 0.3 && auc < 0.8, "auc={auc}");
+    }
+
+    #[test]
+    fn auc_monotone_in_dominance() {
+        let weak = auc_pessimistic(&[RocPoint { fpr: 0.4, tpr: 0.5 }]);
+        let strong = auc_pessimistic(&[RocPoint { fpr: 0.1, tpr: 0.9 }]);
+        assert!(strong > weak);
+    }
+
+    #[test]
+    fn faithfulness_bounds() {
+        assert_eq!(faithfulness(3.0, 3.0, 0.0), 1.0);
+        assert_eq!(faithfulness(0.0, 3.0, 0.0), 0.0);
+        assert_eq!(faithfulness(1.5, 3.0, 0.0), 0.5);
+        assert_eq!(faithfulness(9.0, 3.0, 0.0), 1.0, "clipped");
+        assert_eq!(faithfulness(1.0, 1.0, 1.0), 0.0, "degenerate denom");
+    }
+}

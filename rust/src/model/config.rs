@@ -1,0 +1,175 @@
+//! Manifest loading: every model directory under `artifacts/` carries a
+//! `manifest.json` written by `aot.py` describing the shape family, the
+//! flat parameter layout of `weights.bin`, and which HLO artifacts exist.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    pub d_head: usize,
+    pub d_mlp: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamEntry>,
+    pub artifacts: Vec<String>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(model_dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&model_dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", model_dir.display()))?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                    offset: p.get("offset")?.as_usize()?,
+                    size: p.get("size")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            n_layer: j.get("n_layer")?.as_usize()?,
+            n_head: j.get("n_head")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            d_head: j.get("d_head")?.as_usize()?,
+            d_mlp: j.get("d_mlp")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            n_params: j.get("n_params")?.as_usize()?,
+            params,
+            artifacts: j
+                .get("artifacts")?
+                .as_arr()?
+                .iter()
+                .map(|a| Ok(a.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            dir: model_dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load a model by name from the artifacts root.
+    pub fn by_name(name: &str) -> Result<Manifest> {
+        let dir = crate::artifacts_root().join(name);
+        if !dir.exists() {
+            bail!(
+                "model '{name}' not found under {} — run `make artifacts`",
+                crate::artifacts_root().display()
+            );
+        }
+        Self::load(&dir)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut expect_off = 0usize;
+        for p in &self.params {
+            if p.offset != expect_off {
+                bail!("param {} offset {} != expected {}", p.name, p.offset, expect_off);
+            }
+            if p.size != p.shape.iter().product::<usize>() {
+                bail!("param {} size mismatch", p.name);
+            }
+            expect_off += p.size;
+        }
+        if expect_off != self.n_params {
+            bail!("n_params {} != sum of params {}", self.n_params, expect_off);
+        }
+        Ok(())
+    }
+
+    pub fn has_mlp(&self) -> bool {
+        self.d_mlp > 0
+    }
+
+    pub fn hlo_path(&self, artifact: &str) -> PathBuf {
+        self.dir.join(artifact)
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamEntry> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("param '{name}' not in manifest"))
+    }
+
+    /// Total parameter count per attention head of one layer (Q+K+V+O rows
+    /// + biases) — the unit PAHQ moves across the simulated PCIe bus.
+    pub fn head_param_count(&self) -> usize {
+        // wq,wk,wv rows: 3 * D * K; biases 3 * K; wo rows: K * D
+        3 * self.d_model * self.d_head + 3 * self.d_head + self.d_head * self.d_model
+    }
+
+    /// W_O for a whole layer (the paper also uploads W_O,32 per layer).
+    pub fn wo_param_count(&self) -> usize {
+        self.n_head * self.d_head * self.d_model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn any_model() -> Option<Manifest> {
+        for name in ["redwood2l-sim", "attn4l-sim", "gpt2s-sim"] {
+            if let Ok(m) = Manifest::by_name(name) {
+                return Some(m);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let Some(m) = any_model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(m.n_layer >= 2);
+        assert!(m.n_params > 0);
+        assert!(m.params.iter().any(|p| p.name == "wte"));
+        assert!(m.params.iter().any(|p| p.name == "lnf_g"));
+        // layout is contiguous (validate() passed), weights.bin matches
+        let wlen = std::fs::metadata(m.dir.join("weights.bin")).unwrap().len();
+        assert_eq!(wlen as usize, m.n_params * 4);
+    }
+
+    #[test]
+    fn head_param_count_sane() {
+        let Some(m) = any_model() else { return };
+        assert_eq!(
+            m.head_param_count(),
+            4 * m.d_model * m.d_head + 3 * m.d_head
+        );
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        assert!(Manifest::by_name("no-such-model").is_err());
+    }
+}

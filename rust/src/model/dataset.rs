@@ -1,0 +1,165 @@
+//! Evaluation datasets: the seeded clean/corrupt pairs exported by
+//! `aot.py` (`artifacts/datasets/<task>.json`), plus conversion into the
+//! dense batched buffers the AOT executables take as inputs.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub clean: Vec<usize>,
+    pub corrupt: Vec<usize>,
+    pub pos: usize,
+    /// sparse answer distribution (token, weight), weights sum to 1
+    pub ans: Vec<(usize, f32)>,
+    pub dis: Vec<(usize, f32)>,
+    pub label: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub task: String,
+    pub seq_len: usize,
+    pub examples: Vec<Example>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let j = Json::parse_file(path)?;
+        let seq_len = j.get("seq_len")?.as_usize()?;
+        let examples = j
+            .get("examples")?
+            .as_arr()?
+            .iter()
+            .map(|e| parse_example(e, seq_len))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Dataset {
+            task: j.get("task")?.as_str()?.to_string(),
+            seq_len,
+            examples,
+        })
+    }
+
+    pub fn by_task(task: &str) -> Result<Dataset> {
+        let path = crate::artifacts_root().join("datasets").join(format!("{task}.json"));
+        Self::load(&path).with_context(|| format!("loading dataset '{task}'"))
+    }
+
+    /// First `n` examples as a fixed evaluation batch.
+    pub fn batch(&self, n: usize) -> Result<&[Example]> {
+        if self.examples.len() < n {
+            bail!("dataset has {} examples, need {n}", self.examples.len());
+        }
+        Ok(&self.examples[..n])
+    }
+
+    /// Dense one-hot token batch [B, S, V] (flat).
+    pub fn onehot(examples: &[Example], corrupt: bool, vocab: usize) -> Vec<f32> {
+        let s = examples[0].clean.len();
+        let mut out = vec![0.0; examples.len() * s * vocab];
+        for (b, ex) in examples.iter().enumerate() {
+            let toks = if corrupt { &ex.corrupt } else { &ex.clean };
+            for (i, &t) in toks.iter().enumerate() {
+                out[(b * s + i) * vocab + t] = 1.0;
+            }
+        }
+        out
+    }
+
+    /// Dense position one-hots [B, S].
+    pub fn pos_onehot(examples: &[Example], seq_len: usize) -> Vec<f32> {
+        let mut out = vec![0.0; examples.len() * seq_len];
+        for (b, ex) in examples.iter().enumerate() {
+            out[b * seq_len + ex.pos] = 1.0;
+        }
+        out
+    }
+
+    /// Dense answer/distractor distributions [B, V].
+    pub fn dist(examples: &[Example], vocab: usize, distractor: bool) -> Vec<f32> {
+        let mut out = vec![0.0; examples.len() * vocab];
+        for (b, ex) in examples.iter().enumerate() {
+            let d = if distractor { &ex.dis } else { &ex.ans };
+            for &(t, w) in d {
+                out[b * vocab + t] = w;
+            }
+        }
+        out
+    }
+}
+
+fn parse_example(e: &Json, seq_len: usize) -> Result<Example> {
+    let dist = |key: &str| -> Result<Vec<(usize, f32)>> {
+        e.get(key)?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let pair = p.as_arr()?;
+                Ok((pair[0].as_usize()?, pair[1].as_f64()? as f32))
+            })
+            .collect()
+    };
+    let ex = Example {
+        clean: e.get("clean")?.usize_vec()?,
+        corrupt: e.get("corrupt")?.usize_vec()?,
+        pos: e.get("pos")?.as_usize()?,
+        ans: dist("ans")?,
+        dis: dist("dis")?,
+        label: e.get("label")?.as_usize()?,
+    };
+    if ex.clean.len() != seq_len || ex.corrupt.len() != seq_len {
+        bail!("example length != seq_len");
+    }
+    if ex.pos >= seq_len {
+        bail!("answer position out of range");
+    }
+    Ok(ex)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_all_tasks() {
+        for task in ["ioi", "greater_than", "docstring"] {
+            let Ok(d) = Dataset::by_task(task) else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            assert!(d.examples.len() >= 64, "{task}");
+            for ex in &d.examples {
+                assert_eq!(ex.clean.len(), d.seq_len);
+                let ws: f32 = ex.ans.iter().map(|&(_, w)| w).sum();
+                assert!((ws - 1.0).abs() < 1e-5);
+                let diff = ex
+                    .clean
+                    .iter()
+                    .zip(&ex.corrupt)
+                    .filter(|(a, b)| a != b)
+                    .count();
+                assert!((1..=3).contains(&diff), "{task}: minimal contrast");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_builders() {
+        let Ok(d) = Dataset::by_task("ioi") else { return };
+        let b = d.batch(4).unwrap();
+        let vocab = 52;
+        let oh = Dataset::onehot(b, false, vocab);
+        assert_eq!(oh.len(), 4 * d.seq_len * vocab);
+        // each row sums to exactly 1
+        for row in oh.chunks(vocab) {
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+        }
+        let pos = Dataset::pos_onehot(b, d.seq_len);
+        assert_eq!(pos.iter().sum::<f32>(), 4.0);
+        let ans = Dataset::dist(b, vocab, false);
+        assert!((ans.iter().sum::<f32>() - 4.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,315 @@
+//! The computational graph that circuit discovery operates on.
+//!
+//! Nodes (shared ordering with python's `model.node_index` and the AOT
+//! gradient artifacts):
+//!   0                      embed
+//!   1 + l*H + h            attention head h of layer l
+//!   1 + L*H + l            MLP of layer l (models with MLPs)
+//!
+//! Channels are the *inputs* edges point into: each head has Q/K/V
+//! channels, each MLP one, plus the final residual read by the unembed.
+//! An edge (src node -> dst channel) exists iff src's output is causally
+//! upstream of the channel's assembly point.
+
+use anyhow::Result;
+
+use super::config::Manifest;
+
+pub type NodeId = usize;
+
+/// A destination input-channel of the graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Channel {
+    /// (layer, head, 0=Q 1=K 2=V)
+    Head { layer: usize, head: usize, comp: u8 },
+    Mlp { layer: usize },
+    Final,
+}
+
+impl Channel {
+    pub fn layer(&self) -> usize {
+        match self {
+            Channel::Head { layer, .. } | Channel::Mlp { layer } => *layer,
+            Channel::Final => usize::MAX, // after every layer
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Channel::Head { layer, head, comp } => {
+                format!("a{layer}.h{head}.{}", ["q", "k", "v"][*comp as usize])
+            }
+            Channel::Mlp { layer } => format!("m{layer}"),
+            Channel::Final => "final".to_string(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: Channel,
+}
+
+impl Edge {
+    pub fn label(&self, g: &Graph) -> String {
+        format!("{} -> {}", g.node_label(self.src), self.dst.label())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub has_mlp: bool,
+}
+
+impl Graph {
+    pub fn from_manifest(m: &Manifest) -> Graph {
+        Graph { n_layer: m.n_layer, n_head: m.n_head, has_mlp: m.has_mlp() }
+    }
+
+    pub const EMBED: NodeId = 0;
+
+    pub fn n_nodes(&self) -> usize {
+        1 + self.n_layer * self.n_head + if self.has_mlp { self.n_layer } else { 0 }
+    }
+
+    pub fn head_node(&self, layer: usize, head: usize) -> NodeId {
+        1 + layer * self.n_head + head
+    }
+
+    pub fn mlp_node(&self, layer: usize) -> NodeId {
+        debug_assert!(self.has_mlp);
+        1 + self.n_layer * self.n_head + layer
+    }
+
+    /// Inverse of the node numbering.
+    pub fn node_kind(&self, id: NodeId) -> NodeKind {
+        if id == 0 {
+            NodeKind::Embed
+        } else if id < 1 + self.n_layer * self.n_head {
+            let r = id - 1;
+            NodeKind::Head { layer: r / self.n_head, head: r % self.n_head }
+        } else {
+            NodeKind::Mlp { layer: id - 1 - self.n_layer * self.n_head }
+        }
+    }
+
+    pub fn node_label(&self, id: NodeId) -> String {
+        match self.node_kind(id) {
+            NodeKind::Embed => "embed".to_string(),
+            NodeKind::Head { layer, head } => format!("a{layer}.h{head}"),
+            NodeKind::Mlp { layer } => format!("m{layer}"),
+        }
+    }
+
+    /// Source nodes causally upstream of a channel, in node-id order.
+    /// Heads read the stream *before* their layer; the MLP of layer l reads
+    /// it after layer l's heads; Final reads everything.
+    pub fn sources(&self, ch: Channel) -> Vec<NodeId> {
+        let mut out = vec![Self::EMBED];
+        let (head_layers, mlp_layers) = match ch {
+            Channel::Head { layer, .. } => (layer, layer),
+            Channel::Mlp { layer } => (layer + 1, layer),
+            Channel::Final => (self.n_layer, self.n_layer),
+        };
+        for l in 0..head_layers {
+            for h in 0..self.n_head {
+                out.push(self.head_node(l, h));
+            }
+        }
+        if self.has_mlp {
+            for l in 0..mlp_layers {
+                out.push(self.mlp_node(l));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Every destination channel, in evaluation order (reverse-topological
+    /// over layers is what ACDC sweeps; we expose forward order and let
+    /// the sweep reverse it).
+    pub fn channels(&self) -> Vec<Channel> {
+        let mut out = Vec::new();
+        for layer in 0..self.n_layer {
+            for head in 0..self.n_head {
+                for comp in 0..3u8 {
+                    out.push(Channel::Head { layer, head, comp });
+                }
+            }
+            if self.has_mlp {
+                out.push(Channel::Mlp { layer });
+            }
+        }
+        out.push(Channel::Final);
+        out
+    }
+
+    /// The full edge set.
+    pub fn edges(&self) -> Vec<Edge> {
+        let mut out = Vec::new();
+        for ch in self.channels() {
+            for src in self.sources(ch) {
+                out.push(Edge { src, dst: ch });
+            }
+        }
+        out
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges().len()
+    }
+
+    /// Validate a (src, channel) pair is a real edge.
+    pub fn is_edge(&self, e: &Edge) -> bool {
+        self.sources(e.dst).contains(&e.src)
+    }
+
+    /// Parse an edge label of the form "a0.h1 -> a2.h3.q" (inverse of
+    /// [`Edge::label`]) — used by the CLI.
+    pub fn parse_edge(&self, s: &str) -> Result<Edge> {
+        let (src_s, dst_s) = s
+            .split_once("->")
+            .ok_or_else(|| anyhow::anyhow!("edge must look like 'src -> dst'"))?;
+        let src = self.parse_node(src_s.trim())?;
+        let dst = self.parse_channel(dst_s.trim())?;
+        let e = Edge { src, dst };
+        if !self.is_edge(&e) {
+            anyhow::bail!("'{s}' is not a causally-valid edge");
+        }
+        Ok(e)
+    }
+
+    fn parse_node(&self, s: &str) -> Result<NodeId> {
+        if s == "embed" {
+            return Ok(Self::EMBED);
+        }
+        if let Some(rest) = s.strip_prefix('m') {
+            return Ok(self.mlp_node(rest.parse()?));
+        }
+        let (l, h) = s
+            .strip_prefix('a')
+            .and_then(|r| r.split_once(".h"))
+            .ok_or_else(|| anyhow::anyhow!("bad node '{s}'"))?;
+        Ok(self.head_node(l.parse()?, h.parse()?))
+    }
+
+    fn parse_channel(&self, s: &str) -> Result<Channel> {
+        if s == "final" {
+            return Ok(Channel::Final);
+        }
+        if let Some(rest) = s.strip_prefix('m') {
+            return Ok(Channel::Mlp { layer: rest.parse()? });
+        }
+        let parts: Vec<&str> = s.split('.').collect();
+        if parts.len() == 3 {
+            let layer = parts[0].strip_prefix('a').unwrap_or("").parse()?;
+            let head = parts[1].strip_prefix('h').unwrap_or("").parse()?;
+            let comp = match parts[2] {
+                "q" => 0u8,
+                "k" => 1,
+                "v" => 2,
+                _ => anyhow::bail!("bad component '{}'", parts[2]),
+            };
+            return Ok(Channel::Head { layer, head, comp });
+        }
+        anyhow::bail!("bad channel '{s}'")
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NodeKind {
+    Embed,
+    Head { layer: usize, head: usize },
+    Mlp { layer: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g_mlp() -> Graph {
+        Graph { n_layer: 4, n_head: 8, has_mlp: true }
+    }
+
+    fn g_ao() -> Graph {
+        Graph { n_layer: 2, n_head: 4, has_mlp: false }
+    }
+
+    #[test]
+    fn node_numbering_roundtrips() {
+        let g = g_mlp();
+        assert_eq!(g.n_nodes(), 1 + 32 + 4);
+        for id in 0..g.n_nodes() {
+            let k = g.node_kind(id);
+            let back = match k {
+                NodeKind::Embed => 0,
+                NodeKind::Head { layer, head } => g.head_node(layer, head),
+                NodeKind::Mlp { layer } => g.mlp_node(layer),
+            };
+            assert_eq!(back, id);
+        }
+    }
+
+    #[test]
+    fn sources_respect_causality() {
+        let g = g_mlp();
+        // layer-0 head channels see only embed
+        assert_eq!(g.sources(Channel::Head { layer: 0, head: 3, comp: 0 }), vec![0]);
+        // layer-0 MLP sees embed + layer-0 heads
+        let s = g.sources(Channel::Mlp { layer: 0 });
+        assert_eq!(s.len(), 1 + 8);
+        assert!(s.contains(&g.head_node(0, 7)));
+        assert!(!s.contains(&g.mlp_node(0)), "no self-loop");
+        // layer-1 heads see embed + layer-0 heads + layer-0 mlp
+        let s = g.sources(Channel::Head { layer: 1, head: 0, comp: 2 });
+        assert_eq!(s.len(), 1 + 8 + 1);
+        assert!(s.contains(&g.mlp_node(0)));
+        // final sees everything
+        assert_eq!(g.sources(Channel::Final).len(), g.n_nodes());
+    }
+
+    #[test]
+    fn edge_count_formula() {
+        // gpt2s-sim-shaped: per layer-l head channel: (1 + 9l) sources x 24
+        // channels; mlp_l: 1 + 8(l+1) + l; final: n_nodes.
+        let g = g_mlp();
+        let mut want = 0;
+        for l in 0..4 {
+            want += 24 * (1 + 9 * l);
+            want += 1 + 8 * (l + 1) + l;
+        }
+        want += g.n_nodes();
+        assert_eq!(g.n_edges(), want);
+        let ao = g_ao();
+        // attn-only: per layer-l channel: (1 + 4l) x 12; final 1 + 8
+        assert_eq!(ao.n_edges(), 12 * 1 + 12 * 5 + 9);
+    }
+
+    #[test]
+    fn edges_are_unique_and_valid() {
+        let g = g_ao();
+        let mut edges = g.edges();
+        let n = edges.len();
+        edges.sort();
+        edges.dedup();
+        assert_eq!(edges.len(), n);
+        for e in &edges {
+            assert!(g.is_edge(e));
+        }
+    }
+
+    #[test]
+    fn label_parse_roundtrip() {
+        let g = g_mlp();
+        for e in g.edges().iter().step_by(37) {
+            let s = e.label(&g);
+            let back = g.parse_edge(&s).unwrap();
+            assert_eq!(&back, e, "{s}");
+        }
+        assert!(g.parse_edge("a3.h0 -> a0.h0.q").is_err(), "anti-causal");
+        assert!(g.parse_edge("garbage").is_err());
+    }
+}

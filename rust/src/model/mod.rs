@@ -1,0 +1,13 @@
+//! Model artifacts: manifest (config + parameter layout), the weight store
+//! with per-precision residency, the computational graph (nodes / channels
+//! / edges) that circuit discovery operates on, and dataset loading.
+
+pub mod config;
+pub mod dataset;
+pub mod graph;
+pub mod weights;
+
+pub use config::{Manifest, ParamEntry};
+pub use dataset::{Dataset, Example};
+pub use graph::{Channel, Edge, Graph, NodeId};
+pub use weights::WeightStore;

@@ -1,0 +1,229 @@
+//! The weight store — PAHQ's memory hierarchy in miniature.
+//!
+//! Mirrors the paper's setup (section 3.1, "Hierarchical Weight
+//! Scheduling"): the FP32 master copy of every weight lives in **host**
+//! memory; the **device** holds a low-precision (FP8-emulated) resident
+//! copy of everything, plus a small staging area into which the FP32 rows
+//! of the head under investigation are "transferred" per edge evaluation.
+//! The byte counts of those structures drive the simulated GPU memory
+//! accounting (Tab. 3) and the transfer sizes the DES charges (Tab. 4).
+//!
+//! All actual numerics are f32 in host RAM — "FP8-resident" means the
+//! values have been pushed onto the FP8 lattice by [`crate::quant::fq`],
+//! exactly like the values the real system would dequantize on the fly.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::{fq_slice, Format};
+
+use super::config::Manifest;
+
+/// One precision-plane of the full parameter vector.
+struct Plane {
+    format: Format,
+    data: Vec<f32>,
+}
+
+pub struct WeightStore {
+    manifest: Manifest,
+    /// FP32 master (paper: host/CPU memory).
+    master: Vec<f32>,
+    /// Low-precision resident planes keyed by format name (paper: GPU).
+    planes: HashMap<&'static str, Plane>,
+    index: HashMap<String, (usize, usize)>, // name -> (offset, size)
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let path = manifest.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != manifest.n_params * 4 {
+            bail!(
+                "{}: expected {} bytes, found {}",
+                path.display(),
+                manifest.n_params * 4,
+                bytes.len()
+            );
+        }
+        let master: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let index = manifest
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), (p.offset, p.size)))
+            .collect();
+        Ok(WeightStore { manifest: manifest.clone(), master, planes: HashMap::new(), index })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Materialize (once) the resident plane for `format` — e.g. the FP8
+    /// copy of every weight the paper keeps on-GPU.
+    pub fn ensure_plane(&mut self, name: &'static str, format: Format) {
+        self.planes.entry(name).or_insert_with(|| {
+            let mut data = self.master.clone();
+            fq_slice(&mut data, format);
+            Plane { format, data }
+        });
+    }
+
+    /// FP32 master slice of a named parameter.
+    pub fn master_param(&self, name: &str) -> Result<&[f32]> {
+        let &(off, size) = self
+            .index
+            .get(name)
+            .with_context(|| format!("unknown param '{name}'"))?;
+        Ok(&self.master[off..off + size])
+    }
+
+    /// Resident low-precision slice of a named parameter.
+    pub fn plane_param(&self, plane: &str, name: &str) -> Result<&[f32]> {
+        let p = self
+            .planes
+            .get(plane)
+            .with_context(|| format!("plane '{plane}' not materialized"))?;
+        let &(off, size) = self
+            .index
+            .get(name)
+            .with_context(|| format!("unknown param '{name}'"))?;
+        Ok(&p.data[off..off + size])
+    }
+
+    pub fn plane_format(&self, plane: &str) -> Option<Format> {
+        self.planes.get(plane).map(|p| p.format)
+    }
+
+    /// Parameter slice at an explicit precision policy: FP32 master when
+    /// `hi` is true, the named plane otherwise.
+    pub fn param_at(&self, name: &str, plane: &str, hi: bool) -> Result<&[f32]> {
+        if hi {
+            self.master_param(name)
+        } else {
+            self.plane_param(plane, name)
+        }
+    }
+
+    /// Assemble a *mixed-precision* per-head weight tensor for one layer
+    /// and component: rows of `hi_head` come from the FP32 master, all
+    /// other heads from the low-precision plane. This is exactly the
+    /// paper's Eq. 4/Eq. 9 weight-side selection, and the buffer it fills
+    /// is what gets fed to the AOT attention executable.
+    ///
+    /// `out` must have the full parameter length ([H, D, K] flattened).
+    pub fn mixed_head_param(
+        &self,
+        name: &str,
+        plane: &str,
+        hi_head: Option<usize>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let lo = self.plane_param(plane, name)?;
+        out.copy_from_slice(lo);
+        if let Some(h) = hi_head {
+            let hi = self.master_param(name)?;
+            let per_head = hi.len() / self.manifest.n_head;
+            let a = h * per_head;
+            out[a..a + per_head].copy_from_slice(&hi[a..a + per_head]);
+        }
+        Ok(())
+    }
+
+    /// Assemble a per-head weight tensor with an *arbitrary* precision per
+    /// head (`planes[h]` names the plane for head h; "master" = FP32).
+    /// Generalizes [`Self::mixed_head_param`] for the Fig. 4 incremental
+    /// quantization experiment.
+    pub fn assemble_heads(&self, name: &str, planes: &[&str], out: &mut [f32]) -> Result<()> {
+        let per_head = out.len() / planes.len();
+        for (h, plane) in planes.iter().enumerate() {
+            let src = if *plane == "master" {
+                self.master_param(name)?
+            } else {
+                self.plane_param(plane, name)?
+            };
+            let a = h * per_head;
+            out[a..a + per_head].copy_from_slice(&src[a..a + per_head]);
+        }
+        Ok(())
+    }
+
+    /// Bytes of device-resident weights at the plane's precision —
+    /// the memory-model input for Tab. 3.
+    pub fn resident_bytes(&self, plane: &str) -> usize {
+        self.planes
+            .get(plane)
+            .map(|p| p.data.len() * p.format.storage_bytes())
+            .unwrap_or(0)
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.master.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{fq, FP8_E4M3};
+
+    fn store() -> Option<WeightStore> {
+        let m = Manifest::by_name("redwood2l-sim").ok()?;
+        WeightStore::load(&m).ok()
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let Some(s) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let wte = s.master_param("wte").unwrap();
+        assert_eq!(wte.len(), s.manifest().vocab * s.manifest().d_model);
+        assert!(s.master_param("nope").is_err());
+    }
+
+    #[test]
+    fn plane_is_on_lattice() {
+        let Some(mut s) = store() else { return };
+        s.ensure_plane("fp8", FP8_E4M3);
+        let lo = s.plane_param("fp8", "l0.wq").unwrap();
+        for &v in lo.iter().take(500) {
+            assert_eq!(v, fq(v, FP8_E4M3), "resident values are fixed points");
+        }
+        // fp8 differs from master somewhere (weights aren't all on-lattice)
+        let hi = s.master_param("l0.wq").unwrap();
+        assert!(lo.iter().zip(hi).any(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn mixed_head_selects_rows() {
+        let Some(mut s) = store() else { return };
+        s.ensure_plane("fp8", FP8_E4M3);
+        let hi = s.master_param("l0.wq").unwrap().to_vec();
+        let lo = s.plane_param("fp8", "l0.wq").unwrap().to_vec();
+        let n_head = s.manifest().n_head;
+        let per_head = hi.len() / n_head;
+        let mut out = vec![0.0; hi.len()];
+        s.mixed_head_param("l0.wq", "fp8", Some(1), &mut out).unwrap();
+        assert_eq!(&out[per_head..2 * per_head], &hi[per_head..2 * per_head]);
+        assert_eq!(&out[..per_head], &lo[..per_head]);
+        assert_eq!(&out[2 * per_head..], &lo[2 * per_head..]);
+        // no high head -> identical to plane
+        s.mixed_head_param("l0.wq", "fp8", None, &mut out).unwrap();
+        assert_eq!(out, lo);
+    }
+
+    #[test]
+    fn resident_bytes_scale_with_format() {
+        let Some(mut s) = store() else { return };
+        s.ensure_plane("fp8", FP8_E4M3);
+        assert_eq!(s.resident_bytes("fp8"), s.n_params());
+        assert_eq!(s.resident_bytes("missing"), 0);
+    }
+}

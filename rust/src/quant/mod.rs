@@ -1,0 +1,293 @@
+//! Fake-quantization codecs — the Rust mirror of `python/compile/quantize.py`.
+//!
+//! The two implementations must agree **bit-for-bit**: the python side is
+//! baked into the AOT HLO (activations quantize inside the kernels), the
+//! Rust side prepares weight residency (FP8-resident copies vs FP32 master
+//! rows) and emulates low-precision residual accumulation for the RTN-Q
+//! baseline. `tests::vectors_match_python` replays the vectors exported by
+//! `aot.py` (`artifacts/testvectors/fq_cases.json`).
+//!
+//! Algorithm (saturate-then-round, FTZ below 2^-126 quanta): see the long
+//! comment in quantize.py — identical steps, identical rounding
+//! (`round_ties_even`), identical quantum construction via exponent bit
+//! placement.
+
+use crate::tensor::Tensor;
+
+/// A fake-quantization format: `(mbits, emin, maxv)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Format {
+    /// mantissa bits; >= 23 means passthrough (FP32 sentinel)
+    pub mbits: f32,
+    /// minimum unbiased exponent of a normal value
+    pub emin: f32,
+    /// saturation bound
+    pub maxv: f32,
+}
+
+pub const FP32: Format = Format { mbits: 99.0, emin: -126.0, maxv: 3.4e38 };
+pub const FP16: Format = Format { mbits: 10.0, emin: -14.0, maxv: 65504.0 };
+pub const BF16: Format = Format { mbits: 7.0, emin: -126.0, maxv: 3.39e38 };
+pub const FP8_E4M3: Format = Format { mbits: 3.0, emin: -6.0, maxv: 448.0 };
+pub const FP8_E5M2: Format = Format { mbits: 2.0, emin: -14.0, maxv: 57344.0 };
+pub const FP4_E2M1: Format = Format { mbits: 1.0, emin: 0.0, maxv: 6.0 };
+
+impl Format {
+    pub fn by_name(name: &str) -> Option<Format> {
+        Some(match name {
+            "fp32" => FP32,
+            "fp16" => FP16,
+            "bf16" => BF16,
+            "fp8_e4m3" => FP8_E4M3,
+            "fp8_e5m2" => FP8_E5M2,
+            "fp4_e2m1" => FP4_E2M1,
+            _ => return None,
+        })
+    }
+
+    /// Storage bytes per element in the *emulated* format — drives the
+    /// simulated GPU memory accounting (Tab. 3) and transfer sizes.
+    pub fn storage_bytes(&self) -> usize {
+        match self.mbits as i32 {
+            m if m >= 23 => 4,
+            10 | 7 => 2, // fp16 / bf16
+            3 | 2 => 1,  // fp8
+            1 => 1,      // fp4 packs 2/byte on real HW; we bill 1 (conservative)
+            _ => 4,
+        }
+    }
+
+    pub fn is_passthrough(&self) -> bool {
+        self.mbits >= 23.0
+    }
+
+    /// The paper's Tab. 5 sweep: nominal bit width -> format.
+    pub fn by_bits(bits: u32) -> Format {
+        match bits {
+            4 => FP4_E2M1,
+            8 => FP8_E4M3,
+            16 => FP16,
+            _ => FP32,
+        }
+    }
+
+    /// As the (mbits, emin, maxv) triple the AOT HLOs take as input rows.
+    pub fn as_qp(&self) -> [f32; 3] {
+        [self.mbits, self.emin, self.maxv]
+    }
+}
+
+/// Exact 2^e for integer e in [-126, 127], by exponent bit placement
+/// (mirrors quantize._pow2 — never a transcendental).
+#[inline]
+fn pow2(e: f32) -> f32 {
+    let e = e.clamp(-126.0, 127.0) as i32;
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// floor(log2|x|) via the IEEE exponent field (exact; frexp equivalent).
+#[inline]
+fn floor_log2(ax: f32) -> f32 {
+    debug_assert!(ax > 0.0);
+    if ax >= f32::MIN_POSITIVE {
+        ((ax.to_bits() >> 23) as i32 - 127) as f32
+    } else {
+        // subnormal: normalize by scaling up by 2^64 (exact)
+        let scaled = ax * pow2(64.0);
+        ((scaled.to_bits() >> 23) as i32 - 127 - 64) as f32
+    }
+}
+
+/// Fake-quantize one value. Bit-exact counterpart of
+/// `quantize.fake_quant`.
+#[inline]
+pub fn fq(x: f32, f: Format) -> f32 {
+    if f.is_passthrough() {
+        return x;
+    }
+    fq_fast(x, f)
+}
+
+/// `fq` without the passthrough check — the hot loop for slices that
+/// already know the format is real. Division by the (power-of-two)
+/// quantum is a multiplication by its exact reciprocal; both q and 1/q
+/// are normal f32 by construction (the -126 exponent floor), so this is
+/// bit-identical to the division form.
+#[inline(always)]
+fn fq_fast(x: f32, f: Format) -> f32 {
+    let xc = x.clamp(-f.maxv, f.maxv);
+    let ax = xc.abs();
+    if ax < f32::MIN_POSITIVE {
+        // subnormal (or zero) input: flush to a sign-preserving zero —
+        // matches the explicit bitwise-FTZ in quantize.fake_quant (XLA
+        // CPU flushes subnormals in comparisons, so the python side
+        // cannot reliably do better, and the two must agree bit-for-bit)
+        return x * 0.0;
+    }
+    let e = floor_log2(ax).max(f.emin);
+    let qe = (e - f.mbits).clamp(-126.0, 126.0);
+    let q = pow2(qe);
+    let qinv = pow2(-qe);
+    let y = (xc * qinv).round_ties_even() * q;
+    y.clamp(-f.maxv, f.maxv)
+}
+
+/// Fake-quantize a slice in place.
+pub fn fq_slice(xs: &mut [f32], f: Format) {
+    if f.is_passthrough() {
+        return;
+    }
+    for x in xs {
+        *x = fq_fast(*x, f);
+    }
+}
+
+/// Fake-quantize into a new tensor.
+pub fn fq_tensor(t: &Tensor, f: Format) -> Tensor {
+    let mut out = t.clone();
+    fq_slice(&mut out.data, f);
+    out
+}
+
+/// Low-precision accumulation: `acc = fq(acc + fq(x))` per element.
+///
+/// This is where the paper's *mantissa loss* (section 2) lives: summing
+/// residual-stream contributions at FP8 discards any addend whose exponent
+/// trails the running sum by more than `mbits` — so the activation delta
+/// introduced by a patched edge can vanish before it reaches the logits.
+/// PAHQ keeps the stream at FP32 (paper Eq. 10), RTN-Q does not.
+pub fn accumulate_quantized(acc: &mut [f32], x: &[f32], f: Format) {
+    debug_assert_eq!(acc.len(), x.len());
+    if f.is_passthrough() {
+        crate::tensor::add_assign(acc, x);
+        return;
+    }
+    for i in 0..acc.len() {
+        acc[i] = fq_fast(acc[i] + fq_fast(x[i], f), f);
+    }
+}
+
+/// Integer RTN quantize-dequantize, paper Eq. (23):
+/// `Q(w) = delta * round(w/delta)`, `delta = max|w| / 2^(N-1)`.
+pub fn rtn_int(xs: &mut [f32], nbits: u32) {
+    let maxab = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if maxab == 0.0 {
+        return;
+    }
+    let delta = maxab / (1u64 << (nbits - 1)) as f32;
+    for x in xs.iter_mut() {
+        *x = delta * (*x / delta).round_ties_even();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn e4m3_anchors() {
+        assert_eq!(fq(448.0, FP8_E4M3), 448.0);
+        assert_eq!(fq(1000.0, FP8_E4M3), 448.0);
+        assert_eq!(fq(1.0, FP8_E4M3), 1.0);
+        assert_eq!(fq(1.0625, FP8_E4M3), 1.0); // ties-to-even down
+        assert_eq!(fq(2f32.powi(-9), FP8_E4M3), 2f32.powi(-9)); // min subnormal
+        assert_eq!(fq(2f32.powi(-10), FP8_E4M3), 0.0); // underflow
+        assert_eq!(fq(0.0, FP8_E4M3), 0.0);
+        assert_eq!(fq(-0.0, FP8_E4M3), -0.0);
+    }
+
+    #[test]
+    fn idempotent_and_monotonic() {
+        let mut r = Rng::new(1);
+        for f in [FP8_E4M3, FP8_E5M2, FP4_E2M1, BF16, FP16] {
+            let mut xs: Vec<f32> = (0..2000)
+                .map(|_| {
+                    let mag = pow2((r.f32() * 280.0 - 140.0).round());
+                    let sign = if r.f32() < 0.5 { -1.0 } else { 1.0 };
+                    sign * mag * (1.0 + r.f32())
+                })
+                .collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ys: Vec<f32> = xs.iter().map(|&x| fq(x, f)).collect();
+            for w in ys.windows(2) {
+                assert!(w[0] <= w[1], "monotonic {f:?}");
+            }
+            for &y in &ys {
+                assert_eq!(fq(y, f), y, "idempotent {f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn underflow_paper_s2() {
+        // contrasts below the binade quantum vanish (paper section 2)
+        assert_eq!(fq(1.0, FP8_E4M3), fq(1.05, FP8_E4M3));
+    }
+
+    #[test]
+    fn mantissa_loss_paper_s2() {
+        // exponent gap >= 4 under E4M3 loses the small addend entirely
+        let mut acc = vec![8.0f32];
+        accumulate_quantized(&mut acc, &[0.4], FP8_E4M3);
+        assert_eq!(acc[0], 8.0);
+        // ...while FP32 accumulation keeps it
+        let mut acc32 = vec![8.0f32];
+        accumulate_quantized(&mut acc32, &[0.4], FP32);
+        assert!((acc32[0] - 8.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vectors_match_python() {
+        // Bit-exactness against the jnp implementation baked into the HLO.
+        let path = crate::artifacts_root().join("testvectors/fq_cases.json");
+        if !path.exists() {
+            eprintln!("skipping: {} not built (run `make artifacts`)", path.display());
+            return;
+        }
+        let v = Json::parse_file(&path).unwrap();
+        let xs = v.get("x").unwrap().f32_vec().unwrap();
+        for name in ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1", "bf16", "fp16"] {
+            let want = v.get(name).unwrap().f32_vec().unwrap();
+            let f = Format::by_name(name).unwrap();
+            let mut mismatches = 0;
+            for (i, (&x, &w)) in xs.iter().zip(&want).enumerate() {
+                let got = fq(x, f);
+                if got.to_bits() != w.to_bits() {
+                    mismatches += 1;
+                    if mismatches < 5 {
+                        eprintln!("{name}[{i}]: fq({x:e}) = {got:e}, python {w:e}");
+                    }
+                }
+            }
+            assert_eq!(mismatches, 0, "{name}: {mismatches}/{} mismatches", xs.len());
+        }
+    }
+
+    #[test]
+    fn rtn_int_eq23() {
+        let mut w = vec![-1.0f32, -0.4, 0.0, 0.3, 0.8];
+        rtn_int(&mut w, 4);
+        let delta = 1.0 / 8.0;
+        for &q in &w {
+            let k = q / delta;
+            assert!((k - k.round()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn storage_bytes() {
+        assert_eq!(FP32.storage_bytes(), 4);
+        assert_eq!(BF16.storage_bytes(), 2);
+        assert_eq!(FP8_E4M3.storage_bytes(), 1);
+    }
+
+    #[test]
+    fn by_bits_table5() {
+        assert_eq!(Format::by_bits(4), FP4_E2M1);
+        assert_eq!(Format::by_bits(8), FP8_E4M3);
+        assert_eq!(Format::by_bits(16), FP16);
+        assert!(Format::by_bits(32).is_passthrough());
+    }
+}

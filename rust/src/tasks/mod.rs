@@ -1,0 +1,278 @@
+//! Rust-side task generators — mirrors of `python/compile/tasks.py`.
+//!
+//! The evaluation datasets shipped in `artifacts/datasets/` are generated
+//! by python (they must match the training distribution exactly); these
+//! generators exist for *workload scaling*: Tab. 8's dataset-size sweep,
+//! property tests, and bench harnesses need arbitrarily many fresh
+//! clean/corrupt pairs without touching python. The shared vocabulary and
+//! token groups come from `artifacts/vocab.json`, and
+//! `tests::mirrors_python_templates` pins the template structure against
+//! the exported datasets.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::Example;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub tokens: Vec<String>,
+    pub pad: usize,
+    pub bos: usize,
+    pub seq_len: usize,
+    pub names: Vec<usize>,
+    pub args: Vec<usize>,
+    pub funcs: Vec<usize>,
+    pub digits: Vec<usize>,
+    pub words: BTreeMap<String, usize>,
+}
+
+impl Vocab {
+    pub fn load() -> Result<Vocab> {
+        let path = crate::artifacts_root().join("vocab.json");
+        let j = Json::parse_file(&path).context("loading vocab.json (run `make artifacts`)")?;
+        let g = j.get("groups")?;
+        let words = g
+            .get("words")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_usize()?)))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Vocab {
+            tokens: j
+                .get("vocab")?
+                .as_arr()?
+                .iter()
+                .map(|t| Ok(t.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            pad: j.get("pad")?.as_usize()?,
+            bos: j.get("bos")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            names: g.get("names")?.usize_vec()?,
+            args: g.get("args")?.usize_vec()?,
+            funcs: g.get("funcs")?.usize_vec()?,
+            digits: g.get("digits")?.usize_vec()?,
+            words,
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    fn w(&self, word: &str) -> usize {
+        self.words[word]
+    }
+
+    fn pad_to(&self, mut toks: Vec<usize>) -> Vec<usize> {
+        debug_assert!(toks.len() <= self.seq_len);
+        toks.resize(self.seq_len, self.pad);
+        toks
+    }
+
+    // ---- generators (templates identical to tasks.py) ---------------------
+
+    /// IOI: "when X and Y went to the store , S gave a gift to" -> the
+    /// non-duplicated name. The duplicated subject S is uniformly either
+    /// X or Y (ABBA/BABA mix — without this the answer is position-
+    /// predictable and patching finds nothing). ABC corruption replaces
+    /// the duplicate with a third name C. Mirrors tasks.py exactly.
+    pub fn gen_ioi(&self, rng: &mut Rng) -> Example {
+        let picks = rng.choose_distinct(self.names.len(), 3);
+        let (na, nb, nc) = (self.names[picks[0]], self.names[picks[1]], self.names[picks[2]]);
+        let (subj, ans) = if rng.below(2) == 0 { (na, nb) } else { (nb, na) };
+        let head = vec![self.bos, self.w("when"), na, self.w("and"), nb];
+        let mid = vec![self.w("went"), self.w("to"), self.w("the"), self.w("store"), self.w(",")];
+        let tail = vec![self.w("gave"), self.w("a"), self.w("gift"), self.w("to")];
+        let mut clean = head.clone();
+        clean.extend(&mid);
+        clean.push(subj);
+        clean.extend(&tail);
+        let mut corrupt = head;
+        corrupt.extend(&mid);
+        corrupt.push(nc);
+        corrupt.extend(&tail);
+        let pos = clean.len() - 1;
+        Example {
+            clean: self.pad_to(clean),
+            corrupt: self.pad_to(corrupt),
+            pos,
+            ans: vec![(ans, 1.0)],
+            dis: vec![(subj, 1.0)],
+            label: ans,
+        }
+    }
+
+    /// Greater-Than: "the war lasted from year 17 D to year 17" -> digit > D.
+    pub fn gen_greater_than(&self, rng: &mut Rng) -> Example {
+        let d = 2 + rng.below(7); // 2..=8
+        let pre = vec![
+            self.bos, self.w("the"), self.w("war"), self.w("lasted"),
+            self.w("from"), self.w("year"), self.w("17"),
+        ];
+        let post = vec![self.w("to"), self.w("year"), self.w("17")];
+        let mut clean = pre.clone();
+        clean.push(self.digits[d]);
+        clean.extend(&post);
+        let mut corrupt = pre;
+        corrupt.push(self.digits[0]);
+        corrupt.extend(&post);
+        let pos = clean.len() - 1;
+        let greater: Vec<usize> = ((d + 1)..10).map(|k| self.digits[k]).collect();
+        let lesseq: Vec<usize> = (0..=d).map(|k| self.digits[k]).collect();
+        let gw = 1.0 / greater.len() as f32;
+        let lw = 1.0 / lesseq.len() as f32;
+        let label = greater[rng.below(greater.len())];
+        Example {
+            clean: self.pad_to(clean),
+            corrupt: self.pad_to(corrupt),
+            pos,
+            ans: greater.into_iter().map(|t| (t, gw)).collect(),
+            dis: lesseq.into_iter().map(|t| (t, lw)).collect(),
+            label,
+        }
+    }
+
+    /// Docstring: "def F ( A1 , A2 , A3 ) : param A1 : param A2 : param" -> A3.
+    pub fn gen_docstring(&self, rng: &mut Rng) -> Example {
+        let f = self.funcs[rng.below(self.funcs.len())];
+        let picks = rng.choose_distinct(self.args.len(), 6);
+        let a: Vec<usize> = picks[..3].iter().map(|&i| self.args[i]).collect();
+        let b: Vec<usize> = picks[3..].iter().map(|&i| self.args[i]).collect();
+        let stub = |args: &[usize]| -> Vec<usize> {
+            vec![
+                self.bos, self.w("def"), f, self.w("("), args[0], self.w(","),
+                args[1], self.w(","), args[2], self.w(")"), self.w(":"),
+                self.w("param"), a[0], self.w(":"), self.w("param"), a[1],
+                self.w(":"), self.w("param"),
+            ]
+        };
+        let clean = stub(&a);
+        let corrupt = stub(&b);
+        let pos = clean.len() - 1;
+        Example {
+            clean: self.pad_to(clean),
+            corrupt: self.pad_to(corrupt),
+            pos,
+            ans: vec![(a[2], 1.0)],
+            dis: vec![(a[0], 1.0)],
+            label: a[2],
+        }
+    }
+
+    pub fn generate(&self, task: &str, rng: &mut Rng) -> Result<Example> {
+        Ok(match task {
+            "ioi" => self.gen_ioi(rng),
+            "greater_than" => self.gen_greater_than(rng),
+            "docstring" => self.gen_docstring(rng),
+            _ => bail!("unknown task '{task}'"),
+        })
+    }
+
+    pub fn make_dataset(&self, task: &str, n: usize, seed: u64) -> Result<Vec<Example>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| self.generate(task, &mut rng)).collect()
+    }
+}
+
+pub const TASKS: [&str; 3] = ["ioi", "greater_than", "docstring"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Dataset;
+
+    fn vocab() -> Option<Vocab> {
+        Vocab::load().ok()
+    }
+
+    #[test]
+    fn generators_produce_valid_examples() {
+        let Some(v) = vocab() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::new(0);
+        for task in TASKS {
+            for _ in 0..100 {
+                let e = v.generate(task, &mut rng).unwrap();
+                assert_eq!(e.clean.len(), v.seq_len);
+                assert_eq!(e.corrupt.len(), v.seq_len);
+                assert!(e.pos < v.seq_len);
+                assert!(e.clean[..=e.pos].iter().all(|&t| t != v.pad));
+                let ws: f32 = e.ans.iter().map(|&(_, w)| w).sum();
+                assert!((ws - 1.0).abs() < 1e-5);
+                let ndiff = e.clean.iter().zip(&e.corrupt).filter(|(a, b)| a != b).count();
+                assert!((1..=3).contains(&ndiff), "{task} contrast is minimal");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let Some(v) = vocab() else { return };
+        let a = v.make_dataset("ioi", 8, 9).unwrap();
+        let b = v.make_dataset("ioi", 8, 9).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.clean, y.clean);
+            assert_eq!(x.corrupt, y.corrupt);
+        }
+    }
+
+    #[test]
+    fn mirrors_python_templates() {
+        // The python-exported datasets and the Rust generators must share
+        // template structure: same prompt length (pre-padding), same
+        // positions of clean/corrupt divergence, same answer position.
+        let Some(v) = vocab() else { return };
+        for task in TASKS {
+            let Ok(d) = Dataset::by_task(task) else { return };
+            let py = &d.examples[0];
+            let mut rng = Rng::new(123);
+            let rs = v.generate(task, &mut rng).unwrap();
+            assert_eq!(py.pos, rs.pos, "{task}: answer position");
+            let py_diff: Vec<usize> = py
+                .clean
+                .iter()
+                .zip(&py.corrupt)
+                .enumerate()
+                .filter(|(_, (a, b))| a != b)
+                .map(|(i, _)| i)
+                .collect();
+            let rs_diff: Vec<usize> = rs
+                .clean
+                .iter()
+                .zip(&rs.corrupt)
+                .enumerate()
+                .filter(|(_, (a, b))| a != b)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(py_diff, rs_diff, "{task}: corruption positions");
+            // fixed template tokens match exactly
+            for i in 0..py.pos {
+                if !py_diff.contains(&i) {
+                    let py_is_slot = v.names.contains(&py.clean[i])
+                        || v.args.contains(&py.clean[i])
+                        || v.funcs.contains(&py.clean[i])
+                        || v.digits.contains(&py.clean[i]);
+                    if !py_is_slot {
+                        assert_eq!(py.clean[i], rs.clean[i], "{task}: template token {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn greater_than_sets_cover_digits() {
+        let Some(v) = vocab() else { return };
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let e = v.gen_greater_than(&mut rng);
+            assert_eq!(e.ans.len() + e.dis.len(), 10, "partition of digits");
+        }
+    }
+}

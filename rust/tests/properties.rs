@@ -1,0 +1,282 @@
+//! Property-based tests on coordinator invariants (proptest is not
+//! vendored offline; properties are driven by the in-repo xoshiro RNG
+//! with fixed seeds — failures are reproducible by construction).
+
+use pahq::gpu_sim::{CostModel, Sim, StreamId};
+use pahq::metrics::{auc_pessimistic, confusion, RocPoint};
+use pahq::model::{Channel, Graph};
+use pahq::patching::PatchMask;
+use pahq::quant::{self, Format};
+use pahq::util::json::Json;
+use pahq::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    Graph {
+        n_layer: 1 + rng.below(6),
+        n_head: 1 + rng.below(12),
+        has_mlp: rng.below(2) == 1,
+    }
+}
+
+#[test]
+fn graph_sources_are_causal_and_complete() {
+    // For every random graph: every edge's source strictly precedes its
+    // destination's compute point, sources are sorted & unique, and the
+    // edge set is exactly the union over channels of their sources.
+    let mut rng = Rng::new(101);
+    for _ in 0..40 {
+        let g = random_graph(&mut rng);
+        let mut counted = 0usize;
+        for ch in g.channels() {
+            let srcs = g.sources(ch);
+            counted += srcs.len();
+            let mut sorted = srcs.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), srcs.len(), "unique");
+            for &s in &srcs {
+                assert!(s < g.n_nodes());
+                // destination channel of layer l never reads a node of a
+                // later layer
+                if let Channel::Head { layer, .. } = ch {
+                    match g.node_kind(s) {
+                        pahq::model::graph::NodeKind::Head { layer: sl, .. } => {
+                            assert!(sl < layer)
+                        }
+                        pahq::model::graph::NodeKind::Mlp { layer: sl } => assert!(sl < layer),
+                        pahq::model::graph::NodeKind::Embed => {}
+                    }
+                }
+            }
+        }
+        assert_eq!(counted, g.n_edges());
+    }
+}
+
+#[test]
+fn patch_mask_set_get_roundtrip() {
+    let mut rng = Rng::new(202);
+    for _ in 0..30 {
+        let g = random_graph(&mut rng);
+        let channels = g.channels();
+        let mut mask = PatchMask::empty(channels.len());
+        let edges = g.edges();
+        // random subset in, then out
+        let mut on = Vec::new();
+        for e in &edges {
+            if rng.below(3) == 0 {
+                let ci = channels.iter().position(|c| *c == e.dst).unwrap();
+                mask.set(ci, e.src, true);
+                on.push((ci, e.src));
+            }
+        }
+        assert_eq!(mask.count(), {
+            let mut d = on.clone();
+            d.sort_unstable();
+            d.dedup();
+            d.len()
+        });
+        for &(ci, src) in &on {
+            assert!(mask.get(ci, src));
+            mask.set(ci, src, false);
+        }
+        assert_eq!(mask.count(), 0);
+    }
+}
+
+#[test]
+fn fq_is_projection_and_monotone_everywhere() {
+    // randomized sweep across formats and magnitudes: idempotent,
+    // monotone, symmetric, bounded
+    let mut rng = Rng::new(303);
+    let formats = [
+        quant::FP8_E4M3,
+        quant::FP8_E5M2,
+        quant::FP4_E2M1,
+        quant::BF16,
+        quant::FP16,
+    ];
+    for f in formats {
+        let mut xs: Vec<f32> = (0..4000)
+            .map(|_| {
+                let e = rng.f32() * 60.0 - 30.0;
+                let sign = if rng.below(2) == 0 { -1.0 } else { 1.0 };
+                sign * e.exp2() * (1.0 + rng.f32())
+            })
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let ys: Vec<f32> = xs.iter().map(|&x| quant::fq(x, f)).collect();
+        for w in ys.windows(2) {
+            assert!(w[0] <= w[1], "monotone {f:?}");
+        }
+        for (&x, &y) in xs.iter().zip(&ys) {
+            assert_eq!(quant::fq(y, f), y, "idempotent");
+            assert!(y.abs() <= f.maxv, "bounded");
+            assert_eq!(quant::fq(-x, f), -y, "odd symmetry");
+        }
+    }
+}
+
+#[test]
+fn quantized_accumulation_never_beats_fp32_precision() {
+    // summing n positive values: the quantized running sum is always
+    // within the final clamp, and coarser formats lose at least as much
+    // mass as finer ones (monotonicity of mantissa loss in mbits)
+    let mut rng = Rng::new(404);
+    for _ in 0..50 {
+        let n = 5 + rng.below(60);
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0).collect();
+        let exact: f32 = xs.iter().sum();
+        let mut err_by_fmt = Vec::new();
+        for f in [quant::FP16, quant::FP8_E4M3, quant::FP4_E2M1] {
+            let mut acc = vec![0.0f32];
+            for &x in &xs {
+                quant::accumulate_quantized(&mut acc, &[x], f);
+            }
+            err_by_fmt.push((acc[0] - exact).abs());
+        }
+        assert!(
+            err_by_fmt[0] <= err_by_fmt[2] + 1e-3 * exact.abs(),
+            "fp16 err {} <= fp4 err {} (exact {exact})",
+            err_by_fmt[0],
+            err_by_fmt[2]
+        );
+    }
+}
+
+#[test]
+fn auc_respects_dominance_under_random_point_sets() {
+    let mut rng = Rng::new(505);
+    for _ in 0..50 {
+        let n = 1 + rng.below(20);
+        let pts: Vec<RocPoint> = (0..n)
+            .map(|_| RocPoint { fpr: rng.f64(), tpr: rng.f64() })
+            .collect();
+        let auc = auc_pessimistic(&pts);
+        assert!((0.0..=1.0).contains(&auc));
+        // shifting every point up (tpr+δ clamped) never lowers AUC
+        let better: Vec<RocPoint> = pts
+            .iter()
+            .map(|p| RocPoint { fpr: p.fpr, tpr: (p.tpr + 0.2).min(1.0) })
+            .collect();
+        assert!(auc_pessimistic(&better) >= auc - 1e-12);
+    }
+}
+
+#[test]
+fn confusion_matches_hand_counts_on_random_vectors() {
+    let mut rng = Rng::new(606);
+    for _ in 0..50 {
+        let n = 1 + rng.below(200);
+        let pred: Vec<bool> = (0..n).map(|_| rng.below(2) == 1).collect();
+        let truth: Vec<bool> = (0..n).map(|_| rng.below(2) == 1).collect();
+        let p = confusion(&pred, &truth);
+        let tp = pred.iter().zip(&truth).filter(|(&a, &b)| a && b).count() as f64;
+        let fp = pred.iter().zip(&truth).filter(|(&a, &b)| a && !b).count() as f64;
+        let pos = truth.iter().filter(|&&t| t).count() as f64;
+        let neg = n as f64 - pos;
+        if pos > 0.0 {
+            assert!((p.tpr - tp / pos).abs() < 1e-12);
+        }
+        if neg > 0.0 {
+            assert!((p.fpr - fp / neg).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn des_makespan_bounds() {
+    // makespan >= busiest stream; adding an op never decreases makespan;
+    // makespan <= sum of all durations (work conservation bounds)
+    let mut rng = Rng::new(707);
+    for _ in 0..40 {
+        let mut sim = Sim::new(3);
+        let mut total = 0.0;
+        let mut prev_span = 0.0;
+        let mut events = Vec::new();
+        for _ in 0..60 {
+            let s = StreamId(rng.below(3));
+            let d = rng.f64() * 20.0;
+            total += d;
+            let deps: Vec<_> = (0..rng.below(3).min(events.len()))
+                .map(|_| events[rng.below(events.len())])
+                .collect();
+            let e = sim.op(s, d, &deps, "op");
+            events.push(e);
+            let span = sim.makespan();
+            assert!(span >= prev_span, "monotone");
+            prev_span = span;
+        }
+        let busiest = (0..3)
+            .map(|s| sim.utilization(StreamId(s)) * sim.makespan())
+            .fold(0.0f64, f64::max);
+        assert!(sim.makespan() >= busiest - 1e-9);
+        assert!(sim.makespan() <= total + 1e-9);
+    }
+}
+
+#[test]
+fn cost_model_monotone_in_every_argument() {
+    let c = CostModel::default();
+    let mut rng = Rng::new(808);
+    for _ in 0..60 {
+        let (m, n, k) = (1 + rng.below(4096), 1 + rng.below(4096), 1 + rng.below(4096));
+        let f = quant::FP8_E4M3;
+        assert!(c.gemm_us(m + 64, n, k, f) >= c.gemm_us(m, n, k, f));
+        assert!(c.gemm_us(m, n + 64, k, f) >= c.gemm_us(m, n, k, f));
+        let b = rng.below(1 << 24);
+        assert!(c.transfer_us(b + 4096, 1) >= c.transfer_us(b, 1));
+        assert!(c.transfer_us(b, 10) >= c.transfer_us(b, 1));
+        assert!(c.elementwise_us(b + 4096) >= c.elementwise_us(b));
+    }
+}
+
+#[test]
+fn json_fuzz_roundtrip() {
+    // random JSON trees survive dump -> parse exactly
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.below(1 << 20) as f64) - (1 << 19) as f64),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| {
+                        let opts = ['a', 'Z', '"', '\\', '\n', 'ü', '7', ' '];
+                        opts[rng.below(opts.len())]
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(909);
+    for _ in 0..200 {
+        let v = gen(&mut rng, 3);
+        let back = Json::parse(&v.dump()).unwrap();
+        assert_eq!(v, back);
+    }
+}
+
+#[test]
+fn format_bits_roundtrip_and_storage_sanity() {
+    for bits in [4u32, 8, 16, 32] {
+        let f = Format::by_bits(bits);
+        assert!(f.storage_bytes() <= 4);
+        if bits < 32 {
+            assert!(!f.is_passthrough());
+            // coarser formats have strictly larger quanta at 1.0
+            let q = |f: Format| {
+                let y = quant::fq(1.0 + 1e-6, f);
+                (y - 1.0).abs().max(f32::EPSILON)
+            };
+            if bits > 4 {
+                assert!(q(Format::by_bits(bits)) <= q(Format::by_bits(bits / 2)) + 1e-12);
+            }
+        }
+    }
+}
