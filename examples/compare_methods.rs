@@ -34,8 +34,12 @@ fn main() -> Result<()> {
             let before = engine.forward_count;
             let auc = match method {
                 "acdc" => eval::sweep_acdc(&mut engine, Policy::fp32(), obj, &gt, &taus)?.auc,
-                "rtn-q" => eval::sweep_acdc(&mut engine, Policy::rtn(FP8_E4M3), obj, &gt, &taus)?.auc,
-                "pahq" => eval::sweep_acdc(&mut engine, Policy::pahq(FP8_E4M3), obj, &gt, &taus)?.auc,
+                "rtn-q" => {
+                    eval::sweep_acdc(&mut engine, Policy::rtn(FP8_E4M3), obj, &gt, &taus)?.auc
+                }
+                "pahq" => {
+                    eval::sweep_acdc(&mut engine, Policy::pahq(FP8_E4M3), obj, &gt, &taus)?.auc
+                }
                 "eap" => eval::sweep_scores(&eap::scores(&mut engine, obj)?, &gt).auc,
                 "hisp" => eval::sweep_scores(&hisp::scores(&mut engine, obj)?, &gt).auc,
                 _ => {

@@ -1,90 +1,168 @@
-//! Micro-benchmarks of the L3 hot path (custom harness; criterion is not
-//! available offline — see util::bench).
+//! Micro-benchmarks of the L3 hot path (criterion harness; the vendored
+//! shim in `vendor/criterion` provides the same API offline).
 //!
 //! Covers: residual assembly primitives, quant codecs, quantized
-//! accumulation, PJRT per-layer dispatch, the full patched forward, the
-//! DES edge simulation, and manifest JSON parsing. Results feed
-//! EXPERIMENTS.md §Perf.
+//! accumulation, the DES edge simulation, manifest JSON parsing, the
+//! serial-vs-batched sweep engine (the headline group: wall-clock win of
+//! `acdc::sweep` at 2/4/8 workers on a synthetic damage surface with a
+//! realistic per-eval cost floor), and — when artifacts are built — the
+//! full patched forward. Results feed EXPERIMENTS.md §Perf.
+//!
+//! CI smoke: `cargo bench --bench hot_paths -- sweep` runs only the
+//! short sweep group (300 ms warm-up, 1 s measurement, 30 samples).
 
 use std::time::Duration;
 
+use criterion::{black_box, criterion_group, criterion_main, BenchmarkId, Criterion};
+
+use pahq::acdc::sweep::{self, SyntheticSurface};
+use pahq::acdc::{Candidate, FnScorer, SweepMode};
+use pahq::gpu_sim::memory::MethodKind;
+use pahq::gpu_sim::{CostModel, RealArch};
 use pahq::metrics::Objective;
-use pahq::patching::{PatchedForward, Policy};
+use pahq::model::Graph;
+use pahq::patching::{PatchMask, PatchedForward, Policy};
 use pahq::quant::{self, FP8_E4M3};
 use pahq::tensor;
-use pahq::util::bench::{bench, black_box};
+use pahq::util::json::Json;
 use pahq::util::rng::Rng;
 
-fn main() {
-    let budget = Duration::from_millis(400);
+fn bench_assembly(c: &mut Criterion) {
     let mut rng = Rng::new(42);
-
-    // --- residual assembly primitives -----------------------------------
+    let mut g = c.benchmark_group("assembly");
     for n in [20_480usize, 163_840] {
         let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         let mut dst = a.clone();
-        let r = bench(&format!("add_assign {n} f32"), budget, || {
-            tensor::add_assign(black_box(&mut dst), black_box(&b));
+        g.bench_function(BenchmarkId::new("add_assign", n), |bch| {
+            bch.iter(|| tensor::add_assign(black_box(&mut dst), black_box(&b)))
         });
-        println!("    -> {:.2} GB/s effective", (n * 8) as f64 / r.median_ns);
         let mut dst2 = a.clone();
-        bench(&format!("add_sub_assign {n} f32 (patch swap)"), budget, || {
-            tensor::add_sub_assign(black_box(&mut dst2), black_box(&a), black_box(&b));
+        g.bench_function(BenchmarkId::new("add_sub_assign", n), |bch| {
+            bch.iter(|| {
+                tensor::add_sub_assign(black_box(&mut dst2), black_box(&a), black_box(&b))
+            })
         });
     }
+    g.finish();
+}
 
-    // --- quant codecs -----------------------------------------------------
+fn bench_quant(c: &mut Criterion) {
+    let mut rng = Rng::new(42);
     let xs: Vec<f32> = (0..65_536).map(|_| rng.normal() * 8.0).collect();
     let mut buf = xs.clone();
-    bench("fq_slice 64k e4m3", budget, || {
-        buf.copy_from_slice(&xs);
-        quant::fq_slice(black_box(&mut buf), FP8_E4M3);
+    let mut g = c.benchmark_group("quant");
+    g.bench_function("fq_slice_64k_e4m3", |bch| {
+        bch.iter(|| {
+            buf.copy_from_slice(&xs);
+            quant::fq_slice(black_box(&mut buf), FP8_E4M3);
+        })
     });
     let mut acc = vec![0.0f32; 20_480];
     let src: Vec<f32> = (0..20_480).map(|_| rng.normal()).collect();
-    bench("accumulate_quantized 20k e4m3 (RTN resid)", budget, || {
-        quant::accumulate_quantized(black_box(&mut acc), black_box(&src), FP8_E4M3);
+    g.bench_function("accumulate_quantized_20k_e4m3", |bch| {
+        bch.iter(|| quant::accumulate_quantized(black_box(&mut acc), black_box(&src), FP8_E4M3))
     });
+    g.finish();
+}
 
-    // --- DES --------------------------------------------------------------
-    let arch = pahq::gpu_sim::RealArch::by_name("gpt2").unwrap();
-    let cost = pahq::gpu_sim::CostModel::default();
-    bench("DES per-edge simulation (gpt2, PAHQ full)", budget, || {
-        black_box(pahq::scheduler::per_edge_us(
-            &arch,
-            &cost,
-            pahq::gpu_sim::memory::MethodKind::Pahq,
-            pahq::scheduler::StreamConfig::FULL,
-        ));
-    });
+/// The headline group: the batched sweep engine against its serial
+/// reference on an attn-4l-shaped graph. The scorer is the deterministic
+/// synthetic surface plus a fixed spin emulating the per-eval cost of a
+/// patched forward, so the threading win is measured against a realistic
+/// work grain; τ = 0.9 removes ~90% of edges, the regime the chain
+/// (predict-remove) speculation is built for.
+fn bench_sweep(c: &mut Criterion) {
+    let graph = Graph { n_layer: 4, n_head: 8, has_mlp: true };
+    let channels = graph.channels();
+    let n_channels = channels.len();
+    let mut plan: Vec<Vec<Candidate>> = Vec::new();
+    let mut order = channels.clone();
+    order.reverse();
+    for ch in order {
+        let ci = channels.iter().position(|c2| *c2 == ch).unwrap();
+        let mut srcs = graph.sources(ch);
+        srcs.reverse();
+        plan.push(
+            srcs.into_iter()
+                .map(|src| Candidate { chan: ci, src, hi: Some(src) })
+                .collect(),
+        );
+    }
+    let surface = SyntheticSurface::new(7, 0.001);
+    let score = |m: &PatchMask, cand: Option<&Candidate>| {
+        let d = surface.damage(m, cand);
+        // deterministic spin (~tens of µs): the simulated PJRT call
+        let mut x = d + 1.0f32;
+        for _ in 0..100_000u32 {
+            x = x * 1.000_000_1 + 1e-7;
+        }
+        // black_box(x) - x is exactly 0.0 but keeps the spin alive
+        d + (black_box(x) - x)
+    };
 
-    // --- JSON substrate ----------------------------------------------------
-    let manifest_path = pahq::artifacts_root().join("gpt2s-sim/manifest.json");
-    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
-        bench("JSON parse gpt2s-sim manifest", budget, || {
-            black_box(pahq::util::json::Json::parse(black_box(&text)).unwrap());
+    let mut g = c.benchmark_group("sweep");
+    g.warm_up_time(Duration::from_millis(300))
+        .measurement_time(Duration::from_secs(1))
+        .sample_size(30);
+    for workers in [1usize, 2, 4, 8] {
+        let mode =
+            if workers == 1 { SweepMode::Serial } else { SweepMode::Batched { workers } };
+        g.bench_function(BenchmarkId::new("workers", workers), |bch| {
+            bch.iter(|| {
+                let mut scorer = FnScorer { score, workers };
+                sweep::sweep(&mut scorer, n_channels, &plan, 0.9, false, mode).unwrap()
+            })
         });
     }
+    g.finish();
+}
 
-    // --- end-to-end patched forward (needs artifacts) ----------------------
+fn bench_des(c: &mut Criterion) {
+    let arch = RealArch::by_name("gpt2").unwrap();
+    let cost = CostModel::default();
+    c.bench_function("des/per_edge_pahq_full", |bch| {
+        bch.iter(|| {
+            pahq::scheduler::per_edge_us(
+                &arch,
+                &cost,
+                MethodKind::Pahq,
+                pahq::scheduler::StreamConfig::FULL,
+            )
+        })
+    });
+}
+
+fn bench_json(c: &mut Criterion) {
+    let manifest_path = pahq::artifacts_root().join("gpt2s-sim/manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        c.bench_function("json/parse_gpt2s_manifest", |bch| {
+            bch.iter(|| Json::parse(black_box(&text)).unwrap())
+        });
+    } else {
+        eprintln!("skipping json bench: {} not built", manifest_path.display());
+    }
+}
+
+fn bench_engine(c: &mut Criterion) {
+    // End-to-end patched forward; needs `make artifacts`.
     match PatchedForward::new("gpt2s-sim", "ioi") {
         Ok(mut engine) => {
             let patches = engine.empty_patches();
-            bench("patched forward gpt2s-sim fp32 (9 PJRT calls)", Duration::from_secs(3), || {
-                black_box(engine.forward(black_box(&patches), None).unwrap());
+            c.bench_function("engine/forward_fp32", |bch| {
+                bch.iter(|| engine.forward(&patches, None).unwrap())
             });
-            bench("damage() incl. KL metric", Duration::from_secs(2), || {
-                black_box(engine.damage(black_box(&patches), None, Objective::Kl).unwrap());
+            c.bench_function("engine/damage_kl", |bch| {
+                bch.iter(|| engine.damage(&patches, None, Objective::Kl).unwrap())
             });
             engine.set_session(Policy::pahq(FP8_E4M3)).unwrap();
             let hi = Some(engine.graph.head_node(1, 3));
-            bench("patched forward gpt2s-sim PAHQ (hi head)", Duration::from_secs(3), || {
-                black_box(engine.forward(black_box(&patches), hi).unwrap());
+            c.bench_function("engine/forward_pahq_hi_head", |bch| {
+                bch.iter(|| engine.forward(&patches, hi).unwrap())
             });
             engine.set_session(Policy::rtn(FP8_E4M3)).unwrap();
-            bench("patched forward gpt2s-sim RTN (fp8 resid)", Duration::from_secs(3), || {
-                black_box(engine.forward(black_box(&patches), None).unwrap());
+            c.bench_function("engine/forward_rtn_fp8_resid", |bch| {
+                bch.iter(|| engine.forward(&patches, None).unwrap())
             });
             // where does the time go?
             let stats = engine.runtime_stats();
@@ -105,3 +183,14 @@ fn main() {
         Err(e) => eprintln!("skipping engine benches: {e}"),
     }
 }
+
+criterion_group!(
+    benches,
+    bench_assembly,
+    bench_quant,
+    bench_sweep,
+    bench_des,
+    bench_json,
+    bench_engine
+);
+criterion_main!(benches);

@@ -12,8 +12,12 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 fn pahq_bin() -> Option<PathBuf> {
-    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/release/pahq");
-    p.exists().then_some(p)
+    // the workspace target dir lives at the repo root; a package-local
+    // target/ is also checked for non-workspace checkouts
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    [manifest.join("../target/release/pahq"), manifest.join("target/release/pahq")]
+        .into_iter()
+        .find(|p| p.exists())
 }
 
 fn main() {

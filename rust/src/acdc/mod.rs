@@ -18,6 +18,10 @@ use crate::metrics::Objective;
 use crate::model::{Edge, NodeId};
 use crate::patching::{PatchMask, PatchedForward, Policy};
 
+pub mod sweep;
+
+pub use sweep::{BatchScorer, Candidate, EnginePool, FnScorer, SweepMode, SweepOutcome};
+
 /// One recorded sweep step (drives Fig. 3's edge-count curve).
 #[derive(Clone, Debug)]
 pub struct TraceStep {
@@ -46,11 +50,18 @@ pub struct AcdcConfig {
     pub objective: Objective,
     /// record the Fig. 3 trace (tiny overhead)
     pub record_trace: bool,
+    /// evaluation scheduling; results are bit-identical across modes
+    pub sweep: SweepMode,
 }
 
 impl AcdcConfig {
     pub fn new(tau: f32, objective: Objective) -> AcdcConfig {
-        AcdcConfig { tau, objective, record_trace: false }
+        AcdcConfig { tau, objective, record_trace: false, sweep: SweepMode::Serial }
+    }
+
+    pub fn with_sweep(mut self, mode: SweepMode) -> AcdcConfig {
+        self.sweep = mode;
+        self
     }
 }
 
@@ -63,66 +74,102 @@ fn hi_node_for(policy: &Policy, src: NodeId) -> Option<NodeId> {
     }
 }
 
-/// Run ACDC under the engine's current session policy.
-pub fn run(engine: &mut PatchedForward, cfg: &AcdcConfig) -> Result<AcdcResult> {
-    let t0 = std::time::Instant::now();
-    let policy = engine.session().clone();
-    let edges = engine.graph.edges();
-    let total_edges = edges.len();
-
-    let mut patches = engine.empty_patches();
-    let mut m_cur = engine.damage(&patches, None, cfg.objective)?;
-    let mut n_evals = 1usize;
-    let mut trace = Vec::new();
-    let mut removed_count = 0usize;
-
-    // reverse topological order: later channels first, then later sources
-    // first within a channel (mirrors the reference implementation)
+/// The sweep plan for an engine's graph under its session policy:
+/// reverse topological order — later channels first, then later sources
+/// first within a channel (mirrors the reference implementation). Each
+/// inner vec is one destination channel's candidate group, the unit the
+/// batched sweep scores speculatively.
+pub fn sweep_plan(engine: &PatchedForward) -> Vec<Vec<Candidate>> {
+    let policy = engine.session();
     let mut channels = engine.channels.clone();
     channels.reverse();
-    let mut step = 0usize;
+    let mut plan = Vec::with_capacity(channels.len());
     for ch in channels {
         let ci = engine.chan_index(ch);
         let mut srcs = engine.graph.sources(ch);
         srcs.reverse();
-        for src in srcs {
-            step += 1;
-            patches.set(ci, src, true);
-            let hi = hi_node_for(&policy, src);
-            let m_new = engine.damage(&patches, hi, cfg.objective)?;
-            n_evals += 1;
-            let removed = m_new - m_cur < cfg.tau;
-            if removed {
-                removed_count += 1;
-                m_cur = m_new;
-            } else {
-                patches.set(ci, src, false);
-            }
-            if cfg.record_trace {
-                trace.push(TraceStep {
-                    step,
-                    edges_remaining: total_edges - removed_count,
-                    metric: m_cur,
-                    removed,
-                });
-            }
-        }
+        plan.push(
+            srcs.into_iter()
+                .map(|src| Candidate { chan: ci, src, hi: hi_node_for(policy, src) })
+                .collect(),
+        );
     }
+    plan
+}
 
-    let kept: Vec<bool> = edges
+fn finish_result(
+    engine: &PatchedForward,
+    out: SweepOutcome,
+    t0: std::time::Instant,
+) -> AcdcResult {
+    let kept: Vec<bool> = engine
+        .graph
+        .edges()
         .iter()
-        .map(|e| !patches.get(engine.chan_index(e.dst), e.src))
+        .map(|e| !out.removed.get(engine.chan_index(e.dst), e.src))
         .collect();
     let n_kept = kept.iter().filter(|&&k| k).count();
-    Ok(AcdcResult {
-        removed: patches,
+    AcdcResult {
+        removed: out.removed,
         kept,
         n_kept,
-        n_evals,
-        trace,
-        final_metric: m_cur,
+        n_evals: out.n_evals,
+        trace: out.trace,
+        final_metric: out.final_metric,
         wall: t0.elapsed(),
-    })
+    }
+}
+
+/// Run ACDC under the engine's current session policy. `cfg.sweep`
+/// selects the evaluation schedule; with a single engine, `Batched`
+/// still scores speculatively (sharing the per-batch patched-forward
+/// setup and reference memoization) but executes on one thread — use
+/// [`run_pool`] for true multi-worker scoring.
+pub fn run(engine: &mut PatchedForward, cfg: &AcdcConfig) -> Result<AcdcResult> {
+    let t0 = std::time::Instant::now();
+    let plan = sweep_plan(engine);
+    let n_channels = engine.n_channels();
+    let outcome = {
+        let mut scorer = EngineScorer { engine: &mut *engine, objective: cfg.objective };
+        sweep::sweep(&mut scorer, n_channels, &plan, cfg.tau, cfg.record_trace, cfg.sweep)?
+    };
+    Ok(finish_result(engine, outcome, t0))
+}
+
+/// Run ACDC across a pool of replicated engines: each speculative batch
+/// fans out over the pool's worker threads. Bit-identical to [`run`]
+/// (property-tested); the pool's objective must match `cfg.objective`.
+pub fn run_pool(pool: &mut EnginePool, cfg: &AcdcConfig) -> Result<AcdcResult> {
+    if pool.objective() != cfg.objective {
+        anyhow::bail!(
+            "engine pool scores {:?} but the sweep config asks for {:?}",
+            pool.objective(),
+            cfg.objective
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let plan = sweep_plan(pool.primary());
+    let n_channels = pool.primary().n_channels();
+    let outcome = sweep::sweep(pool, n_channels, &plan, cfg.tau, cfg.record_trace, cfg.sweep)?;
+    Ok(finish_result(pool.primary(), outcome, t0))
+}
+
+/// [`BatchScorer`] over a single engine: batches score sequentially but
+/// share the speculative-mask setup and the per-`hi` reference
+/// memoization (see [`PatchedForward::damage_batch`]).
+struct EngineScorer<'a> {
+    engine: &'a mut PatchedForward,
+    objective: Objective,
+}
+
+impl BatchScorer for EngineScorer<'_> {
+    fn baseline(&mut self, patches: &PatchMask) -> Result<f32> {
+        self.engine.damage(patches, None, self.objective)
+    }
+
+    fn score_batch(&mut self, patches: &PatchMask, cands: &[Candidate]) -> Result<Vec<f32>> {
+        self.engine.damage_batch(patches, cands, self.objective)
+    }
 }
 
 /// The 21 log-spaced thresholds the paper sweeps (0.001 .. 3.16).
@@ -213,5 +260,28 @@ mod tests {
         let res = run(&mut e, &AcdcConfig::new(0.01, Objective::Kl)).unwrap();
         assert!(res.n_kept > 0, "circuit is non-empty");
         assert!(res.n_kept < e.graph.n_edges(), "something was pruned");
+    }
+
+    #[test]
+    fn batched_sweep_matches_serial_on_engine() {
+        // The bit-identity contract on the real engine: same kept set,
+        // same final metric, regardless of schedule (serial vs batched
+        // single-engine vs batched pool).
+        let Some(mut e) = engine() else { return };
+        let cfg = AcdcConfig::new(0.01, Objective::Kl);
+        let serial = run(&mut e, &cfg).unwrap();
+        let batched =
+            run(&mut e, &cfg.clone().with_sweep(SweepMode::Batched { workers: 1 })).unwrap();
+        assert_eq!(serial.kept, batched.kept);
+        assert_eq!(serial.n_kept, batched.n_kept);
+        assert_eq!(serial.final_metric.to_bits(), batched.final_metric.to_bits());
+        assert!(batched.n_evals >= serial.n_evals, "rescoring only adds evals");
+
+        let mut pool =
+            EnginePool::new("redwood2l-sim", "ioi", &Policy::fp32(), 3, Objective::Kl).unwrap();
+        let pooled =
+            run_pool(&mut pool, &cfg.with_sweep(SweepMode::Batched { workers: 3 })).unwrap();
+        assert_eq!(serial.kept, pooled.kept);
+        assert_eq!(serial.final_metric.to_bits(), pooled.final_metric.to_bits());
     }
 }

@@ -1,0 +1,569 @@
+//! The sweep engine: batched, thread-parallel scoring of candidate edges
+//! with a deterministic reduction that is **bit-identical** to the serial
+//! greedy sweep.
+//!
+//! ACDC's inner loop is a chain of accept/reject decisions, one per edge,
+//! each conditioned on the patch state left by every earlier decision —
+//! on its face, strictly sequential. The batched engine treats that chain
+//! like a speculating processor treats a branch:
+//!
+//! 1. **Speculative scoring.** A window of still-undecided candidates
+//!    from the current destination channel is scored in parallel, under
+//!    one of two speculated prefixes:
+//!    - **flat** (predict *keep*): every candidate scored against the
+//!      current patch state — valid for candidate j as long as no
+//!      earlier candidate in the window was removed;
+//!    - **chain** (predict *remove*): candidate j scored against the
+//!      current state plus candidates `0..j` of the window patched in —
+//!      valid as long as every earlier candidate in the window WAS
+//!      removed.
+//!    A running accept-rate estimate picks the direction per round
+//!    (ACDC prunes most edges at practical τ, so the chain direction
+//!    dominates in the steady state).
+//! 2. **Deterministic reduction.** Candidates are then decided in serial
+//!    order, consuming a speculative score only while its validity
+//!    condition holds; the first misprediction truncates the window and
+//!    the survivors are re-scored against the true state next round.
+//!
+//! Every decision therefore consumes a score computed against exactly
+//! the patch state the serial sweep would have used — same floats, same
+//! comparisons, same kept set, same final metric, bit for bit (property-
+//! tested in `tests/properties.rs`). The price is extra evaluations on
+//! mispredictions: for window size B and miss rate q the expected eval
+//! inflation is ≈ `1 + q·(B−1)/2`, so with B = 2·workers the wall-clock
+//! speedup approaches `workers / (1 + q·(2·workers−1)/2)` — a clear win
+//! whenever the predictor is right more often than not.
+//!
+//! Threading is a hand-rolled `std::thread::scope` fan-out (the repo
+//! vendors no crates): [`FnScorer`] parallelizes any pure scoring
+//! function, [`EnginePool`] replicates [`PatchedForward`] engines — one
+//! per worker — and splits each batch across them.
+
+use anyhow::{bail, Result};
+
+use crate::metrics::Objective;
+use crate::model::NodeId;
+use crate::patching::{PatchMask, PatchedForward, Policy};
+
+use super::TraceStep;
+
+/// How the greedy sweep schedules its edge evaluations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SweepMode {
+    /// One evaluation at a time, the reference ACDC loop.
+    #[default]
+    Serial,
+    /// Per-channel speculative batches, scored across `workers` threads,
+    /// reduced deterministically (see module docs).
+    Batched { workers: usize },
+}
+
+impl SweepMode {
+    /// Parse a CLI spelling (`serial` | `batched`), with the worker count
+    /// supplied separately (`--workers`).
+    pub fn parse(name: &str, workers: usize) -> Result<SweepMode> {
+        match name {
+            "serial" => Ok(SweepMode::Serial),
+            "batched" => Ok(SweepMode::Batched { workers: workers.max(1) }),
+            other => bail!("unknown sweep mode '{other}' (serial|batched)"),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        match self {
+            SweepMode::Serial => 1,
+            SweepMode::Batched { workers } => (*workers).max(1),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SweepMode::Serial => "serial".to_string(),
+            SweepMode::Batched { workers } => format!("batched[{workers}]"),
+        }
+    }
+}
+
+/// One candidate edge evaluation: patch source `src` into destination
+/// channel `chan`, with the policy's high-precision override `hi`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub chan: usize,
+    pub src: NodeId,
+    pub hi: Option<NodeId>,
+}
+
+/// Scores batches of speculative candidates. Implementations MUST be
+/// deterministic functions of `(patches, candidates)` — the bit-identity
+/// guarantee of the batched sweep rests on it.
+pub trait BatchScorer {
+    /// Metric damage of the current patch set with no candidate applied.
+    fn baseline(&mut self, patches: &PatchMask) -> Result<f32>;
+
+    /// Flat speculation: damage of each candidate applied *individually*
+    /// on top of `patches` (candidates do not see each other).
+    fn score_batch(&mut self, patches: &PatchMask, cands: &[Candidate]) -> Result<Vec<f32>>;
+
+    /// Chain speculation: damage of candidate `j` with candidates `0..=j`
+    /// all patched on top of `patches` (each candidate assumes every
+    /// earlier one in the batch was removed). The default runs
+    /// sequentially via [`BatchScorer::score_batch`]; threaded scorers
+    /// override it with a prefix-mask fan-out.
+    fn score_chain(&mut self, patches: &PatchMask, cands: &[Candidate]) -> Result<Vec<f32>> {
+        let mut work = patches.clone();
+        let mut out = Vec::with_capacity(cands.len());
+        for c in cands {
+            let s = self.score_batch(&work, std::slice::from_ref(c))?;
+            out.push(s[0]);
+            work.set(c.chan, c.src, true);
+        }
+        Ok(out)
+    }
+}
+
+/// Raw output of a sweep, before graph-aware post-processing.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub removed: PatchMask,
+    pub n_evals: usize,
+    pub removed_count: usize,
+    pub final_metric: f32,
+    pub trace: Vec<TraceStep>,
+}
+
+/// Speculation window per round: mild oversubscription smooths worker
+/// imbalance without inflating misprediction waste.
+const SPEC_OVERSUB: usize = 2;
+
+/// Run the greedy sweep over `plan` (groups of candidates in evaluation
+/// order; each group shares one destination channel). `Serial` evaluates
+/// one candidate per round; `Batched` evaluates speculative windows with
+/// a keep/remove branch predictor (see module docs). Decisions — and
+/// therefore the returned kept set, the final metric, and the trace —
+/// are identical across modes.
+pub fn sweep<S: BatchScorer>(
+    scorer: &mut S,
+    n_channels: usize,
+    plan: &[Vec<Candidate>],
+    tau: f32,
+    record_trace: bool,
+    mode: SweepMode,
+) -> Result<SweepOutcome> {
+    let total: usize = plan.iter().map(|g| g.len()).sum();
+    let mut patches = PatchMask::empty(n_channels);
+    let mut m_cur = scorer.baseline(&patches)?;
+    let mut n_evals = 1usize;
+    let mut trace = Vec::new();
+    let mut removed_count = 0usize;
+    let mut step = 0usize;
+    let window = match mode {
+        SweepMode::Serial => 1,
+        SweepMode::Batched { workers } => workers.max(1) * SPEC_OVERSUB,
+    };
+    // Running accept-rate estimate driving the speculation direction
+    // (EMA; deterministic). Start neutral: the first rounds pay a few
+    // mispredictions while it settles.
+    let mut accept_est = 0.5f64;
+    for group in plan {
+        let mut i = 0usize;
+        while i < group.len() {
+            let end = i.saturating_add(window).min(group.len());
+            let pending = &group[i..end];
+            // predict "remove" (chain) when removal has been the majority
+            let chain = window > 1 && accept_est >= 0.5;
+            let scores = if chain {
+                scorer.score_chain(&patches, pending)?
+            } else {
+                scorer.score_batch(&patches, pending)?
+            };
+            debug_assert_eq!(scores.len(), pending.len());
+            n_evals += pending.len();
+            let mut decided = 0usize;
+            for (c, &m_new) in pending.iter().zip(&scores) {
+                step += 1;
+                decided += 1;
+                let removed = m_new - m_cur < tau;
+                if removed {
+                    patches.set(c.chan, c.src, true);
+                    m_cur = m_new;
+                    removed_count += 1;
+                }
+                accept_est = 0.9 * accept_est + if removed { 0.1 } else { 0.0 };
+                if record_trace {
+                    trace.push(TraceStep {
+                        step,
+                        edges_remaining: total - removed_count,
+                        metric: m_cur,
+                        removed,
+                    });
+                }
+                // A decision that contradicts the speculated prefix makes
+                // the rest of this window's scores stale.
+                let mispredicted = removed != chain;
+                if mispredicted && decided < pending.len() {
+                    break;
+                }
+            }
+            i += decided;
+        }
+    }
+    Ok(SweepOutcome { removed: patches, n_evals, removed_count, final_metric: m_cur, trace })
+}
+
+// ---------------------------------------------------------------------------
+// Scorers
+
+/// Wraps a pure scoring function `f(patches, candidate) -> damage`
+/// (`candidate = None` scores the baseline) and fans batches out over
+/// `workers` scoped threads. Used by the property tests and the
+/// serial-vs-batched benchmark group; the function must be `Sync`.
+pub struct FnScorer<F> {
+    pub score: F,
+    pub workers: usize,
+}
+
+impl<F> BatchScorer for FnScorer<F>
+where
+    F: Fn(&PatchMask, Option<&Candidate>) -> f32 + Sync,
+{
+    fn baseline(&mut self, patches: &PatchMask) -> Result<f32> {
+        Ok((self.score)(patches, None))
+    }
+
+    fn score_batch(&mut self, patches: &PatchMask, cands: &[Candidate]) -> Result<Vec<f32>> {
+        let w = self.workers.max(1).min(cands.len().max(1));
+        if w <= 1 {
+            return Ok(cands.iter().map(|c| (self.score)(patches, Some(c))).collect());
+        }
+        let mut out = vec![0.0f32; cands.len()];
+        let chunk = cands.len().div_ceil(w);
+        let score = &self.score;
+        std::thread::scope(|s| {
+            for (cs, os) in cands.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                s.spawn(move || {
+                    for (c, o) in cs.iter().zip(os.iter_mut()) {
+                        *o = score(patches, Some(c));
+                    }
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    fn score_chain(&mut self, patches: &PatchMask, cands: &[Candidate]) -> Result<Vec<f32>> {
+        let w = self.workers.max(1).min(cands.len().max(1));
+        if w <= 1 {
+            let mut work = patches.clone();
+            let mut out = Vec::with_capacity(cands.len());
+            for c in cands {
+                out.push((self.score)(&work, Some(c)));
+                work.set(c.chan, c.src, true);
+            }
+            return Ok(out);
+        }
+        // Prefix masks at chunk boundaries are built serially (cheap bit
+        // sets); each worker then walks its chunk cumulatively.
+        let chunk = cands.len().div_ceil(w);
+        let mut starts = Vec::with_capacity(w);
+        let mut work = patches.clone();
+        for (idx, c) in cands.iter().enumerate() {
+            if idx % chunk == 0 {
+                starts.push(work.clone());
+            }
+            work.set(c.chan, c.src, true);
+        }
+        let mut out = vec![0.0f32; cands.len()];
+        let score = &self.score;
+        std::thread::scope(|s| {
+            for ((cs, os), start) in cands.chunks(chunk).zip(out.chunks_mut(chunk)).zip(starts) {
+                s.spawn(move || {
+                    let mut mask = start;
+                    for (c, o) in cs.iter().zip(os.iter_mut()) {
+                        *o = score(&mask, Some(c));
+                        mask.set(c.chan, c.src, true);
+                    }
+                });
+            }
+        });
+        Ok(out)
+    }
+}
+
+/// A pool of replicated [`PatchedForward`] engines — one per worker —
+/// scoring each speculative batch across scoped threads. All engines are
+/// built from the same model/task/policy, so they are numerically
+/// identical replicas and any of them scoring a candidate produces the
+/// same bits (the determinism [`BatchScorer`] requires).
+pub struct EnginePool {
+    engines: Vec<PatchedForward>,
+    objective: Objective,
+}
+
+impl EnginePool {
+    pub fn new(
+        model: &str,
+        task: &str,
+        policy: &Policy,
+        workers: usize,
+        objective: Objective,
+    ) -> Result<EnginePool> {
+        let workers = workers.max(1);
+        let mut engines = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let mut e = PatchedForward::new(model, task)?;
+            e.set_session(policy.clone())?;
+            engines.push(e);
+        }
+        Ok(EnginePool { engines, objective })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// Total wall-clock spent inside PJRT across every engine replica.
+    pub fn pjrt_time(&self) -> std::time::Duration {
+        self.engines.iter().map(|e| e.pjrt_time()).sum()
+    }
+
+    /// The engine callers should use for graph/labels/follow-up metrics.
+    pub fn primary(&self) -> &PatchedForward {
+        &self.engines[0]
+    }
+
+    pub fn primary_mut(&mut self) -> &mut PatchedForward {
+        &mut self.engines[0]
+    }
+}
+
+impl BatchScorer for EnginePool {
+    fn baseline(&mut self, patches: &PatchMask) -> Result<f32> {
+        let obj = self.objective;
+        self.engines[0].damage(patches, None, obj)
+    }
+
+    fn score_batch(&mut self, patches: &PatchMask, cands: &[Candidate]) -> Result<Vec<f32>> {
+        let obj = self.objective;
+        let w = self.engines.len().min(cands.len().max(1));
+        if w <= 1 {
+            return self.engines[0].damage_batch(patches, cands, obj);
+        }
+        let chunk = cands.len().div_ceil(w);
+        let mut results: Vec<Result<Vec<f32>>> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (engine, cs) in self.engines.iter_mut().zip(cands.chunks(chunk)) {
+                handles.push(s.spawn(move || engine.damage_batch(patches, cs, obj)));
+            }
+            results = handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep worker panicked"))
+                .collect();
+        });
+        let mut out = Vec::with_capacity(cands.len());
+        for r in results {
+            out.extend(r?);
+        }
+        Ok(out)
+    }
+
+    fn score_chain(&mut self, patches: &PatchMask, cands: &[Candidate]) -> Result<Vec<f32>> {
+        let obj = self.objective;
+        let w = self.engines.len().min(cands.len().max(1));
+        if w <= 1 {
+            return self.engines[0].damage_chain(patches, cands, obj);
+        }
+        let chunk = cands.len().div_ceil(w);
+        let mut starts = Vec::with_capacity(w);
+        let mut work = patches.clone();
+        for (idx, c) in cands.iter().enumerate() {
+            if idx % chunk == 0 {
+                starts.push(work.clone());
+            }
+            work.set(c.chan, c.src, true);
+        }
+        let mut results: Vec<Result<Vec<f32>>> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for ((engine, cs), start) in
+                self.engines.iter_mut().zip(cands.chunks(chunk)).zip(starts)
+            {
+                handles.push(s.spawn(move || engine.damage_chain(&start, cs, obj)));
+            }
+            results = handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep worker panicked"))
+                .collect();
+        });
+        let mut out = Vec::with_capacity(cands.len());
+        for r in results {
+            out.extend(r?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic damage surface (tests + benches)
+
+/// A deterministic synthetic edge-damage surface: each `(chan, src)`
+/// carries a fixed pseudo-random weight, the damage of a patch set is the
+/// weight sum plus a quadratic interaction term, and `hi` overrides
+/// perturb the weight by an exact power-of-two factor. The interaction
+/// term makes candidate scores depend on the current mask, so the batched
+/// sweep's stale-score/rescore path is genuinely exercised.
+pub struct SyntheticSurface {
+    seed: u64,
+    interaction: f32,
+}
+
+impl SyntheticSurface {
+    pub fn new(seed: u64, interaction: f32) -> SyntheticSurface {
+        SyntheticSurface { seed, interaction }
+    }
+
+    /// Fixed weight of an edge, in [0, 1) (splitmix64 of (seed, chan, src)).
+    pub fn weight(&self, chan: usize, src: NodeId) -> f32 {
+        let mut x = self
+            .seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add((chan as u64) << 32 | src as u64);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+        x ^= x >> 31;
+        (x >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Damage of a patch set, optionally with one speculative candidate.
+    pub fn damage(&self, mask: &PatchMask, extra: Option<&Candidate>) -> f32 {
+        let mut sum = 0.0f32;
+        for chan in 0..mask.n_channels() {
+            let bits = mask.mask(chan);
+            if bits == 0 {
+                continue;
+            }
+            for src in 0..128usize {
+                if bits >> src & 1 == 1 {
+                    sum += self.weight(chan, src);
+                }
+            }
+        }
+        if let Some(c) = extra {
+            let w = self.weight(c.chan, c.src);
+            // hi overrides scale by 1 + 2^-10 — exact in f32, so the
+            // perturbation is deterministic and non-lossy
+            sum += if c.hi.is_some() { w * (1.0 + 1.0 / 1024.0) } else { w };
+        }
+        sum + self.interaction * sum * sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_3x4() -> Vec<Vec<Candidate>> {
+        // 3 channels x 4 sources, alternating hi overrides
+        (0..3)
+            .map(|chan| {
+                (0..4)
+                    .map(|src| Candidate {
+                        chan,
+                        src,
+                        hi: if src % 2 == 0 { Some(src) } else { None },
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn outcome(mode: SweepMode, workers: usize, tau: f32) -> SweepOutcome {
+        let surface = SyntheticSurface::new(42, 0.02);
+        let score = |m: &PatchMask, c: Option<&Candidate>| surface.damage(m, c);
+        let mut scorer = FnScorer { score, workers };
+        sweep(&mut scorer, 3, &plan_3x4(), tau, true, mode).unwrap()
+    }
+
+    #[test]
+    fn serial_and_batched_agree_bitwise() {
+        for tau in [0.1f32, 0.4, 0.7, 10.0] {
+            let a = outcome(SweepMode::Serial, 1, tau);
+            for workers in [1usize, 2, 4] {
+                let b = outcome(SweepMode::Batched { workers }, workers, tau);
+                assert_eq!(a.removed, b.removed, "tau={tau} workers={workers}");
+                assert_eq!(a.removed_count, b.removed_count);
+                assert_eq!(
+                    a.final_metric.to_bits(),
+                    b.final_metric.to_bits(),
+                    "final metric bit-identical (tau={tau})"
+                );
+                assert_eq!(a.trace.len(), b.trace.len());
+                for (x, y) in a.trace.iter().zip(&b.trace) {
+                    assert_eq!(x.removed, y.removed);
+                    assert_eq!(x.edges_remaining, y.edges_remaining);
+                    assert_eq!(x.metric.to_bits(), y.metric.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serial_eval_count_is_exact() {
+        let out = outcome(SweepMode::Serial, 1, 0.4);
+        assert_eq!(out.n_evals, 12 + 1);
+    }
+
+    #[test]
+    fn batched_eval_count_bounded_by_misprediction_model() {
+        // every misprediction wastes at most (window - 1) evals, and there
+        // are at most `total` mispredictions: n_evals <= 1 + total * window
+        // (window here clamps to the channel width of 4)
+        let out = outcome(SweepMode::Batched { workers: 4 }, 4, 0.4);
+        assert!(out.n_evals >= 12 + 1);
+        assert!(out.n_evals <= 1 + 12 * 4, "evals {}", out.n_evals);
+    }
+
+    #[test]
+    fn fn_scorer_parallel_matches_serial() {
+        let surface = SyntheticSurface::new(7, 0.05);
+        let plan = plan_3x4();
+        let cands: Vec<Candidate> = plan.iter().flatten().copied().collect();
+        let mask = PatchMask::empty(3);
+        let score = |m: &PatchMask, c: Option<&Candidate>| surface.damage(m, c);
+        let mut serial = FnScorer { score, workers: 1 };
+        let mut threaded = FnScorer { score, workers: 5 };
+        let a = serial.score_batch(&mask, &cands).unwrap();
+        let b = threaded.score_batch(&mask, &cands).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn sweep_mode_parsing() {
+        assert_eq!(SweepMode::parse("serial", 8).unwrap(), SweepMode::Serial);
+        assert_eq!(SweepMode::parse("batched", 8).unwrap(), SweepMode::Batched { workers: 8 });
+        assert_eq!(SweepMode::parse("batched", 0).unwrap().workers(), 1);
+        assert!(SweepMode::parse("speculative", 1).is_err());
+        assert_eq!(SweepMode::Batched { workers: 4 }.label(), "batched[4]");
+    }
+
+    #[test]
+    fn surface_is_deterministic_and_mask_sensitive() {
+        let s = SyntheticSurface::new(3, 0.1);
+        let mut m = PatchMask::empty(2);
+        let c = Candidate { chan: 1, src: 5, hi: None };
+        let d0 = s.damage(&m, Some(&c));
+        assert_eq!(d0.to_bits(), s.damage(&m, Some(&c)).to_bits());
+        m.set(0, 2, true);
+        let d1 = s.damage(&m, Some(&c));
+        assert!(d1 > d0, "interaction term responds to the mask");
+        let hi = Candidate { chan: 1, src: 5, hi: Some(5) };
+        assert_ne!(s.damage(&m, Some(&hi)).to_bits(), d1.to_bits(), "hi perturbs");
+    }
+}

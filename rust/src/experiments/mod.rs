@@ -8,7 +8,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::acdc::{self, AcdcConfig};
+use crate::acdc::{self, AcdcConfig, EnginePool, SweepMode};
 use crate::baselines::{eap, edge_pruning, hisp, sp};
 use crate::eval::{self, GroundTruth};
 use crate::gpu_sim::memory::{memory_model, MethodKind};
@@ -17,7 +17,7 @@ use crate::metrics::{answer_accuracy, edge_accuracy, faithfulness, logit_diff, O
 use crate::patching::{PatchMask, PatchedForward, Policy};
 use crate::quant::{Format, FP32, FP8_E4M3};
 use crate::report::{ascii_chart, mmss, Table};
-use crate::scheduler::{predict_run, StreamConfig};
+use crate::scheduler::{predict_run, predict_sweep, StreamConfig};
 
 pub const BASE_MODELS: [&str; 3] = ["gpt2s-sim", "attn4l-sim", "redwood2l-sim"];
 pub const SCALE_MODELS: [&str; 3] = ["gpt2m-sim", "gpt2l-sim", "gpt2xl-sim"];
@@ -196,7 +196,8 @@ pub fn table3(quick: bool) -> Result<()> {
             ("RTN-Q", MethodKind::RtnQ, Policy::rtn(FP8_E4M3)),
             ("PAHQ", MethodKind::Pahq, Policy::pahq(FP8_E4M3)),
         ] {
-            let cfg = if kind == MethodKind::Pahq { StreamConfig::FULL } else { StreamConfig::NONE };
+            let cfg =
+                if kind == MethodKind::Pahq { StreamConfig::FULL } else { StreamConfig::NONE };
             let sim = predict_run(&arch, &cost, kind, cfg);
             let mem = memory_model(&arch, kind);
             // real measurement on the tiny sim model
@@ -519,7 +520,12 @@ pub fn figure4(quick: bool) -> Result<()> {
     let uniform_acc = answer_accuracy(&logits, &engine.examples) as f64;
     let uniform: Vec<(f64, f64)> =
         vec![(0.0, uniform_acc), ((l * h) as f64, uniform_acc)];
-    table.row(vec!["uniform-4bit".into(), format!("{}", l * h), "-".into(), format!("{uniform_acc:.3}")]);
+    table.row(vec![
+        "uniform-4bit".into(),
+        format!("{}", l * h),
+        "-".into(),
+        format!("{uniform_acc:.3}"),
+    ]);
 
     println!(
         "{}",
@@ -532,6 +538,86 @@ pub fn figure4(quick: bool) -> Result<()> {
     );
     table.print();
     table.save_csv("figure4_quant_strategy")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Sweep scaling — serial vs batched edge evaluation (not a paper table;
+// the scaling story the parallel sweep engine adds on top of it)
+
+/// Predicted serial-vs-batched sweep times per architecture, plus — when
+/// artifacts are built — a real measured serial-vs-batched ACDC run on
+/// the tiny sim model validating the bit-identity contract end to end.
+pub fn sweep_scaling(quick: bool) -> Result<()> {
+    let cost = CostModel::default();
+    let archs: &[&str] = if quick { &["gpt2"] } else { &["gpt2", "gpt2-medium", "gpt2-large"] };
+    // removal rate at practical tau: ACDC prunes most edges
+    let removal_rate = 0.9;
+    let mut table = Table::new(
+        "Sweep scaling: PAHQ batched edge evaluation (simulated H20)",
+        &["arch", "sweep", "eval inflation", "time (m:s)", "speedup"],
+    );
+    for arch_name in archs {
+        let arch = RealArch::by_name(arch_name).unwrap();
+        let modes = [
+            SweepMode::Serial,
+            SweepMode::Batched { workers: 2 },
+            SweepMode::Batched { workers: 4 },
+            SweepMode::Batched { workers: 8 },
+            SweepMode::Batched { workers: 16 },
+        ];
+        for mode in modes {
+            let p = predict_sweep(
+                &arch,
+                &cost,
+                MethodKind::Pahq,
+                StreamConfig::FULL,
+                mode,
+                removal_rate,
+            );
+            table.row(vec![
+                arch.name.into(),
+                mode.label(),
+                format!("{:.2}x", p.eval_inflation),
+                mmss(p.total_minutes),
+                format!("{:.2}x", p.speedup),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("sweep_scaling")?;
+
+    // Real measurement when the sim-model artifacts exist: the batched
+    // sweep must reproduce the serial circuit bit for bit.
+    match PatchedForward::new("redwood2l-sim", "ioi") {
+        Ok(mut engine) => {
+            let cfg = AcdcConfig::new(0.01, Objective::Kl);
+            let serial = acdc::run(&mut engine, &cfg)?;
+            let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            let mut pool = EnginePool::new(
+                "redwood2l-sim",
+                "ioi",
+                &Policy::fp32(),
+                workers,
+                Objective::Kl,
+            )?;
+            let batched = acdc::run_pool(
+                &mut pool,
+                &cfg.with_sweep(SweepMode::Batched { workers }),
+            )?;
+            assert_eq!(serial.kept, batched.kept, "batched sweep diverged from serial");
+            println!(
+                "\nreal redwood2l-sim/ioi: serial {:.2}s ({} evals) vs batched[{workers}] \
+                 {:.2}s ({} evals) — kept sets identical ({} edges)",
+                serial.wall.as_secs_f64(),
+                serial.n_evals,
+                batched.wall.as_secs_f64(),
+                batched.n_evals,
+                serial.n_kept,
+            );
+        }
+        Err(e) => println!("\n(real sweep measurement skipped: {e})"),
+    }
     Ok(())
 }
 

@@ -35,7 +35,13 @@ impl Sim {
 
     /// Issue an op of `dur` µs on `stream`, starting no earlier than the
     /// stream's previous op and all `deps`. Returns its completion event.
-    pub fn op(&mut self, stream: StreamId, dur: f64, deps: &[EventId], label: &'static str) -> EventId {
+    pub fn op(
+        &mut self,
+        stream: StreamId,
+        dur: f64,
+        deps: &[EventId],
+        label: &'static str,
+    ) -> EventId {
         debug_assert!(dur >= 0.0);
         let dep_t = deps
             .iter()

@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use pahq::acdc::{self, AcdcConfig};
+use pahq::acdc::{self, AcdcConfig, EnginePool, SweepMode};
 use pahq::eval;
 use pahq::experiments;
 use pahq::gpu_sim::memory::{memory_model, MethodKind};
@@ -21,7 +21,7 @@ use pahq::model::Manifest;
 use pahq::patching::{PatchedForward, Policy};
 use pahq::quant::Format;
 use pahq::report::{mmss, Table};
-use pahq::scheduler::{predict_run, StreamConfig};
+use pahq::scheduler::{predict_run, predict_sweep, StreamConfig};
 use pahq::util::cli::Args;
 
 const USAGE: &str = "\
@@ -30,14 +30,18 @@ pahq — PAHQ: accelerating automated circuit discovery (paper reproduction)
 USAGE:
   pahq run [--model M] [--task T] [--method acdc|rtn-q|pahq] [--tau X]
            [--metric kl|task] [--bits 4|8|16] [--trace]
+           [--sweep serial|batched] [--workers N]
   pahq table <1|2|3|4|5|6|7|8> [--quick]
   pahq figure <1|3|4> [--quick]
   pahq all [--quick]
   pahq groundtruth [--model M] [--task T] [--metric kl|task]
   pahq sim [--arch gpt2] [--method acdc|rtn-q|pahq] [--streams full|load|split|none]
+           [--sweep serial|batched] [--workers N] [--removal-rate P]
+  pahq sweep [--quick]
   pahq info
 
 Defaults: --model gpt2s-sim --task ioi --method pahq --tau 0.01 --metric kl
+          --sweep serial --workers <available parallelism>
 Models: redwood2l-sim attn4l-sim gpt2s-sim gpt2m-sim gpt2l-sim gpt2xl-sim
 Tasks:  ioi greater_than docstring
 ";
@@ -50,6 +54,7 @@ fn main() -> Result<()> {
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "all" => experiments::run_all(args.flag("quick")),
+        "sweep" => experiments::sweep_scaling(args.flag("quick")),
         "groundtruth" => cmd_groundtruth(&args),
         "sim" => cmd_sim(&args),
         "info" => cmd_info(),
@@ -84,14 +89,33 @@ fn cmd_run(args: &Args) -> Result<()> {
     let tau = args.f64_or("tau", 0.01)? as f32;
     let obj = objective(args)?;
     let pol = policy(args)?;
-    println!("discovering circuit: {model} / {task} / {} / tau={tau} / {}",
-             pol.name, obj.label());
+    let sweep = args.sweep_mode()?;
+    println!(
+        "discovering circuit: {model} / {task} / {} / tau={tau} / {} / sweep={}",
+        pol.name,
+        obj.label(),
+        sweep.label()
+    );
 
     let mut engine = PatchedForward::new(model, task)?;
-    engine.set_session(pol)?;
+    engine.set_session(pol.clone())?;
     let mut cfg = AcdcConfig::new(tau, obj);
     cfg.record_trace = args.flag("trace");
-    let res = acdc::run(&mut engine, &cfg)?;
+    cfg.sweep = sweep;
+    let (res, pjrt) = match sweep {
+        SweepMode::Batched { workers } if workers > 1 => {
+            // replicate the engine per worker; the reduction keeps the
+            // result bit-identical to the serial sweep
+            let mut pool = EnginePool::new(model, task, &pol, workers, obj)?;
+            let res = acdc::run_pool(&mut pool, &cfg)?;
+            let pjrt = pool.pjrt_time();
+            (res, pjrt)
+        }
+        _ => {
+            let res = acdc::run(&mut engine, &cfg)?;
+            (res, engine.pjrt_time())
+        }
+    };
 
     println!(
         "\ncircuit: {} / {} edges kept ({} evals, {:.1}s wall, {:.1}s in PJRT)",
@@ -99,7 +123,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         engine.graph.n_edges(),
         res.n_evals,
         res.wall.as_secs_f64(),
-        engine.pjrt_time().as_secs_f64(),
+        pjrt.as_secs_f64(),
     );
     println!("final metric damage: {:.4}", res.final_metric);
     let labels = acdc::kept_edge_labels(&engine, &res);
@@ -211,13 +235,28 @@ fn cmd_sim(args: &Args) -> Result<()> {
         "stream utilization: load {:.2}, low {:.2}",
         p.load_utilization, p.low_utilization
     );
+    let sweep = args.sweep_mode()?;
+    if let SweepMode::Batched { .. } = sweep {
+        let removal = args.f64_or("removal-rate", 0.9)?;
+        let sp = predict_sweep(&arch, &cost, method, streams, sweep, removal);
+        println!(
+            "sweep {}: eval inflation {:.2}x, total {} (m:s), speedup {:.2}x",
+            sweep.label(),
+            sp.eval_inflation,
+            mmss(sp.total_minutes),
+            sp.speedup
+        );
+    }
     Ok(())
 }
 
 fn cmd_info() -> Result<()> {
     let root = pahq::artifacts_root();
     println!("artifacts root: {}", root.display());
-    let mut t = Table::new("models", &["name", "layers", "heads", "d_model", "mlp", "params", "edges", "artifacts"]);
+    let mut t = Table::new(
+        "models",
+        &["name", "layers", "heads", "d_model", "mlp", "params", "edges", "artifacts"],
+    );
     for name in experiments::BASE_MODELS.iter().chain(experiments::SCALE_MODELS.iter()) {
         match Manifest::by_name(name) {
             Ok(m) => {

@@ -158,6 +158,10 @@ impl PatchMask {
         self.per_channel[chan]
     }
 
+    pub fn n_channels(&self) -> usize {
+        self.per_channel.len()
+    }
+
     pub fn count(&self) -> usize {
         self.per_channel.iter().map(|m| m.count_ones() as usize).sum()
     }
@@ -438,6 +442,49 @@ impl PatchedForward {
         Ok(obj.damage(&logits, &self.examples, &ref_probs, ref_ld))
     }
 
+    /// Score a batch of speculative candidates: each candidate's edge is
+    /// patched on top of `patches` *individually* and its damage
+    /// computed. This is the single-engine entry point of the batched
+    /// sweep (`acdc::sweep`): the working mask is cloned once per batch
+    /// rather than once per candidate, and the per-`hi` clean-reference
+    /// memoization warms across the whole batch — the "shared
+    /// patched-forward setup" that makes batch scoring cheaper than a
+    /// sequence of independent `damage` calls even before threading.
+    pub fn damage_batch(
+        &mut self,
+        patches: &PatchMask,
+        cands: &[crate::acdc::sweep::Candidate],
+        obj: crate::metrics::Objective,
+    ) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(cands.len());
+        let mut work = patches.clone();
+        for c in cands {
+            work.set(c.chan, c.src, true);
+            out.push(self.damage(&work, c.hi, obj)?);
+            work.set(c.chan, c.src, false);
+        }
+        Ok(out)
+    }
+
+    /// Chain-speculative counterpart of [`Self::damage_batch`]: candidate
+    /// `j` is scored with candidates `0..=j` patched in (each assumes all
+    /// earlier ones in the batch were removed) — the "predict-remove"
+    /// direction of `acdc::sweep`'s branch-predicted batching.
+    pub fn damage_chain(
+        &mut self,
+        patches: &PatchMask,
+        cands: &[crate::acdc::sweep::Candidate],
+        obj: crate::metrics::Objective,
+    ) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(cands.len());
+        let mut work = patches.clone();
+        for c in cands {
+            work.set(c.chan, c.src, true);
+            out.push(self.damage(&work, c.hi, obj)?);
+        }
+        Ok(out)
+    }
+
     /// Clone of the current run's node outputs (for callers building
     /// caches, e.g. SP / Edge-Pruning baselines).
     pub fn node_outputs(&self) -> Vec<Tensor> {
@@ -551,7 +598,8 @@ impl PatchedForward {
         // ---- layers ------------------------------------------------------
         for l in 0..m.n_layer {
             // channel inputs for all heads/components of this layer
-            let head_gid = self.chan_group[self.chan_idx[&Channel::Head { layer: l, head: 0, comp: 0 }]];
+            let head_ch = Channel::Head { layer: l, head: 0, comp: 0 };
+            let head_gid = self.chan_group[self.chan_idx[&head_ch]];
             self.compute_group_base(head_gid, policy);
             // Assemble each distinct patch mask once and memcpy for the
             // duplicates — within a layer, most of the 3*H channels share

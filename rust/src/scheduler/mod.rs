@@ -25,6 +25,7 @@
 //! consecutive edge evaluations and differencing the makespan, so
 //! cross-edge prefetch overlap is captured naturally.
 
+use crate::acdc::SweepMode;
 use crate::gpu_sim::memory::MethodKind;
 use crate::gpu_sim::{CostModel, RealArch, Sim, StreamId};
 use crate::quant::{BF16, FP32, FP8_E4M3};
@@ -108,7 +109,8 @@ fn edge_eval(
             &[],
             "load W_QKV32[h*]",
         );
-        let wo = sim.op(load_stream, cost.transfer_us(arch.wo_bytes(), 1), &[qkv], "load W_O32[l*]");
+        let wo =
+            sim.op(load_stream, cost.transfer_us(arch.wo_bytes(), 1), &[qkv], "load W_O32[l*]");
         Some((qkv, wo))
     } else {
         None
@@ -239,6 +241,65 @@ pub fn predict_run(
     }
 }
 
+/// Prediction of a full sweep under an `acdc::SweepMode` schedule.
+#[derive(Clone, Debug)]
+pub struct SweepPrediction {
+    pub mode: SweepMode,
+    pub n_edges: usize,
+    /// scored evaluations / decisions (1.0 = no speculation waste)
+    pub eval_inflation: f64,
+    pub serial_minutes: f64,
+    pub total_minutes: f64,
+    pub speedup: f64,
+}
+
+/// Predict a sweep under a [`SweepMode`]: `Batched { workers }` models
+/// the branch-predicted speculative batching of `acdc::sweep` running on
+/// `workers` engine replicas. With window `B = 2·workers` and predictor
+/// miss rate `q = min(p, 1−p)` for removal rate `p`, expected eval
+/// inflation is `1 + q·(B−1)/2` and throughput scales by `workers`, so
+/// predicted time is `serial · inflation / workers` (never better than
+/// the one-round-per-decision critical path).
+pub fn predict_sweep(
+    arch: &RealArch,
+    cost: &CostModel,
+    method: MethodKind,
+    cfg: StreamConfig,
+    mode: SweepMode,
+    removal_rate: f64,
+) -> SweepPrediction {
+    let base = predict_run(arch, cost, method, cfg);
+    let serial_minutes = base.total_minutes;
+    match mode {
+        SweepMode::Serial => SweepPrediction {
+            mode,
+            n_edges: base.n_edges,
+            eval_inflation: 1.0,
+            serial_minutes,
+            total_minutes: serial_minutes,
+            speedup: 1.0,
+        },
+        SweepMode::Batched { workers } => {
+            let w = workers.max(1) as f64;
+            let p = removal_rate.clamp(0.0, 1.0);
+            let q = p.min(1.0 - p);
+            let window = 2.0 * w;
+            let inflation = 1.0 + q * (window - 1.0) / 2.0;
+            // workers scale throughput; a misprediction-free decision
+            // chain still needs >= one batch round per window
+            let total_minutes = serial_minutes * inflation / w;
+            SweepPrediction {
+                mode,
+                n_edges: base.n_edges,
+                eval_inflation: inflation,
+                serial_minutes,
+                total_minutes,
+                speedup: serial_minutes / total_minutes,
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,6 +380,49 @@ mod tests {
         assert!(sim.utilization(S_LOAD) > 0.0);
         let (none, _) = per_edge_us(&gpt2(), &c, MethodKind::Pahq, StreamConfig::NONE);
         assert!(none > full);
+    }
+
+    #[test]
+    fn sweep_prediction_scales_with_workers() {
+        let c = CostModel::default();
+        let arch = gpt2();
+        let serial = predict_sweep(
+            &arch,
+            &c,
+            MethodKind::Pahq,
+            StreamConfig::FULL,
+            SweepMode::Serial,
+            0.9,
+        );
+        let run = predict_run(&arch, &c, MethodKind::Pahq, StreamConfig::FULL);
+        assert!((serial.total_minutes - run.total_minutes).abs() < 1e-9);
+        assert_eq!(serial.speedup, 1.0);
+
+        let mut prev = serial.total_minutes;
+        for workers in [2usize, 4, 8] {
+            let p = predict_sweep(
+                &arch,
+                &c,
+                MethodKind::Pahq,
+                StreamConfig::FULL,
+                SweepMode::Batched { workers },
+                0.9,
+            );
+            assert!(p.eval_inflation >= 1.0);
+            assert!(p.speedup <= workers as f64, "speedup bounded by workers");
+            assert!(p.total_minutes < prev, "more workers, less time");
+            prev = p.total_minutes;
+        }
+        // a well-predicted sweep at 4 workers is a clear win
+        let p4 = predict_sweep(
+            &arch,
+            &c,
+            MethodKind::Pahq,
+            StreamConfig::FULL,
+            SweepMode::Batched { workers: 4 },
+            0.9,
+        );
+        assert!(p4.speedup > 2.0, "speedup {:.2}", p4.speedup);
     }
 
     #[test]

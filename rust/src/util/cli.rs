@@ -68,6 +68,15 @@ impl Args {
         self.get(name)
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
+
+    /// The sweep schedule from `--sweep serial|batched [--workers N]`.
+    /// `--workers` defaults to the machine's available parallelism.
+    pub fn sweep_mode(&self) -> Result<crate::acdc::SweepMode> {
+        let default_workers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let workers = self.usize_or("workers", default_workers)?;
+        crate::acdc::SweepMode::parse(self.get_or("sweep", "serial"), workers)
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +116,20 @@ mod tests {
     fn lists() {
         let a = parse("--models a,b , --x 1");
         assert_eq!(a.list("models").unwrap(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn sweep_modes() {
+        use crate::acdc::SweepMode;
+        assert_eq!(parse("run").sweep_mode().unwrap(), SweepMode::Serial);
+        assert_eq!(
+            parse("run --sweep batched --workers 6").sweep_mode().unwrap(),
+            SweepMode::Batched { workers: 6 }
+        );
+        assert!(matches!(
+            parse("run --sweep batched").sweep_mode().unwrap(),
+            SweepMode::Batched { workers } if workers >= 1
+        ));
+        assert!(parse("run --sweep turbo").sweep_mode().is_err());
     }
 }

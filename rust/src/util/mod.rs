@@ -1,8 +1,7 @@
-//! Offline-friendly substrates: this box has no crates.io access beyond the
-//! vendored `xla`/`anyhow`, so JSON, RNG, CLI parsing and the bench harness
-//! are built in-repo.
+//! Offline-friendly substrates: this box has no crates.io access beyond
+//! the crates vendored under `vendor/`, so JSON, RNG, and CLI parsing are
+//! built in-repo (benchmarks use the vendored criterion shim).
 
-pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;

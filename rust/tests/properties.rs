@@ -263,6 +263,77 @@ fn json_fuzz_roundtrip() {
 }
 
 #[test]
+fn batched_sweep_is_bit_identical_to_serial() {
+    // The sweep engine's core contract: across seeded random graphs,
+    // policies (hi-override on/off), and thresholds, the batched
+    // speculative sweep returns exactly the serial sweep's kept set,
+    // kept count, and final metric — bit for bit.
+    use pahq::acdc::sweep::{self, Candidate, FnScorer, SweepMode, SyntheticSurface};
+    let mut rng = Rng::new(1010);
+    for round in 0..12u64 {
+        let g = random_graph(&mut rng);
+        let channels = g.channels();
+        // plan mirrors acdc::sweep_plan: reverse-topological channels,
+        // reversed sources within each channel
+        let pahq_like = round % 2 == 0;
+        let mut order = channels.clone();
+        order.reverse();
+        let mut plan: Vec<Vec<Candidate>> = Vec::new();
+        for ch in order {
+            let ci = channels.iter().position(|c| *c == ch).unwrap();
+            let mut srcs = g.sources(ch);
+            srcs.reverse();
+            plan.push(
+                srcs.into_iter()
+                    .map(|src| Candidate {
+                        chan: ci,
+                        src,
+                        hi: if pahq_like { Some(src) } else { None },
+                    })
+                    .collect(),
+            );
+        }
+        let surface = SyntheticSurface::new(2000 + round, 0.01);
+        let tau = [0.05f32, 0.3, 0.6, 0.95][rng.below(4)];
+        let score = |m: &PatchMask, c: Option<&Candidate>| surface.damage(m, c);
+        let run = |mode: SweepMode, workers: usize| {
+            let mut scorer = FnScorer { score, workers };
+            sweep::sweep(&mut scorer, channels.len(), &plan, tau, true, mode).unwrap()
+        };
+        let kept = |out: &sweep::SweepOutcome| -> Vec<bool> {
+            g.edges()
+                .iter()
+                .map(|e| {
+                    let ci = channels.iter().position(|c| *c == e.dst).unwrap();
+                    !out.removed.get(ci, e.src)
+                })
+                .collect()
+        };
+        let serial = run(SweepMode::Serial, 1);
+        for workers in [2usize, 3, 8] {
+            let batched = run(SweepMode::Batched { workers }, workers);
+            assert_eq!(
+                kept(&serial),
+                kept(&batched),
+                "kept set (round {round}, workers {workers}, tau {tau})"
+            );
+            assert_eq!(serial.removed_count, batched.removed_count, "kept count");
+            assert_eq!(
+                serial.final_metric.to_bits(),
+                batched.final_metric.to_bits(),
+                "final metric bits (round {round}, workers {workers})"
+            );
+            assert_eq!(serial.trace.len(), batched.trace.len(), "one decision per edge");
+            for (a, b) in serial.trace.iter().zip(&batched.trace) {
+                assert_eq!(a.removed, b.removed);
+                assert_eq!(a.edges_remaining, b.edges_remaining);
+                assert_eq!(a.metric.to_bits(), b.metric.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
 fn format_bits_roundtrip_and_storage_sanity() {
     for bits in [4u32, 8, 16, 32] {
         let f = Format::by_bits(bits);

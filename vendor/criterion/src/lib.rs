@@ -1,0 +1,302 @@
+//! Vendored minimal `criterion` — an offline, API-compatible subset of
+//! criterion 0.5 covering what the `pahq` bench targets use:
+//!
+//! - [`Criterion`] with [`criterion_group!`] / [`criterion_main!`];
+//! - [`Criterion::bench_function`] and [`Criterion::benchmark_group`]
+//!   with per-group `warm_up_time` / `measurement_time` / `sample_size`;
+//! - [`Bencher::iter`], [`black_box`], [`BenchmarkId`];
+//! - a CLI filter (first free argument, as `cargo bench -- <filter>`
+//!   passes it) so CI can run a single short smoke group.
+//!
+//! Measurement: after a warm-up phase, the iteration count per sample is
+//! calibrated so one sample lasts ~`measurement_time / sample_size`,
+//! then `sample_size` samples are timed and summarized as
+//! `[min median max]` per-iteration times — the same headline triple
+//! criterion prints. No plotting, no statistics beyond that.
+
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// Benchmark identifier; `BenchmarkId::new("fn", param)` formats as
+/// `fn/param` like upstream.
+pub struct BenchmarkId(String);
+
+impl BenchmarkId {
+    pub fn new<P: std::fmt::Display>(function_name: &str, parameter: P) -> BenchmarkId {
+        BenchmarkId(format!("{function_name}/{parameter}"))
+    }
+
+    pub fn from_parameter<P: std::fmt::Display>(parameter: P) -> BenchmarkId {
+        BenchmarkId(parameter.to_string())
+    }
+}
+
+impl From<BenchmarkId> for String {
+    fn from(id: BenchmarkId) -> String {
+        id.0
+    }
+}
+
+impl From<&str> for BenchmarkId {
+    fn from(s: &str) -> BenchmarkId {
+        BenchmarkId(s.to_string())
+    }
+}
+
+impl From<String> for BenchmarkId {
+    fn from(s: String) -> BenchmarkId {
+        BenchmarkId(s)
+    }
+}
+
+#[derive(Clone)]
+struct Settings {
+    warm_up: Duration,
+    measurement: Duration,
+    sample_size: usize,
+}
+
+impl Default for Settings {
+    fn default() -> Settings {
+        Settings {
+            warm_up: Duration::from_millis(500),
+            measurement: Duration::from_secs(2),
+            sample_size: 50,
+        }
+    }
+}
+
+pub struct Criterion {
+    settings: Settings,
+    filter: Option<String>,
+    ran: usize,
+}
+
+impl Default for Criterion {
+    fn default() -> Criterion {
+        Criterion { settings: Settings::default(), filter: None, ran: 0 }
+    }
+}
+
+impl Criterion {
+    /// Pick up the benchmark-name filter from the command line. Harness
+    /// flags cargo forwards (`--bench`, `--nocapture`, ...) are ignored;
+    /// the first free argument becomes the substring filter.
+    pub fn configure_from_args(mut self) -> Criterion {
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--bench" | "--test" | "--nocapture" | "--quiet" | "--verbose" | "--exact" => {}
+                "--sample-size" | "--warm-up-time" | "--measurement-time" | "--profile-time" => {
+                    let _ = args.next();
+                }
+                s if s.starts_with("--") => {}
+                s => {
+                    self.filter = Some(s.to_string());
+                }
+            }
+        }
+        self
+    }
+
+    pub fn warm_up_time(&mut self, d: Duration) -> &mut Criterion {
+        self.settings.warm_up = d;
+        self
+    }
+
+    pub fn measurement_time(&mut self, d: Duration) -> &mut Criterion {
+        self.settings.measurement = d;
+        self
+    }
+
+    pub fn sample_size(&mut self, n: usize) -> &mut Criterion {
+        self.settings.sample_size = n.max(2);
+        self
+    }
+
+    pub fn bench_function<F>(&mut self, id: impl Into<BenchmarkId>, f: F) -> &mut Criterion
+    where
+        F: FnMut(&mut Bencher),
+    {
+        let name = String::from(id.into());
+        let settings = self.settings.clone();
+        self.run_one(&name, settings, f);
+        self
+    }
+
+    pub fn benchmark_group(&mut self, name: impl Into<String>) -> BenchmarkGroup<'_> {
+        BenchmarkGroup { parent: self, name: name.into(), settings: None }
+    }
+
+    /// Print a one-line run summary (called by [`criterion_main!`]).
+    pub fn final_summary(&self) {
+        println!("\n{} benchmark(s) run", self.ran);
+    }
+
+    fn run_one<F: FnMut(&mut Bencher)>(&mut self, name: &str, settings: Settings, mut f: F) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Calibration pass: one iteration, to size the samples.
+        let mut b = Bencher { iters: 1, elapsed: Duration::ZERO };
+        f(&mut b);
+        let once_ns = (b.elapsed.as_nanos().max(1) as u64).max(1);
+
+        // Warm-up.
+        let warm_end = Instant::now() + settings.warm_up;
+        while Instant::now() < warm_end {
+            f(&mut b);
+        }
+
+        // Timed samples.
+        let per_sample_ns =
+            (settings.measurement.as_nanos() as u64 / settings.sample_size as u64).max(1);
+        let iters = (per_sample_ns / once_ns).clamp(1, 10_000_000);
+        let mut samples: Vec<f64> = Vec::with_capacity(settings.sample_size);
+        for _ in 0..settings.sample_size {
+            let mut sb = Bencher { iters, elapsed: Duration::ZERO };
+            f(&mut sb);
+            samples.push(sb.elapsed.as_nanos() as f64 / iters as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        println!(
+            "{:<52} time:   [{} {} {}]  ({} samples x {} iters)",
+            name,
+            fmt_ns(samples[0]),
+            fmt_ns(median),
+            fmt_ns(*samples.last().unwrap()),
+            samples.len(),
+            iters
+        );
+        self.ran += 1;
+    }
+}
+
+pub struct BenchmarkGroup<'a> {
+    parent: &'a mut Criterion,
+    name: String,
+    settings: Option<Settings>,
+}
+
+impl BenchmarkGroup<'_> {
+    fn settings_mut(&mut self) -> &mut Settings {
+        self.settings.get_or_insert_with(|| self.parent.settings.clone())
+    }
+
+    pub fn warm_up_time(&mut self, d: Duration) -> &mut Self {
+        self.settings_mut().warm_up = d;
+        self
+    }
+
+    pub fn measurement_time(&mut self, d: Duration) -> &mut Self {
+        self.settings_mut().measurement = d;
+        self
+    }
+
+    pub fn sample_size(&mut self, n: usize) -> &mut Self {
+        self.settings_mut().sample_size = n.max(2);
+        self
+    }
+
+    pub fn bench_function<F>(&mut self, id: impl Into<BenchmarkId>, f: F) -> &mut Self
+    where
+        F: FnMut(&mut Bencher),
+    {
+        let name = format!("{}/{}", self.name, String::from(id.into()));
+        let settings = self.settings.clone().unwrap_or_else(|| self.parent.settings.clone());
+        self.parent.run_one(&name, settings, f);
+        self
+    }
+
+    pub fn finish(self) {}
+}
+
+pub struct Bencher {
+    iters: u64,
+    elapsed: Duration,
+}
+
+impl Bencher {
+    pub fn iter<O, F: FnMut() -> O>(&mut self, mut f: F) {
+        let t0 = Instant::now();
+        for _ in 0..self.iters {
+            black_box(f());
+        }
+        self.elapsed = t0.elapsed();
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Collect benchmark functions into a group runner, criterion-style.
+#[macro_export]
+macro_rules! criterion_group {
+    ($name:ident, $($target:path),+ $(,)?) => {
+        pub fn $name(c: &mut $crate::Criterion) {
+            $( $target(c); )+
+        }
+    };
+}
+
+/// Entry point running every group, criterion-style.
+#[macro_export]
+macro_rules! criterion_main {
+    ($($group:path),+ $(,)?) => {
+        fn main() {
+            let mut c = $crate::Criterion::default().configure_from_args();
+            $( $group(&mut c); )+
+            c.final_summary();
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_function_measures() {
+        let mut c = Criterion::default();
+        c.measurement_time(Duration::from_millis(40))
+            .warm_up_time(Duration::from_millis(5))
+            .sample_size(5);
+        c.bench_function("sum", |b| b.iter(|| (0..100u64).sum::<u64>()));
+        assert_eq!(c.ran, 1);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut c = Criterion { filter: Some("nope".into()), ..Criterion::default() };
+        c.sample_size(2)
+            .measurement_time(Duration::from_millis(5))
+            .warm_up_time(Duration::from_millis(1));
+        c.bench_function("sum", |b| b.iter(|| 1u32));
+        assert_eq!(c.ran, 0);
+    }
+
+    #[test]
+    fn group_overrides_settings() {
+        let mut c = Criterion::default();
+        let mut g = c.benchmark_group("g");
+        g.warm_up_time(Duration::from_millis(1))
+            .measurement_time(Duration::from_millis(10))
+            .sample_size(3);
+        g.bench_function(BenchmarkId::new("f", 4), |b| b.iter(|| black_box(2 + 2)));
+        g.finish();
+        assert_eq!(c.ran, 1);
+    }
+}
