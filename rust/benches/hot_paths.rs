@@ -1,8 +1,9 @@
 //! Micro-benchmarks of the L3 hot path (criterion harness; the vendored
 //! shim in `vendor/criterion` provides the same API offline).
 //!
-//! Covers: residual assembly primitives, quant codecs, quantized
-//! accumulation, the DES edge simulation, manifest JSON parsing, the
+//! Covers: residual assembly primitives (plain f32 and fused
+//! packed-decode), quant codecs, quantized accumulation, the DES edge
+//! simulation, manifest JSON parsing, the
 //! serial-vs-batched sweep engine (the headline group: wall-clock win of
 //! `acdc::sweep` at 2/4/8 workers on a synthetic damage surface with a
 //! realistic per-eval cost floor), and — when artifacts are built — the
@@ -22,8 +23,8 @@ use pahq::gpu_sim::{CostModel, RealArch};
 use pahq::metrics::Objective;
 use pahq::model::Graph;
 use pahq::patching::{PatchMask, PatchedForward, Policy};
-use pahq::quant::{self, FP8_E4M3};
-use pahq::tensor;
+use pahq::quant::{self, BF16, FP8_E4M3};
+use pahq::tensor::{self, QTensor};
 use pahq::util::json::Json;
 use pahq::util::rng::Rng;
 
@@ -43,6 +44,53 @@ fn bench_assembly(c: &mut Criterion) {
                 tensor::add_sub_assign(black_box(&mut dst2), black_box(&a), black_box(&b))
             })
         });
+    }
+    g.finish();
+}
+
+/// Residual assembly against *packed* storage: the fused
+/// decode-accumulate kernel vs the plain f32 add it replaces, and vs the
+/// pre-packing alternative (decode into scratch, then f32 add). At fp8
+/// the fused kernel touches 1/4 of the bytes per source operand; this
+/// group records where that bandwidth win lands on this substrate
+/// (EXPERIMENTS.md §Perf).
+fn bench_packed_assembly(c: &mut Criterion) {
+    let mut rng = Rng::new(43);
+    let n = 163_840usize;
+    let src: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let mut g = c.benchmark_group("packed_assembly");
+    let mut dst = base.clone();
+    g.bench_function(BenchmarkId::new("add_assign_f32", n), |bch| {
+        bch.iter(|| tensor::add_assign(black_box(&mut dst), black_box(&src)))
+    });
+    for (label, fmt) in [("fp8_e4m3", FP8_E4M3), ("bf16", BF16)] {
+        let qt = QTensor::from_slice(&[n], &src, fmt);
+        let mut dstq = base.clone();
+        g.bench_function(BenchmarkId::new(&format!("add_assign_packed_{label}"), n), |bch| {
+            bch.iter(|| tensor::add_assign_packed(black_box(&mut dstq), black_box(&qt)))
+        });
+        let mut dsts = base.clone();
+        let mut scratch = vec![0.0f32; n];
+        g.bench_function(BenchmarkId::new(&format!("decode_then_add_{label}"), n), |bch| {
+            bch.iter(|| {
+                qt.decode_into(black_box(&mut scratch));
+                tensor::add_assign(black_box(&mut dsts), black_box(&scratch));
+            })
+        });
+        let mut dstp = base.clone();
+        g.bench_function(
+            BenchmarkId::new(&format!("add_sub_assign_packed_{label}"), n),
+            |bch| {
+                bch.iter(|| {
+                    tensor::add_sub_assign_packed(
+                        black_box(&mut dstp),
+                        black_box(&qt),
+                        black_box(&src),
+                    )
+                })
+            },
+        );
     }
     g.finish();
 }
@@ -187,6 +235,7 @@ fn bench_engine(c: &mut Criterion) {
 criterion_group!(
     benches,
     bench_assembly,
+    bench_packed_assembly,
     bench_quant,
     bench_sweep,
     bench_des,

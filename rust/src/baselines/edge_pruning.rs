@@ -77,14 +77,15 @@ impl Adam {
     }
 }
 
-/// Pack corrupted node outputs into the artifact's [N,B,S,D] layout.
+/// Decode (packed) corrupted node outputs into the artifact's [N,B,S,D]
+/// layout.
 fn corrupt_nodes(engine: &PatchedForward) -> (Vec<f32>, Vec<usize>) {
     let m = &engine.manifest;
     let n = engine.graph.n_nodes();
     let bsd = m.batch * m.seq_len * m.d_model;
     let mut out = vec![0.0f32; n * bsd];
     for node in 0..n {
-        out[node * bsd..(node + 1) * bsd].copy_from_slice(&engine.corrupt_cache[node].data);
+        engine.corrupt_cache[node].decode_into(&mut out[node * bsd..(node + 1) * bsd]);
     }
     (out, vec![n, m.batch, m.seq_len, m.d_model])
 }

@@ -30,8 +30,8 @@ impl Default for SpConfig {
     }
 }
 
-/// Pack the engine's FP32 corrupted node caches into the artifact's
-/// [L,H,B,S,D] (head-major) + [L,B,S,D] layouts.
+/// Decode the engine's (packed) corrupted node caches into the
+/// artifact's [L,H,B,S,D] (head-major) + [L,B,S,D] layouts.
 fn corrupt_caches(engine: &PatchedForward) -> (Vec<f32>, Vec<f32>, Vec<usize>, Vec<usize>) {
     let m = &engine.manifest;
     let g = &engine.graph;
@@ -41,7 +41,7 @@ fn corrupt_caches(engine: &PatchedForward) -> (Vec<f32>, Vec<f32>, Vec<usize>, V
         for h in 0..m.n_head {
             let node = g.head_node(l, h);
             let off = (l * m.n_head + h) * bsd;
-            attn[off..off + bsd].copy_from_slice(&engine.corrupt_cache[node].data);
+            engine.corrupt_cache[node].decode_into(&mut attn[off..off + bsd]);
         }
     }
     let attn_shape = vec![m.n_layer, m.n_head, m.batch, m.seq_len, m.d_model];
@@ -49,7 +49,7 @@ fn corrupt_caches(engine: &PatchedForward) -> (Vec<f32>, Vec<f32>, Vec<usize>, V
         let mut mlp = vec![0.0f32; m.n_layer * bsd];
         for l in 0..m.n_layer {
             let node = g.mlp_node(l);
-            mlp[l * bsd..(l + 1) * bsd].copy_from_slice(&engine.corrupt_cache[node].data);
+            engine.corrupt_cache[node].decode_into(&mut mlp[l * bsd..(l + 1) * bsd]);
         }
         (attn, mlp, attn_shape, vec![m.n_layer, m.batch, m.seq_len, m.d_model])
     } else {

@@ -16,7 +16,7 @@ use crate::gpu_sim::{CostModel, RealArch};
 use crate::metrics::{answer_accuracy, edge_accuracy, faithfulness, logit_diff, Objective};
 use crate::patching::{PatchMask, PatchedForward, Policy};
 use crate::quant::{Format, FP32, FP8_E4M3};
-use crate::report::{ascii_chart, mmss, Table};
+use crate::report::{ascii_chart, human_bytes, mmss, Table};
 use crate::scheduler::{predict_run, predict_sweep, StreamConfig};
 
 pub const BASE_MODELS: [&str; 3] = ["gpt2s-sim", "attn4l-sim", "redwood2l-sim"];
@@ -186,7 +186,10 @@ pub fn table3(quick: bool) -> Result<()> {
     let cost = CostModel::default();
     let mut table = Table::new(
         "Table 3: runtime and memory on IOI (tau=0.001)",
-        &["model", "method", "sim time (m:s)", "sim mem (GB)", "real wall (s)", "real evals"],
+        &[
+            "model", "method", "sim time (m:s)", "sim mem (GB)", "real wall (s)", "real evals",
+            "real mem (planes+cache)",
+        ],
     );
     let models: &[&str] = if quick { &["redwood2l-sim"] } else { &BASE_MODELS };
     for model in models {
@@ -204,6 +207,9 @@ pub fn table3(quick: bool) -> Result<()> {
             let mut engine = PatchedForward::new(model, "ioi")?;
             engine.set_session(policy)?;
             let res = acdc::run(&mut engine, &AcdcConfig::new(0.001, Objective::Kl))?;
+            // measured packed footprint of the tiny sim session — the
+            // real-bytes counterpart of the simulated "sim mem" column
+            let fp = engine.measured_footprint();
             table.row(vec![
                 arch.name.into(),
                 name.into(),
@@ -211,6 +217,7 @@ pub fn table3(quick: bool) -> Result<()> {
                 format!("{:.2}", mem.total_gb()),
                 format!("{:.1}", res.wall.as_secs_f64()),
                 format!("{}", res.n_evals),
+                human_bytes(fp.total()),
             ]);
         }
     }
@@ -614,6 +621,16 @@ pub fn sweep_scaling(quick: bool) -> Result<()> {
                 batched.wall.as_secs_f64(),
                 batched.n_evals,
                 serial.n_kept,
+            );
+            // measured per-replica footprint: the batched pool pays the
+            // packed planes + cache once per worker
+            let fp = pool.primary().measured_footprint();
+            println!(
+                "measured per-engine memory ({}): planes {} + cache {} = {} (x{workers} replicas)",
+                fp.method,
+                human_bytes(fp.weights()),
+                human_bytes(fp.act_cache),
+                human_bytes(fp.total()),
             );
         }
         Err(e) => println!("\n(real sweep measurement skipped: {e})"),

@@ -57,9 +57,10 @@ impl Default for CostModel {
 
 impl CostModel {
     fn throughput(&self, fmt: Format) -> f64 {
-        match fmt.storage_bytes() {
-            1 => self.tflops_fp8,
-            2 => self.tflops_bf16,
+        match fmt.storage_bits() {
+            // fp4 rides the fp8 tensor-core path on the modeled part
+            4 | 8 => self.tflops_fp8,
+            16 => self.tflops_bf16,
             _ => self.tflops_fp32,
         }
     }

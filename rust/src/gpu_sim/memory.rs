@@ -1,6 +1,18 @@
-//! Device-memory model (Tab. 3's "Mem (GB)" column).
+//! Device-memory accounting, simulated and measured.
 //!
-//! Decomposition per method:
+//! Two views live here:
+//!
+//! - [`memory_model`] — the *simulated* footprint of a method at the
+//!   paper's real scale (Tab. 3's "Mem (GB)" column), driven by a
+//!   [`RealArch`]'s dimensions and a calibrated framework constant.
+//! - [`MeasuredFootprint`] — the *measured* footprint of a live engine
+//!   session: actual packed-payload bytes summed from
+//!   `tensor::QTensor::bytes()` over the session's resident weight
+//!   planes and its corrupted-activation cache. Built by
+//!   `patching::PatchedForward::measured_footprint` and printed side by
+//!   side with the simulated numbers by `pahq run` / `pahq sweep`.
+//!
+//! Decomposition per simulated method:
 //!   total = framework overhead (CUDA context, allocator pools, workspace)
 //!         + resident weights at the method's storage precision
 //!         + (PAHQ only) FP32 staging area for one head + one W_O
@@ -41,6 +53,31 @@ impl MemoryBreakdown {
 
     pub fn total_gb(&self) -> f64 {
         self.total() as f64 / 1e9
+    }
+}
+
+/// Measured bytes a live engine session holds resident: per-plane packed
+/// weight payloads plus the packed corrupted-activation cache. Unlike
+/// [`MemoryBreakdown`] these are real allocation sizes, not a model.
+#[derive(Clone, Debug)]
+pub struct MeasuredFootprint {
+    /// session policy name (e.g. "pahq-8b")
+    pub method: String,
+    /// (plane name, payload bytes) for every plane the session reads
+    pub weight_planes: Vec<(String, usize)>,
+    /// packed corrupted-activation cache bytes
+    pub act_cache: usize,
+}
+
+impl MeasuredFootprint {
+    /// Total resident weight-plane bytes.
+    pub fn weights(&self) -> usize {
+        self.weight_planes.iter().map(|(_, b)| b).sum()
+    }
+
+    /// Weights + activation cache.
+    pub fn total(&self) -> usize {
+        self.weights() + self.act_cache
     }
 }
 
@@ -107,6 +144,17 @@ mod tests {
         let a = RealArch::by_name("gpt2").unwrap();
         let gb = memory_model(&a, MethodKind::AcdcFp32).total_gb();
         assert!((4.0..9.0).contains(&gb), "ACDC gpt2 = {gb:.2} GB");
+    }
+
+    #[test]
+    fn measured_footprint_sums() {
+        let fp = MeasuredFootprint {
+            method: "pahq-8b".into(),
+            weight_planes: vec![("p8".into(), 100), ("p16".into(), 200)],
+            act_cache: 50,
+        };
+        assert_eq!(fp.weights(), 300);
+        assert_eq!(fp.total(), 350);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use pahq::metrics::Objective;
 use pahq::model::Manifest;
 use pahq::patching::{PatchedForward, Policy};
 use pahq::quant::Format;
-use pahq::report::{mmss, Table};
+use pahq::report::{human_bytes, mmss, Table};
 use pahq::scheduler::{predict_run, predict_sweep, StreamConfig};
 use pahq::util::cli::Args;
 
@@ -83,6 +83,18 @@ fn policy(args: &Args) -> Result<Policy> {
     })
 }
 
+/// Simulated-memory method of a session policy — derived from the policy
+/// itself so the mapping cannot drift from [`policy`].
+fn method_kind(pol: &Policy) -> MethodKind {
+    if pol.attn_low.is_passthrough() && pol.other.is_passthrough() {
+        MethodKind::AcdcFp32
+    } else if pol.quantize_logits {
+        MethodKind::RtnQ
+    } else {
+        MethodKind::Pahq
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let model = args.get_or("model", "gpt2s-sim");
     let task = args.get_or("task", "ioi");
@@ -126,6 +138,50 @@ fn cmd_run(args: &Args) -> Result<()> {
         pjrt.as_secs_f64(),
     );
     println!("final metric damage: {:.4}", res.final_metric);
+
+    // simulated (paper-scale) vs measured (this process) memory, side by
+    // side: the packed planes + cache make the low-precision savings real
+    // bytes, not billed estimates.
+    let fp = engine.measured_footprint();
+    let fp32_ref = engine.measured_fp32_footprint();
+    if let Some(arch) = RealArch::by_name(model) {
+        println!(
+            "memory (simulated, {} @ paper scale): {:.2} GB",
+            arch.name,
+            memory_model(&arch, method_kind(&pol)).total_gb()
+        );
+    }
+    let planes = fp
+        .weight_planes
+        .iter()
+        .map(|(n, b)| format!("{n} {}", human_bytes(*b)))
+        .collect::<Vec<_>>()
+        .join(" + ");
+    // a batched run replicates planes + cache once per pool worker; the
+    // measured line reports one engine and says so
+    let replica_note = match sweep {
+        SweepMode::Batched { workers } if workers > 1 => {
+            format!(" per engine (x{workers} pool replicas)")
+        }
+        _ => String::new(),
+    };
+    println!(
+        "memory (measured, {}): planes [{planes}] + cache {} = {}{replica_note}",
+        fp.method,
+        human_bytes(fp.act_cache),
+        human_bytes(fp.total()),
+    );
+    let saved = 100.0 * (1.0 - fp.total() as f64 / fp32_ref.total() as f64);
+    println!(
+        "memory (measured, acdc-fp32 same session): {} ({})",
+        human_bytes(fp32_ref.total()),
+        if fp.total() < fp32_ref.total() {
+            format!("packed saves {saved:.1}%")
+        } else {
+            "no packed saving at fp32".to_string()
+        },
+    );
+
     let labels = acdc::kept_edge_labels(&engine, &res);
     println!("\nkept edges (first 40):");
     for l in labels.iter().take(40) {

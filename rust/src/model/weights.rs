@@ -2,37 +2,43 @@
 //!
 //! Mirrors the paper's setup (section 3.1, "Hierarchical Weight
 //! Scheduling"): the FP32 master copy of every weight lives in **host**
-//! memory; the **device** holds a low-precision (FP8-emulated) resident
-//! copy of everything, plus a small staging area into which the FP32 rows
-//! of the head under investigation are "transferred" per edge evaluation.
-//! The byte counts of those structures drive the simulated GPU memory
-//! accounting (Tab. 3) and the transfer sizes the DES charges (Tab. 4).
+//! memory; the **device** holds a low-precision resident copy of
+//! everything, plus a small staging area into which the FP32 rows of the
+//! head under investigation are "transferred" per edge evaluation.
 //!
-//! All actual numerics are f32 in host RAM — "FP8-resident" means the
-//! values have been pushed onto the FP8 lattice by [`crate::quant::fq`],
-//! exactly like the values the real system would dequantize on the fly.
+//! Resident planes are stored *packed* ([`QTensor`]): the fp8 plane
+//! really occupies one byte per parameter, bf16 two, fp4 half — so the
+//! byte counts reported by [`WeightStore::resident_bytes`] are measured
+//! allocations, not billed estimates. Decoding a packed plane yields
+//! exactly the [`crate::quant::fq`] lattice values the old f32 copies
+//! held (the codec is bit-identical by construction), so numerics are
+//! unchanged. Passthrough (FP32) planes are never materialized: the
+//! master vector *is* the full-precision copy, and duplicating it — as
+//! the pre-packing implementation did — bought nothing; FP32 sessions
+//! are billed the master bytes as their device-resident footprint.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::quant::{fq_slice, Format};
+use crate::quant::Format;
+use crate::tensor::QTensor;
 
 use super::config::Manifest;
 
-/// One precision-plane of the full parameter vector.
-struct Plane {
-    format: Format,
-    data: Vec<f32>,
-}
-
 pub struct WeightStore {
     manifest: Manifest,
-    /// FP32 master (paper: host/CPU memory).
+    /// FP32 master (paper: host/CPU memory). Doubles as the resident
+    /// copy of passthrough planes ("p32"/"master").
     master: Vec<f32>,
-    /// Low-precision resident planes keyed by format name (paper: GPU).
-    planes: HashMap<&'static str, Plane>,
+    /// Packed low-precision resident planes keyed by name (paper: GPU).
+    planes: HashMap<&'static str, QTensor>,
     index: HashMap<String, (usize, usize)>, // name -> (offset, size)
+}
+
+/// Plane names that read straight from the FP32 master.
+fn is_master_plane(name: &str) -> bool {
+    name == "master" || name == "p32"
 }
 
 impl WeightStore {
@@ -64,14 +70,18 @@ impl WeightStore {
         &self.manifest
     }
 
-    /// Materialize (once) the resident plane for `format` — e.g. the FP8
-    /// copy of every weight the paper keeps on-GPU.
+    /// Materialize (once) the packed resident plane for `format` — e.g.
+    /// the byte-per-parameter FP8 copy the paper keeps on-GPU. A no-op
+    /// for passthrough formats: those reads alias the master.
     pub fn ensure_plane(&mut self, name: &'static str, format: Format) {
-        self.planes.entry(name).or_insert_with(|| {
-            let mut data = self.master.clone();
-            fq_slice(&mut data, format);
-            Plane { format, data }
-        });
+        if format.is_passthrough() {
+            return;
+        }
+        let master = &self.master;
+        let n = master.len();
+        self.planes
+            .entry(name)
+            .or_insert_with(|| QTensor::from_slice(&[n], master, format));
     }
 
     /// FP32 master slice of a named parameter.
@@ -83,38 +93,62 @@ impl WeightStore {
         Ok(&self.master[off..off + size])
     }
 
-    /// Resident low-precision slice of a named parameter.
-    pub fn plane_param(&self, plane: &str, name: &str) -> Result<&[f32]> {
-        let p = self
-            .planes
-            .get(plane)
-            .with_context(|| format!("plane '{plane}' not materialized"))?;
+    /// Parameter slice at an explicit precision policy, zero-copy where
+    /// possible: master reads (`hi` override, or a passthrough plane)
+    /// borrow straight from the FP32 master — the forward hot path pays
+    /// no copy, exactly like the pre-packing implementation — while
+    /// packed planes decode into `scratch` and return it.
+    pub fn param_at<'a>(
+        &'a self,
+        name: &str,
+        plane: &str,
+        hi: bool,
+        scratch: &'a mut [f32],
+    ) -> Result<&'a [f32]> {
         let &(off, size) = self
             .index
             .get(name)
             .with_context(|| format!("unknown param '{name}'"))?;
-        Ok(&p.data[off..off + size])
-    }
-
-    pub fn plane_format(&self, plane: &str) -> Option<Format> {
-        self.planes.get(plane).map(|p| p.format)
-    }
-
-    /// Parameter slice at an explicit precision policy: FP32 master when
-    /// `hi` is true, the named plane otherwise.
-    pub fn param_at(&self, name: &str, plane: &str, hi: bool) -> Result<&[f32]> {
-        if hi {
-            self.master_param(name)
-        } else {
-            self.plane_param(plane, name)
+        if hi || is_master_plane(plane) {
+            return Ok(&self.master[off..off + size]);
         }
+        if scratch.len() != size {
+            bail!("param '{name}': scratch holds {} of {size} elements", scratch.len());
+        }
+        self.plane(plane)?.decode_range_into(off, scratch);
+        Ok(scratch)
+    }
+
+    /// Decode a named parameter at an explicit precision policy into
+    /// `out`: the FP32 master when `hi` is true or the plane is a
+    /// passthrough alias, the packed resident plane otherwise.
+    pub fn param_into(&self, name: &str, plane: &str, hi: bool, out: &mut [f32]) -> Result<()> {
+        let &(off, size) = self
+            .index
+            .get(name)
+            .with_context(|| format!("unknown param '{name}'"))?;
+        if out.len() != size {
+            bail!("param '{name}': buffer holds {} of {size} elements", out.len());
+        }
+        if hi || is_master_plane(plane) {
+            out.copy_from_slice(&self.master[off..off + size]);
+            return Ok(());
+        }
+        self.plane(plane)?.decode_range_into(off, out);
+        Ok(())
+    }
+
+    fn plane(&self, name: &str) -> Result<&QTensor> {
+        self.planes
+            .get(name)
+            .with_context(|| format!("plane '{name}' not materialized"))
     }
 
     /// Assemble a *mixed-precision* per-head weight tensor for one layer
     /// and component: rows of `hi_head` come from the FP32 master, all
-    /// other heads from the low-precision plane. This is exactly the
-    /// paper's Eq. 4/Eq. 9 weight-side selection, and the buffer it fills
-    /// is what gets fed to the AOT attention executable.
+    /// other heads decode from the packed low-precision plane. This is
+    /// exactly the paper's Eq. 4/Eq. 9 weight-side selection, and the
+    /// buffer it fills is what gets fed to the AOT attention executable.
     ///
     /// `out` must have the full parameter length ([H, D, K] flattened).
     pub fn mixed_head_param(
@@ -124,8 +158,7 @@ impl WeightStore {
         hi_head: Option<usize>,
         out: &mut [f32],
     ) -> Result<()> {
-        let lo = self.plane_param(plane, name)?;
-        out.copy_from_slice(lo);
+        self.param_into(name, plane, false, out)?;
         if let Some(h) = hi_head {
             let hi = self.master_param(name)?;
             let per_head = hi.len() / self.manifest.n_head;
@@ -140,26 +173,34 @@ impl WeightStore {
     /// Generalizes [`Self::mixed_head_param`] for the Fig. 4 incremental
     /// quantization experiment.
     pub fn assemble_heads(&self, name: &str, planes: &[&str], out: &mut [f32]) -> Result<()> {
-        let per_head = out.len() / planes.len();
+        let &(off, size) = self
+            .index
+            .get(name)
+            .with_context(|| format!("unknown param '{name}'"))?;
+        if out.len() != size {
+            bail!("param '{name}': buffer holds {} of {size} elements", out.len());
+        }
+        let per_head = size / planes.len();
         for (h, plane) in planes.iter().enumerate() {
-            let src = if *plane == "master" {
-                self.master_param(name)?
-            } else {
-                self.plane_param(plane, name)?
-            };
             let a = h * per_head;
-            out[a..a + per_head].copy_from_slice(&src[a..a + per_head]);
+            if is_master_plane(plane) {
+                out[a..a + per_head].copy_from_slice(&self.master[off + a..off + a + per_head]);
+            } else {
+                self.plane(plane)?.decode_range_into(off + a, &mut out[a..a + per_head]);
+            }
         }
         Ok(())
     }
 
-    /// Bytes of device-resident weights at the plane's precision —
-    /// the memory-model input for Tab. 3.
+    /// *Measured* bytes of device-resident weights for a plane: the
+    /// packed payload size, or the master bytes for the FP32 alias
+    /// planes (an FP32 session's device copy is full-width by
+    /// definition). Unknown planes occupy nothing.
     pub fn resident_bytes(&self, plane: &str) -> usize {
-        self.planes
-            .get(plane)
-            .map(|p| p.data.len() * p.format.storage_bytes())
-            .unwrap_or(0)
+        if is_master_plane(plane) {
+            return self.master.len() * 4;
+        }
+        self.planes.get(plane).map(|p| p.bytes()).unwrap_or(0)
     }
 
     pub fn n_params(&self) -> usize {
@@ -170,7 +211,7 @@ impl WeightStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{fq, FP8_E4M3};
+    use crate::quant::{fq, FP4_E2M1, FP8_E4M3};
 
     fn store() -> Option<WeightStore> {
         let m = Manifest::by_name("redwood2l-sim").ok()?;
@@ -192,13 +233,20 @@ mod tests {
     fn plane_is_on_lattice() {
         let Some(mut s) = store() else { return };
         s.ensure_plane("fp8", FP8_E4M3);
-        let lo = s.plane_param("fp8", "l0.wq").unwrap();
-        for &v in lo.iter().take(500) {
-            assert_eq!(v, fq(v, FP8_E4M3), "resident values are fixed points");
+        let hi = s.master_param("l0.wq").unwrap().to_vec();
+        let mut lo = vec![0.0; hi.len()];
+        s.param_into("l0.wq", "fp8", false, &mut lo).unwrap();
+        for (&l, &h) in lo.iter().zip(&hi).take(500) {
+            assert_eq!(l, fq(h, FP8_E4M3), "decoded plane values are fq(master)");
         }
         // fp8 differs from master somewhere (weights aren't all on-lattice)
-        let hi = s.master_param("l0.wq").unwrap();
-        assert!(lo.iter().zip(hi).any(|(a, b)| a != b));
+        assert!(lo.iter().zip(&hi).any(|(a, b)| a != b));
+        // hi=true and the p32 alias both read the master verbatim
+        let mut back = vec![0.0; hi.len()];
+        s.param_into("l0.wq", "fp8", true, &mut back).unwrap();
+        assert_eq!(back, hi);
+        s.param_into("l0.wq", "p32", false, &mut back).unwrap();
+        assert_eq!(back, hi);
     }
 
     #[test]
@@ -206,7 +254,8 @@ mod tests {
         let Some(mut s) = store() else { return };
         s.ensure_plane("fp8", FP8_E4M3);
         let hi = s.master_param("l0.wq").unwrap().to_vec();
-        let lo = s.plane_param("fp8", "l0.wq").unwrap().to_vec();
+        let mut lo = vec![0.0; hi.len()];
+        s.param_into("l0.wq", "fp8", false, &mut lo).unwrap();
         let n_head = s.manifest().n_head;
         let per_head = hi.len() / n_head;
         let mut out = vec![0.0; hi.len()];
@@ -220,10 +269,17 @@ mod tests {
     }
 
     #[test]
-    fn resident_bytes_scale_with_format() {
+    fn resident_bytes_are_measured_packed_sizes() {
         let Some(mut s) = store() else { return };
         s.ensure_plane("fp8", FP8_E4M3);
+        s.ensure_plane("fp4", FP4_E2M1);
         assert_eq!(s.resident_bytes("fp8"), s.n_params());
+        assert_eq!(s.resident_bytes("fp4"), s.n_params().div_ceil(2));
         assert_eq!(s.resident_bytes("missing"), 0);
+        // the FP32 "plane" is the master itself — billed at full width,
+        // never duplicated
+        assert_eq!(s.resident_bytes("p32"), s.n_params() * 4);
+        s.ensure_plane("p32", crate::quant::FP32);
+        assert_eq!(s.resident_bytes("p32"), s.n_params() * 4);
     }
 }

@@ -1,0 +1,238 @@
+//! Residual-stream assembly: patch masks, source groups, reusable
+//! scratch, and the hot loop that builds every channel's input from the
+//! current node outputs and the *packed* corrupted-activation cache.
+//!
+//! Hot-path structure (see DESIGN.md §8): per layer the crate-internal
+//! `Assembler` computes one `base` = Σ all clean contributions, then
+//! derives each channel by patch-delta adjustment — O(|sources|) once
+//! plus O(|patched|) per channel instead of O(|sources| · channels). Patch
+//! swaps read the corrupted cache through the fused packed kernels
+//! ([`crate::tensor::add_sub_assign_packed`]), decoding bytes inline
+//! instead of dequantizing whole tensors into scratch first.
+
+use crate::model::{Graph, Manifest, NodeId};
+use crate::tensor::{
+    accumulate_quantized_packed, add_assign, add_assign_packed, add_sub_assign_packed,
+    add_sub_assign_packed_rev, QTensor, Tensor,
+};
+
+use super::policy::Policy;
+
+// ---------------------------------------------------------------------------
+// Patch masks
+
+/// Patched-edge set, stored per destination channel as a u128 bitmask over
+/// source node ids (n_nodes <= 91 for every model here).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PatchMask {
+    per_channel: Vec<u128>,
+}
+
+impl PatchMask {
+    pub fn empty(n_channels: usize) -> PatchMask {
+        PatchMask { per_channel: vec![0; n_channels] }
+    }
+
+    pub fn set(&mut self, chan: usize, src: NodeId, patched: bool) {
+        if patched {
+            self.per_channel[chan] |= 1u128 << src;
+        } else {
+            self.per_channel[chan] &= !(1u128 << src);
+        }
+    }
+
+    pub fn get(&self, chan: usize, src: NodeId) -> bool {
+        self.per_channel[chan] >> src & 1 == 1
+    }
+
+    pub fn mask(&self, chan: usize) -> u128 {
+        self.per_channel[chan]
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.per_channel.len()
+    }
+
+    pub fn count(&self) -> usize {
+        self.per_channel.iter().map(|m| m.count_ones() as usize).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scratch
+
+/// Reusable hot-path buffers: channel inputs, assembly bases, and decode
+/// targets for the packed weight planes. Allocated once per engine.
+pub(crate) struct Scratch {
+    /// [H * B*S*D] channel inputs per q/k/v component, head-major
+    pub(crate) qkv: [Vec<f32>; 3],
+    /// [B*S*D] mlp/final assembly
+    pub(crate) chan_in: Vec<f32>,
+    /// [B*S*D] shared clean base
+    base: Vec<f32>,
+    // per-layer attention weights (mixed-precision assembly targets)
+    pub(crate) wq: Vec<f32>,
+    pub(crate) bq: Vec<f32>,
+    pub(crate) wk: Vec<f32>,
+    pub(crate) bk: Vec<f32>,
+    pub(crate) wv: Vec<f32>,
+    pub(crate) bv: Vec<f32>,
+    pub(crate) wo: Vec<f32>,
+    /// [H * 3] per-head quant parameter rows
+    pub(crate) qp: Vec<f32>,
+    // decode targets for packed-plane reads of the non-attention params
+    pub(crate) wte: Vec<f32>,
+    pub(crate) wpe: Vec<f32>,
+    pub(crate) w1: Vec<f32>,
+    pub(crate) b1: Vec<f32>,
+    pub(crate) w2: Vec<f32>,
+    pub(crate) b2: Vec<f32>,
+    pub(crate) wu: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(m: &Manifest) -> Scratch {
+        let bsd = m.batch * m.seq_len * m.d_model;
+        let (h, d, k) = (m.n_head, m.d_model, m.d_head);
+        let psize = |name: &str| m.param(name).map(|p| p.size).unwrap_or(0);
+        Scratch {
+            qkv: [vec![0.0; h * bsd], vec![0.0; h * bsd], vec![0.0; h * bsd]],
+            chan_in: vec![0.0; bsd],
+            base: vec![0.0; bsd],
+            wq: vec![0.0; h * d * k],
+            bq: vec![0.0; h * k],
+            wk: vec![0.0; h * d * k],
+            bk: vec![0.0; h * k],
+            wv: vec![0.0; h * d * k],
+            bv: vec![0.0; h * k],
+            wo: vec![0.0; h * k * d],
+            qp: vec![0.0; h * 3],
+            wte: vec![0.0; psize("wte")],
+            wpe: vec![0.0; psize("wpe")],
+            w1: vec![0.0; psize("l0.w1")],
+            b1: vec![0.0; psize("l0.b1")],
+            w2: vec![0.0; psize("l0.w2")],
+            b2: vec![0.0; psize("l0.b2")],
+            wu: vec![0.0; psize("wu")],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Assembler
+
+/// Owns the source-group structure, the per-group corrupt base sums, and
+/// the scratch pool; assembles channel inputs against the caller's node
+/// outputs and packed corrupt cache.
+pub(crate) struct Assembler {
+    /// distinct source sets (all head channels of one layer share theirs)
+    groups: Vec<Vec<NodeId>>,
+    /// channel index -> group id
+    chan_group: Vec<usize>,
+    /// per source-group Σ corrupt contributions (static per session)
+    corrupt_base: Vec<Vec<f32>>,
+    pub(crate) scratch: Scratch,
+}
+
+impl Assembler {
+    pub(crate) fn new(
+        manifest: &Manifest,
+        graph: &Graph,
+        channels: &[crate::model::Channel],
+    ) -> Assembler {
+        let mut groups: Vec<Vec<NodeId>> = Vec::new();
+        let mut chan_group = Vec::with_capacity(channels.len());
+        for ch in channels {
+            let srcs = graph.sources(*ch);
+            let gid = groups.iter().position(|g| *g == srcs).unwrap_or_else(|| {
+                groups.push(srcs.clone());
+                groups.len() - 1
+            });
+            chan_group.push(gid);
+        }
+        Assembler { groups, chan_group, corrupt_base: Vec::new(), scratch: Scratch::new(manifest) }
+    }
+
+    pub(crate) fn group_of(&self, ci: usize) -> usize {
+        self.chan_group[ci]
+    }
+
+    /// Recompute the per-group corrupt base sums from a (packed) cache.
+    pub(crate) fn rebuild_corrupt_base(&mut self, cache: &[QTensor]) {
+        let bsd = self.scratch.base.len();
+        self.corrupt_base = self
+            .groups
+            .iter()
+            .map(|srcs| {
+                let mut base = vec![0.0f32; bsd];
+                for &s in srcs {
+                    add_assign_packed(&mut base, &cache[s]);
+                }
+                base
+            })
+            .collect();
+    }
+
+    /// Σ of current node outputs over a group's sources into scratch.base
+    /// (fast path only; quantized-resid sessions bypass this).
+    pub(crate) fn compute_group_base(&mut self, gid: usize, policy: &Policy, node_out: &[Tensor]) {
+        if !policy.resid.is_passthrough() {
+            return;
+        }
+        let base = &mut self.scratch.base;
+        base.fill(0.0);
+        for &src in &self.groups[gid] {
+            add_assign(base, &node_out[src].data);
+        }
+    }
+
+    /// Assemble one channel's input into `dst`.
+    pub(crate) fn assemble_channel(
+        &self,
+        ci: usize,
+        patches: &PatchMask,
+        policy: &Policy,
+        node_out: &[Tensor],
+        cache: &[QTensor],
+        dst: &mut [f32],
+    ) {
+        let gid = self.chan_group[ci];
+        let srcs = &self.groups[gid];
+        let mask = patches.mask(ci);
+
+        if !policy.resid.is_passthrough() {
+            // RTN-Q path: sequential quantized accumulation — order matters
+            // for mantissa loss, so this mirrors "sum in fp8" faithfully.
+            dst.fill(0.0);
+            for &src in srcs {
+                if mask >> src & 1 == 1 {
+                    accumulate_quantized_packed(dst, &cache[src], policy.resid);
+                } else {
+                    crate::quant::accumulate_quantized(dst, &node_out[src].data, policy.resid);
+                }
+            }
+            return;
+        }
+
+        let n_patched = (mask & srcs.iter().fold(0u128, |m, &s| m | 1 << s)).count_ones() as usize;
+        if n_patched == 0 {
+            dst.copy_from_slice(&self.scratch.base);
+        } else if n_patched * 2 <= srcs.len() {
+            // few patches: start from the clean base, swap in corruptions
+            dst.copy_from_slice(&self.scratch.base);
+            for &src in srcs {
+                if mask >> src & 1 == 1 {
+                    add_sub_assign_packed(dst, &cache[src], &node_out[src].data);
+                }
+            }
+        } else {
+            // mostly patched: start from the corrupt base, swap clean back
+            dst.copy_from_slice(&self.corrupt_base[gid]);
+            for &src in srcs {
+                if mask >> src & 1 != 1 {
+                    add_sub_assign_packed_rev(dst, &node_out[src].data, &cache[src]);
+                }
+            }
+        }
+    }
+}

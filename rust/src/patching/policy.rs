@@ -1,0 +1,132 @@
+//! Discovery-session precision policies (paper Eq. 3 plus the bf16 rule
+//! for non-attention components): which weight plane each component
+//! reads, the residual accumulation format, and the fidelity of the
+//! session's reference runs and caches.
+
+use crate::quant::{self, Format};
+
+/// A discovery-session precision policy (paper Eq. 3 plus the bf16 rule
+/// for non-attention components).
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub name: String,
+    /// precision of attention heads that are NOT under investigation
+    pub attn_low: Format,
+    /// precision of non-attention components (embed/MLP/unembed), the
+    /// paper's bf16 rule
+    pub other: Format,
+    /// residual-stream accumulation format (RTN-Q's downfall)
+    pub resid: Format,
+    /// keep the corrupted-activation cache and the clean reference
+    /// distribution at FP32 (PAHQ/ACDC) or at this policy's precision
+    /// (RTN-Q quantizes its whole pipeline)
+    pub hi_fidelity_refs: bool,
+    /// naive whole-pipeline quantization also quantizes the unembed *output*
+    /// (RTN-Q). This is where the paper's section-2 underflow bites
+    /// hardest: the FP8 quantum at logit magnitude ~16 is 2.0, so metric
+    /// differences below it are truncated to zero and ACDC prunes real
+    /// edges. PAHQ/ACDC unify outputs at FP32 (paper Eq. 10).
+    pub quantize_logits: bool,
+}
+
+impl Policy {
+    /// Unquantized ACDC.
+    pub fn fp32() -> Policy {
+        Policy {
+            name: "acdc-fp32".into(),
+            attn_low: quant::FP32,
+            other: quant::FP32,
+            resid: quant::FP32,
+            hi_fidelity_refs: true,
+            quantize_logits: false,
+        }
+    }
+
+    /// RTN-Q: everything at the low format, including the residual stream
+    /// and the reference runs (paper section 2's failing baseline).
+    pub fn rtn(fmt: Format) -> Policy {
+        Policy {
+            name: format!("rtn-q-{}b", nominal_bits(fmt)),
+            attn_low: fmt,
+            other: fmt,
+            resid: fmt,
+            hi_fidelity_refs: false,
+            quantize_logits: true,
+        }
+    }
+
+    /// PAHQ: non-investigated heads at `fmt`, non-attention at bf16,
+    /// residual stream unified to FP32 (paper Eq. 10), investigated head
+    /// at FP32 via the per-call `hi` override.
+    pub fn pahq(fmt: Format) -> Policy {
+        Policy {
+            name: format!("pahq-{}b", nominal_bits(fmt)),
+            attn_low: fmt,
+            other: quant::BF16,
+            resid: quant::FP32,
+            hi_fidelity_refs: true,
+            quantize_logits: false,
+        }
+    }
+
+    pub(crate) fn plane_name(fmt: Format) -> &'static str {
+        match nominal_bits(fmt) {
+            4 => "p4",
+            8 => "p8",
+            16 => "p16",
+            _ => "p32",
+        }
+    }
+
+    pub fn attn_plane(&self) -> &'static str {
+        Self::plane_name(self.attn_low)
+    }
+
+    pub fn other_plane(&self) -> &'static str {
+        Self::plane_name(self.other)
+    }
+
+    /// Storage format of the session's corrupted-activation cache: FP32
+    /// for hi-fidelity policies (the patched-in activation is exactly
+    /// what the paper keeps at high precision, Eq. 2), the residual
+    /// format for RTN-Q (its whole pipeline lives on the low lattice).
+    pub fn cache_format(&self) -> Format {
+        if self.hi_fidelity_refs { quant::FP32 } else { self.resid }
+    }
+}
+
+/// Nominal bit width of a format — with packed storage this is simply
+/// its storage width (fp4 = 4, fp8 = 8, fp16/bf16 = 16, else 32); the
+/// old implementation reconstructed it from whole-byte sizes plus an
+/// mbits tie-break.
+pub(crate) fn nominal_bits(fmt: Format) -> u32 {
+    fmt.storage_bits() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{BF16, FP16, FP32, FP4_E2M1, FP8_E4M3, FP8_E5M2};
+
+    #[test]
+    fn nominal_bits_names_and_planes() {
+        assert_eq!(nominal_bits(FP4_E2M1), 4);
+        assert_eq!(nominal_bits(FP8_E4M3), 8);
+        assert_eq!(nominal_bits(FP8_E5M2), 8);
+        assert_eq!(nominal_bits(FP16), 16);
+        assert_eq!(nominal_bits(BF16), 16);
+        assert_eq!(nominal_bits(FP32), 32);
+        assert_eq!(Policy::pahq(FP8_E4M3).name, "pahq-8b");
+        assert_eq!(Policy::rtn(FP4_E2M1).name, "rtn-q-4b");
+        assert_eq!(Policy::pahq(FP8_E4M3).attn_plane(), "p8");
+        assert_eq!(Policy::pahq(FP8_E4M3).other_plane(), "p16");
+        assert_eq!(Policy::fp32().attn_plane(), "p32");
+    }
+
+    #[test]
+    fn cache_format_follows_fidelity() {
+        assert!(Policy::fp32().cache_format().is_passthrough());
+        assert!(Policy::pahq(FP8_E4M3).cache_format().is_passthrough());
+        assert_eq!(Policy::rtn(FP8_E4M3).cache_format(), FP8_E4M3);
+    }
+}

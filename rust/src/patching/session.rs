@@ -1,0 +1,818 @@
+//! The patched-forward engine: session state (policies, references,
+//! caches), the chained per-layer executable loop, and the damage
+//! scoring entry points the ACDC sweeps drive.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gpu_sim::memory::MeasuredFootprint;
+use crate::model::{Channel, Dataset, Example, Graph, Manifest, NodeId, WeightStore};
+use crate::quant::{self, Format};
+use crate::runtime::{Engine, Input, OwnedInput};
+use crate::tensor::{QTensor, Tensor};
+
+use super::assembly::{Assembler, PatchMask};
+use super::policy::Policy;
+
+pub struct PatchedForward {
+    pub manifest: Manifest,
+    pub graph: Graph,
+    pub channels: Vec<Channel>,
+    chan_idx: HashMap<Channel, usize>,
+    pub ws: WeightStore,
+    rt: Engine,
+    pub examples: Vec<Example>,
+    onehot_clean: Vec<f32>,
+    onehot_corrupt: Vec<f32>,
+
+    // session state (see `set_session`)
+    session: Policy,
+    /// Corrupted-run node outputs, packed at the session's cache format
+    /// ([`Policy::cache_format`]): FP32 words for PAHQ/ACDC, native
+    /// low-precision bytes for RTN-Q — so [`QTensor::bytes`] sums to the
+    /// cache's measured footprint.
+    pub corrupt_cache: Vec<QTensor>,
+    pub ref_probs: Vec<f32>, // clean-run answer distribution
+    pub ref_logit_diff: f32,
+    pub clean_logits: Tensor,
+    /// per-`hi` clean references (paper Appendix F runs the clean
+    /// inference with the SAME h* at FP32 as the patched inference, so
+    /// the precision switch cancels out of ΔL; memoized lazily — one
+    /// extra forward per distinct source node per session)
+    ref_by_hi: HashMap<NodeId, (Vec<f32>, f32)>,
+
+    /// source groups, per-group corrupt bases, scratch pool
+    asm: Assembler,
+    node_out: Vec<Tensor>,
+    pub forward_count: u64,
+    /// Fig. 4 experiment: explicit per-head precision (len = L*H,
+    /// layer-major), overriding the session policy's head precision.
+    headwise: Option<Vec<Format>>,
+    /// attention artifact: "attn_layer.hlo.txt" (Pallas, default) or
+    /// "attn_layer_ref.hlo.txt" (pure jnp; select with PAHQ_ATTN=ref for
+    /// sweep-heavy runs on CPU PJRT — value-identical, see aot.py)
+    attn_artifact: &'static str,
+}
+
+impl PatchedForward {
+    pub fn new(model: &str, task: &str) -> Result<PatchedForward> {
+        let manifest = Manifest::by_name(model)?;
+        let ds = Dataset::by_task(task)?;
+        let examples = ds.batch(manifest.batch)?.to_vec();
+        Self::with_examples(manifest, examples)
+    }
+
+    pub fn with_examples(manifest: Manifest, examples: Vec<Example>) -> Result<PatchedForward> {
+        if examples.len() != manifest.batch {
+            bail!(
+                "engine needs exactly batch={} examples, got {}",
+                manifest.batch,
+                examples.len()
+            );
+        }
+        let graph = Graph::from_manifest(&manifest);
+        if graph.n_nodes() > 128 {
+            bail!("graph has {} nodes; PatchMask supports up to 128", graph.n_nodes());
+        }
+        let channels = graph.channels();
+        let chan_idx: HashMap<Channel, usize> =
+            channels.iter().enumerate().map(|(i, c)| (*c, i)).collect();
+        let asm = Assembler::new(&manifest, &graph, &channels);
+
+        let ws = WeightStore::load(&manifest)?;
+        let rt = Engine::new()?;
+        let (b, s, v) = (manifest.batch, manifest.seq_len, manifest.vocab);
+        let onehot_clean = Dataset::onehot(&examples, false, v);
+        let onehot_corrupt = Dataset::onehot(&examples, true, v);
+
+        let node_out = (0..graph.n_nodes())
+            .map(|_| Tensor::zeros(&[b, s, manifest.d_model]))
+            .collect();
+
+        let mut engine = PatchedForward {
+            manifest,
+            graph,
+            channels,
+            chan_idx,
+            ws,
+            rt,
+            examples,
+            onehot_clean,
+            onehot_corrupt,
+            session: Policy::fp32(),
+            corrupt_cache: Vec::new(),
+            ref_probs: Vec::new(),
+            ref_logit_diff: 0.0,
+            clean_logits: Tensor::zeros(&[1]),
+            ref_by_hi: HashMap::new(),
+            asm,
+            node_out,
+            forward_count: 0,
+            headwise: None,
+            attn_artifact: match std::env::var("PAHQ_ATTN").as_deref() {
+                Ok("ref") => "attn_layer_ref.hlo.txt",
+                _ => "attn_layer.hlo.txt",
+            },
+        };
+        engine.set_session(Policy::fp32())?;
+        Ok(engine)
+    }
+
+    pub fn chan_index(&self, ch: Channel) -> usize {
+        self.chan_idx[&ch]
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    pub fn empty_patches(&self) -> PatchMask {
+        PatchMask::empty(self.channels.len())
+    }
+
+    pub fn session(&self) -> &Policy {
+        &self.session
+    }
+
+    /// Select the attention executable: Pallas build (default) or the
+    /// value-identical pure-jnp reference build (faster under CPU PJRT —
+    /// interpret-mode Pallas lowers to an XLA while loop).
+    pub fn set_attn_artifact(&mut self, use_ref: bool) {
+        self.attn_artifact = if use_ref { "attn_layer_ref.hlo.txt" } else { "attn_layer.hlo.txt" };
+    }
+
+    /// Switch the discovery session to a policy: materializes the packed
+    /// weight planes the policy actually reads (passthrough planes alias
+    /// the FP32 master — nothing to materialize), recomputes the
+    /// corrupted-activation cache (packed at [`Policy::cache_format`])
+    /// and the clean reference (at FP32 for hi-fidelity policies, at the
+    /// session precision for RTN-Q), and precomputes per-group corrupt
+    /// base sums.
+    pub fn set_session(&mut self, policy: Policy) -> Result<()> {
+        self.ws.ensure_plane(Policy::plane_name(policy.attn_low), policy.attn_low);
+        self.ws.ensure_plane(Policy::plane_name(policy.other), policy.other);
+        self.session = policy.clone();
+        self.ref_by_hi.clear();
+
+        let cache_policy = if policy.hi_fidelity_refs { Policy::fp32() } else { policy.clone() };
+
+        // corrupted run -> cache node outputs, packed at the cache
+        // format. For PAHQ/ACDC the cache is FP32: the patched-in
+        // activation a_u^(high) is exactly what the paper keeps at high
+        // precision (Eq. 2). RTN-Q's cache lives on the low lattice its
+        // accumulation re-quantizes to anyway (fq is idempotent, so
+        // packing changes no bits downstream).
+        let cache_fmt = policy.cache_format();
+        let empty = self.empty_patches();
+        let _ = self.forward_inner(&cache_policy, &empty, None, true)?;
+        self.corrupt_cache =
+            self.node_out.iter().map(|t| QTensor::from_tensor(t, cache_fmt)).collect();
+
+        // clean run -> reference distribution + logits, computed under the
+        // *session* policy (the paper's L(E_G(z)) flows through the same
+        // quantized pipeline as the patched runs, so the systematic
+        // quantization bias cancels in ΔL; only the patched activations
+        // themselves are held at FP32).
+        let logits = self.forward_inner(&policy, &empty, None, false)?;
+        self.ref_probs = crate::metrics::probs_at_positions(&logits, &self.examples);
+        self.ref_logit_diff = crate::metrics::logit_diff(&logits, &self.examples);
+        self.clean_logits = logits;
+
+        // per-group corrupt base sums (static for the session)
+        self.asm.rebuild_corrupt_base(&self.corrupt_cache);
+        Ok(())
+    }
+
+    /// Run the patched forward under the session policy with node `hi`
+    /// (the investigated edge's source) held at FP32. Returns logits.
+    pub fn forward(&mut self, patches: &PatchMask, hi: Option<NodeId>) -> Result<Tensor> {
+        let policy = self.session.clone();
+        self.forward_inner(&policy, patches, hi, false)
+    }
+
+    /// Fig. 4's incremental-quantization forward: every attention head
+    /// runs at its own explicit format (`head_fmts[l*H + h]`); everything
+    /// else follows the session policy. Requires the planes for the used
+    /// formats to exist (ensure by `set_session` on a policy that uses
+    /// them, or call after `Policy::pahq` sessions).
+    pub fn forward_headwise(
+        &mut self,
+        head_fmts: &[Format],
+        patches: &PatchMask,
+    ) -> Result<Tensor> {
+        assert_eq!(head_fmts.len(), self.manifest.n_layer * self.manifest.n_head);
+        for f in head_fmts {
+            self.ws.ensure_plane(Policy::plane_name(*f), *f);
+        }
+        self.headwise = Some(head_fmts.to_vec());
+        let policy = self.session.clone();
+        let out = self.forward_inner(&policy, patches, None, false);
+        self.headwise = None;
+        out
+    }
+
+    /// Metric damage of a patched run vs the clean reference *computed
+    /// under the same `hi` override* (paper Appendix F: the clean
+    /// inference carries the same h* at FP32 as the patched one, so the
+    /// precision switch cancels out of ΔL). References are memoized per
+    /// source node; ACDC visits each node as a source many times.
+    pub fn damage(
+        &mut self,
+        patches: &PatchMask,
+        hi: Option<NodeId>,
+        obj: crate::metrics::Objective,
+    ) -> Result<f32> {
+        let (ref_probs, ref_ld) = match hi {
+            None => (self.ref_probs.clone(), self.ref_logit_diff),
+            Some(node) => {
+                if !self.ref_by_hi.contains_key(&node) {
+                    let empty = self.empty_patches();
+                    let logits = self.forward(&empty, hi)?;
+                    let probs = crate::metrics::probs_at_positions(&logits, &self.examples);
+                    let ld = crate::metrics::logit_diff(&logits, &self.examples);
+                    self.ref_by_hi.insert(node, (probs, ld));
+                }
+                self.ref_by_hi[&node].clone()
+            }
+        };
+        let logits = self.forward(patches, hi)?;
+        Ok(obj.damage(&logits, &self.examples, &ref_probs, ref_ld))
+    }
+
+    /// Score a batch of speculative candidates: each candidate's edge is
+    /// patched on top of `patches` *individually* and its damage
+    /// computed. This is the single-engine entry point of the batched
+    /// sweep (`acdc::sweep`): the working mask is cloned once per batch
+    /// rather than once per candidate, and the per-`hi` clean-reference
+    /// memoization warms across the whole batch — the "shared
+    /// patched-forward setup" that makes batch scoring cheaper than a
+    /// sequence of independent `damage` calls even before threading.
+    pub fn damage_batch(
+        &mut self,
+        patches: &PatchMask,
+        cands: &[crate::acdc::sweep::Candidate],
+        obj: crate::metrics::Objective,
+    ) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(cands.len());
+        let mut work = patches.clone();
+        for c in cands {
+            work.set(c.chan, c.src, true);
+            out.push(self.damage(&work, c.hi, obj)?);
+            work.set(c.chan, c.src, false);
+        }
+        Ok(out)
+    }
+
+    /// Chain-speculative counterpart of [`Self::damage_batch`]: candidate
+    /// `j` is scored with candidates `0..=j` patched in (each assumes all
+    /// earlier ones in the batch were removed) — the "predict-remove"
+    /// direction of `acdc::sweep`'s branch-predicted batching.
+    pub fn damage_chain(
+        &mut self,
+        patches: &PatchMask,
+        cands: &[crate::acdc::sweep::Candidate],
+        obj: crate::metrics::Objective,
+    ) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(cands.len());
+        let mut work = patches.clone();
+        for c in cands {
+            work.set(c.chan, c.src, true);
+            out.push(self.damage(&work, c.hi, obj)?);
+        }
+        Ok(out)
+    }
+
+    /// Clone of the current run's node outputs (for callers building
+    /// caches, e.g. SP / Edge-Pruning baselines).
+    pub fn node_outputs(&self) -> Vec<Tensor> {
+        self.node_out.clone()
+    }
+
+    /// Measured bytes this session actually holds resident: the packed
+    /// weight planes its policy reads plus the packed corrupted-
+    /// activation cache. Printed side by side with the simulated
+    /// `gpu_sim::memory` model by `pahq run` / `pahq sweep`.
+    pub fn measured_footprint(&self) -> MeasuredFootprint {
+        let mut plane_names = vec![self.session.attn_plane()];
+        if !plane_names.contains(&self.session.other_plane()) {
+            plane_names.push(self.session.other_plane());
+        }
+        MeasuredFootprint {
+            method: self.session.name.clone(),
+            weight_planes: plane_names
+                .into_iter()
+                .map(|p| (p.to_string(), self.ws.resident_bytes(p)))
+                .collect(),
+            act_cache: self.corrupt_cache.iter().map(|t| t.bytes()).sum(),
+        }
+    }
+
+    /// The ACDC-fp32 footprint of the *same* session shape (full-width
+    /// weights, full-width cache) — the measured baseline the packed
+    /// footprint is compared against.
+    pub fn measured_fp32_footprint(&self) -> MeasuredFootprint {
+        let cache_elems: usize = self.corrupt_cache.iter().map(|t| t.len()).sum();
+        MeasuredFootprint {
+            method: "acdc-fp32".into(),
+            weight_planes: vec![("p32".into(), self.ws.n_params() * 4)],
+            act_cache: cache_elems * 4,
+        }
+    }
+
+    pub fn pjrt_time(&self) -> std::time::Duration {
+        self.rt.total_exec_time()
+    }
+
+    pub fn runtime_stats(&self) -> HashMap<String, crate::runtime::ExeStats> {
+        self.rt.stats()
+    }
+
+    /// Run the gradient artifact (EAP/HISP). Returns the full output tuple.
+    pub fn run_grads(&mut self, corrupt_input: bool, sel_logit_diff: bool) -> Result<Vec<Tensor>> {
+        self.run_grad_artifact("grads.hlo.txt", corrupt_input, sel_logit_diff, &[])
+    }
+
+    /// Shared driver for the gradient artifacts (`grads` / `gate_grads` /
+    /// `edge_mask_grads`). Input order is always
+    /// (onehot, pos, ans, dis, ref_probs, sel, <extras...>, weights...);
+    /// weights come from the FP32 master — the gradient baselines run at
+    /// full precision, exactly as the paper runs EAP / SP / Edge Pruning.
+    pub fn run_grad_artifact(
+        &mut self,
+        artifact: &str,
+        corrupt_input: bool,
+        sel_logit_diff: bool,
+        extras: &[Input],
+    ) -> Result<Vec<Tensor>> {
+        let m = &self.manifest;
+        let (b, s, v) = (m.batch, m.seq_len, m.vocab);
+        let onehot = if corrupt_input { &self.onehot_corrupt } else { &self.onehot_clean };
+        let pos = Dataset::pos_onehot(&self.examples, s);
+        let ans = Dataset::dist(&self.examples, v, false);
+        let dis = Dataset::dist(&self.examples, v, true);
+        let sel = OwnedInput::scalar(if sel_logit_diff { 1.0 } else { 0.0 });
+        let (sh_bsv, sh_bs, sh_bv) = ([b, s, v], [b, s], [b, v]);
+        let mut inputs = vec![
+            Input::new(&sh_bsv, onehot),
+            Input::new(&sh_bs, &pos),
+            Input::new(&sh_bv, &ans),
+            Input::new(&sh_bv, &dis),
+            Input::new(&sh_bv, &self.ref_probs),
+        ];
+        inputs.push(sel.as_input());
+        for e in extras {
+            inputs.push(Input::new(e.shape, e.data));
+        }
+        let params = self.manifest.params.clone();
+        for p in &params {
+            inputs.push(Input::new(&p.shape, self.ws.master_param(&p.name)?));
+        }
+        let path = self.manifest.hlo_path(artifact);
+        self.rt.run(&path, &inputs)
+    }
+
+    /// Swap the evaluation batch (Edge-Pruning's dataset-size sweep
+    /// rotates batches through the fixed-shape executables). Rebuilds the
+    /// one-hots and re-runs `set_session` to refresh caches/references.
+    pub fn set_examples(&mut self, examples: Vec<Example>) -> Result<()> {
+        if examples.len() != self.manifest.batch {
+            bail!("need exactly batch={} examples", self.manifest.batch);
+        }
+        let v = self.manifest.vocab;
+        self.onehot_clean = Dataset::onehot(&examples, false, v);
+        self.onehot_corrupt = Dataset::onehot(&examples, true, v);
+        self.examples = examples;
+        let session = self.session.clone();
+        self.set_session(session)
+    }
+
+    // -----------------------------------------------------------------------
+
+    fn forward_inner(
+        &mut self,
+        policy: &Policy,
+        patches: &PatchMask,
+        hi: Option<NodeId>,
+        corrupt_input: bool,
+    ) -> Result<Tensor> {
+        self.forward_count += 1;
+        let m = self.manifest.clone();
+        let (b, s, v, d, h, k) = (m.batch, m.seq_len, m.vocab, m.d_model, m.n_head, m.d_head);
+        let bsd = b * s * d;
+        let attn_plane = policy.attn_plane();
+        let other_plane = policy.other_plane();
+
+        // ---- embed -----------------------------------------------------
+        {
+            let hi_embed = hi == Some(Graph::EMBED);
+            let sc = &mut self.asm.scratch;
+            let wte = self.ws.param_at("wte", other_plane, hi_embed, &mut sc.wte)?;
+            let wpe = self.ws.param_at("wpe", other_plane, hi_embed, &mut sc.wpe)?;
+            let onehot = if corrupt_input { &self.onehot_corrupt } else { &self.onehot_clean };
+            let outs = self.rt.run(
+                &m.hlo_path("embed.hlo.txt"),
+                &[
+                    Input::new(&[b, s, v], onehot),
+                    Input::new(&[v, d], wte),
+                    Input::new(&[s, d], wpe),
+                ],
+            )?;
+            let mut emb = outs.into_iter().next().context("embed output")?;
+            if !policy.other.is_passthrough() && !hi_embed {
+                quant::fq_slice(&mut emb.data, policy.other);
+            }
+            self.node_out[Graph::EMBED].copy_from(&emb);
+        }
+
+        // ---- layers ------------------------------------------------------
+        for l in 0..m.n_layer {
+            // channel inputs for all heads/components of this layer
+            let head_ch = Channel::Head { layer: l, head: 0, comp: 0 };
+            let head_gid = self.asm.group_of(self.chan_idx[&head_ch]);
+            self.asm.compute_group_base(head_gid, policy, &self.node_out);
+            // Assemble each distinct patch mask once and memcpy for the
+            // duplicates — within a layer, most of the 3*H channels share
+            // the same mask (usually the empty one). This matters most for
+            // the RTN session, whose sequential quantized accumulation is
+            // the expensive faithful path (EXPERIMENTS.md §Perf).
+            let mut assembled: Vec<(u128, u8, usize)> = Vec::new(); // (mask, comp, head)
+            for comp in 0..3u8 {
+                for head in 0..h {
+                    let ci = self.chan_idx[&Channel::Head { layer: l, head, comp }];
+                    debug_assert_eq!(self.asm.group_of(ci), head_gid);
+                    let mask = patches.mask(ci);
+                    let dup = assembled.iter().find(|&&(m, _, _)| m == mask).copied();
+                    let mut qkv = std::mem::take(&mut self.asm.scratch.qkv[comp as usize]);
+                    match dup {
+                        Some((_, src_comp, src_head)) if src_comp == comp => {
+                            qkv.copy_within(src_head * bsd..(src_head + 1) * bsd, head * bsd);
+                        }
+                        Some((_, src_comp, src_head)) => {
+                            let src_buf = &self.asm.scratch.qkv[src_comp as usize];
+                            qkv[head * bsd..(head + 1) * bsd]
+                                .copy_from_slice(&src_buf[src_head * bsd..(src_head + 1) * bsd]);
+                        }
+                        None => {
+                            self.asm.assemble_channel(
+                                ci,
+                                patches,
+                                policy,
+                                &self.node_out,
+                                &self.corrupt_cache,
+                                &mut qkv[head * bsd..(head + 1) * bsd],
+                            );
+                            assembled.push((mask, comp, head));
+                        }
+                    }
+                    self.asm.scratch.qkv[comp as usize] = qkv;
+                }
+            }
+
+            // mixed-precision weights + qp rows
+            let hi_head = match hi.map(|n| self.graph.node_kind(n)) {
+                Some(crate::model::graph::NodeKind::Head { layer, head }) if layer == l => {
+                    Some(head)
+                }
+                _ => None,
+            };
+            if let Some(head_fmts) = &self.headwise {
+                // Fig. 4 path: explicit per-head formats
+                let fmts = &head_fmts[l * h..(l + 1) * h];
+                let planes: Vec<&str> = fmts
+                    .iter()
+                    .map(|f| if f.is_passthrough() { "master" } else { Policy::plane_name(*f) })
+                    .collect();
+                let sc = &mut self.asm.scratch;
+                for (name, buf) in [
+                    ("wq", &mut sc.wq), ("bq", &mut sc.bq), ("wk", &mut sc.wk),
+                    ("bk", &mut sc.bk), ("wv", &mut sc.wv), ("bv", &mut sc.bv),
+                    ("wo", &mut sc.wo),
+                ] {
+                    self.ws.assemble_heads(&format!("l{l}.{name}"), &planes, buf)?;
+                }
+                for head in 0..h {
+                    sc.qp[head * 3..head * 3 + 3].copy_from_slice(&fmts[head].as_qp());
+                }
+            } else {
+                let sc = &mut self.asm.scratch;
+                self.ws.mixed_head_param(&format!("l{l}.wq"), attn_plane, hi_head, &mut sc.wq)?;
+                self.ws.mixed_head_param(&format!("l{l}.bq"), attn_plane, hi_head, &mut sc.bq)?;
+                self.ws.mixed_head_param(&format!("l{l}.wk"), attn_plane, hi_head, &mut sc.wk)?;
+                self.ws.mixed_head_param(&format!("l{l}.bk"), attn_plane, hi_head, &mut sc.bk)?;
+                self.ws.mixed_head_param(&format!("l{l}.wv"), attn_plane, hi_head, &mut sc.wv)?;
+                self.ws.mixed_head_param(&format!("l{l}.bv"), attn_plane, hi_head, &mut sc.bv)?;
+                self.ws.mixed_head_param(&format!("l{l}.wo"), attn_plane, hi_head, &mut sc.wo)?;
+                for head in 0..h {
+                    let fmt = if hi_head == Some(head) { quant::FP32 } else { policy.attn_low };
+                    sc.qp[head * 3..head * 3 + 3].copy_from_slice(&fmt.as_qp());
+                }
+            }
+
+            let ln1 = self.ws.master_param(&format!("l{l}.ln1_g"))?;
+            let sh4 = [h, b, s, d];
+            let sc = &self.asm.scratch;
+            let outs = self.rt.run(
+                &m.hlo_path(self.attn_artifact),
+                &[
+                    Input::new(&sh4, &sc.qkv[0]),
+                    Input::new(&sh4, &sc.qkv[1]),
+                    Input::new(&sh4, &sc.qkv[2]),
+                    Input::new(&[d], ln1),
+                    Input::new(&[h, d, k], &sc.wq),
+                    Input::new(&[h, k], &sc.bq),
+                    Input::new(&[h, d, k], &sc.wk),
+                    Input::new(&[h, k], &sc.bk),
+                    Input::new(&[h, d, k], &sc.wv),
+                    Input::new(&[h, k], &sc.bv),
+                    Input::new(&[h, k, d], &sc.wo),
+                    Input::new(&[h, 3], &sc.qp),
+                ],
+            )?;
+            let houts = outs.into_iter().next().context("attn output")?;
+            debug_assert_eq!(houts.shape, vec![h, b, s, d]);
+            for head in 0..h {
+                let node = self.graph.head_node(l, head);
+                self.node_out[node]
+                    .data
+                    .copy_from_slice(&houts.data[head * bsd..(head + 1) * bsd]);
+            }
+
+            // ---- MLP ----------------------------------------------------
+            if m.has_mlp() {
+                let ch = Channel::Mlp { layer: l };
+                let ci = self.chan_idx[&ch];
+                let gid = self.asm.group_of(ci);
+                self.asm.compute_group_base(gid, policy, &self.node_out);
+                let mut chan_in = std::mem::take(&mut self.asm.scratch.chan_in);
+                self.asm.assemble_channel(
+                    ci,
+                    patches,
+                    policy,
+                    &self.node_out,
+                    &self.corrupt_cache,
+                    &mut chan_in,
+                );
+                let hi_mlp = hi == Some(self.graph.mlp_node(l));
+                let f = m.d_mlp;
+                let qp3 = if hi_mlp { quant::FP32.as_qp() } else { policy.other.as_qp() };
+                let sc = &mut self.asm.scratch;
+                let w1 = self.ws.param_at(&format!("l{l}.w1"), other_plane, hi_mlp, &mut sc.w1)?;
+                let b1 = self.ws.param_at(&format!("l{l}.b1"), other_plane, hi_mlp, &mut sc.b1)?;
+                let w2 = self.ws.param_at(&format!("l{l}.w2"), other_plane, hi_mlp, &mut sc.w2)?;
+                let b2 = self.ws.param_at(&format!("l{l}.b2"), other_plane, hi_mlp, &mut sc.b2)?;
+                let ln2 = self.ws.master_param(&format!("l{l}.ln2_g"))?;
+                let outs = self.rt.run(
+                    &m.hlo_path("mlp_layer.hlo.txt"),
+                    &[
+                        Input::new(&[b, s, d], &chan_in),
+                        Input::new(&[d], ln2),
+                        Input::new(&[d, f], w1),
+                        Input::new(&[f], b1),
+                        Input::new(&[f, d], w2),
+                        Input::new(&[d], b2),
+                        Input::new(&[3], &qp3),
+                    ],
+                )?;
+                let mout = outs.into_iter().next().context("mlp output")?;
+                self.node_out[self.graph.mlp_node(l)].copy_from(&mout);
+                self.asm.scratch.chan_in = chan_in;
+            }
+        }
+
+        // ---- final / unembed ---------------------------------------------
+        let ci = self.chan_idx[&Channel::Final];
+        let gid = self.asm.group_of(ci);
+        self.asm.compute_group_base(gid, policy, &self.node_out);
+        let mut chan_in = std::mem::take(&mut self.asm.scratch.chan_in);
+        self.asm.assemble_channel(
+            ci,
+            patches,
+            policy,
+            &self.node_out,
+            &self.corrupt_cache,
+            &mut chan_in,
+        );
+        let sc = &mut self.asm.scratch;
+        let wu = self.ws.param_at("wu", other_plane, false, &mut sc.wu)?;
+        let lnf = self.ws.master_param("lnf_g")?;
+        let outs = self.rt.run(
+            &m.hlo_path("unembed.hlo.txt"),
+            &[
+                Input::new(&[b, s, d], &chan_in),
+                Input::new(&[d], lnf),
+                Input::new(&[d, v], wu),
+            ],
+        )?;
+        self.asm.scratch.chan_in = chan_in;
+        let mut logits = outs.into_iter().next().context("unembed output")?;
+        if policy.quantize_logits && !policy.other.is_passthrough() {
+            quant::fq_slice(&mut logits.data, policy.other);
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Objective;
+    use crate::model::Edge;
+    use crate::tensor::max_abs_diff;
+
+    fn engine(model: &str, task: &str) -> Option<PatchedForward> {
+        match PatchedForward::new(model, task) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                None
+            }
+        }
+    }
+
+    fn expected_logits(m: &Manifest, task: &str, tag: &str) -> Option<Vec<f32>> {
+        let path = m.dir.join("expected").join(format!("{task}_{tag}_logits.bin"));
+        let bytes = std::fs::read(path).ok()?;
+        Some(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    #[test]
+    fn fp32_forward_matches_python_reference() {
+        // Pins the whole L1+L2+runtime+L3 composition: the chained
+        // per-layer executables plus Rust residual assembly must equal the
+        // monolithic python reference forward.
+        for model in ["redwood2l-sim", "gpt2s-sim"] {
+            for task in ["ioi", "docstring"] {
+                let Some(mut e) = engine(model, task) else { return };
+                let patches = e.empty_patches();
+                let logits = e.forward(&patches, None).unwrap();
+                let want = expected_logits(&e.manifest, task, "clean").unwrap();
+                let diff = max_abs_diff(&logits.data, &want);
+                assert!(diff < 5e-3, "{model}/{task}: clean logits diff {diff}");
+                // and the corrupted input path
+                let empty = e.empty_patches();
+                let logits_c = e.forward_inner(&Policy::fp32(), &empty, None, true).unwrap();
+                let want_c = expected_logits(&e.manifest, task, "corrupt").unwrap();
+                let diff = max_abs_diff(&logits_c.data, &want_c);
+                assert!(diff < 5e-3, "{model}/{task}: corrupt logits diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn patch_all_equals_corrupt_run() {
+        let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+        let mut patches = e.empty_patches();
+        for edge in e.graph.edges() {
+            let ci = e.chan_index(edge.dst);
+            patches.set(ci, edge.src, true);
+        }
+        let logits = e.forward(&patches, None).unwrap();
+        let want = expected_logits(&e.manifest, "ioi", "corrupt").unwrap();
+        // patching every edge (including embed->*) feeds every channel the
+        // corrupted-run activations — output must equal the corrupted run
+        let diff = max_abs_diff(&logits.data, &want);
+        assert!(diff < 5e-3, "diff {diff}");
+    }
+
+    #[test]
+    fn empty_patch_is_identity_and_deterministic() {
+        let Some(mut e) = engine("attn4l-sim", "greater_than") else { return };
+        let patches = e.empty_patches();
+        let a = e.forward(&patches, None).unwrap();
+        let b = e.forward(&patches, None).unwrap();
+        assert_eq!(a.data, b.data, "bitwise deterministic");
+        let d = e.damage(&patches, None, Objective::Kl).unwrap();
+        assert!(d.abs() < 1e-5, "no patch, no damage (KL {d})");
+    }
+
+    #[test]
+    fn single_edge_patch_changes_output() {
+        let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+        // Note: patching embed->final is a no-op at the answer position
+        // (the corruption lives at an earlier token, and embeddings are
+        // positionwise) — heads are what move corrupted info to the
+        // answer. Some head->final edge must therefore carry damage.
+        let ci = e.chan_index(Channel::Final);
+        let mut worst = 0.0f32;
+        for l in 0..e.graph.n_layer {
+            for h in 0..e.graph.n_head {
+                let mut patches = e.empty_patches();
+                patches.set(ci, e.graph.head_node(l, h), true);
+                worst = worst.max(e.damage(&patches, None, Objective::Kl).unwrap());
+            }
+        }
+        assert!(worst > 1e-3, "some head->final patch must hurt (max KL {worst})");
+        // ...and the embed->final patch really is a no-op at the answer
+        let mut patches = e.empty_patches();
+        patches.set(ci, Graph::EMBED, true);
+        let d = e.damage(&patches, None, Objective::Kl).unwrap();
+        assert!(d < 1e-5, "embed->final patch is position-local (KL {d})");
+    }
+
+    #[test]
+    fn hi_head_override_is_noop_at_fp32() {
+        let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+        let patches = e.empty_patches();
+        let plain = e.forward(&patches, None).unwrap();
+        let hi = e.forward(&patches, Some(e.graph.head_node(1, 2))).unwrap();
+        // session is fp32: the "high precision" override changes nothing
+        assert_eq!(plain.data, hi.data);
+    }
+
+    #[test]
+    fn pahq_session_preserves_edge_deltas() {
+        // The paper's core claim (Eq. 2): with the investigated edge's
+        // source at FP32, PAHQ's ΔL(e) tracks the FP32 ΔL(e); RTN-Q's does
+        // not. Checked in eval::tests at scale; here a smoke version.
+        let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+        let edge = Edge {
+            src: e.graph.head_node(0, 1),
+            dst: Channel::Head { layer: 1, head: 2, comp: 2 },
+        };
+        assert!(e.graph.is_edge(&edge));
+        let ci = e.chan_index(edge.dst);
+        let mut patches = e.empty_patches();
+        patches.set(ci, edge.src, true);
+
+        let d32 = e.damage(&patches, None, Objective::Kl).unwrap();
+
+        e.set_session(Policy::pahq(quant::FP8_E4M3)).unwrap();
+        let dq = e.damage(&patches, Some(edge.src), Objective::Kl).unwrap();
+        // PAHQ ΔL within a modest relative envelope of FP32 ΔL
+        let err = (dq - d32).abs();
+        assert!(
+            err <= 0.35 * d32.abs() + 2e-3,
+            "PAHQ ΔL {dq} strays from FP32 ΔL {d32}"
+        );
+    }
+
+    #[test]
+    fn rtn_session_cache_is_packed_on_lattice() {
+        let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+        e.set_session(Policy::rtn(quant::FP8_E4M3)).unwrap();
+        // corrupt cache was rebuilt under the RTN session and packed at
+        // the session's fp8 lattice: one real byte per element, decoding
+        // to E4M3 fixed points.
+        let emb = &e.corrupt_cache[Graph::EMBED];
+        assert_eq!(emb.bytes(), emb.len(), "fp8 cache holds one byte per element");
+        let dec = emb.to_tensor();
+        for &v in dec.data.iter().take(200) {
+            assert_eq!(v, quant::fq(v, quant::FP8_E4M3));
+        }
+    }
+
+    #[test]
+    fn measured_footprint_pahq_below_fp32() {
+        let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+        // the fp32 session's measured footprint equals its own baseline
+        let fp32 = e.measured_footprint();
+        assert_eq!(fp32.total(), e.measured_fp32_footprint().total());
+        e.set_session(Policy::pahq(quant::FP8_E4M3)).unwrap();
+        let pahq = e.measured_footprint();
+        let acdc = e.measured_fp32_footprint();
+        // fp8 + bf16 planes (3 bytes/param) beat the 4-byte fp32 copy;
+        // the FP32 corrupt cache is identical on both sides
+        assert!(pahq.weights() < acdc.weights(), "{} vs {}", pahq.weights(), acdc.weights());
+        assert_eq!(pahq.act_cache, acdc.act_cache);
+        assert!(pahq.total() < acdc.total());
+        // RTN packs the cache too
+        e.set_session(Policy::rtn(quant::FP8_E4M3)).unwrap();
+        let rtn = e.measured_footprint();
+        assert!(rtn.act_cache < acdc.act_cache / 3);
+    }
+
+    #[test]
+    fn pallas_and_ref_attn_artifacts_agree() {
+        // The Pallas kernel build and the pure-jnp build of the attention
+        // executable must be value-identical on a quantized mixed-
+        // precision forward (they share the exact fq lattice).
+        let Some(mut e) = engine("gpt2s-sim", "ioi") else { return };
+        e.set_session(Policy::pahq(quant::FP8_E4M3)).unwrap();
+        let patches = e.empty_patches();
+        let hi = Some(e.graph.head_node(2, 5));
+        e.set_attn_artifact(false);
+        let pallas = e.forward(&patches, hi).unwrap();
+        e.set_attn_artifact(true);
+        let refv = e.forward(&patches, hi).unwrap();
+        let diff = max_abs_diff(&pallas.data, &refv.data);
+        assert!(diff < 1e-4, "pallas vs ref logits diff {diff}");
+    }
+
+    #[test]
+    fn grads_artifact_runs() {
+        let Some(mut e) = engine("redwood2l-sim", "ioi") else { return };
+        let outs = e.run_grads(false, true).unwrap();
+        // metric, embed, attn, gq, gk, gv, ghout, gfinal (attn-only model)
+        assert_eq!(outs.len(), 8);
+        let m = &e.manifest;
+        assert_eq!(outs[0].shape, Vec::<usize>::new());
+        assert_eq!(outs[1].shape, vec![m.batch, m.seq_len, m.d_model]);
+        assert_eq!(
+            outs[2].shape,
+            vec![m.n_layer, m.n_head, m.batch, m.seq_len, m.d_model]
+        );
+        // gradients are not all zero
+        assert!(outs[3].data.iter().any(|&v| v != 0.0));
+    }
+}

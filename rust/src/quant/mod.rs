@@ -45,16 +45,30 @@ impl Format {
         })
     }
 
-    /// Storage bytes per element in the *emulated* format — drives the
-    /// simulated GPU memory accounting (Tab. 3) and transfer sizes.
-    pub fn storage_bytes(&self) -> usize {
-        match self.mbits as i32 {
-            m if m >= 23 => 4,
-            10 | 7 => 2, // fp16 / bf16
-            3 | 2 => 1,  // fp8
-            1 => 1,      // fp4 packs 2/byte on real HW; we bill 1 (conservative)
-            _ => 4,
+    /// Storage bits per element in the *emulated* format — drives packed
+    /// [`crate::tensor::QTensor`] payload selection, the memory accounting
+    /// (Tab. 3), and transfer sizes. fp4 reports its true packed cost of
+    /// 4 bits (two elements per byte); byte totals come from
+    /// [`Format::bytes_for`], which divides at the call site.
+    pub fn storage_bits(&self) -> usize {
+        if self.is_passthrough() {
+            32
+        } else if *self == FP16 || *self == BF16 {
+            16
+        } else if *self == FP8_E4M3 || *self == FP8_E5M2 {
+            8
+        } else if *self == FP4_E2M1 {
+            4
+        } else {
+            // unknown custom formats are emulated in full f32 words
+            32
         }
+    }
+
+    /// Packed bytes of `n` elements at this format (fp4: 0.5 bytes per
+    /// element, rounded up to a whole byte at the end).
+    pub fn bytes_for(&self, n: usize) -> usize {
+        (n * self.storage_bits()).div_ceil(8)
     }
 
     pub fn is_passthrough(&self) -> bool {
@@ -78,16 +92,18 @@ impl Format {
 }
 
 /// Exact 2^e for integer e in [-126, 127], by exponent bit placement
-/// (mirrors quantize._pow2 — never a transcendental).
+/// (mirrors quantize._pow2 — never a transcendental). Crate-visible:
+/// the packed codec in `tensor::qtensor` is built from the same exact
+/// power-of-two arithmetic.
 #[inline]
-fn pow2(e: f32) -> f32 {
+pub(crate) fn pow2(e: f32) -> f32 {
     let e = e.clamp(-126.0, 127.0) as i32;
     f32::from_bits(((e + 127) as u32) << 23)
 }
 
 /// floor(log2|x|) via the IEEE exponent field (exact; frexp equivalent).
 #[inline]
-fn floor_log2(ax: f32) -> f32 {
+pub(crate) fn floor_log2(ax: f32) -> f32 {
     debug_assert!(ax > 0.0);
     if ax >= f32::MIN_POSITIVE {
         ((ax.to_bits() >> 23) as i32 - 127) as f32
@@ -277,10 +293,19 @@ mod tests {
     }
 
     #[test]
-    fn storage_bytes() {
-        assert_eq!(FP32.storage_bytes(), 4);
-        assert_eq!(BF16.storage_bytes(), 2);
-        assert_eq!(FP8_E4M3.storage_bytes(), 1);
+    fn storage_bits_and_packed_bytes() {
+        assert_eq!(FP32.storage_bits(), 32);
+        assert_eq!(FP16.storage_bits(), 16);
+        assert_eq!(BF16.storage_bits(), 16);
+        assert_eq!(FP8_E4M3.storage_bits(), 8);
+        assert_eq!(FP8_E5M2.storage_bits(), 8);
+        assert_eq!(FP4_E2M1.storage_bits(), 4);
+        // fp4 packs two elements per byte; odd counts round up
+        assert_eq!(FP4_E2M1.bytes_for(4), 2);
+        assert_eq!(FP4_E2M1.bytes_for(3), 2);
+        assert_eq!(FP8_E4M3.bytes_for(5), 5);
+        assert_eq!(BF16.bytes_for(2), 4);
+        assert_eq!(FP32.bytes_for(2), 8);
     }
 
     #[test]

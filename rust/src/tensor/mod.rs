@@ -1,10 +1,23 @@
-//! Flat f32 tensors for the L3 hot path.
+//! Flat f32 tensors and packed low-precision storage for the L3 hot path.
 //!
 //! The residual-stream assembly (sum of upstream node outputs per channel)
 //! is the coordinator's inner loop: for every edge evaluation it performs
 //! O(n_predecessors) vector adds over [B,S,D] buffers per node. Everything
 //! here is allocation-free on the hot path — buffers are reused via
 //! [`Tensor::fill`] / [`add_assign`] and a caller-owned pool.
+//!
+//! Working buffers stay f32 ([`Tensor`]); at-rest low-precision data
+//! (weight planes, corrupted-activation caches) lives in format-native
+//! packed storage ([`QTensor`], see [`qtensor`]) with fused
+//! decode-accumulate kernels so the assembly loop reads packed bytes
+//! directly.
+
+pub mod qtensor;
+
+pub use qtensor::{
+    accumulate_quantized_packed, add_assign_packed, add_sub_assign_packed,
+    add_sub_assign_packed_rev, QTensor,
+};
 
 use anyhow::{bail, Result};
 
@@ -44,10 +57,13 @@ impl Tensor {
         self.data.copy_from_slice(&src.data);
     }
 
-    /// Number of bytes this tensor occupies at a given element width —
-    /// used by the GPU memory tracker (fp8 = 1 byte, bf16 = 2, fp32 = 4).
-    pub fn bytes_at(&self, bytes_per_elem: usize) -> usize {
-        self.len() * bytes_per_elem
+    /// Bytes this (always-f32) tensor occupies. Low-precision sizes are a
+    /// property of packed storage — ask [`QTensor::bytes`] or derive them
+    /// from a format via [`crate::quant::Format::bytes_for`]; the old
+    /// `bytes_at(bytes_per_elem)` entry point silently mis-billed fp4 and
+    /// is gone.
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
     }
 }
 
@@ -138,8 +154,7 @@ mod tests {
         assert_eq!(t.len(), 6);
         t.fill(2.5);
         assert!(t.data.iter().all(|&v| v == 2.5));
-        assert_eq!(t.bytes_at(1), 6);
-        assert_eq!(t.bytes_at(4), 24);
+        assert_eq!(t.bytes(), 24);
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Packed low-precision tensor storage.
+//!
+//! [`QTensor`] holds quantized values in their *native* widths — `u16`
+//! words for fp16/bf16, `u8` bytes for fp8, two-per-byte nibbles for
+//! fp4_e2m1 — instead of the fake-quantized f32 copies the engine used to
+//! carry. Decoding is proven bit-identical to [`crate::quant::fq`]
+//! (property-tested in `tests/properties.rs`): `decode(encode(x)) ==
+//! fq(x)` for every format, including ±0, format subnormals, saturation
+//! bounds, and ties-to-even cases. That makes the payload byte count a
+//! *measured* memory footprint, not a billed one, while every consumer
+//! keeps seeing exactly the f32 lattice values it saw before.
+//!
+//! The fused kernels ([`add_assign_packed`] and friends) decode inline
+//! inside the accumulation loop, so the residual-assembly hot path reads
+//! packed bytes directly instead of dequantizing into scratch first.
+//! Passthrough (f32) payloads delegate to the plain [`crate::tensor`]
+//! primitives, keeping the FP32 path bit-for-bit what it always was.
+//!
+//! ## Bit layout
+//!
+//! Per element: `sign | exponent | mantissa`, with `mbits` mantissa bits
+//! from the [`Format`] and the exponent field sized to fill the storage
+//! width (fp16 → 1/5/10 and bf16 → 1/8/7, i.e. the IEEE/bfloat layouts;
+//! fp8_e4m3 → 1/4/3; fp8_e5m2 → 1/5/2; fp4_e2m1 → 1/2/1). Exponent code
+//! 0 holds zeros and format subnormals (`mant * 2^(emin - mbits)`), code
+//! `k > 0` the normal binade `emin + k - 1` — exactly the value set `fq`
+//! projects onto, so the codec is total on fq's range by construction.
+
+use crate::quant::{self, floor_log2, fq, pow2, Format};
+use crate::tensor::Tensor;
+
+/// Storage for one packed tensor. Private: consumers go through the
+/// decode/kernel API, which is what guarantees the fq bit-identity.
+#[derive(Clone, Debug, PartialEq)]
+enum Payload {
+    /// Passthrough (and unknown-width) formats: plain f32 words.
+    F32(Vec<f32>),
+    /// fp16 / bf16: one 16-bit word per element.
+    U16(Vec<u16>),
+    /// fp8_e4m3 / fp8_e5m2: one byte per element.
+    U8(Vec<u8>),
+    /// fp4_e2m1: two elements per byte, low nibble = even index; an odd
+    /// element count leaves the final high nibble zero.
+    U4(Vec<u8>),
+}
+
+/// A shape-tagged tensor stored at its format's native width.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QTensor {
+    shape: Vec<usize>,
+    len: usize,
+    format: Format,
+    payload: Payload,
+}
+
+/// Sign/exponent/mantissa field geometry for one non-passthrough format.
+#[derive(Clone, Copy)]
+struct Codec {
+    /// mantissa bits
+    m: u32,
+    /// exponent field bits (storage width minus sign minus mantissa)
+    ebits: u32,
+    /// unbiased exponent of the smallest normal (biased code 1)
+    emin: i32,
+}
+
+impl Codec {
+    fn new(f: Format) -> Codec {
+        let m = f.mbits as u32;
+        Codec { m, ebits: f.storage_bits() as u32 - 1 - m, emin: f.emin as i32 }
+    }
+
+    /// Pack a value already on the format's lattice (i.e. an output of
+    /// `fq`). Lattice values are normal f32 with at most `m` significant
+    /// mantissa bits, so the mantissa field reads straight off the IEEE
+    /// bits (exact at every binade, including e = 127 where a 2^-e
+    /// rescale would leave [`pow2`]'s clamped range); the subnormal
+    /// index uses exact power-of-two scaling.
+    #[inline]
+    fn encode(&self, y: f32) -> u32 {
+        let sign = (y.to_bits() >> 31) << (self.ebits + self.m);
+        let ay = y.abs();
+        if ay == 0.0 {
+            return sign; // preserves -0.0 via the sign bit
+        }
+        let e = floor_log2(ay) as i32;
+        if e < self.emin {
+            // format subnormal: ay = k * 2^(emin - m), k in 1..2^m
+            let k = (ay * pow2((self.m as i32 - self.emin) as f32)) as u32;
+            sign | k
+        } else {
+            // normal: ay = (2^m + mant) * 2^(e - m); the low f32 mantissa
+            // bits are zero on the lattice
+            let bits = ay.to_bits();
+            debug_assert_eq!(bits & ((1 << (23 - self.m)) - 1), 0, "off-lattice encode");
+            let mant = (bits >> (23 - self.m)) & ((1 << self.m) - 1);
+            sign | (((e - self.emin + 1) as u32) << self.m) | mant
+        }
+    }
+
+    /// Exact inverse of [`Codec::encode`].
+    #[inline]
+    fn decode(&self, bits: u32) -> f32 {
+        let mant = bits & ((1 << self.m) - 1);
+        let exp_code = (bits >> self.m) & ((1 << self.ebits) - 1);
+        let neg = bits >> (self.ebits + self.m) & 1 == 1;
+        let mag = if exp_code == 0 {
+            mant as f32 * pow2((self.emin - self.m as i32) as f32)
+        } else {
+            // split into fraction-in-[1,2) times 2^e so the intermediate
+            // stays a normal f32 even at e = emin = -126 (bf16)
+            let frac = ((1u32 << self.m) + mant) as f32 * pow2(-(self.m as f32));
+            frac * pow2((self.emin + exp_code as i32 - 1) as f32)
+        };
+        if neg { -mag } else { mag }
+    }
+}
+
+impl QTensor {
+    /// Quantize (`fq`) and pack a slice. The stored values are exactly
+    /// `fq(x, format)` — packing an already-quantized slice is lossless
+    /// because `fq` is idempotent.
+    pub fn from_slice(shape: &[usize], xs: &[f32], format: Format) -> QTensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), xs.len());
+        let payload = if format.is_passthrough() {
+            Payload::F32(xs.to_vec())
+        } else {
+            let c = Codec::new(format);
+            match format.storage_bits() {
+                16 => Payload::U16(xs.iter().map(|&x| c.encode(fq(x, format)) as u16).collect()),
+                8 => Payload::U8(xs.iter().map(|&x| c.encode(fq(x, format)) as u8).collect()),
+                4 => {
+                    let mut v = vec![0u8; xs.len().div_ceil(2)];
+                    for (i, &x) in xs.iter().enumerate() {
+                        v[i / 2] |= (c.encode(fq(x, format)) as u8 & 0x0f) << ((i % 2) * 4);
+                    }
+                    Payload::U4(v)
+                }
+                // custom formats with no packed width: keep fq'd f32
+                _ => Payload::F32(xs.iter().map(|&x| fq(x, format)).collect()),
+            }
+        };
+        QTensor { shape: shape.to_vec(), len: xs.len(), format, payload }
+    }
+
+    pub fn from_tensor(t: &Tensor, format: Format) -> QTensor {
+        QTensor::from_slice(&t.shape, &t.data, format)
+    }
+
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes the payload actually occupies — the *measured* counterpart
+    /// of the simulated accounting in `gpu_sim::memory`.
+    pub fn bytes(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len() * 4,
+            Payload::U16(v) => v.len() * 2,
+            Payload::U8(v) | Payload::U4(v) => v.len(),
+        }
+    }
+
+    /// Decode one element (bounds-checked; index-heavy callers should
+    /// prefer the bulk/fused entry points).
+    pub fn get(&self, i: usize) -> f32 {
+        assert!(i < self.len);
+        match &self.payload {
+            Payload::F32(v) => v[i],
+            Payload::U16(v) => Codec::new(self.format).decode(v[i] as u32),
+            Payload::U8(v) => Codec::new(self.format).decode(v[i] as u32),
+            Payload::U4(v) => {
+                Codec::new(self.format).decode((v[i / 2] >> ((i % 2) * 4) & 0x0f) as u32)
+            }
+        }
+    }
+
+    /// Visit elements `start..start + n` in order, decoded to f32; the
+    /// callback receives indices relative to `start`. This is the one
+    /// decode loop every bulk/fused operation below is built on.
+    #[inline]
+    fn for_each_decoded<F: FnMut(usize, f32)>(&self, start: usize, n: usize, mut f: F) {
+        debug_assert!(start + n <= self.len);
+        match &self.payload {
+            Payload::F32(v) => {
+                for (j, &x) in v[start..start + n].iter().enumerate() {
+                    f(j, x);
+                }
+            }
+            Payload::U16(v) => {
+                let c = Codec::new(self.format);
+                for (j, &b) in v[start..start + n].iter().enumerate() {
+                    f(j, c.decode(b as u32));
+                }
+            }
+            Payload::U8(v) => {
+                let c = Codec::new(self.format);
+                for (j, &b) in v[start..start + n].iter().enumerate() {
+                    f(j, c.decode(b as u32));
+                }
+            }
+            Payload::U4(v) => {
+                let c = Codec::new(self.format);
+                for j in 0..n {
+                    let i = start + j;
+                    f(j, c.decode((v[i / 2] >> ((i % 2) * 4) & 0x0f) as u32));
+                }
+            }
+        }
+    }
+
+    /// Decode the whole tensor into `out` (same length).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len);
+        self.decode_range_into(0, out);
+    }
+
+    /// Decode elements `start..start + out.len()` into `out`. Handles
+    /// odd nibble offsets, so packed planes can be read per-parameter.
+    pub fn decode_range_into(&self, start: usize, out: &mut [f32]) {
+        if let Payload::F32(v) = &self.payload {
+            out.copy_from_slice(&v[start..start + out.len()]);
+            return;
+        }
+        self.for_each_decoded(start, out.len(), |j, x| out[j] = x);
+    }
+
+    /// Decode into a fresh [`Tensor`] (test/baseline convenience).
+    pub fn to_tensor(&self) -> Tensor {
+        let mut out = Tensor::zeros(&self.shape);
+        self.decode_into(&mut out.data);
+        out
+    }
+}
+
+/// `dst += src`, decoding packed bytes inline (no scratch buffer). The
+/// f32 payload delegates to [`crate::tensor::add_assign`], so passthrough
+/// sessions keep their exact historical bit pattern.
+pub fn add_assign_packed(dst: &mut [f32], src: &QTensor) {
+    debug_assert_eq!(dst.len(), src.len());
+    if let Payload::F32(v) = &src.payload {
+        crate::tensor::add_assign(dst, v);
+        return;
+    }
+    src.for_each_decoded(0, dst.len(), |i, x| dst[i] += x);
+}
+
+/// `dst += a - b` with the *added* term packed (patch swap: splice a
+/// packed corrupted contribution in over a clean f32 one).
+pub fn add_sub_assign_packed(dst: &mut [f32], a: &QTensor, b: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    if let Payload::F32(v) = &a.payload {
+        crate::tensor::add_sub_assign(dst, v, b);
+        return;
+    }
+    a.for_each_decoded(0, dst.len(), |i, x| dst[i] += x - b[i]);
+}
+
+/// `dst += a - b` with the *subtracted* term packed (the reverse swap:
+/// splice a clean f32 contribution back in over a packed corrupted one).
+pub fn add_sub_assign_packed_rev(dst: &mut [f32], a: &[f32], b: &QTensor) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    if let Payload::F32(v) = &b.payload {
+        crate::tensor::add_sub_assign(dst, a, v);
+        return;
+    }
+    b.for_each_decoded(0, dst.len(), |i, x| dst[i] += a[i] - x);
+}
+
+/// Packed counterpart of [`crate::quant::accumulate_quantized`]:
+/// `acc = fq(acc + fq(x))` per element with `x` decoded from `src`.
+/// Decoded values already sit on their storage lattice, and `fq` is
+/// idempotent, so this is bit-identical to accumulating the f32 copy the
+/// cache used to hold.
+pub fn accumulate_quantized_packed(acc: &mut [f32], src: &QTensor, f: Format) {
+    debug_assert_eq!(acc.len(), src.len());
+    if f.is_passthrough() {
+        add_assign_packed(acc, src);
+        return;
+    }
+    if let Payload::F32(v) = &src.payload {
+        quant::accumulate_quantized(acc, v, f);
+        return;
+    }
+    src.for_each_decoded(0, acc.len(), |i, x| acc[i] = fq(acc[i] + fq(x, f), f));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{BF16, FP16, FP32, FP4_E2M1, FP8_E4M3, FP8_E5M2};
+    use crate::util::rng::Rng;
+
+    const FORMATS: [Format; 5] = [FP16, BF16, FP8_E4M3, FP8_E5M2, FP4_E2M1];
+
+    #[test]
+    fn payload_widths_are_native() {
+        let xs = [1.0f32; 10];
+        assert_eq!(QTensor::from_slice(&[10], &xs, FP32).bytes(), 40);
+        assert_eq!(QTensor::from_slice(&[10], &xs, BF16).bytes(), 20);
+        assert_eq!(QTensor::from_slice(&[10], &xs, FP16).bytes(), 20);
+        assert_eq!(QTensor::from_slice(&[10], &xs, FP8_E4M3).bytes(), 10);
+        assert_eq!(QTensor::from_slice(&[10], &xs, FP4_E2M1).bytes(), 5);
+        // odd fp4 length rounds up to a whole byte
+        assert_eq!(QTensor::from_slice(&[7], &xs[..7], FP4_E2M1).bytes(), 4);
+    }
+
+    #[test]
+    fn roundtrip_equals_fq_on_anchors() {
+        // hand-picked anchors per format; the exhaustive randomized sweep
+        // lives in tests/properties.rs
+        let mut cases = vec![0.0f32, -0.0, 1.0, -1.0, 0.5, 448.0, -448.0, 1000.0, 65504.0];
+        cases.extend([3.4e38, 1e-9, -1e-9, 1e-40, 6.0, 7.0, 1.0625]);
+        cases.push(2f32.powi(-9));
+        cases.push(2f32.powi(-24));
+        cases.push(2f32.powi(-126));
+        for f in FORMATS {
+            let qt = QTensor::from_slice(&[cases.len()], &cases, f);
+            for (i, &x) in cases.iter().enumerate() {
+                let want = fq(x, f);
+                let got = qt.get(i);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{f:?}: decode(encode({x:e})) = {got:e}, fq = {want:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_range_handles_odd_nibble_offsets() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f32> = (0..33).map(|_| r.normal() * 4.0).collect();
+        let qt = QTensor::from_slice(&[33], &xs, FP4_E2M1);
+        let mut full = vec![0.0f32; 33];
+        qt.decode_into(&mut full);
+        for start in [0usize, 1, 2, 7, 32] {
+            let n = (33 - start).min(9);
+            let mut part = vec![0.0f32; n];
+            qt.decode_range_into(start, &mut part);
+            assert_eq!(&part[..], &full[start..start + n], "start={start}");
+        }
+    }
+
+    #[test]
+    fn fused_kernels_match_decode_then_plain_ops() {
+        let mut r = Rng::new(12);
+        for f in [FP32, BF16, FP8_E4M3, FP4_E2M1] {
+            let n = 257; // odd: exercises the nibble tail
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 8.0).collect();
+            let other: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let base: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let qt = QTensor::from_slice(&[n], &src, f);
+            let mut dec = vec![0.0f32; n];
+            qt.decode_into(&mut dec);
+
+            let mut a = base.clone();
+            add_assign_packed(&mut a, &qt);
+            let mut want = base.clone();
+            crate::tensor::add_assign(&mut want, &dec);
+            assert_eq!(a, want, "add_assign_packed {f:?}");
+
+            let mut b = base.clone();
+            add_sub_assign_packed(&mut b, &qt, &other);
+            let mut want = base.clone();
+            crate::tensor::add_sub_assign(&mut want, &dec, &other);
+            assert_eq!(b, want, "add_sub_assign_packed {f:?}");
+
+            let mut c = base.clone();
+            add_sub_assign_packed_rev(&mut c, &other, &qt);
+            let mut want = base.clone();
+            crate::tensor::add_sub_assign(&mut want, &other, &dec);
+            assert_eq!(c, want, "add_sub_assign_packed_rev {f:?}");
+
+            let mut d = base.clone();
+            accumulate_quantized_packed(&mut d, &qt, FP8_E4M3);
+            let mut want = base.clone();
+            quant::accumulate_quantized(&mut want, &dec, FP8_E4M3);
+            assert_eq!(d, want, "accumulate_quantized_packed {f:?}");
+        }
+    }
+
+    #[test]
+    fn to_tensor_roundtrips_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 0.25, 0.0, -0.0, 9.5]).unwrap();
+        let qt = QTensor::from_tensor(&t, FP32);
+        assert_eq!(qt.to_tensor(), t);
+        assert_eq!(qt.shape(), &[2, 3]);
+        assert_eq!(qt.len(), 6);
+        assert!(!qt.is_empty());
+    }
+}

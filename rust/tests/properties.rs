@@ -7,8 +7,20 @@ use pahq::metrics::{auc_pessimistic, confusion, RocPoint};
 use pahq::model::{Channel, Graph};
 use pahq::patching::PatchMask;
 use pahq::quant::{self, Format};
+use pahq::tensor::{
+    accumulate_quantized_packed, add_assign, add_assign_packed, add_sub_assign,
+    add_sub_assign_packed, add_sub_assign_packed_rev, QTensor,
+};
 use pahq::util::json::Json;
 use pahq::util::rng::Rng;
+
+const PACKED_FORMATS: [Format; 5] = [
+    quant::FP16,
+    quant::BF16,
+    quant::FP8_E4M3,
+    quant::FP8_E5M2,
+    quant::FP4_E2M1,
+];
 
 fn random_graph(rng: &mut Rng) -> Graph {
     Graph {
@@ -334,10 +346,269 @@ fn batched_sweep_is_bit_identical_to_serial() {
 }
 
 #[test]
+fn qtensor_pack_unpack_bit_identical_to_fq() {
+    // For every packed format: decode(encode(x)) must equal fq(x) BIT FOR
+    // BIT over ±0, f32 subnormals (FTZ region), format subnormals, the
+    // emin boundary, saturation bounds, ties-to-even cases at several
+    // binades, and a seeded random magnitude sweep.
+    let mut rng = Rng::new(2024);
+    for f in PACKED_FORMATS {
+        let m = f.mbits as i32;
+        let emin = f.emin as i32;
+        let emax = ((f.maxv.to_bits() >> 23) as i32) - 127;
+        let mut xs: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1e-45, // smallest f32 subnormal: flushed to zero
+            -1e-42,
+            1e-38, // still below MIN_POSITIVE: flushed
+            f.maxv,
+            -f.maxv,
+            f.maxv * 0.999,
+            f.maxv * 2.0, // saturates
+            f32::MAX,
+            -f32::MAX,
+            f32::INFINITY, // clamps to maxv
+            f32::NEG_INFINITY,
+            2f32.powi(emin), // smallest normal
+            -(2f32.powi(emin)),
+            2f32.powi(emin) * 1.5,
+            2f32.powi(emin - m),     // smallest format subnormal
+            2f32.powi(emin - m - 1), // rounds: below half the quantum
+            2f32.powi(emin - m) * 0.75,
+            2f32.powi(emax),
+        ];
+        // ties-to-even: x = (j + 0.5) * 2^(e - m) sits exactly between
+        // lattice neighbours j and j+1 (even j rounds down, odd rounds up)
+        for e in [emin, (emin + emax) / 2, emax] {
+            let scale = 2f32.powi(e - m);
+            for j in [1 << m, (1 << m) + 1, (2 << m) - 2, (2 << m) - 1] {
+                xs.push((j as f32 + 0.5) * scale);
+                xs.push(-((j as f32 + 0.5) * scale));
+            }
+        }
+        // random sweep over ~the full exponent range
+        for _ in 0..4000 {
+            let e = rng.f32() * 300.0 - 150.0;
+            let sign = if rng.below(2) == 0 { -1.0 } else { 1.0 };
+            xs.push(sign * e.exp2() * (1.0 + rng.f32()));
+        }
+        let qt = QTensor::from_slice(&[xs.len()], &xs, f);
+        assert_eq!(qt.bytes(), f.bytes_for(xs.len()), "native payload width {f:?}");
+        let mut dec = vec![0.0f32; xs.len()];
+        qt.decode_into(&mut dec);
+        for (i, (&x, &y)) in xs.iter().zip(&dec).enumerate() {
+            let want = quant::fq(x, f);
+            assert_eq!(
+                y.to_bits(),
+                want.to_bits(),
+                "{f:?}[{i}]: decode(encode({x:e})) = {y:e}, fq = {want:e}"
+            );
+        }
+        // element access agrees with bulk decode
+        for i in (0..xs.len()).step_by(97) {
+            assert_eq!(qt.get(i).to_bits(), dec[i].to_bits());
+        }
+    }
+}
+
+#[test]
+fn packed_kernels_bitwise_match_plain_ops() {
+    // The fused packed kernels must produce exactly the floats the old
+    // "decode whole tensor, then f32 op" path produced — on every format
+    // (including the f32 passthrough payload) and on odd lengths that
+    // exercise the fp4 nibble tail.
+    let mut rng = Rng::new(515);
+    for f in [quant::FP32, quant::BF16, quant::FP8_E4M3, quant::FP4_E2M1] {
+        for n in [1usize, 2, 7, 64, 255] {
+            let raw: Vec<f32> = (0..n).map(|_| rng.normal() * 8.0).collect();
+            let other: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let qt = QTensor::from_slice(&[n], &raw, f);
+            let mut dec = vec![0.0f32; n];
+            qt.decode_into(&mut dec);
+
+            let mut a = base.clone();
+            add_assign_packed(&mut a, &qt);
+            let mut aw = base.clone();
+            add_assign(&mut aw, &dec);
+            assert_eq!(a, aw, "add_assign_packed {f:?} n={n}");
+
+            let mut b = base.clone();
+            add_sub_assign_packed(&mut b, &qt, &other);
+            let mut bw = base.clone();
+            add_sub_assign(&mut bw, &dec, &other);
+            assert_eq!(b, bw, "add_sub_assign_packed {f:?} n={n}");
+
+            let mut c = base.clone();
+            add_sub_assign_packed_rev(&mut c, &other, &qt);
+            let mut cw = base.clone();
+            add_sub_assign(&mut cw, &other, &dec);
+            assert_eq!(c, cw, "add_sub_assign_packed_rev {f:?} n={n}");
+
+            let mut d = base.clone();
+            accumulate_quantized_packed(&mut d, &qt, quant::FP8_E4M3);
+            let mut dw = base.clone();
+            quant::accumulate_quantized(&mut dw, &dec, quant::FP8_E4M3);
+            assert_eq!(d, dw, "accumulate_quantized_packed {f:?} n={n}");
+        }
+    }
+}
+
+#[test]
+fn packed_corrupt_cache_keeps_sweep_bit_identity() {
+    // The tentpole invariant at the sweep level: running the greedy sweep
+    // over a damage surface assembled from a PACKED corrupt cache gives
+    // (a) bit-identical results to the same surface assembled from the
+    // decoded f32 cache, and (b) bit-identical serial vs batched
+    // outcomes — the two guarantees compose.
+    use pahq::acdc::sweep::{self, Candidate, FnScorer, SweepMode, SweepOutcome};
+
+    fn run_sweep<F>(
+        score: F,
+        n_channels: usize,
+        plan: &[Vec<Candidate>],
+        tau: f32,
+        mode: SweepMode,
+        workers: usize,
+    ) -> SweepOutcome
+    where
+        F: Fn(&PatchMask, Option<&Candidate>) -> f32 + Sync,
+    {
+        let mut scorer = FnScorer { score, workers };
+        sweep::sweep(&mut scorer, n_channels, plan, tau, true, mode).unwrap()
+    }
+
+    fn assert_same(a: &SweepOutcome, b: &SweepOutcome, what: &str) {
+        assert_eq!(a.removed, b.removed, "{what}: removed mask");
+        assert_eq!(a.removed_count, b.removed_count, "{what}: removed count");
+        assert_eq!(
+            a.final_metric.to_bits(),
+            b.final_metric.to_bits(),
+            "{what}: final metric bits"
+        );
+        assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace length");
+        for (x, y) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(x.removed, y.removed, "{what}: decision");
+            assert_eq!(x.metric.to_bits(), y.metric.to_bits(), "{what}: metric bits");
+        }
+    }
+
+    let mut rng = Rng::new(777);
+    for round in 0..6u64 {
+        let g = random_graph(&mut rng);
+        let channels = g.channels();
+        let n_nodes = g.n_nodes();
+        let dim = 24usize;
+        let clean: Vec<Vec<f32>> = (0..n_nodes)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let corrupt_raw: Vec<Vec<f32>> = (0..n_nodes)
+            .map(|_| (0..dim).map(|_| rng.normal() * 2.0).collect())
+            .collect();
+        let fmt = [quant::FP8_E4M3, quant::BF16, quant::FP4_E2M1][rng.below(3)];
+        let packed: Vec<QTensor> = corrupt_raw
+            .iter()
+            .map(|v| QTensor::from_slice(&[dim], v, fmt))
+            .collect();
+        let decoded: Vec<Vec<f32>> = packed
+            .iter()
+            .map(|q| {
+                let mut o = vec![0.0f32; dim];
+                q.decode_into(&mut o);
+                o
+            })
+            .collect();
+        let probe: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+
+        // mini residual assembly: per channel, clean base + patch swaps
+        // (packed or plain), scored by a fixed probe vector
+        let assemble_damage = |mask: &PatchMask, cand: Option<&Candidate>, use_packed: bool| {
+            let mut total = 0.0f32;
+            for (ci, ch) in channels.iter().enumerate() {
+                let srcs = g.sources(*ch);
+                let mut bits = mask.mask(ci);
+                if let Some(c) = cand {
+                    if c.chan == ci {
+                        bits |= 1u128 << c.src;
+                    }
+                }
+                let mut acc = vec![0.0f32; dim];
+                for &s in &srcs {
+                    add_assign(&mut acc, &clean[s]);
+                }
+                for &s in &srcs {
+                    if bits >> s & 1 == 1 {
+                        if use_packed {
+                            add_sub_assign_packed(&mut acc, &packed[s], &clean[s]);
+                        } else {
+                            add_sub_assign(&mut acc, &decoded[s], &clean[s]);
+                        }
+                    }
+                }
+                total += pahq::tensor::dot(&acc, &probe);
+            }
+            total
+        };
+
+        // plan mirrors acdc::sweep_plan: reverse-topological channels,
+        // reversed sources within each channel
+        let mut order = channels.clone();
+        order.reverse();
+        let mut plan: Vec<Vec<Candidate>> = Vec::new();
+        for ch in order {
+            let ci = channels.iter().position(|c| *c == ch).unwrap();
+            let mut srcs = g.sources(ch);
+            srcs.reverse();
+            plan.push(srcs.into_iter().map(|src| Candidate { chan: ci, src, hi: None }).collect());
+        }
+        let tau = [0.0f32, 0.2, 1.0][rng.below(3)];
+
+        let serial_packed = run_sweep(
+            |m: &PatchMask, c: Option<&Candidate>| assemble_damage(m, c, true),
+            channels.len(),
+            &plan,
+            tau,
+            SweepMode::Serial,
+            1,
+        );
+        let serial_plain = run_sweep(
+            |m: &PatchMask, c: Option<&Candidate>| assemble_damage(m, c, false),
+            channels.len(),
+            &plan,
+            tau,
+            SweepMode::Serial,
+            1,
+        );
+        assert_same(&serial_packed, &serial_plain, &format!("round {round}: packed vs plain"));
+        for workers in [2usize, 4] {
+            let batched = run_sweep(
+                |m: &PatchMask, c: Option<&Candidate>| assemble_damage(m, c, true),
+                channels.len(),
+                &plan,
+                tau,
+                SweepMode::Batched { workers },
+                workers,
+            );
+            assert_same(
+                &serial_packed,
+                &batched,
+                &format!("round {round}: serial vs batched[{workers}]"),
+            );
+        }
+    }
+}
+
+#[test]
 fn format_bits_roundtrip_and_storage_sanity() {
     for bits in [4u32, 8, 16, 32] {
         let f = Format::by_bits(bits);
-        assert!(f.storage_bytes() <= 4);
+        // packed storage width round-trips the nominal bit width exactly
+        assert_eq!(f.storage_bits() as u32, bits);
         if bits < 32 {
             assert!(!f.is_passthrough());
             // coarser formats have strictly larger quanta at 1.0
