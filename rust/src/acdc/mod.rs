@@ -66,8 +66,8 @@ impl AcdcConfig {
 }
 
 /// Does this policy investigate edges at high precision (PAHQ)?
-fn hi_node_for(policy: &Policy, src: NodeId) -> Option<NodeId> {
-    if policy.name.starts_with("pahq") {
+pub(crate) fn hi_node_for(policy: &Policy, src: NodeId) -> Option<NodeId> {
+    if policy.is_pahq() {
         Some(src)
     } else {
         None
@@ -156,10 +156,12 @@ pub fn run_pool(pool: &mut EnginePool, cfg: &AcdcConfig) -> Result<AcdcResult> {
 
 /// [`BatchScorer`] over a single engine: batches score sequentially but
 /// share the speculative-mask setup and the per-`hi` reference
-/// memoization (see [`PatchedForward::damage_batch`]).
-struct EngineScorer<'a> {
-    engine: &'a mut PatchedForward,
-    objective: Objective,
+/// memoization (see [`PatchedForward::damage_batch`]). Public so the
+/// [`crate::discovery`] layer can drive any method's candidate plan
+/// through the same machinery.
+pub struct EngineScorer<'a> {
+    pub engine: &'a mut PatchedForward,
+    pub objective: Objective,
 }
 
 impl BatchScorer for EngineScorer<'_> {
@@ -182,14 +184,7 @@ pub fn paper_thresholds() -> Vec<f32> {
 
 /// Edge labels of the discovered circuit (debugging / CLI output).
 pub fn kept_edge_labels(engine: &PatchedForward, result: &AcdcResult) -> Vec<String> {
-    engine
-        .graph
-        .edges()
-        .iter()
-        .zip(&result.kept)
-        .filter(|(_, &k)| k)
-        .map(|(e, _)| e.label(&engine.graph))
-        .collect()
+    crate::discovery::kept_labels(engine, &result.kept)
 }
 
 /// Convenience: kept flags for a caller-supplied edge order.

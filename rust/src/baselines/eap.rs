@@ -17,6 +17,7 @@
 
 use anyhow::Result;
 
+use crate::discovery::{self, Discovery, DiscoveryConfig, RunRecord, Session, Task};
 use crate::metrics::Objective;
 use crate::patching::PatchedForward;
 use crate::tensor::dot;
@@ -45,6 +46,32 @@ pub fn scores(engine: &mut PatchedForward, obj: Objective) -> Result<Vec<f32>> {
         out.push(s.abs());
     }
     Ok(out)
+}
+
+/// EAP through the unified [`Discovery`] interface: attribution scores
+/// from one FP32 forward+backward pair order the candidates, then the
+/// shared verification sweep prunes them under the session policy —
+/// giving EAP the PAHQ mixed-precision evaluations and the batched
+/// multi-worker scoring ACDC already has.
+pub struct Eap;
+
+impl Discovery for Eap {
+    fn name(&self) -> &'static str {
+        "eap"
+    }
+
+    fn discover(
+        &self,
+        session: &mut Session,
+        _task: &Task,
+        cfg: &DiscoveryConfig,
+    ) -> Result<RunRecord> {
+        let t0 = std::time::Instant::now();
+        let obj = cfg.objective;
+        let s = discovery::scored_at_fp32(session, cfg, |e| scores(e, obj))?;
+        let plan = discovery::ordered_plan(&session.engine, &s);
+        session.run_plan(self.name(), cfg, &plan, t0)
+    }
 }
 
 #[cfg(test)]

@@ -12,6 +12,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::discovery::{self, Discovery, DiscoveryConfig, RunRecord, Session, Task};
 use crate::model::Graph;
 use crate::patching::PatchedForward;
 use crate::runtime::Input;
@@ -213,6 +214,34 @@ fn reset_invalid(g: &Graph, masks: &mut Masks) {
                 }
             }
         }
+    }
+}
+
+/// Edge Pruning through the unified [`Discovery`] interface: masks
+/// trained at FP32 (`cfg.ep_steps` Adam steps, fixed evaluation batch)
+/// order the candidates by learned mask value; the shared sweep
+/// verifies them under the session policy — replacing the fixed 0.5
+/// binarization with the same damage-thresholded decision every other
+/// method uses.
+pub struct EdgePruning;
+
+impl Discovery for EdgePruning {
+    fn name(&self) -> &'static str {
+        "edge-pruning"
+    }
+
+    fn discover(
+        &self,
+        session: &mut Session,
+        _task: &Task,
+        cfg: &DiscoveryConfig,
+    ) -> Result<RunRecord> {
+        let t0 = std::time::Instant::now();
+        let ep_cfg = EpConfig { steps: cfg.ep_steps, ..Default::default() };
+        let s =
+            discovery::scored_at_fp32(session, cfg, |e| Ok(train(e, &ep_cfg)?.edge_scores))?;
+        let plan = discovery::ordered_plan(&session.engine, &s);
+        session.run_plan(self.name(), cfg, &plan, t0)
     }
 }
 

@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 
+use crate::discovery::{self, Discovery, DiscoveryConfig, RunRecord, Session, Task};
 use crate::metrics::Objective;
 use crate::patching::PatchedForward;
 use crate::tensor::dot;
@@ -53,6 +54,32 @@ pub fn scores(engine: &mut PatchedForward, obj: Objective) -> Result<Vec<f32>> {
             _ => max * 2.0, // embed / MLP sources are never pruned by HISP
         })
         .collect())
+}
+
+/// HISP through the unified [`Discovery`] interface: head-importance
+/// scores (at FP32) order the candidates, the shared sweep verifies
+/// them under the session policy. Embed / MLP sources carry +max
+/// importance, so they are verified last — HISP cannot prune them
+/// cheaply, matching the method's head-only semantics.
+pub struct Hisp;
+
+impl Discovery for Hisp {
+    fn name(&self) -> &'static str {
+        "hisp"
+    }
+
+    fn discover(
+        &self,
+        session: &mut Session,
+        _task: &Task,
+        cfg: &DiscoveryConfig,
+    ) -> Result<RunRecord> {
+        let t0 = std::time::Instant::now();
+        let obj = cfg.objective;
+        let s = discovery::scored_at_fp32(session, cfg, |e| scores(e, obj))?;
+        let plan = discovery::ordered_plan(&session.engine, &s);
+        session.run_plan(self.name(), cfg, &plan, t0)
+    }
 }
 
 #[cfg(test)]

@@ -5,6 +5,12 @@
 //! All gradient-based baselines consume AOT gradient artifacts (lowered by
 //! `aot.py` from the pure-jnp reference path) executed through PJRT; the
 //! Rust side owns the optimization loops and scoring.
+//!
+//! Each baseline also implements [`crate::discovery::Discovery`]
+//! (`Eap` / `Hisp` / `Sp` / `EdgePruning`): attribution scores order the
+//! candidate edges, and the shared `acdc::sweep` verification sweep —
+//! with the session's PAHQ precision policy and batched multi-worker
+//! scoring — decides the kept set.
 
 pub mod eap;
 pub mod edge_pruning;
@@ -12,4 +18,8 @@ pub mod grads;
 pub mod hisp;
 pub mod sp;
 
+pub use eap::Eap;
+pub use edge_pruning::EdgePruning;
 pub use grads::GradBundle;
+pub use hisp::Hisp;
+pub use sp::Sp;

@@ -13,6 +13,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::discovery::{self, Discovery, DiscoveryConfig, RunRecord, Session, Task};
 use crate::model::Graph;
 use crate::patching::PatchedForward;
 use crate::runtime::Input;
@@ -93,6 +94,31 @@ pub fn scores(engine: &mut PatchedForward, cfg: &SpConfig) -> Result<Vec<f32>> {
     let (gates, _) = train_gates(engine, cfg)?;
     let g = engine.graph.clone();
     Ok(g.edges().iter().map(|e| gates[e.src]).collect())
+}
+
+/// SP through the unified [`Discovery`] interface: gates trained at
+/// FP32 (`cfg.sp_steps` projected-gradient steps) order the candidates
+/// by the source node's learned gate; the shared sweep verifies them
+/// under the session policy.
+pub struct Sp;
+
+impl Discovery for Sp {
+    fn name(&self) -> &'static str {
+        "sp"
+    }
+
+    fn discover(
+        &self,
+        session: &mut Session,
+        _task: &Task,
+        cfg: &DiscoveryConfig,
+    ) -> Result<RunRecord> {
+        let t0 = std::time::Instant::now();
+        let sp_cfg = SpConfig { steps: cfg.sp_steps, ..Default::default() };
+        let s = discovery::scored_at_fp32(session, cfg, |e| scores(e, &sp_cfg))?;
+        let plan = discovery::ordered_plan(&session.engine, &s);
+        session.run_plan(self.name(), cfg, &plan, t0)
+    }
 }
 
 #[cfg(test)]

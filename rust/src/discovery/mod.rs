@@ -1,0 +1,453 @@
+//! The unified circuit-discovery pipeline: one [`Discovery`] trait for
+//! ACDC and every baseline, all running on the shared
+//! [`crate::patching::PatchedForward`] session and the batched
+//! [`crate::acdc::sweep`] engine.
+//!
+//! The paper's generality claim — PAHQ "readily integrates with existing
+//! edge-based circuit discovery techniques by modifying the attention
+//! computation mechanism" — is this module. Every method reduces to:
+//!
+//! 1. **order** the candidate edges (reverse-topological for ACDC,
+//!    attribution-ranked for EAP / HISP / SP / Edge-Pruning, scored at
+//!    FP32 exactly as the paper runs the gradient baselines), then
+//! 2. **verify** them through the shared greedy sweep: each edge is
+//!    tentatively patched with its corrupted activation and pruned for
+//!    good when the metric damage increase stays below τ.
+//!
+//! Because step 2 is `acdc::sweep`, every method inherits the session's
+//! precision [`Policy`] (under PAHQ the investigated edge's source runs
+//! at FP32 via the per-call `hi` override) *and* the batched
+//! multi-worker scoring with its serial-vs-batched bit-identity
+//! guarantee — property-tested per method in `tests/discovery.rs`.
+//!
+//! Every run is packaged as a schema-versioned [`RunRecord`] artifact
+//! ([`record`]): the machine-readable trace `pahq run` / `pahq sweep` /
+//! `pahq bench --json` emit and CI's perf gate diffs.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::acdc::sweep::{self, Candidate, EnginePool, SweepMode, SweepOutcome};
+use crate::acdc::EngineScorer;
+use crate::gpu_sim::memory::{memory_model, MethodKind};
+use crate::gpu_sim::RealArch;
+use crate::metrics::Objective;
+use crate::patching::{PatchMask, PatchedForward, Policy};
+
+pub mod record;
+
+pub use record::{kept_hash, Faithfulness, RunRecord, SCHEMA_VERSION};
+
+/// The discovery workload: which model and which task's dataset.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub model: String,
+    pub task: String,
+}
+
+impl Task {
+    pub fn new(model: &str, task: &str) -> Task {
+        Task { model: model.to_string(), task: task.to_string() }
+    }
+}
+
+/// Method-agnostic discovery configuration: the threshold, objective,
+/// precision policy, and evaluation schedule shared by every method,
+/// plus the training budgets of the learned baselines.
+#[derive(Clone, Debug)]
+pub struct DiscoveryConfig {
+    pub tau: f32,
+    pub objective: Objective,
+    /// session precision policy (FP32 / RTN-Q / PAHQ); the verification
+    /// sweep of *every* method runs under it
+    pub policy: Policy,
+    /// evaluation schedule; kept sets are bit-identical across modes
+    pub sweep: SweepMode,
+    /// record the per-step trace (Fig. 3) into the `RunRecord`
+    pub record_trace: bool,
+    /// SP gate-training steps
+    pub sp_steps: usize,
+    /// Edge-Pruning mask-training steps
+    pub ep_steps: usize,
+}
+
+impl DiscoveryConfig {
+    pub fn new(tau: f32, objective: Objective, policy: Policy) -> DiscoveryConfig {
+        DiscoveryConfig {
+            tau,
+            objective,
+            policy,
+            sweep: SweepMode::Serial,
+            record_trace: false,
+            sp_steps: 80,
+            ep_steps: 60,
+        }
+    }
+
+    pub fn with_sweep(mut self, mode: SweepMode) -> DiscoveryConfig {
+        self.sweep = mode;
+        self
+    }
+}
+
+/// A configured discovery session: the primary engine plus — for
+/// batched multi-worker sweeps — a pool of numerically identical
+/// replicas. Owns the state every [`Discovery`] implementation scores
+/// against.
+pub struct Session {
+    pub engine: PatchedForward,
+    pool: Option<EnginePool>,
+    task: Task,
+    /// kept flags of the last `run_plan` (graph.edges() order); the
+    /// `RunRecord` stores only their hash, so faithfulness evaluation
+    /// reads them from here
+    last_kept: Option<Vec<bool>>,
+}
+
+impl Session {
+    pub fn new(task: &Task) -> Result<Session> {
+        Ok(Session {
+            engine: PatchedForward::new(&task.model, &task.task)?,
+            pool: None,
+            task: task.clone(),
+            last_kept: None,
+        })
+    }
+
+    /// Apply a config: set the engine's precision session and (re)build
+    /// the worker pool when the sweep schedule asks for one.
+    pub fn configure(&mut self, cfg: &DiscoveryConfig) -> Result<()> {
+        self.engine.set_session(cfg.policy.clone())?;
+        self.pool = match cfg.sweep {
+            SweepMode::Batched { workers } if workers > 1 => Some(EnginePool::new(
+                &self.task.model,
+                &self.task.task,
+                &cfg.policy,
+                workers,
+                cfg.objective,
+            )?),
+            _ => None,
+        };
+        Ok(())
+    }
+
+    /// Kept flags of the last discovery run (graph.edges() order).
+    pub fn last_kept(&self) -> Option<&[bool]> {
+        self.last_kept.as_deref()
+    }
+
+    /// Total wall-clock spent inside PJRT (primary engine + pool).
+    pub fn pjrt_time(&self) -> std::time::Duration {
+        self.engine.pjrt_time()
+            + self.pool.as_ref().map(|p| p.pjrt_time()).unwrap_or_default()
+    }
+
+    /// Drive a candidate plan through the shared sweep machinery —
+    /// pooled multi-worker scoring when configured, single-engine
+    /// otherwise. The reduction is identical either way.
+    fn sweep_over(
+        &mut self,
+        plan: &[Vec<Candidate>],
+        cfg: &DiscoveryConfig,
+    ) -> Result<SweepOutcome> {
+        let n_channels = self.engine.n_channels();
+        match &mut self.pool {
+            Some(pool) => {
+                if pool.objective() != cfg.objective {
+                    bail!(
+                        "engine pool scores {:?} but the config asks for {:?}",
+                        pool.objective(),
+                        cfg.objective
+                    );
+                }
+                sweep::sweep(pool, n_channels, plan, cfg.tau, cfg.record_trace, cfg.sweep)
+            }
+            None => {
+                let mut scorer =
+                    EngineScorer { engine: &mut self.engine, objective: cfg.objective };
+                sweep::sweep(&mut scorer, n_channels, plan, cfg.tau, cfg.record_trace, cfg.sweep)
+            }
+        }
+    }
+
+    /// Run a method's candidate plan through the verification sweep and
+    /// package the outcome as a [`RunRecord`]. `t0` is the method's own
+    /// start time so attribution/training cost counts into the wall.
+    pub fn run_plan(
+        &mut self,
+        method: &str,
+        cfg: &DiscoveryConfig,
+        plan: &[Vec<Candidate>],
+        t0: Instant,
+    ) -> Result<RunRecord> {
+        let out = self.sweep_over(plan, cfg)?;
+        let wall = t0.elapsed();
+        let edges = self.engine.graph.edges();
+        let kept: Vec<bool> = edges
+            .iter()
+            .map(|e| !out.removed.get(self.engine.chan_index(e.dst), e.src))
+            .collect();
+        let n_kept = kept.iter().filter(|&&k| k).count();
+        let fp = self.engine.measured_footprint();
+        let sim_bytes = RealArch::by_name(&self.task.model)
+            .map(|arch| memory_model(&arch, MethodKind::of_policy(&cfg.policy)).total());
+        let rec = RunRecord {
+            schema_version: SCHEMA_VERSION,
+            method: method.to_string(),
+            policy: cfg.policy.name.clone(),
+            model: self.task.model.clone(),
+            task: self.task.task.clone(),
+            objective: cfg.objective.key().to_string(),
+            tau: cfg.tau as f64,
+            sweep: cfg.sweep.label(),
+            workers: cfg.sweep.workers(),
+            n_edges: kept.len(),
+            n_kept,
+            kept_hash: record::kept_hash(&kept),
+            n_evals: out.n_evals,
+            final_metric: out.final_metric as f64,
+            wall_seconds: wall.as_secs_f64(),
+            pjrt_seconds: self.pjrt_time().as_secs_f64(),
+            sim_bytes,
+            measured_weight_bytes: fp.weights(),
+            measured_cache_bytes: fp.act_cache,
+            faithfulness: None,
+            trace: sample_trace(&out.trace),
+        };
+        self.last_kept = Some(kept);
+        Ok(rec)
+    }
+
+    /// Score the last discovered circuit against the FP32 ground truth
+    /// and fill `rec.faithfulness`. `normalized` additionally runs the
+    /// clean / fully-corrupted / circuit forwards for the Hanna et al.
+    /// normalized faithfulness (two extra forward passes). Restores the
+    /// config's session policy before returning.
+    ///
+    /// The ground truth is an exhaustive per-edge FP32 sweep on first
+    /// use, but it is cached on disk per (model, task, objective) —
+    /// every later call (and every other table in the harness) reads
+    /// the cache.
+    pub fn evaluate_faithfulness(
+        &mut self,
+        cfg: &DiscoveryConfig,
+        rec: &mut RunRecord,
+        normalized: bool,
+    ) -> Result<()> {
+        let Some(kept) = self.last_kept.clone() else {
+            bail!("no discovery has run in this session yet");
+        };
+        self.engine.set_session(Policy::fp32())?;
+        let gt = crate::eval::ground_truth(
+            &mut self.engine,
+            &self.task.model,
+            &self.task.task,
+            cfg.objective,
+        )?;
+        let p = crate::metrics::confusion(&kept, &gt.member);
+        let accuracy = crate::metrics::edge_accuracy(&kept, &gt.member);
+        let normalized = if normalized {
+            let m_clean =
+                crate::metrics::logit_diff(&self.engine.clean_logits, &self.engine.examples);
+            let all_corrupt = complement_mask(&self.engine, &vec![false; kept.len()]);
+            let corrupt_logits = self.engine.forward(&all_corrupt, None)?;
+            let m_corrupt = crate::metrics::logit_diff(&corrupt_logits, &self.engine.examples);
+            let circuit_mask = complement_mask(&self.engine, &kept);
+            let circuit_logits = self.engine.forward(&circuit_mask, None)?;
+            let m_circ = crate::metrics::logit_diff(&circuit_logits, &self.engine.examples);
+            Some(crate::metrics::faithfulness(m_circ, m_clean, m_corrupt) as f64)
+        } else {
+            None
+        };
+        rec.faithfulness =
+            Some(Faithfulness { tpr: p.tpr, fpr: p.fpr, accuracy, normalized });
+        self.engine.set_session(cfg.policy.clone())?;
+        Ok(())
+    }
+}
+
+/// A circuit-discovery method: everything `pahq run`, the experiment
+/// harness, and CI drive through one interface.
+pub trait Discovery {
+    /// Stable method name (`acdc`, `eap`, `hisp`, `sp`, `edge-pruning`).
+    fn name(&self) -> &'static str;
+
+    /// Discover a circuit on a configured session and report it as a
+    /// machine-readable [`RunRecord`].
+    fn discover(
+        &self,
+        session: &mut Session,
+        task: &Task,
+        cfg: &DiscoveryConfig,
+    ) -> Result<RunRecord>;
+}
+
+/// ACDC itself through the common interface: the reverse-topological
+/// plan of [`crate::acdc::sweep_plan`], verified by the shared sweep.
+pub struct Acdc;
+
+impl Discovery for Acdc {
+    fn name(&self) -> &'static str {
+        "acdc"
+    }
+
+    fn discover(
+        &self,
+        session: &mut Session,
+        _task: &Task,
+        cfg: &DiscoveryConfig,
+    ) -> Result<RunRecord> {
+        let t0 = Instant::now();
+        let plan = crate::acdc::sweep_plan(&session.engine);
+        session.run_plan(self.name(), cfg, &plan, t0)
+    }
+}
+
+/// Candidate plan of a score-based method: every edge, ordered by
+/// ascending attribution score (least-important first — the direction
+/// the chain speculation is built for), ties broken by edge index so
+/// the order is fully deterministic. The `hi` override follows the
+/// session policy exactly as ACDC's plan does.
+pub fn ordered_plan(engine: &PatchedForward, scores: &[f32]) -> Vec<Vec<Candidate>> {
+    let edges = engine.graph.edges();
+    debug_assert_eq!(scores.len(), edges.len());
+    let policy = engine.session();
+    let mut order: Vec<usize> = (0..edges.len()).collect();
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]).then(a.cmp(&b)));
+    vec![order
+        .into_iter()
+        .map(|i| Candidate {
+            chan: engine.chan_index(edges[i].dst),
+            src: edges[i].src,
+            hi: crate::acdc::hi_node_for(policy, edges[i].src),
+        })
+        .collect()]
+}
+
+/// Run a method's attribution scoring at FP32 (the paper's protocol for
+/// every gradient baseline), then restore the session policy so the
+/// verification sweep runs under it. A no-op toggle when the session is
+/// already FP32.
+pub fn scored_at_fp32<F>(
+    session: &mut Session,
+    cfg: &DiscoveryConfig,
+    score: F,
+) -> Result<Vec<f32>>
+where
+    F: FnOnce(&mut PatchedForward) -> Result<Vec<f32>>,
+{
+    let toggle = cfg.policy.name != Policy::fp32().name;
+    if toggle {
+        session.engine.set_session(Policy::fp32())?;
+    }
+    let scores = score(&mut session.engine);
+    if toggle {
+        session.engine.set_session(cfg.policy.clone())?;
+    }
+    scores
+}
+
+/// Edge labels of a kept set (`graph.edges()` order) — debugging / CLI
+/// output for any method's discovered circuit.
+pub fn kept_labels(engine: &PatchedForward, kept: &[bool]) -> Vec<String> {
+    engine
+        .graph
+        .edges()
+        .iter()
+        .zip(kept)
+        .filter(|(_, &k)| k)
+        .map(|(e, _)| e.label(&engine.graph))
+        .collect()
+}
+
+/// Build a patch mask that knocks out everything *except* the kept
+/// edges (evaluating the discovered circuit, paper Eq. 19).
+pub fn complement_mask(engine: &PatchedForward, kept: &[bool]) -> PatchMask {
+    let mut m = engine.empty_patches();
+    for (e, &k) in engine.graph.edges().iter().zip(kept) {
+        if !k {
+            m.set(engine.chan_index(e.dst), e.src, true);
+        }
+    }
+    m
+}
+
+/// Sample a sweep trace down to ≤64 (step, edges_remaining) points.
+fn sample_trace(trace: &[crate::acdc::TraceStep]) -> Vec<(usize, usize)> {
+    if trace.is_empty() {
+        return Vec::new();
+    }
+    let step = trace.len().div_ceil(64);
+    let mut out: Vec<(usize, usize)> =
+        trace.iter().step_by(step).map(|t| (t.step, t.edges_remaining)).collect();
+    let last = trace.last().unwrap();
+    if out.last() != Some(&(last.step, last.edges_remaining)) {
+        out.push((last.step, last.edges_remaining));
+    }
+    out
+}
+
+/// Every registered method name, in the paper's comparison order.
+pub const METHOD_NAMES: [&str; 5] = ["acdc", "eap", "hisp", "sp", "edge-pruning"];
+
+/// Look a method up by its CLI name.
+pub fn by_name(name: &str) -> Result<Box<dyn Discovery>> {
+    Ok(match name {
+        "acdc" => Box::new(Acdc),
+        "eap" => Box::new(crate::baselines::eap::Eap),
+        "hisp" => Box::new(crate::baselines::hisp::Hisp),
+        "sp" => Box::new(crate::baselines::sp::Sp),
+        "edge-pruning" | "ep" => Box::new(crate::baselines::edge_pruning::EdgePruning),
+        other => bail!("unknown discovery method '{other}' ({})", METHOD_NAMES.join("|")),
+    })
+}
+
+/// One-stop discovery: build a session, configure it, run the method.
+pub fn discover(method: &str, task: &Task, cfg: &DiscoveryConfig) -> Result<RunRecord> {
+    let m = by_name(method)?;
+    let mut session = Session::new(task)?;
+    session.configure(cfg)?;
+    m.discover(&mut session, task, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_every_method() {
+        for name in METHOD_NAMES {
+            let m = by_name(name).unwrap();
+            assert_eq!(m.name(), name);
+        }
+        assert_eq!(by_name("ep").unwrap().name(), "edge-pruning");
+        assert!(by_name("pahq").is_err(), "pahq is a policy, not a method");
+    }
+
+    #[test]
+    fn config_defaults_are_serial() {
+        let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::fp32());
+        assert_eq!(cfg.sweep, SweepMode::Serial);
+        assert!(!cfg.record_trace);
+        let cfg = cfg.with_sweep(SweepMode::Batched { workers: 4 });
+        assert_eq!(cfg.sweep.workers(), 4);
+    }
+
+    #[test]
+    fn trace_sampling_keeps_endpoints() {
+        let trace: Vec<crate::acdc::TraceStep> = (0..300usize)
+            .map(|i| crate::acdc::TraceStep {
+                step: i + 1,
+                edges_remaining: 300 - i,
+                metric: 0.0,
+                removed: true,
+            })
+            .collect();
+        let s = sample_trace(&trace);
+        assert!(s.len() <= 65);
+        assert_eq!(s.first().unwrap(), &(1, 300));
+        assert_eq!(s.last().unwrap(), &(300, 1));
+        assert!(sample_trace(&[]).is_empty());
+    }
+}

@@ -1,0 +1,302 @@
+//! `RunRecord` — the schema-versioned, machine-readable artifact every
+//! discovery run emits (`pahq run` / `pahq sweep` / `pahq bench --json`).
+//!
+//! The record is what CI gates on: `scripts/bench_gate.py` diffs the
+//! wall-time / measured-memory fields against the committed
+//! `BENCH_baseline.json`, and `scripts/check_schema.py` validates the
+//! shape against `docs/run_record.schema.json`. Bump
+//! [`SCHEMA_VERSION`] on any breaking field change and update the
+//! checked-in schema in the same commit.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Version of the `RunRecord` JSON shape. Mirrored by
+/// `docs/run_record.schema.json`.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// Edge-classification quality of a discovered circuit against the FP32
+/// ground truth (optional: only when the ground truth is available).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Faithfulness {
+    pub tpr: f64,
+    pub fpr: f64,
+    /// edge-classification accuracy (Tab. 2)
+    pub accuracy: f64,
+    /// Hanna et al. normalized faithfulness of the circuit's task metric
+    /// (Tab. 6); only computed when the caller asks for the extra
+    /// forward passes
+    pub normalized: Option<f64>,
+}
+
+/// One machine-readable discovery run: method, policy, task, the
+/// kept-edge set (as a stable hash), the cost of finding it (evals,
+/// wall, PJRT), and both memory views (simulated paper-scale bytes and
+/// measured packed bytes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunRecord {
+    pub schema_version: usize,
+    /// discovery method name (`acdc`, `eap`, `hisp`, `sp`, `edge-pruning`)
+    pub method: String,
+    /// session policy name (`acdc-fp32`, `rtn-q-8b`, `pahq-8b`, ...)
+    pub policy: String,
+    pub model: String,
+    pub task: String,
+    /// objective key (`kl` | `task`)
+    pub objective: String,
+    pub tau: f64,
+    /// sweep schedule label (`serial` | `batched[N]`)
+    pub sweep: String,
+    pub workers: usize,
+    pub n_edges: usize,
+    pub n_kept: usize,
+    /// FNV-1a-64 hash (16 hex chars) of the kept flags in
+    /// `graph.edges()` order — two runs discovered the same circuit iff
+    /// the hashes match
+    pub kept_hash: String,
+    pub n_evals: usize,
+    pub final_metric: f64,
+    pub wall_seconds: f64,
+    pub pjrt_seconds: f64,
+    /// simulated footprint at paper scale (`gpu_sim::memory`), when the
+    /// model maps to a [`crate::gpu_sim::RealArch`]
+    pub sim_bytes: Option<usize>,
+    /// measured packed weight-plane bytes this session held resident
+    pub measured_weight_bytes: usize,
+    /// measured packed corrupted-activation cache bytes
+    pub measured_cache_bytes: usize,
+    pub faithfulness: Option<Faithfulness>,
+    /// sampled (step, edges_remaining) pairs of the sweep trace (Fig. 3);
+    /// empty unless the run recorded a trace
+    pub trace: Vec<(usize, usize)>,
+}
+
+/// Stable hash of a kept-edge set: FNV-1a over the flags in
+/// `graph.edges()` order.
+pub fn kept_hash(kept: &[bool]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &k in kept {
+        h ^= 1 + k as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::from("run_record")),
+            ("schema_version", Json::from(self.schema_version)),
+            ("method", Json::from(self.method.clone())),
+            ("policy", Json::from(self.policy.clone())),
+            ("model", Json::from(self.model.clone())),
+            ("task", Json::from(self.task.clone())),
+            ("objective", Json::from(self.objective.clone())),
+            ("tau", Json::from(self.tau)),
+            ("sweep", Json::from(self.sweep.clone())),
+            ("workers", Json::from(self.workers)),
+            ("n_edges", Json::from(self.n_edges)),
+            ("n_kept", Json::from(self.n_kept)),
+            ("kept_hash", Json::from(self.kept_hash.clone())),
+            ("n_evals", Json::from(self.n_evals)),
+            ("final_metric", Json::from(self.final_metric)),
+            ("wall_seconds", Json::from(self.wall_seconds)),
+            ("pjrt_seconds", Json::from(self.pjrt_seconds)),
+            ("measured_weight_bytes", Json::from(self.measured_weight_bytes)),
+            ("measured_cache_bytes", Json::from(self.measured_cache_bytes)),
+        ];
+        if let Some(b) = self.sim_bytes {
+            pairs.push(("sim_bytes", Json::from(b)));
+        }
+        if let Some(f) = &self.faithfulness {
+            let mut fp = vec![
+                ("tpr", Json::from(f.tpr)),
+                ("fpr", Json::from(f.fpr)),
+                ("accuracy", Json::from(f.accuracy)),
+            ];
+            if let Some(n) = f.normalized {
+                fp.push(("normalized", Json::from(n)));
+            }
+            pairs.push(("faithfulness", obj(fp)));
+        }
+        if !self.trace.is_empty() {
+            pairs.push((
+                "trace",
+                Json::Arr(
+                    self.trace
+                        .iter()
+                        .map(|&(s, e)| Json::Arr(vec![Json::from(s), Json::from(e)]))
+                        .collect(),
+                ),
+            ));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        if j.get("kind")?.as_str()? != "run_record" {
+            bail!("not a run_record");
+        }
+        let version = j.get("schema_version")?.as_usize()?;
+        if version != SCHEMA_VERSION {
+            bail!("run_record schema v{version}, this build reads v{SCHEMA_VERSION}");
+        }
+        let faithfulness = match j.opt("faithfulness") {
+            None => None,
+            Some(f) => Some(Faithfulness {
+                tpr: f.get("tpr")?.as_f64()?,
+                fpr: f.get("fpr")?.as_f64()?,
+                accuracy: f.get("accuracy")?.as_f64()?,
+                normalized: match f.opt("normalized") {
+                    None => None,
+                    Some(n) => Some(n.as_f64()?),
+                },
+            }),
+        };
+        let trace = match j.opt("trace") {
+            None => Vec::new(),
+            Some(t) => t
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr()?;
+                    if p.len() != 2 {
+                        bail!("trace point is not a [step, edges] pair");
+                    }
+                    Ok((p[0].as_usize()?, p[1].as_usize()?))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(RunRecord {
+            schema_version: version,
+            method: j.get("method")?.as_str()?.to_string(),
+            policy: j.get("policy")?.as_str()?.to_string(),
+            model: j.get("model")?.as_str()?.to_string(),
+            task: j.get("task")?.as_str()?.to_string(),
+            objective: j.get("objective")?.as_str()?.to_string(),
+            tau: j.get("tau")?.as_f64()?,
+            sweep: j.get("sweep")?.as_str()?.to_string(),
+            workers: j.get("workers")?.as_usize()?,
+            n_edges: j.get("n_edges")?.as_usize()?,
+            n_kept: j.get("n_kept")?.as_usize()?,
+            kept_hash: j.get("kept_hash")?.as_str()?.to_string(),
+            n_evals: j.get("n_evals")?.as_usize()?,
+            final_metric: j.get("final_metric")?.as_f64()?,
+            wall_seconds: j.get("wall_seconds")?.as_f64()?,
+            pjrt_seconds: j.get("pjrt_seconds")?.as_f64()?,
+            sim_bytes: match j.opt("sim_bytes") {
+                None => None,
+                Some(b) => Some(b.as_usize()?),
+            },
+            measured_weight_bytes: j.get("measured_weight_bytes")?.as_usize()?,
+            measured_cache_bytes: j.get("measured_cache_bytes")?.as_usize()?,
+            faithfulness,
+            trace,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, self.to_json().dump())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<RunRecord> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    /// measured weights + cache
+    pub fn measured_total_bytes(&self) -> usize {
+        self.measured_weight_bytes + self.measured_cache_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunRecord {
+        RunRecord {
+            schema_version: SCHEMA_VERSION,
+            method: "eap".into(),
+            policy: "pahq-8b".into(),
+            model: "redwood2l-sim".into(),
+            task: "ioi".into(),
+            objective: "kl".into(),
+            tau: 0.01,
+            sweep: "batched[4]".into(),
+            workers: 4,
+            n_edges: 1024,
+            n_kept: 37,
+            kept_hash: kept_hash(&[true, false, true]),
+            n_evals: 1061,
+            final_metric: 0.0425,
+            wall_seconds: 12.5,
+            pjrt_seconds: 9.75,
+            sim_bytes: Some(4_210_000_000),
+            measured_weight_bytes: 123_456,
+            measured_cache_bytes: 7_890,
+            faithfulness: Some(Faithfulness {
+                tpr: 0.93,
+                fpr: 0.02,
+                accuracy: 0.97,
+                normalized: Some(0.88),
+            }),
+            trace: vec![(1, 1024), (512, 600), (1024, 37)],
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let r = sample();
+        let back = RunRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        // optional fields absent round-trip too
+        let mut bare = sample();
+        bare.sim_bytes = None;
+        bare.faithfulness = None;
+        bare.trace.clear();
+        let back = RunRecord::from_json(&bare.to_json()).unwrap();
+        assert_eq!(bare, back);
+    }
+
+    #[test]
+    fn rejects_wrong_kind_and_version() {
+        let r = sample();
+        let mut j = r.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("kind".into(), Json::from("bench_snapshot"));
+        }
+        assert!(RunRecord::from_json(&j).is_err());
+        let mut j = r.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema_version".into(), Json::from(999usize));
+        }
+        assert!(RunRecord::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn kept_hash_is_order_and_value_sensitive() {
+        let a = kept_hash(&[true, false, true]);
+        assert_eq!(a.len(), 16);
+        assert_eq!(a, kept_hash(&[true, false, true]));
+        assert_ne!(a, kept_hash(&[false, true, true]));
+        assert_ne!(a, kept_hash(&[true, false]));
+        assert_ne!(kept_hash(&[]), kept_hash(&[false]));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let r = sample();
+        let dir = std::env::temp_dir().join("pahq_run_record_test");
+        let path = dir.join("rec.json");
+        r.save(&path).unwrap();
+        assert_eq!(RunRecord::load(&path).unwrap(), r);
+        std::fs::remove_file(&path).ok();
+    }
+}

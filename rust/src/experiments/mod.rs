@@ -2,22 +2,31 @@
 //! (DESIGN.md §5 maps each to its modules). Every function prints the
 //! reproduced artifact and saves a CSV under `results/`.
 //!
+//! Discovery-driven tables render from [`RunRecord`]s produced by the
+//! unified [`crate::discovery`] pipeline — one shared
+//! build-session/run/score body (`discover_run`) instead of the ~10
+//! hand-rolled engine loops this module used to carry. Threshold-sweep
+//! artifacts (ROC / AUC) still drive `eval::sweep_*` directly: a sweep
+//! is many circuits, not one record.
+//!
 //! `quick = true` shrinks sweeps (fewer thresholds, smallest model) so the
 //! whole suite runs in `cargo bench` time; `quick = false` regenerates the
 //! full-size artifacts recorded in EXPERIMENTS.md.
 
 use anyhow::{bail, Result};
 
-use crate::acdc::{self, AcdcConfig, EnginePool, SweepMode};
+use crate::acdc::{self, AcdcConfig, SweepMode};
 use crate::baselines::{eap, edge_pruning, hisp, sp};
+use crate::discovery::{self, Discovery, DiscoveryConfig, RunRecord, Session, Task};
 use crate::eval::{self, GroundTruth};
-use crate::gpu_sim::memory::{memory_model, MethodKind};
 use crate::gpu_sim::{CostModel, RealArch};
-use crate::metrics::{answer_accuracy, edge_accuracy, faithfulness, logit_diff, Objective};
-use crate::patching::{PatchMask, PatchedForward, Policy};
+use crate::metrics::{answer_accuracy, Objective};
+use crate::patching::{PatchedForward, Policy};
 use crate::quant::{Format, FP32, FP8_E4M3};
-use crate::report::{ascii_chart, human_bytes, mmss, Table};
+use crate::report::{ascii_chart, human_bytes, mmss, results_dir, Table};
 use crate::scheduler::{predict_run, predict_sweep, StreamConfig};
+
+pub use crate::discovery::complement_mask;
 
 pub const BASE_MODELS: [&str; 3] = ["gpt2s-sim", "attn4l-sim", "redwood2l-sim"];
 pub const SCALE_MODELS: [&str; 3] = ["gpt2m-sim", "gpt2l-sim", "gpt2xl-sim"];
@@ -32,22 +41,41 @@ fn thresholds(quick: bool) -> Vec<f32> {
     }
 }
 
-/// Build a patch mask that knocks out everything *except* the kept edges
-/// (evaluating the discovered circuit, paper Eq. 19).
-pub fn complement_mask(engine: &PatchedForward, kept: &[bool]) -> PatchMask {
-    let mut m = engine.empty_patches();
-    for (e, &k) in engine.graph.edges().iter().zip(kept) {
-        if !k {
-            m.set(engine.chan_index(e.dst), e.src, true);
-        }
-    }
-    m
-}
-
 fn fp32_gt(model: &str, task: &str, obj: Objective) -> Result<(PatchedForward, GroundTruth)> {
     let mut engine = PatchedForward::new(model, task)?;
     let gt = eval::ground_truth(&mut engine, model, task, obj)?;
     Ok((engine, gt))
+}
+
+/// The shared body of every discovery-driven table: build a session,
+/// run `method` under `cfg`, and — when `faith` is set — score the
+/// circuit against the FP32 ground truth (`Some(true)` additionally
+/// computes the Hanna et al. normalized faithfulness).
+fn discover_run(
+    model: &str,
+    task: &str,
+    method: &str,
+    cfg: &DiscoveryConfig,
+    faith: Option<bool>,
+) -> Result<RunRecord> {
+    let t = Task::new(model, task);
+    let m = discovery::by_name(method)?;
+    let mut session = Session::new(&t)?;
+    session.configure(cfg)?;
+    let mut rec = m.discover(&mut session, &t, cfg)?;
+    if let Some(normalized) = faith {
+        session.evaluate_faithfulness(cfg, &mut rec, normalized)?;
+    }
+    Ok(rec)
+}
+
+/// The Tab. 1/2/3/6 method triple: label + session policy, ACDC verified.
+fn method_policies() -> [(&'static str, Policy); 3] {
+    [
+        ("acdc", Policy::fp32()),
+        ("rtn-q", Policy::rtn(FP8_E4M3)),
+        ("pahq", Policy::pahq(FP8_E4M3)),
+    ]
 }
 
 // ---------------------------------------------------------------------------
@@ -63,11 +91,7 @@ pub fn figure1(quick: bool) -> Result<()> {
         &["method", "tau", "fpr", "tpr"],
     );
     let mut series: Vec<(&str, Vec<(f64, f64)>)> = Vec::new();
-    for (name, policy) in [
-        ("acdc", Policy::fp32()),
-        ("rtn-q", Policy::rtn(FP8_E4M3)),
-        ("pahq", Policy::pahq(FP8_E4M3)),
-    ] {
+    for (name, policy) in method_policies() {
         let sweep = eval::sweep_acdc(&mut engine, policy, Objective::Kl, &gt, &taus)?;
         let pts: Vec<(f64, f64)> = sweep.points.iter().map(|p| (p.fpr, p.tpr)).collect();
         for (p, (tau, _)) in sweep.points.iter().zip(&sweep.circuits) {
@@ -148,19 +172,13 @@ pub fn table2(quick: bool) -> Result<()> {
         &["threshold", "method", "metric", "task", "model", "accuracy"],
     );
     for &tau in &taus {
-        for (method, mk) in [("acdc", 0), ("rtn-q", 1), ("pahq", 2)] {
+        for (method, policy) in method_policies() {
             for obj in [Objective::Kl, Objective::LogitDiff] {
                 for task in tasks {
                     for model in models {
-                        let (mut engine, gt) = fp32_gt(model, task, obj)?;
-                        let policy = match mk {
-                            0 => Policy::fp32(),
-                            1 => Policy::rtn(FP8_E4M3),
-                            _ => Policy::pahq(FP8_E4M3),
-                        };
-                        engine.set_session(policy)?;
-                        let res = acdc::run(&mut engine, &AcdcConfig::new(tau, obj))?;
-                        let acc = edge_accuracy(&res.kept, &gt.member);
+                        let cfg = DiscoveryConfig::new(tau, obj, policy.clone());
+                        let rec = discover_run(model, task, "acdc", &cfg, Some(false))?;
+                        let acc = rec.faithfulness.as_ref().map(|f| f.accuracy).unwrap_or(0.0);
                         table.row(vec![
                             format!("{tau}"),
                             method.into(),
@@ -194,30 +212,23 @@ pub fn table3(quick: bool) -> Result<()> {
     let models: &[&str] = if quick { &["redwood2l-sim"] } else { &BASE_MODELS };
     for model in models {
         let arch = RealArch::by_name(model).unwrap();
-        for (name, kind, policy) in [
-            ("ACDC", MethodKind::AcdcFp32, Policy::fp32()),
-            ("RTN-Q", MethodKind::RtnQ, Policy::rtn(FP8_E4M3)),
-            ("PAHQ", MethodKind::Pahq, Policy::pahq(FP8_E4M3)),
-        ] {
-            let cfg =
-                if kind == MethodKind::Pahq { StreamConfig::FULL } else { StreamConfig::NONE };
-            let sim = predict_run(&arch, &cost, kind, cfg);
-            let mem = memory_model(&arch, kind);
-            // real measurement on the tiny sim model
-            let mut engine = PatchedForward::new(model, "ioi")?;
-            engine.set_session(policy)?;
-            let res = acdc::run(&mut engine, &AcdcConfig::new(0.001, Objective::Kl))?;
-            // measured packed footprint of the tiny sim session — the
-            // real-bytes counterpart of the simulated "sim mem" column
-            let fp = engine.measured_footprint();
+        for (name, policy) in method_policies() {
+            let streams =
+                if policy.is_pahq() { StreamConfig::FULL } else { StreamConfig::NONE };
+            let kind = crate::gpu_sim::memory::MethodKind::of_policy(&policy);
+            let sim = predict_run(&arch, &cost, kind, streams);
+            // real measurement on the tiny sim model — the record's
+            // measured bytes are the real-bytes counterpart of "sim mem"
+            let cfg = DiscoveryConfig::new(0.001, Objective::Kl, policy);
+            let rec = discover_run(model, "ioi", "acdc", &cfg, None)?;
             table.row(vec![
                 arch.name.into(),
-                name.into(),
+                name.to_uppercase(),
                 mmss(sim.total_minutes),
-                format!("{:.2}", mem.total_gb()),
-                format!("{:.1}", res.wall.as_secs_f64()),
-                format!("{}", res.n_evals),
-                human_bytes(fp.total()),
+                format!("{:.2}", rec.sim_bytes.unwrap_or(0) as f64 / 1e9),
+                format!("{:.1}", rec.wall_seconds),
+                format!("{}", rec.n_evals),
+                human_bytes(rec.measured_total_bytes()),
             ]);
         }
     }
@@ -242,7 +253,7 @@ pub fn table4(_quick: bool) -> Result<()> {
         (StreamConfig::SPLIT_ONLY, "no", "yes"),
         (StreamConfig::NONE, "no", "no"),
     ] {
-        let p = predict_run(&arch, &cost, MethodKind::Pahq, cfg);
+        let p = predict_run(&arch, &cost, crate::gpu_sim::memory::MethodKind::Pahq, cfg);
         table.row(vec![
             load.into(),
             split.into(),
@@ -308,24 +319,17 @@ pub fn table6(quick: bool) -> Result<()> {
             }
             continue;
         }
-        let mut engine = PatchedForward::new(model, task)?;
-        // clean / fully-corrupted references at FP32
-        let m_clean = logit_diff(&engine.clean_logits, &engine.examples);
-        let all_corrupt = complement_mask(&engine, &vec![false; engine.graph.n_edges()]);
-        let corrupt_logits = engine.forward(&all_corrupt, None)?;
-        let m_corrupt = logit_diff(&corrupt_logits, &engine.examples);
-        for (i, policy) in [Policy::fp32(), Policy::rtn(FP8_E4M3), Policy::pahq(FP8_E4M3)]
-            .into_iter()
-            .enumerate()
-        {
-            engine.set_session(policy)?;
-            let res = acdc::run(&mut engine, &AcdcConfig::new(0.01, Objective::Kl))?;
-            // evaluate the discovered circuit at FP32 (the circuit is the
-            // deliverable; its faithfulness is measured on the real model)
-            engine.set_session(Policy::fp32())?;
-            let logits = engine.forward(&res.removed, None)?;
-            let m_circ = logit_diff(&logits, &engine.examples);
-            rows[i].push(format!("{:.2}", faithfulness(m_circ, m_clean, m_corrupt)));
+        for (i, (_, policy)) in method_policies().into_iter().enumerate() {
+            let cfg = DiscoveryConfig::new(0.01, Objective::Kl, policy);
+            // the discovered circuit is the deliverable; its normalized
+            // faithfulness is measured on the FP32 model
+            let rec = discover_run(model, task, "acdc", &cfg, Some(true))?;
+            let norm = rec
+                .faithfulness
+                .as_ref()
+                .and_then(|f| f.normalized)
+                .unwrap_or(f64::NAN);
+            rows[i].push(format!("{norm:.2}"));
         }
     }
     for row in rows {
@@ -346,26 +350,30 @@ pub fn table7(quick: bool) -> Result<()> {
         &["model", "batch", "KL div (PAHQ)", "KL div (EAP)"],
     );
     for model in models {
-        let mut engine = match PatchedForward::new(model, "ioi") {
-            Ok(e) => e,
-            Err(e) => {
-                bail!("scale model {model} unavailable: {e}");
-            }
+        let t = Task::new(model, "ioi");
+        let mut session = match Session::new(&t) {
+            Ok(s) => s,
+            Err(e) => bail!("scale model {model} unavailable: {e}"),
         };
-        // PAHQ circuit and its KL (evaluated at FP32, like Tab. 6)
-        engine.set_session(Policy::pahq(FP8_E4M3))?;
-        let res = acdc::run(&mut engine, &AcdcConfig::new(0.01, Objective::Kl))?;
-        engine.set_session(Policy::fp32())?;
-        let kl_pahq = engine.damage(&res.removed, None, Objective::Kl)?;
+        // PAHQ circuit through the unified pipeline...
+        let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
+        session.configure(&cfg)?;
+        let rec = discovery::Acdc.discover(&mut session, &t, &cfg)?;
+        let kept_pahq = session.last_kept().unwrap_or(&[]).to_vec();
+        // ...and its KL evaluated at FP32, like Tab. 6
+        session.engine.set_session(Policy::fp32())?;
+        let mask = complement_mask(&session.engine, &kept_pahq);
+        let kl_pahq = session.engine.damage(&mask, None, Objective::Kl)?;
         // EAP circuit of the same size
-        let scores = eap::scores(&mut engine, Objective::Kl)?;
+        let engine = &mut session.engine;
+        let scores = eap::scores(engine, Objective::Kl)?;
         let mut order: Vec<usize> = (0..scores.len()).collect();
-        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
         let mut kept = vec![false; scores.len()];
-        for &i in order.iter().take(res.n_kept) {
+        for &i in order.iter().take(rec.n_kept) {
             kept[i] = true;
         }
-        let mask = complement_mask(&engine, &kept);
+        let mask = complement_mask(engine, &kept);
         let kl_eap = engine.damage(&mask, None, Objective::Kl)?;
         table.row(vec![
             model.to_string(),
@@ -400,7 +408,9 @@ pub fn table8(quick: bool) -> Result<()> {
                 ..Default::default()
             };
             let res = edge_pruning::train(&mut engine, &cfg)?;
-            // binarize at 0.5 and evaluate the circuit at FP32
+            // binarize at 0.5 and evaluate the circuit at FP32 (the
+            // original method's protocol, deliberately NOT the unified
+            // verification sweep — Tab. 8 compares against it)
             let kept: Vec<bool> = res.edge_scores.iter().map(|&v| v >= 0.5).collect();
             let mask = complement_mask(&engine, &kept);
             let kl = engine.damage(&mask, None, Objective::Kl)?;
@@ -412,18 +422,21 @@ pub fn table8(quick: bool) -> Result<()> {
             ]);
         }
     }
-    // PAHQ reference row
-    let mut engine = PatchedForward::new(model, "ioi")?;
-    engine.set_session(Policy::pahq(FP8_E4M3))?;
-    let t0 = std::time::Instant::now();
-    let res = acdc::run(&mut engine, &AcdcConfig::new(0.01, Objective::Kl))?;
-    engine.set_session(Policy::fp32())?;
-    let kl = engine.damage(&res.removed, None, Objective::Kl)?;
+    // PAHQ reference row, through the unified pipeline
+    let t = Task::new(model, "ioi");
+    let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
+    let mut session = Session::new(&t)?;
+    session.configure(&cfg)?;
+    let rec = discovery::Acdc.discover(&mut session, &t, &cfg)?;
+    let kept = session.last_kept().unwrap_or(&[]).to_vec();
+    session.engine.set_session(Policy::fp32())?;
+    let mask = complement_mask(&session.engine, &kept);
+    let kl = session.engine.damage(&mask, None, Objective::Kl)?;
     table.row(vec![
         "-".into(),
         "PAHQ ACDC".into(),
         format!("{kl:.2}"),
-        format!("{:.0}", t0.elapsed().as_secs_f64()),
+        format!("{:.0}", rec.wall_seconds),
     ]);
     table.print();
     table.save_csv("table8_edge_pruning")?;
@@ -435,25 +448,20 @@ pub fn table8(quick: bool) -> Result<()> {
 
 pub fn figure3(quick: bool) -> Result<()> {
     let model = if quick { "redwood2l-sim" } else { "gpt2s-sim" };
-    let mut engine = PatchedForward::new(model, "ioi")?;
-    let mut cfg = AcdcConfig::new(0.01, Objective::Kl);
-    cfg.record_trace = true;
-
     let mut table = Table::new(
         &format!("Figure 3: edge count vs step, {model} / IOI (tau=0.01)"),
         &["method", "step", "edges_remaining"],
     );
-    let mut series = Vec::new();
+    let mut series: Vec<(&str, Vec<(f64, f64)>)> = Vec::new();
     for (name, policy) in [("acdc-fp32", Policy::fp32()), ("pahq", Policy::pahq(FP8_E4M3))] {
-        engine.set_session(policy)?;
-        let res = acdc::run(&mut engine, &cfg)?;
-        let pts: Vec<(f64, f64)> = res
-            .trace
-            .iter()
-            .map(|t| (t.step as f64, t.edges_remaining as f64))
-            .collect();
-        for t in res.trace.iter().step_by((res.trace.len() / 40).max(1)) {
-            table.row(vec![name.into(), t.step.to_string(), t.edges_remaining.to_string()]);
+        let mut cfg = DiscoveryConfig::new(0.01, Objective::Kl, policy);
+        cfg.record_trace = true;
+        // the record's sampled trace is the figure's data source
+        let rec = discover_run(model, "ioi", "acdc", &cfg, None)?;
+        let pts: Vec<(f64, f64)> =
+            rec.trace.iter().map(|&(s, e)| (s as f64, e as f64)).collect();
+        for &(step, edges) in &rec.trace {
+            table.row(vec![name.into(), step.to_string(), edges.to_string()]);
         }
         series.push((name, pts));
     }
@@ -555,6 +563,7 @@ pub fn figure4(quick: bool) -> Result<()> {
 /// Predicted serial-vs-batched sweep times per architecture, plus — when
 /// artifacts are built — a real measured serial-vs-batched ACDC run on
 /// the tiny sim model validating the bit-identity contract end to end.
+/// The real runs are saved as `RunRecord` JSONs under `results/`.
 pub fn sweep_scaling(quick: bool) -> Result<()> {
     let cost = CostModel::default();
     let archs: &[&str] = if quick { &["gpt2"] } else { &["gpt2", "gpt2-medium", "gpt2-large"] };
@@ -577,7 +586,7 @@ pub fn sweep_scaling(quick: bool) -> Result<()> {
             let p = predict_sweep(
                 &arch,
                 &cost,
-                MethodKind::Pahq,
+                crate::gpu_sim::memory::MethodKind::Pahq,
                 StreamConfig::FULL,
                 mode,
                 removal_rate,
@@ -595,42 +604,45 @@ pub fn sweep_scaling(quick: bool) -> Result<()> {
     table.save_csv("sweep_scaling")?;
 
     // Real measurement when the sim-model artifacts exist: the batched
-    // sweep must reproduce the serial circuit bit for bit.
-    match PatchedForward::new("redwood2l-sim", "ioi") {
-        Ok(mut engine) => {
-            let cfg = AcdcConfig::new(0.01, Objective::Kl);
-            let serial = acdc::run(&mut engine, &cfg)?;
-            let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-            let mut pool = EnginePool::new(
-                "redwood2l-sim",
-                "ioi",
-                &Policy::fp32(),
-                workers,
-                Objective::Kl,
-            )?;
-            let batched = acdc::run_pool(
-                &mut pool,
-                &cfg.with_sweep(SweepMode::Batched { workers }),
-            )?;
-            assert_eq!(serial.kept, batched.kept, "batched sweep diverged from serial");
+    // sweep must reproduce the serial circuit bit for bit. Both runs are
+    // emitted as RunRecord artifacts for the perf trajectory.
+    let task = Task::new("redwood2l-sim", "ioi");
+    let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::fp32());
+    match discovery::discover("acdc", &task, &cfg) {
+        Ok(serial) => {
+            let workers =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            let batched_cfg =
+                cfg.clone().with_sweep(SweepMode::Batched { workers });
+            let batched = discovery::discover("acdc", &task, &batched_cfg)?;
+            assert_eq!(
+                serial.kept_hash, batched.kept_hash,
+                "batched sweep diverged from serial"
+            );
             println!(
                 "\nreal redwood2l-sim/ioi: serial {:.2}s ({} evals) vs batched[{workers}] \
-                 {:.2}s ({} evals) — kept sets identical ({} edges)",
-                serial.wall.as_secs_f64(),
+                 {:.2}s ({} evals) — kept sets identical ({} edges, hash {})",
+                serial.wall_seconds,
                 serial.n_evals,
-                batched.wall.as_secs_f64(),
+                batched.wall_seconds,
                 batched.n_evals,
                 serial.n_kept,
+                serial.kept_hash,
             );
             // measured per-replica footprint: the batched pool pays the
             // packed planes + cache once per worker
-            let fp = pool.primary().measured_footprint();
             println!(
                 "measured per-engine memory ({}): planes {} + cache {} = {} (x{workers} replicas)",
-                fp.method,
-                human_bytes(fp.weights()),
-                human_bytes(fp.act_cache),
-                human_bytes(fp.total()),
+                batched.policy,
+                human_bytes(batched.measured_weight_bytes),
+                human_bytes(batched.measured_cache_bytes),
+                human_bytes(batched.measured_total_bytes()),
+            );
+            serial.save(&results_dir().join("sweep_serial_record.json"))?;
+            batched.save(&results_dir().join("sweep_batched_record.json"))?;
+            println!(
+                "run records: results/sweep_serial_record.json, \
+                 results/sweep_batched_record.json"
             );
         }
         Err(e) => println!("\n(real sweep measurement skipped: {e})"),

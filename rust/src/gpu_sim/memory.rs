@@ -37,6 +37,21 @@ pub enum MethodKind {
     Pahq,
 }
 
+impl MethodKind {
+    /// Simulated-memory method of a session policy — derived from the
+    /// policy's own structure so the mapping cannot drift from
+    /// [`crate::patching::Policy`]'s constructors.
+    pub fn of_policy(pol: &crate::patching::Policy) -> MethodKind {
+        if pol.attn_low.is_passthrough() && pol.other.is_passthrough() {
+            MethodKind::AcdcFp32
+        } else if pol.quantize_logits {
+            MethodKind::RtnQ
+        } else {
+            MethodKind::Pahq
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct MemoryBreakdown {
     pub framework: usize,

@@ -6,8 +6,10 @@
 //!
 //! - **L3 (this crate)** — the coordinator: the ACDC greedy edge sweep, the
 //!   PAHQ predictive three-stream scheduler over a discrete-event GPU
-//!   simulator, the baselines (RTN-Q / EAP / HISP / SP / Edge-Pruning), the
-//!   metrics/evaluation stack, and the table/figure harness.
+//!   simulator, the baselines (RTN-Q / EAP / HISP / SP / Edge-Pruning)
+//!   unified behind the [`discovery::Discovery`] trait, the
+//!   metrics/evaluation stack, the schema-versioned [`discovery::RunRecord`]
+//!   artifacts CI gates on, and the table/figure harness.
 //! - **L2 (python/compile/model.py, build-time only)** — the
 //!   graph-decomposed transformer, AOT-lowered per layer to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)** — Pallas kernels for
@@ -24,6 +26,7 @@
 
 pub mod acdc;
 pub mod baselines;
+pub mod discovery;
 pub mod eval;
 pub mod gpu_sim;
 pub mod metrics;

@@ -1,36 +1,49 @@
 //! `pahq` — the coordinator CLI.
 //!
 //! Subcommands:
-//!   run         one circuit-discovery run (model/task/method/tau/metric)
+//!   run         one circuit-discovery run (model/task/method/tau/metric);
+//!               every run emits a machine-readable RunRecord JSON
 //!   table N     regenerate paper Table N (1..8)
 //!   figure N    regenerate paper Figure N (1, 3, 4)
 //!   all         regenerate every table and figure
 //!   groundtruth compute/cache the FP32 reference circuit
 //!   sim         DES runtime/memory prediction for a method on real arches
+//!   bench       deterministic perf snapshot (sweep hot path + packed
+//!               memory) for CI's perf gate — see scripts/bench_gate.py
 //!   info        model/artifact inventory
+
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use pahq::acdc::{self, AcdcConfig, EnginePool, SweepMode};
-use pahq::eval;
+use pahq::acdc::sweep::SyntheticSurface;
+use pahq::acdc::{self, Candidate, FnScorer, SweepMode};
+use pahq::discovery::{self, DiscoveryConfig, RunRecord, Session, Task};
 use pahq::experiments;
 use pahq::gpu_sim::memory::{memory_model, MethodKind};
 use pahq::gpu_sim::{CostModel, RealArch};
 use pahq::metrics::Objective;
-use pahq::model::Manifest;
-use pahq::patching::{PatchedForward, Policy};
-use pahq::quant::Format;
-use pahq::report::{human_bytes, mmss, Table};
+use pahq::model::{Graph, Manifest};
+use pahq::patching::{PatchMask, PatchedForward, Policy};
+use pahq::quant::{Format, BF16, FP8_E4M3};
+use pahq::report::{human_bytes, mmss, results_dir, Table};
 use pahq::scheduler::{predict_run, predict_sweep, StreamConfig};
+use pahq::tensor::QTensor;
 use pahq::util::cli::Args;
+use pahq::util::json::{obj, Json};
+use pahq::util::rng::Rng;
 
 const USAGE: &str = "\
 pahq — PAHQ: accelerating automated circuit discovery (paper reproduction)
 
 USAGE:
-  pahq run [--model M] [--task T] [--method acdc|rtn-q|pahq] [--tau X]
-           [--metric kl|task] [--bits 4|8|16] [--trace]
-           [--sweep serial|batched] [--workers N]
+  pahq run [--model M] [--task T]
+           [--method acdc|rtn-q|pahq|eap|hisp|sp|edge-pruning]
+           [--policy fp32|rtn|pahq] [--tau X] [--metric kl|task]
+           [--bits 4|8|16] [--trace] [--sweep serial|batched]
+           [--workers N] [--json OUT.json]
   pahq table <1|2|3|4|5|6|7|8> [--quick]
   pahq figure <1|3|4> [--quick]
   pahq all [--quick]
@@ -38,7 +51,18 @@ USAGE:
   pahq sim [--arch gpt2] [--method acdc|rtn-q|pahq] [--streams full|load|split|none]
            [--sweep serial|batched] [--workers N] [--removal-rate P]
   pahq sweep [--quick]
+  pahq bench [--json OUT.json] [--quick]
   pahq info
+
+Flags: --workers N   worker threads for --sweep batched (default: available
+                     parallelism); the batched schedule is bit-identical to
+                     serial at any worker count
+       --json PATH   where to write the machine-readable RunRecord /
+                     bench-snapshot artifact (run: defaults to
+                     rust/results/run_<method>_<policy>_<model>_<task>.json;
+                     bench: defaults to rust/results/bench.json)
+       --policy P    precision policy for the baseline methods
+                     (default pahq; acdc|rtn-q|pahq imply theirs)
 
 Defaults: --model gpt2s-sim --task ioi --method pahq --tau 0.01 --metric kl
           --sweep serial --workers <available parallelism>
@@ -57,6 +81,7 @@ fn main() -> Result<()> {
         "sweep" => experiments::sweep_scaling(args.flag("quick")),
         "groundtruth" => cmd_groundtruth(&args),
         "sim" => cmd_sim(&args),
+        "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         _ => {
             print!("{USAGE}");
@@ -66,91 +91,79 @@ fn main() -> Result<()> {
 }
 
 fn objective(args: &Args) -> Result<Objective> {
-    Ok(match args.get_or("metric", "kl") {
-        "kl" => Objective::Kl,
-        "task" => Objective::LogitDiff,
-        other => bail!("unknown metric '{other}' (kl|task)"),
-    })
+    Objective::parse(args.get_or("metric", "kl"))
 }
 
-fn policy(args: &Args) -> Result<Policy> {
+/// Resolve `--method` / `--policy` / `--bits` into a discovery method
+/// name plus a session policy. The classic spellings `acdc` / `rtn-q` /
+/// `pahq` are ACDC under the implied policy; the baselines default to
+/// the PAHQ policy (that is the integration this repo exists to show)
+/// and accept an explicit `--policy` override.
+fn method_policy(args: &Args) -> Result<(String, Policy)> {
     let bits = args.usize_or("bits", 8)? as u32;
-    Ok(match args.get_or("method", "pahq") {
-        "acdc" => Policy::fp32(),
-        "rtn-q" | "rtn" => Policy::rtn(Format::by_bits(bits)),
-        "pahq" => Policy::pahq(Format::by_bits(bits)),
-        other => bail!("unknown method '{other}' (acdc|rtn-q|pahq)"),
-    })
-}
-
-/// Simulated-memory method of a session policy — derived from the policy
-/// itself so the mapping cannot drift from [`policy`].
-fn method_kind(pol: &Policy) -> MethodKind {
-    if pol.attn_low.is_passthrough() && pol.other.is_passthrough() {
-        MethodKind::AcdcFp32
-    } else if pol.quantize_logits {
-        MethodKind::RtnQ
-    } else {
-        MethodKind::Pahq
-    }
+    let fmt = Format::by_bits(bits);
+    let name = args.get_or("method", "pahq");
+    let (method, implied) = match name {
+        "acdc" => ("acdc", Policy::fp32()),
+        "rtn-q" | "rtn" => ("acdc", Policy::rtn(fmt)),
+        "pahq" => ("acdc", Policy::pahq(fmt)),
+        "eap" | "hisp" | "sp" | "edge-pruning" | "ep" => (name, Policy::pahq(fmt)),
+        other => bail!(
+            "unknown method '{other}' (acdc|rtn-q|pahq|eap|hisp|sp|edge-pruning)"
+        ),
+    };
+    let policy = match args.get("policy") {
+        None => implied,
+        Some("fp32") => Policy::fp32(),
+        Some("rtn") | Some("rtn-q") => Policy::rtn(fmt),
+        Some("pahq") => Policy::pahq(fmt),
+        Some(other) => bail!("unknown policy '{other}' (fp32|rtn|pahq)"),
+    };
+    Ok((method.to_string(), policy))
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
     let model = args.get_or("model", "gpt2s-sim");
-    let task = args.get_or("task", "ioi");
+    let task_name = args.get_or("task", "ioi");
     let tau = args.f64_or("tau", 0.01)? as f32;
     let obj = objective(args)?;
-    let pol = policy(args)?;
+    let (method_name, pol) = method_policy(args)?;
+    let method = discovery::by_name(&method_name)?;
     let sweep = args.sweep_mode()?;
     println!(
-        "discovering circuit: {model} / {task} / {} / tau={tau} / {} / sweep={}",
+        "discovering circuit: {model} / {task_name} / {} / {} / tau={tau} / {} / sweep={}",
+        method.name(),
         pol.name,
         obj.label(),
         sweep.label()
     );
 
-    let mut engine = PatchedForward::new(model, task)?;
-    engine.set_session(pol.clone())?;
-    let mut cfg = AcdcConfig::new(tau, obj);
+    let task = Task::new(model, task_name);
+    let mut cfg = DiscoveryConfig::new(tau, obj, pol.clone());
     cfg.record_trace = args.flag("trace");
     cfg.sweep = sweep;
-    let (res, pjrt) = match sweep {
-        SweepMode::Batched { workers } if workers > 1 => {
-            // replicate the engine per worker; the reduction keeps the
-            // result bit-identical to the serial sweep
-            let mut pool = EnginePool::new(model, task, &pol, workers, obj)?;
-            let res = acdc::run_pool(&mut pool, &cfg)?;
-            let pjrt = pool.pjrt_time();
-            (res, pjrt)
-        }
-        _ => {
-            let res = acdc::run(&mut engine, &cfg)?;
-            (res, engine.pjrt_time())
-        }
-    };
+    let mut session = Session::new(&task)?;
+    session.configure(&cfg)?;
+    let mut rec = method.discover(&mut session, &task, &cfg)?;
 
     println!(
         "\ncircuit: {} / {} edges kept ({} evals, {:.1}s wall, {:.1}s in PJRT)",
-        res.n_kept,
-        engine.graph.n_edges(),
-        res.n_evals,
-        res.wall.as_secs_f64(),
-        pjrt.as_secs_f64(),
+        rec.n_kept, rec.n_edges, rec.n_evals, rec.wall_seconds, rec.pjrt_seconds,
     );
-    println!("final metric damage: {:.4}", res.final_metric);
+    println!("final metric damage: {:.4}", rec.final_metric);
+    println!("kept-set hash: {}", rec.kept_hash);
 
     // simulated (paper-scale) vs measured (this process) memory, side by
     // side: the packed planes + cache make the low-precision savings real
     // bytes, not billed estimates.
-    let fp = engine.measured_footprint();
-    let fp32_ref = engine.measured_fp32_footprint();
-    if let Some(arch) = RealArch::by_name(model) {
+    if let Some(sim) = rec.sim_bytes {
         println!(
-            "memory (simulated, {} @ paper scale): {:.2} GB",
-            arch.name,
-            memory_model(&arch, method_kind(&pol)).total_gb()
+            "memory (simulated, {model} @ paper scale): {:.2} GB",
+            sim as f64 / 1e9
         );
     }
+    let fp = session.engine.measured_footprint();
+    let fp32_ref = session.engine.measured_fp32_footprint();
     let planes = fp
         .weight_planes
         .iter()
@@ -182,7 +195,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         },
     );
 
-    let labels = acdc::kept_edge_labels(&engine, &res);
+    let kept = session.last_kept().unwrap_or(&[]).to_vec();
+    let labels = discovery::kept_labels(&session.engine, &kept);
     println!("\nkept edges (first 40):");
     for l in labels.iter().take(40) {
         println!("  {l}");
@@ -190,18 +204,26 @@ fn cmd_run(args: &Args) -> Result<()> {
     if labels.len() > 40 {
         println!("  ... and {} more", labels.len() - 40);
     }
-    // compare against ground truth when available
-    engine.set_session(Policy::fp32())?;
-    if let Ok(gt) = eval::ground_truth(&mut engine, model, task, obj) {
-        let p = pahq::metrics::confusion(&res.kept, &gt.member);
-        println!(
-            "\nvs FP32 ground truth (|C*|={}): TPR={:.3} FPR={:.3} acc={:.3}",
-            gt.n_members(),
-            p.tpr,
-            p.fpr,
-            pahq::metrics::edge_accuracy(&res.kept, &gt.member)
-        );
+
+    // compare against ground truth when available; lands in the record
+    if session.evaluate_faithfulness(&cfg, &mut rec, false).is_ok() {
+        if let Some(f) = &rec.faithfulness {
+            println!(
+                "\nvs FP32 ground truth: TPR={:.3} FPR={:.3} acc={:.3}",
+                f.tpr, f.fpr, f.accuracy
+            );
+        }
     }
+
+    let path = match args.json_path() {
+        Some(p) => PathBuf::from(p),
+        None => results_dir().join(format!(
+            "run_{}_{}_{}_{}.json",
+            rec.method, rec.policy, rec.model, rec.task
+        )),
+    };
+    rec.save(&path)?;
+    println!("run record: {}", path.display());
     Ok(())
 }
 
@@ -245,7 +267,7 @@ fn cmd_groundtruth(args: &Args) -> Result<()> {
     let task = args.get_or("task", "ioi");
     let obj = objective(args)?;
     let mut engine = PatchedForward::new(model, task)?;
-    let gt = eval::ground_truth(&mut engine, model, task, obj)?;
+    let gt = pahq::eval::ground_truth(&mut engine, model, task, obj)?;
     println!(
         "{model}/{task}: {} edges, tau*={:.5}, |C*|={} ({:.1}%)",
         gt.delta.len(),
@@ -306,6 +328,265 @@ fn cmd_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// pahq bench — the deterministic perf snapshot CI's perf gate diffs
+
+/// The fixed spin emulating one evaluation's PJRT cost on the synthetic
+/// sweep hot path. Shared by the scorer AND the calibration loop so the
+/// gate's wall-time normalization cancels machine speed out
+/// (`scripts/bench_gate.py` compares `wall / n_evals / calibration`).
+#[inline(never)]
+fn bench_spin(x: f32) -> f32 {
+    let mut y = x + 1.0;
+    for _ in 0..100_000u32 {
+        y = y * 1.000_000_1 + 1e-7;
+    }
+    y
+}
+
+/// The attn-4l-shaped synthetic sweep plan (mirrors
+/// `benches/hot_paths.rs`): reverse-topological channels, PAHQ-style
+/// `hi` overrides.
+fn bench_plan(graph: &Graph) -> (usize, Vec<Vec<Candidate>>) {
+    let channels = graph.channels();
+    let mut order = channels.clone();
+    order.reverse();
+    let mut plan = Vec::new();
+    for ch in order {
+        let ci = channels.iter().position(|c| *c == ch).unwrap();
+        let mut srcs = graph.sources(ch);
+        srcs.reverse();
+        plan.push(
+            srcs.into_iter()
+                .map(|src| Candidate { chan: ci, src, hi: Some(src) })
+                .collect(),
+        );
+    }
+    (channels.len(), plan)
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let reps = if quick { 3 } else { 10 };
+    let t_total = Instant::now();
+
+    // calibration: per-spin seconds on this machine, same code path as
+    // the scorer below
+    let calib_iters = if quick { 64 } else { 256 };
+    let t0 = Instant::now();
+    for i in 0..calib_iters {
+        black_box(bench_spin(i as f32));
+    }
+    let calibration_seconds = t0.elapsed().as_secs_f64() / calib_iters as f64;
+
+    // sweep hot path: the batched engine against its serial reference on
+    // a deterministic damage surface with a realistic per-eval cost
+    let graph = Graph { n_layer: 4, n_head: 8, has_mlp: true };
+    let (n_channels, plan) = bench_plan(&graph);
+    let surface = SyntheticSurface::new(7, 0.001);
+    let score = |m: &PatchMask, cand: Option<&Candidate>| {
+        let d = surface.damage(m, cand);
+        let y = bench_spin(d);
+        d + (black_box(y) - y)
+    };
+    let tau = 0.9f32; // ~90% removal, the chain-speculation regime
+
+    // deterministic measured-memory probe: real packed payload bytes of
+    // a PAHQ-shaped session (fp8 attention plane + bf16 other plane +
+    // fp32 corrupt cache) vs the fp32 baseline
+    let n_w = 1usize << 20;
+    let mut rng = Rng::new(9);
+    let ws: Vec<f32> = (0..n_w).map(|_| rng.normal()).collect();
+    let w_p8 = QTensor::from_slice(&[n_w], &ws, FP8_E4M3).bytes();
+    let w_p16 = QTensor::from_slice(&[n_w], &ws, BF16).bytes();
+    let w_fp32 = n_w * 4;
+    let cache_elems = graph.n_nodes() * 4 * 16 * 64; // nodes x B*S*D
+    let cs: Vec<f32> = (0..cache_elems).map(|_| rng.normal()).collect();
+    let cache_fp32 = QTensor::from_slice(&[cache_elems], &cs, pahq::quant::FP32).bytes();
+    let cache_fp8 = QTensor::from_slice(&[cache_elems], &cs, FP8_E4M3).bytes();
+    let measured_weight_bytes = w_p8 + w_p16;
+    let measured_total = measured_weight_bytes + cache_fp32;
+
+    let mut table = Table::new(
+        "bench: synthetic sweep hot path (deterministic surface + fixed spin)",
+        &["mode", "wall (s)", "evals", "per-eval (µs)", "normalized", "kept hash"],
+    );
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    let mut records: Vec<RunRecord> = Vec::new();
+    let mut serial_hash = String::new();
+    for workers in [1usize, 2, 4, 8] {
+        let mode = if workers == 1 {
+            SweepMode::Serial
+        } else {
+            SweepMode::Batched { workers }
+        };
+        let mut best = f64::MAX;
+        let mut outcome = None;
+        for _ in 0..reps {
+            let mut scorer = FnScorer { score, workers };
+            let t = Instant::now();
+            let out = pahq::acdc::sweep::sweep(
+                &mut scorer,
+                n_channels,
+                &plan,
+                tau,
+                false,
+                mode,
+            )?;
+            best = best.min(t.elapsed().as_secs_f64());
+            outcome = Some(out);
+        }
+        let out = outcome.unwrap();
+        let channels = graph.channels();
+        let kept: Vec<bool> = graph
+            .edges()
+            .iter()
+            .map(|e| {
+                let ci = channels.iter().position(|c| *c == e.dst).unwrap();
+                !out.removed.get(ci, e.src)
+            })
+            .collect();
+        let hash = discovery::kept_hash(&kept);
+        if workers == 1 {
+            serial_hash = hash.clone();
+        }
+        let per_eval = best / out.n_evals as f64;
+        let normalized = per_eval / calibration_seconds;
+        table.row(vec![
+            mode.label(),
+            format!("{best:.3}"),
+            out.n_evals.to_string(),
+            format!("{:.1}", per_eval * 1e6),
+            format!("{normalized:.3}"),
+            hash.clone(),
+        ]);
+        sweep_rows.push(obj(vec![
+            ("mode", Json::from(mode.label())),
+            ("workers", Json::from(workers)),
+            ("wall_seconds", Json::from(best)),
+            ("n_evals", Json::from(out.n_evals)),
+            ("normalized_per_eval", Json::from(normalized)),
+            ("kept_hash", Json::from(hash.clone())),
+        ]));
+        records.push(RunRecord {
+            schema_version: discovery::SCHEMA_VERSION,
+            method: "acdc".into(),
+            policy: "synthetic".into(),
+            model: "synthetic-attn4l".into(),
+            task: "synthetic-surface".into(),
+            objective: "synthetic".into(),
+            tau: tau as f64,
+            sweep: mode.label(),
+            workers,
+            n_edges: kept.len(),
+            n_kept: kept.iter().filter(|&&k| k).count(),
+            kept_hash: hash,
+            n_evals: out.n_evals,
+            final_metric: out.final_metric as f64,
+            wall_seconds: best,
+            pjrt_seconds: 0.0,
+            sim_bytes: None,
+            measured_weight_bytes,
+            measured_cache_bytes: cache_fp32,
+            faithfulness: None,
+            trace: Vec::new(),
+        });
+    }
+    table.print();
+    for r in &records {
+        assert_eq!(
+            r.kept_hash, serial_hash,
+            "batched sweep diverged from serial on the bench surface"
+        );
+    }
+
+    // DES predictions (deterministic): the simulated headline numbers
+    let arch = RealArch::by_name("gpt2").unwrap();
+    let cost = CostModel::default();
+    let p_pahq = predict_run(&arch, &cost, MethodKind::Pahq, StreamConfig::FULL);
+    let p_acdc = predict_run(&arch, &cost, MethodKind::AcdcFp32, StreamConfig::NONE);
+    let sp8 = predict_sweep(
+        &arch,
+        &cost,
+        MethodKind::Pahq,
+        StreamConfig::FULL,
+        SweepMode::Batched { workers: 8 },
+        0.9,
+    );
+    println!(
+        "\nmemory probe: fp32 {} vs packed planes {} + fp32 cache {} = {}",
+        human_bytes(w_fp32 + cache_fp32),
+        human_bytes(measured_weight_bytes),
+        human_bytes(cache_fp32),
+        human_bytes(measured_total),
+    );
+    println!(
+        "DES gpt2: pahq {:.0} µs/edge vs acdc {:.0} µs/edge; batched[8] speedup {:.2}x",
+        p_pahq.per_edge_us, p_acdc.per_edge_us, sp8.speedup
+    );
+
+    // real-engine record when the artifacts are built (optional: CI has
+    // no artifacts, the local dev loop does)
+    let task = Task::new("redwood2l-sim", "ioi");
+    let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
+    match discovery::discover("acdc", &task, &cfg) {
+        Ok(rec) => {
+            println!(
+                "real engine: acdc/pahq-8b kept {} of {} ({:.1}s)",
+                rec.n_kept, rec.n_edges, rec.wall_seconds
+            );
+            records.push(rec);
+        }
+        Err(e) => println!("(real engine section skipped: {e})"),
+    }
+
+    let snapshot = obj(vec![
+        ("kind", Json::from("bench_snapshot")),
+        ("schema_version", Json::from(discovery::SCHEMA_VERSION)),
+        ("quick", Json::from(quick)),
+        ("calibration_seconds", Json::from(calibration_seconds)),
+        ("sweep_hot_path", Json::Arr(sweep_rows)),
+        (
+            "memory",
+            obj(vec![
+                ("weights_fp32_bytes", Json::from(w_fp32)),
+                ("weights_packed_bytes", Json::from(measured_weight_bytes)),
+                ("cache_fp32_bytes", Json::from(cache_fp32)),
+                ("cache_fp8_bytes", Json::from(cache_fp8)),
+                ("measured_total_bytes", Json::from(measured_total)),
+            ]),
+        ),
+        (
+            "des",
+            obj(vec![
+                ("arch", Json::from("gpt2")),
+                ("pahq_per_edge_us", Json::from(p_pahq.per_edge_us)),
+                ("acdc_per_edge_us", Json::from(p_acdc.per_edge_us)),
+                ("batched8_speedup", Json::from(sp8.speedup)),
+            ]),
+        ),
+        (
+            "records",
+            Json::Arr(records.iter().map(|r| r.to_json()).collect()),
+        ),
+    ]);
+    let path = match args.json_path() {
+        Some(p) => PathBuf::from(p),
+        None => results_dir().join("bench.json"),
+    };
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    std::fs::write(&path, snapshot.dump())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!(
+        "\nbench snapshot: {} ({:.1}s total)",
+        path.display(),
+        t_total.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     let root = pahq::artifacts_root();
     println!("artifacts root: {}", root.display());
@@ -337,6 +618,7 @@ fn cmd_info() -> Result<()> {
     }
     t.print();
     println!("\nDES cost model: {:?}", CostModel::default());
+    println!("discovery methods: {}", discovery::METHOD_NAMES.join(", "));
     println!("paper thresholds: {:?}", acdc::paper_thresholds());
     Ok(())
 }

@@ -87,6 +87,24 @@ impl Objective {
         }
     }
 
+    /// Stable machine-readable key, used by the CLI (`--metric kl|task`)
+    /// and the `RunRecord` artifact schema.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Objective::Kl => "kl",
+            Objective::LogitDiff => "task",
+        }
+    }
+
+    /// Parse the CLI / `RunRecord` spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Objective> {
+        match s {
+            "kl" => Ok(Objective::Kl),
+            "task" => Ok(Objective::LogitDiff),
+            other => anyhow::bail!("unknown metric '{other}' (kl|task)"),
+        }
+    }
+
     /// Scalar "damage" of a patched run vs the clean reference.
     pub fn damage(
         &self,

@@ -86,6 +86,13 @@ impl Policy {
         Self::plane_name(self.other)
     }
 
+    /// Does this policy hold the investigated edge's source at FP32
+    /// (the PAHQ per-call `hi` override)? Discovery methods consult this
+    /// when building their candidate plans.
+    pub fn is_pahq(&self) -> bool {
+        self.name.starts_with("pahq")
+    }
+
     /// Storage format of the session's corrupted-activation cache: FP32
     /// for hi-fidelity policies (the patched-in activation is exactly
     /// what the paper keeps at high precision, Eq. 2), the residual

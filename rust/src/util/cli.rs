@@ -69,8 +69,18 @@ impl Args {
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
 
+    /// `--json PATH` — where a command writes its machine-readable
+    /// artifact (a `RunRecord` for `pahq run`, a bench snapshot for
+    /// `pahq bench`). `None` means the command's default path under
+    /// `rust/results/`.
+    pub fn json_path(&self) -> Option<&str> {
+        self.get("json")
+    }
+
     /// The sweep schedule from `--sweep serial|batched [--workers N]`.
-    /// `--workers` defaults to the machine's available parallelism.
+    /// `--workers N` sets the scoring threads for the batched schedule
+    /// and defaults to the machine's available parallelism; results are
+    /// bit-identical to `--sweep serial` at any worker count.
     pub fn sweep_mode(&self) -> Result<crate::acdc::SweepMode> {
         let default_workers =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -116,6 +126,12 @@ mod tests {
     fn lists() {
         let a = parse("--models a,b , --x 1");
         assert_eq!(a.list("models").unwrap(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn json_path_passthrough() {
+        assert_eq!(parse("bench --json out.json").json_path(), Some("out.json"));
+        assert_eq!(parse("bench").json_path(), None);
     }
 
     #[test]

@@ -63,6 +63,13 @@ impl Json {
         Ok(self.as_f64()? as usize)
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool"),
+        }
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -141,6 +148,16 @@ impl Json {
 impl From<f64> for Json {
     fn from(x: f64) -> Self {
         Json::Num(x)
+    }
+}
+impl From<f32> for Json {
+    fn from(x: f32) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
     }
 }
 impl From<usize> for Json {

@@ -1,0 +1,240 @@
+//! Property tests for the unified discovery pipeline.
+//!
+//! Two layers:
+//!
+//! - **Synthetic** (always runs): the attribution-ordered candidate
+//!   plans the baselines produce — a single score-sorted group, unlike
+//!   ACDC's reverse-topological channel groups — must keep the sweep
+//!   engine's serial-vs-batched bit-identity, per method-shaped
+//!   ordering.
+//! - **Engine-backed** (skips when `make artifacts` has not run): every
+//!   registered method through [`pahq::discovery::discover`] — batched
+//!   kept set identical to serial, and (the paper's core claim) the
+//!   kept-edge set identical under the FP32 and PAHQ policies on the
+//!   seeded synthetic tasks.
+
+use pahq::acdc::sweep::{self, Candidate, FnScorer, SweepMode, SweepOutcome, SyntheticSurface};
+use pahq::discovery::{self, DiscoveryConfig, Task};
+use pahq::metrics::Objective;
+use pahq::model::{Channel, Graph};
+use pahq::patching::{PatchMask, Policy};
+use pahq::quant::FP8_E4M3;
+use pahq::util::rng::Rng;
+
+/// Deterministic pseudo-attribution scores shaped like each baseline's
+/// output: EAP/SP/EP score per edge; HISP scores per source node with
+/// non-head sources pinned to +max (never pruned cheaply).
+fn method_scores(flavor: &str, g: &Graph, rng: &mut Rng) -> Vec<f32> {
+    let edges = g.edges();
+    match flavor {
+        "hisp" => {
+            let node_scores: Vec<f32> = (0..g.n_nodes()).map(|_| rng.f32()).collect();
+            let max = node_scores.iter().copied().fold(0.0f32, f32::max).max(1e-9);
+            edges
+                .iter()
+                .map(|e| match g.node_kind(e.src) {
+                    pahq::model::graph::NodeKind::Head { .. } => node_scores[e.src],
+                    _ => max * 2.0,
+                })
+                .collect()
+        }
+        // sp scores repeat per source node (the gate), eap/ep are per edge
+        "sp" => {
+            let gates: Vec<f32> = (0..g.n_nodes()).map(|_| rng.f32()).collect();
+            edges.iter().map(|e| gates[e.src]).collect()
+        }
+        _ => edges.iter().map(|_| rng.f32()).collect(),
+    }
+}
+
+/// The ordered single-group plan `discovery::ordered_plan` builds:
+/// ascending score, index tiebreak, optional PAHQ-style `hi`.
+fn ordered_plan(
+    g: &Graph,
+    channels: &[Channel],
+    scores: &[f32],
+    pahq_like: bool,
+) -> Vec<Vec<Candidate>> {
+    let edges = g.edges();
+    let mut order: Vec<usize> = (0..edges.len()).collect();
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]).then(a.cmp(&b)));
+    vec![order
+        .into_iter()
+        .map(|i| Candidate {
+            chan: channels.iter().position(|c| *c == edges[i].dst).unwrap(),
+            src: edges[i].src,
+            hi: if pahq_like { Some(edges[i].src) } else { None },
+        })
+        .collect()]
+}
+
+fn assert_same(a: &SweepOutcome, b: &SweepOutcome, what: &str) {
+    assert_eq!(a.removed, b.removed, "{what}: removed mask");
+    assert_eq!(a.removed_count, b.removed_count, "{what}: removed count");
+    assert_eq!(
+        a.final_metric.to_bits(),
+        b.final_metric.to_bits(),
+        "{what}: final metric bits"
+    );
+    assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace length");
+    for (x, y) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(x.removed, y.removed, "{what}: decision");
+        assert_eq!(x.metric.to_bits(), y.metric.to_bits(), "{what}: metric bits");
+    }
+}
+
+#[test]
+fn ordered_plans_keep_serial_batched_bit_identity_per_method() {
+    // Every baseline's plan shape (score-sorted single group) through
+    // the shared sweep engine: batched must equal serial bit for bit,
+    // with and without the PAHQ hi override, across random graphs and
+    // thresholds.
+    let mut rng = Rng::new(4242);
+    for round in 0..8u64 {
+        let g = Graph {
+            n_layer: 1 + rng.below(5),
+            n_head: 1 + rng.below(10),
+            has_mlp: rng.below(2) == 1,
+        };
+        let channels = g.channels();
+        let surface = SyntheticSurface::new(9000 + round, 0.01);
+        let tau = [0.05f32, 0.3, 0.7, 0.95][rng.below(4)];
+        for flavor in ["eap", "hisp", "sp", "edge-pruning"] {
+            let scores = method_scores(flavor, &g, &mut rng);
+            let pahq_like = round % 2 == 0;
+            let plan = ordered_plan(&g, &channels, &scores, pahq_like);
+            let score = |m: &PatchMask, c: Option<&Candidate>| surface.damage(m, c);
+            let run = |mode: SweepMode, workers: usize| {
+                let mut scorer = FnScorer { score, workers };
+                sweep::sweep(&mut scorer, channels.len(), &plan, tau, true, mode).unwrap()
+            };
+            let serial = run(SweepMode::Serial, 1);
+            // one decision per edge regardless of ordering
+            assert_eq!(serial.trace.len(), g.n_edges(), "{flavor}: all edges decided");
+            for workers in [2usize, 4, 8] {
+                let batched = run(SweepMode::Batched { workers }, workers);
+                assert_same(
+                    &serial,
+                    &batched,
+                    &format!("round {round} {flavor} workers {workers} tau {tau}"),
+                );
+                assert!(batched.n_evals >= serial.n_evals, "{flavor}: rescoring only adds");
+            }
+        }
+    }
+}
+
+#[test]
+fn plans_cover_every_edge_exactly_once() {
+    let mut rng = Rng::new(777);
+    for _ in 0..10 {
+        let g = Graph {
+            n_layer: 1 + rng.below(4),
+            n_head: 1 + rng.below(8),
+            has_mlp: rng.below(2) == 1,
+        };
+        let channels = g.channels();
+        let scores = method_scores("eap", &g, &mut rng);
+        let plan = ordered_plan(&g, &channels, &scores, true);
+        let mut seen: Vec<(usize, usize)> =
+            plan.iter().flatten().map(|c| (c.chan, c.src)).collect();
+        assert_eq!(seen.len(), g.n_edges());
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), g.n_edges(), "no duplicate candidates");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-backed properties (skip when artifacts are not built)
+
+fn engine_task() -> Task {
+    Task::new("redwood2l-sim", "ioi")
+}
+
+#[test]
+fn every_method_serial_equals_batched_on_engine() {
+    let task = engine_task();
+    for method in discovery::METHOD_NAMES {
+        let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
+        let serial = match discovery::discover(method, &task, &cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skipping {method}: {e}");
+                continue;
+            }
+        };
+        let batched = discovery::discover(
+            method,
+            &task,
+            &cfg.clone().with_sweep(SweepMode::Batched { workers: 3 }),
+        )
+        .unwrap();
+        assert_eq!(serial.kept_hash, batched.kept_hash, "{method}: kept set");
+        assert_eq!(serial.n_kept, batched.n_kept, "{method}: kept count");
+        assert_eq!(
+            serial.final_metric.to_bits(),
+            batched.final_metric.to_bits(),
+            "{method}: final metric bits"
+        );
+        assert!(batched.n_evals >= serial.n_evals, "{method}: rescoring only adds evals");
+        assert_eq!(serial.n_edges, batched.n_edges);
+    }
+}
+
+#[test]
+fn baseline_kept_sets_identical_under_fp32_and_pahq() {
+    // The paper's integration claim, asserted per baseline on the
+    // seeded synthetic tasks: attribution runs at FP32 either way, and
+    // PAHQ's mixed-precision verification (investigated source at FP32)
+    // reproduces the FP32 verification's kept-edge set.
+    let task = engine_task();
+    for method in discovery::METHOD_NAMES {
+        let fp32_cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::fp32());
+        let fp32 = match discovery::discover(method, &task, &fp32_cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skipping {method}: {e}");
+                continue;
+            }
+        };
+        let pahq_cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
+        let pahq = discovery::discover(method, &task, &pahq_cfg).unwrap();
+        assert_eq!(
+            fp32.kept_hash, pahq.kept_hash,
+            "{method}: PAHQ preserves the FP32 kept-edge set ({} vs {} kept)",
+            fp32.n_kept, pahq.n_kept
+        );
+        // and the PAHQ session is measurably smaller
+        assert!(
+            pahq.measured_weight_bytes < fp32.measured_weight_bytes,
+            "{method}: packed planes below fp32"
+        );
+    }
+}
+
+#[test]
+fn run_record_from_engine_is_schema_complete() {
+    // A record produced by a real engine run has every required field
+    // populated (the shape `docs/run_record.schema.json` pins).
+    let task = engine_task();
+    let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
+    let rec = match discovery::discover("acdc", &task, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    assert_eq!(rec.schema_version, discovery::SCHEMA_VERSION);
+    assert_eq!(rec.method, "acdc");
+    assert_eq!(rec.policy, "pahq-8b");
+    assert_eq!(rec.kept_hash.len(), 16);
+    assert!(rec.n_kept <= rec.n_edges);
+    assert!(rec.n_evals > rec.n_edges, "evals = edges + baseline at least");
+    assert!(rec.wall_seconds > 0.0);
+    assert!(rec.measured_weight_bytes > 0 && rec.measured_cache_bytes > 0);
+    // round-trips through the JSON artifact bit-exactly
+    let back = discovery::RunRecord::from_json(&rec.to_json()).unwrap();
+    assert_eq!(rec, back);
+}

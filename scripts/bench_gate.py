@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Perf gate: diff a fresh `pahq bench --json` snapshot against the
+committed baseline and fail CI on regressions of the sweep hot path.
+
+Usage:
+    python scripts/bench_gate.py BENCH_baseline.json bench.json \
+        [--max-wall-regress 0.25] [--max-mem-regress 0.10]
+
+Checks (stdlib only):
+
+1. **Wall time** — the serial sweep's *normalized per-eval cost*
+   (`wall_seconds / n_evals / calibration_seconds`). The calibration
+   term is the same fixed spin loop the synthetic scorer runs, measured
+   in the same process, so machine speed cancels and the ratio isolates
+   the sweep engine's own overhead. Fails when it exceeds the baseline
+   by more than --max-wall-regress (default 25%).
+2. **Measured memory** — `memory.measured_total_bytes`, the real packed
+   payload bytes of a PAHQ-shaped session (fp8 + bf16 planes + fp32
+   cache). Deterministic; fails beyond --max-mem-regress (default 10%).
+3. **Correctness** — every sweep mode in the snapshot reports the same
+   kept-set hash (batched bit-identity), and batched modes do not
+   inflate evaluations beyond the speculation model's bound.
+
+A baseline field set to null skips its check (used to stage new fields
+before the first trustworthy baseline lands).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("kind") != "bench_snapshot":
+        sys.exit(f"{path}: not a bench_snapshot")
+    return doc
+
+
+def serial_row(doc, path):
+    for row in doc.get("sweep_hot_path", []):
+        if row.get("mode") == "serial":
+            return row
+    sys.exit(f"{path}: no serial row in sweep_hot_path")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--max-wall-regress", type=float, default=0.25)
+    ap.add_argument("--max-mem-regress", type=float, default=0.10)
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    failures = []
+
+    # 3. internal consistency of the current snapshot first: batched
+    #    sweeps must land on the serial kept set
+    rows = cur.get("sweep_hot_path", [])
+    hashes = {row.get("kept_hash") for row in rows}
+    if len(hashes) != 1:
+        failures.append(f"kept-set hashes diverge across sweep modes: {sorted(hashes)}")
+    cur_serial = serial_row(cur, args.current)
+    for row in rows:
+        if row is cur_serial:
+            continue
+        window = 2 * int(row.get("workers", 1))  # SPEC_OVERSUB * workers
+        bound = 1 + (cur_serial["n_evals"] - 1) * window
+        if row["n_evals"] > bound:
+            failures.append(
+                f"{row['mode']}: {row['n_evals']} evals exceeds the misprediction "
+                f"bound {bound} (serial {cur_serial['n_evals']})"
+            )
+
+    # 1. normalized per-eval wall time on the serial hot path
+    base_serial = serial_row(base, args.baseline)
+    base_norm = base_serial.get("normalized_per_eval")
+    cur_norm = cur_serial.get("normalized_per_eval")
+    if base_norm is None:
+        print("wall gate skipped: baseline normalized_per_eval is null")
+    else:
+        limit = base_norm * (1 + args.max_wall_regress)
+        status = "FAIL" if cur_norm > limit else "ok"
+        print(
+            f"wall  [{status}]: normalized per-eval {cur_norm:.3f} vs baseline "
+            f"{base_norm:.3f} (limit {limit:.3f})"
+        )
+        if cur_norm > limit:
+            failures.append(
+                f"serial sweep per-eval cost regressed: {cur_norm:.3f} > {limit:.3f}"
+            )
+
+    # 2. measured packed memory
+    base_mem = base.get("memory", {}).get("measured_total_bytes")
+    cur_mem = cur.get("memory", {}).get("measured_total_bytes")
+    if base_mem is None:
+        print("memory gate skipped: baseline measured_total_bytes is null")
+    else:
+        limit = base_mem * (1 + args.max_mem_regress)
+        status = "FAIL" if cur_mem > limit else "ok"
+        print(
+            f"mem   [{status}]: measured {cur_mem} B vs baseline {base_mem} B "
+            f"(limit {limit:.0f} B)"
+        )
+        if cur_mem > limit:
+            failures.append(f"measured packed memory regressed: {cur_mem} > {limit:.0f}")
+
+    if failures:
+        print("\nperf gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nperf gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Validate RunRecord artifacts against docs/run_record.schema.json.
+
+Stdlib-only subset of JSON Schema: type, properties, required, items,
+enum, minimum, pattern. That subset is the contract — if the schema file
+grows a keyword this script does not know, validation fails loudly
+rather than silently passing.
+
+Usage:
+    python scripts/check_schema.py docs/run_record.schema.json ARTIFACT.json
+
+ARTIFACT.json is either a bare RunRecord (kind == "run_record") or a
+bench snapshot (kind == "bench_snapshot") whose "records" array holds
+RunRecords; every record found is validated.
+"""
+
+import json
+import re
+import sys
+
+KNOWN_KEYWORDS = {
+    "$comment",
+    "type",
+    "properties",
+    "required",
+    "items",
+    "enum",
+    "minimum",
+    "pattern",
+}
+
+TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+class SchemaError(Exception):
+    pass
+
+
+def check(value, schema, path="$"):
+    unknown = set(schema) - KNOWN_KEYWORDS
+    if unknown:
+        raise SchemaError(f"{path}: schema uses unsupported keywords {sorted(unknown)}")
+
+    if "enum" in schema:
+        if value not in schema["enum"]:
+            raise SchemaError(f"{path}: {value!r} not in enum {schema['enum']}")
+        return
+
+    t = schema.get("type")
+    if t == "number":
+        if not isinstance(value, (int, float)) or isinstance(value, bool):
+            raise SchemaError(f"{path}: expected number, got {type(value).__name__}")
+    elif t == "integer":
+        ok = isinstance(value, int) and not isinstance(value, bool)
+        # JSON emitters may write 3 as 3.0; accept integral floats
+        ok = ok or (isinstance(value, float) and value.is_integer())
+        if not ok:
+            raise SchemaError(f"{path}: expected integer, got {value!r}")
+    elif t is not None:
+        py = TYPES.get(t)
+        if py is None:
+            raise SchemaError(f"{path}: unsupported type {t!r} in schema")
+        if not isinstance(value, py):
+            raise SchemaError(f"{path}: expected {t}, got {type(value).__name__}")
+
+    if "minimum" in schema and isinstance(value, (int, float)) and not isinstance(value, bool):
+        if value < schema["minimum"]:
+            raise SchemaError(f"{path}: {value} < minimum {schema['minimum']}")
+
+    if "pattern" in schema and isinstance(value, str):
+        if not re.search(schema["pattern"], value):
+            raise SchemaError(f"{path}: {value!r} does not match /{schema['pattern']}/")
+
+    if isinstance(value, dict):
+        for key in schema.get("required", []):
+            if key not in value:
+                raise SchemaError(f"{path}: missing required key {key!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in value:
+                check(value[key], sub, f"{path}.{key}")
+
+    if isinstance(value, list) and "items" in schema:
+        for i, item in enumerate(value):
+            check(item, schema["items"], f"{path}[{i}]")
+
+
+def extract_records(doc):
+    kind = doc.get("kind") if isinstance(doc, dict) else None
+    if kind == "run_record":
+        return [doc]
+    if kind == "bench_snapshot":
+        records = doc.get("records", [])
+        if not isinstance(records, list):
+            raise SchemaError("bench_snapshot.records is not an array")
+        return records
+    raise SchemaError(f"unrecognized artifact kind {kind!r}")
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        schema = json.load(f)
+    with open(argv[2]) as f:
+        doc = json.load(f)
+    try:
+        records = extract_records(doc)
+        if not records:
+            raise SchemaError("artifact contains no RunRecords to validate")
+        for i, rec in enumerate(records):
+            check(rec, schema, f"records[{i}]")
+    except SchemaError as e:
+        print(f"schema check FAILED: {e}")
+        return 1
+    print(f"schema check OK: {len(records)} record(s) valid against v{schema['properties']['schema_version']['enum'][0]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
