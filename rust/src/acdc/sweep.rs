@@ -297,9 +297,14 @@ where
 pub struct EnginePool {
     engines: Vec<PatchedForward>,
     objective: Objective,
+    model: String,
+    task: String,
+    policy: Policy,
 }
 
 impl EnginePool {
+    /// Replicas on the task artifact's default batch (the classic
+    /// constructor); delegates to [`EnginePool::with_examples`].
     pub fn new(
         model: &str,
         task: &str,
@@ -307,14 +312,64 @@ impl EnginePool {
         workers: usize,
         objective: Objective,
     ) -> Result<EnginePool> {
+        let manifest = crate::model::Manifest::by_name(model)?;
+        let examples = crate::model::Dataset::by_task(task)?.batch(manifest.batch)?.to_vec();
+        Self::with_examples(model, task, &examples, policy, workers, objective, None)
+    }
+
+    /// A pool whose replicas evaluate an explicit batch instead of the
+    /// task artifact's default one — required for numerical identity
+    /// with a session built on seeded examples (`--seed`): every
+    /// replica must score exactly the bits the primary engine holds.
+    /// When `corrupt_cache` is given (matrix handoff), each replica
+    /// installs it instead of re-running the corrupted forward.
+    pub fn with_examples(
+        model: &str,
+        task: &str,
+        examples: &[crate::model::Example],
+        policy: &Policy,
+        workers: usize,
+        objective: Objective,
+        corrupt_cache: Option<&[crate::tensor::QTensor]>,
+    ) -> Result<EnginePool> {
         let workers = workers.max(1);
+        let manifest = crate::model::Manifest::by_name(model)?;
         let mut engines = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let mut e = PatchedForward::new(model, task)?;
-            e.set_session(policy.clone())?;
+            let mut e = PatchedForward::with_examples(manifest.clone(), examples.to_vec())?;
+            match corrupt_cache {
+                Some(cc) => e.set_session_with_cache(policy.clone(), cc)?,
+                None => e.set_session(policy.clone())?,
+            }
             engines.push(e);
         }
-        Ok(EnginePool { engines, objective })
+        Ok(EnginePool {
+            engines,
+            objective,
+            model: model.to_string(),
+            task: task.to_string(),
+            policy: policy.clone(),
+        })
+    }
+
+    /// Can this pool serve a cell with the given configuration as-is?
+    /// The matrix orchestrator hands pools between consecutive cells on
+    /// one worker; a match skips rebuilding `workers` engine replicas.
+    /// Compares the *full* policy, not its name — same-width formats
+    /// (fp8_e4m3 vs fp8_e5m2) share a name but score different bits.
+    pub fn matches(
+        &self,
+        model: &str,
+        task: &str,
+        policy: &Policy,
+        workers: usize,
+        objective: Objective,
+    ) -> bool {
+        self.model == model
+            && self.task == task
+            && self.policy == *policy
+            && self.engines.len() == workers
+            && self.objective == objective
     }
 
     pub fn workers(&self) -> usize {

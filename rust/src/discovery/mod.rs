@@ -24,7 +24,8 @@
 //! ([`record`]): the machine-readable trace `pahq run` / `pahq sweep` /
 //! `pahq bench --json` emit and CI's perf gate diffs.
 
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -33,11 +34,13 @@ use crate::acdc::EngineScorer;
 use crate::gpu_sim::memory::{memory_model, MethodKind};
 use crate::gpu_sim::RealArch;
 use crate::metrics::Objective;
+use crate::model::{Example, Manifest};
 use crate::patching::{PatchMask, PatchedForward, Policy};
+use crate::tensor::QTensor;
 
 pub mod record;
 
-pub use record::{kept_hash, Faithfulness, RunRecord, SCHEMA_VERSION};
+pub use record::{kept_hash, CacheStats, Faithfulness, RunRecord, SCHEMA_VERSION};
 
 /// The discovery workload: which model and which task's dataset.
 #[derive(Clone, Debug)]
@@ -91,6 +94,22 @@ impl DiscoveryConfig {
     }
 }
 
+/// Pre-built artifacts a matrix cell hands a session instead of the
+/// session constructing its own — the cross-run reuse that makes a full
+/// method x policy x task grid cheaper than its cells run in isolation.
+/// Every field is optional; an all-`None` value (the default) reproduces
+/// the classic build-everything-yourself session exactly.
+#[derive(Clone, Default)]
+pub struct DiscoveryInputs {
+    /// evaluation batch (must be exactly `manifest.batch` examples)
+    pub examples: Option<Arc<Vec<Example>>>,
+    /// packed corrupted-activation cache, bit-identical to what this
+    /// session would compute (same model, examples, and cache format)
+    pub corrupt_cache: Option<Arc<Vec<QTensor>>>,
+    /// FP32 attribution scores for the cell's method (graph.edges() order)
+    pub scores: Option<Arc<Vec<f32>>>,
+}
+
 /// A configured discovery session: the primary engine plus — for
 /// batched multi-worker sweeps — a pool of numerically identical
 /// replicas. Owns the state every [`Discovery`] implementation scores
@@ -103,33 +122,128 @@ pub struct Session {
     /// `RunRecord` stores only their hash, so faithfulness evaluation
     /// reads them from here
     last_kept: Option<Vec<bool>>,
+    /// pre-built artifacts (matrix cross-run reuse); all-`None` by default
+    inputs: DiscoveryInputs,
+    /// which pre-built inputs were actually consumed (lands in the record)
+    pub cache_stats: CacheStats,
+    /// scores this session computed itself, held for publication into the
+    /// matrix store so the next cell of the same (method, task) reuses them
+    computed_scores: Option<Arc<Vec<f32>>>,
+    /// pool PJRT time at the last `configure` — a re-attached pool carries
+    /// time from earlier cells that must not bill against this run
+    pool_pjrt_base: Duration,
 }
 
 impl Session {
     pub fn new(task: &Task) -> Result<Session> {
+        Self::with_inputs(task, DiscoveryInputs::default())
+    }
+
+    /// Build a session around pre-built inputs: the engine's evaluation
+    /// batch comes from `inputs.examples` when given, and `configure`
+    /// installs `inputs.corrupt_cache` instead of re-running the
+    /// corrupted forward.
+    pub fn with_inputs(task: &Task, inputs: DiscoveryInputs) -> Result<Session> {
+        let engine = match &inputs.examples {
+            Some(ex) => {
+                let manifest = Manifest::by_name(&task.model)?;
+                PatchedForward::with_examples(manifest, ex.as_ref().clone())?
+            }
+            None => PatchedForward::new(&task.model, &task.task)?,
+        };
         Ok(Session {
-            engine: PatchedForward::new(&task.model, &task.task)?,
+            engine,
             pool: None,
             task: task.clone(),
             last_kept: None,
+            inputs,
+            cache_stats: CacheStats::default(),
+            computed_scores: None,
+            pool_pjrt_base: Duration::default(),
         })
     }
 
-    /// Apply a config: set the engine's precision session and (re)build
-    /// the worker pool when the sweep schedule asks for one.
+    /// Switch the engine to `policy`, handing the attached pre-built
+    /// corrupt cache over whenever its packed format matches the
+    /// policy's cache format — every policy transition in the session
+    /// (configure, the FP32 scoring toggle and its restore, faithfulness
+    /// evaluation) reuses the cache instead of re-running the corrupted
+    /// forward. Returns whether the handoff happened.
+    fn enter_policy(&mut self, policy: &Policy) -> Result<bool> {
+        match self.inputs.corrupt_cache.clone() {
+            Some(cc) if cc.first().map(|t| t.format()) == Some(policy.cache_format()) => {
+                self.engine.set_session_with_cache(policy.clone(), &cc)?;
+                Ok(true)
+            }
+            _ => {
+                self.engine.set_session(policy.clone())?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Apply a config: set the engine's precision session (installing the
+    /// pre-built corrupted-activation cache when one was handed in) and
+    /// (re)build the worker pool when the sweep schedule asks for one —
+    /// keeping an attached pool whose model/task/policy/workers/objective
+    /// already match instead of rebuilding its engine replicas.
     pub fn configure(&mut self, cfg: &DiscoveryConfig) -> Result<()> {
-        self.engine.set_session(cfg.policy.clone())?;
-        self.pool = match cfg.sweep {
-            SweepMode::Batched { workers } if workers > 1 => Some(EnginePool::new(
+        if self.enter_policy(&cfg.policy)? {
+            self.cache_stats.corrupt_hit = true;
+        }
+        let keep = match (&self.pool, &cfg.sweep) {
+            (Some(p), SweepMode::Batched { workers }) if *workers > 1 => p.matches(
                 &self.task.model,
                 &self.task.task,
                 &cfg.policy,
-                workers,
+                *workers,
                 cfg.objective,
-            )?),
-            _ => None,
+            ),
+            _ => false,
         };
+        if !keep {
+            // replicas share the primary engine's exact batch (pooled
+            // scoring stays bit-identical to single-engine scoring even
+            // on seeded datasets) and inherit the engine's corrupt cache
+            // instead of each re-running the corrupted forward
+            self.pool = match cfg.sweep {
+                SweepMode::Batched { workers } if workers > 1 => Some(EnginePool::with_examples(
+                    &self.task.model,
+                    &self.task.task,
+                    &self.engine.examples,
+                    &cfg.policy,
+                    workers,
+                    cfg.objective,
+                    Some(self.engine.corrupt_cache.as_slice()),
+                )?),
+                _ => None,
+            };
+            // a freshly built pool's construction time bills this run
+            // (classic behavior); only attach-time carryover is excluded
+            self.pool_pjrt_base = Duration::default();
+        }
         Ok(())
+    }
+
+    /// Attach a previously built engine pool (matrix pool sharing across
+    /// cells): the next `configure` keeps it when the cell's
+    /// model/task/policy/workers/objective match instead of rebuilding
+    /// the replicas. PJRT time the pool accrued in earlier cells is
+    /// snapshotted here so it never bills against this session's runs.
+    pub fn set_pool(&mut self, pool: EnginePool) {
+        self.pool_pjrt_base = pool.pjrt_time();
+        self.pool = Some(pool);
+    }
+
+    /// Detach the engine pool so the next cell on this worker can reuse it.
+    pub fn take_pool(&mut self) -> Option<EnginePool> {
+        self.pool.take()
+    }
+
+    /// Scores this session computed itself (None after a cache hit); the
+    /// matrix publishes them into its store for the next cell.
+    pub fn take_computed_scores(&mut self) -> Option<Arc<Vec<f32>>> {
+        self.computed_scores.take()
     }
 
     /// Kept flags of the last discovery run (graph.edges() order).
@@ -137,10 +251,11 @@ impl Session {
         self.last_kept.as_deref()
     }
 
-    /// Total wall-clock spent inside PJRT (primary engine + pool).
+    /// Total wall-clock spent inside PJRT (primary engine + pool), net of
+    /// any PJRT time an attached pool accumulated before `configure`.
     pub fn pjrt_time(&self) -> std::time::Duration {
-        self.engine.pjrt_time()
-            + self.pool.as_ref().map(|p| p.pjrt_time()).unwrap_or_default()
+        let pool = self.pool.as_ref().map(|p| p.pjrt_time()).unwrap_or_default();
+        self.engine.pjrt_time() + pool.saturating_sub(self.pool_pjrt_base)
     }
 
     /// Drive a candidate plan through the shared sweep machinery —
@@ -213,6 +328,7 @@ impl Session {
             measured_weight_bytes: fp.weights(),
             measured_cache_bytes: fp.act_cache,
             faithfulness: None,
+            cache: self.cache_stats.any().then(|| self.cache_stats.clone()),
             trace: sample_trace(&out.trace),
         };
         self.last_kept = Some(kept);
@@ -238,7 +354,7 @@ impl Session {
         let Some(kept) = self.last_kept.clone() else {
             bail!("no discovery has run in this session yet");
         };
-        self.engine.set_session(Policy::fp32())?;
+        self.enter_policy(&Policy::fp32())?;
         let gt = crate::eval::ground_truth(
             &mut self.engine,
             &self.task.model,
@@ -262,7 +378,7 @@ impl Session {
         };
         rec.faithfulness =
             Some(Faithfulness { tpr: p.tpr, fpr: p.fpr, accuracy, normalized });
-        self.engine.set_session(cfg.policy.clone())?;
+        self.enter_policy(&cfg.policy)?;
         Ok(())
     }
 }
@@ -329,6 +445,12 @@ pub fn ordered_plan(engine: &PatchedForward, scores: &[f32]) -> Vec<Vec<Candidat
 /// every gradient baseline), then restore the session policy so the
 /// verification sweep runs under it. A no-op toggle when the session is
 /// already FP32.
+///
+/// When the session carries a pre-built score vector
+/// ([`DiscoveryInputs::scores`], matrix cross-run reuse) it is returned
+/// directly — no toggle, no scoring pass — and the hit is recorded in
+/// the session's [`CacheStats`]. Scores computed here are retained for
+/// publication via [`Session::take_computed_scores`].
 pub fn scored_at_fp32<F>(
     session: &mut Session,
     cfg: &DiscoveryConfig,
@@ -337,15 +459,21 @@ pub fn scored_at_fp32<F>(
 where
     F: FnOnce(&mut PatchedForward) -> Result<Vec<f32>>,
 {
+    if let Some(pre) = session.inputs.scores.clone() {
+        session.cache_stats.scores_hit = true;
+        return Ok(pre.as_ref().clone());
+    }
     let toggle = cfg.policy.name != Policy::fp32().name;
     if toggle {
-        session.engine.set_session(Policy::fp32())?;
+        session.enter_policy(&Policy::fp32())?;
     }
     let scores = score(&mut session.engine);
     if toggle {
-        session.engine.set_session(cfg.policy.clone())?;
+        session.enter_policy(&cfg.policy)?;
     }
-    scores
+    let scores = scores?;
+    session.computed_scores = Some(Arc::new(scores.clone()));
+    Ok(scores)
 }
 
 /// Edge labels of a kept set (`graph.edges()` order) — debugging / CLI

@@ -18,6 +18,42 @@ use crate::util::json::{obj, Json};
 /// `docs/run_record.schema.json`.
 pub const SCHEMA_VERSION: usize = 1;
 
+/// Which pre-built artifacts from the matrix store a run consumed
+/// instead of constructing its own (`pahq matrix` cross-run reuse).
+/// Absent (all-false) for standalone runs that built everything
+/// themselves.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// evaluation batch came from the shared (task, seed, n) dataset store
+    pub dataset_hit: bool,
+    /// packed corrupted-activation cache was handed off, not recomputed
+    pub corrupt_hit: bool,
+    /// FP32 attribution score vector was reused, not rescored
+    pub scores_hit: bool,
+}
+
+impl CacheStats {
+    pub fn any(&self) -> bool {
+        self.dataset_hit || self.corrupt_hit || self.scores_hit
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset_hit", Json::from(self.dataset_hit)),
+            ("corrupt_hit", Json::from(self.corrupt_hit)),
+            ("scores_hit", Json::from(self.scores_hit)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CacheStats> {
+        Ok(CacheStats {
+            dataset_hit: j.get("dataset_hit")?.as_bool()?,
+            corrupt_hit: j.get("corrupt_hit")?.as_bool()?,
+            scores_hit: j.get("scores_hit")?.as_bool()?,
+        })
+    }
+}
+
 /// Edge-classification quality of a discovered circuit against the FP32
 /// ground truth (optional: only when the ground truth is available).
 #[derive(Clone, Debug, PartialEq)]
@@ -69,6 +105,9 @@ pub struct RunRecord {
     /// measured packed corrupted-activation cache bytes
     pub measured_cache_bytes: usize,
     pub faithfulness: Option<Faithfulness>,
+    /// which matrix-store artifacts this run consumed (cross-run reuse);
+    /// `None` when the run built everything itself
+    pub cache: Option<CacheStats>,
     /// sampled (step, edges_remaining) pairs of the sweep trace (Fig. 3);
     /// empty unless the run recorded a trace
     pub trace: Vec<(usize, usize)>,
@@ -121,6 +160,9 @@ impl RunRecord {
                 fp.push(("normalized", Json::from(n)));
             }
             pairs.push(("faithfulness", obj(fp)));
+        }
+        if let Some(c) = &self.cache {
+            pairs.push(("cache", c.to_json()));
         }
         if !self.trace.is_empty() {
             pairs.push((
@@ -194,6 +236,10 @@ impl RunRecord {
             measured_weight_bytes: j.get("measured_weight_bytes")?.as_usize()?,
             measured_cache_bytes: j.get("measured_cache_bytes")?.as_usize()?,
             faithfulness,
+            cache: match j.opt("cache") {
+                None => None,
+                Some(c) => Some(CacheStats::from_json(c)?),
+            },
             trace,
         })
     }
@@ -247,6 +293,7 @@ mod tests {
                 accuracy: 0.97,
                 normalized: Some(0.88),
             }),
+            cache: Some(CacheStats { dataset_hit: true, corrupt_hit: true, scores_hit: false }),
             trace: vec![(1, 1024), (512, 600), (1024, 37)],
         }
     }
@@ -260,9 +307,18 @@ mod tests {
         let mut bare = sample();
         bare.sim_bytes = None;
         bare.faithfulness = None;
+        bare.cache = None;
         bare.trace.clear();
         let back = RunRecord::from_json(&bare.to_json()).unwrap();
         assert_eq!(bare, back);
+    }
+
+    #[test]
+    fn cache_stats_roundtrip_and_any() {
+        let c = CacheStats { dataset_hit: false, corrupt_hit: true, scores_hit: false };
+        assert_eq!(CacheStats::from_json(&c.to_json()).unwrap(), c);
+        assert!(c.any());
+        assert!(!CacheStats::default().any());
     }
 
     #[test]

@@ -564,7 +564,12 @@ pub fn figure4(quick: bool) -> Result<()> {
 /// artifacts are built — a real measured serial-vs-batched ACDC run on
 /// the tiny sim model validating the bit-identity contract end to end.
 /// The real runs are saved as `RunRecord` JSONs under `results/`.
-pub fn sweep_scaling(quick: bool) -> Result<()> {
+///
+/// `seed` selects the evaluation batch through the shared
+/// `matrix::cache::dataset_for` resolution (0 = the exported artifact
+/// batch) — the same derivation `pahq run --seed` uses, so identical
+/// (task, seed, n) inputs are bit-identical across subcommands.
+pub fn sweep_scaling(quick: bool, seed: u64) -> Result<()> {
     let cost = CostModel::default();
     let archs: &[&str] = if quick { &["gpt2"] } else { &["gpt2", "gpt2-medium", "gpt2-large"] };
     // removal rate at practical tau: ACDC prunes most edges
@@ -608,13 +613,13 @@ pub fn sweep_scaling(quick: bool) -> Result<()> {
     // emitted as RunRecord artifacts for the perf trajectory.
     let task = Task::new("redwood2l-sim", "ioi");
     let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::fp32());
-    match discovery::discover("acdc", &task, &cfg) {
+    match crate::matrix::seeded_discover("acdc", &task, &cfg, seed) {
         Ok(serial) => {
             let workers =
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
             let batched_cfg =
                 cfg.clone().with_sweep(SweepMode::Batched { workers });
-            let batched = discovery::discover("acdc", &task, &batched_cfg)?;
+            let batched = crate::matrix::seeded_discover("acdc", &task, &batched_cfg, seed)?;
             assert_eq!(
                 serial.kept_hash, batched.kept_hash,
                 "batched sweep diverged from serial"
@@ -647,6 +652,100 @@ pub fn sweep_scaling(quick: bool) -> Result<()> {
         }
         Err(e) => println!("\n(real sweep measurement skipped: {e})"),
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Matrix-manifest rollups — tables 2/6/7 re-rendered from one `pahq
+// matrix` pass instead of N sequential discovery runs
+
+fn manifest_records(
+    path: &std::path::Path,
+) -> Result<(crate::matrix::MatrixManifest, Vec<RunRecord>)> {
+    let m = crate::matrix::MatrixManifest::load(path)?;
+    let recs = m.load_cell_records(path)?.into_iter().map(|(_, r)| r).collect();
+    Ok((m, recs))
+}
+
+/// Table 2 rollup from a matrix manifest: every faithfulness-scored
+/// cell's edge-classification accuracy, one pass over the grid.
+pub fn table2_from_manifest(path: &std::path::Path) -> Result<()> {
+    let (_, recs) = manifest_records(path)?;
+    let mut table = Table::new(
+        "Table 2 (from matrix): edge-classification accuracy",
+        &["threshold", "method", "policy", "task", "model", "accuracy"],
+    );
+    for r in &recs {
+        let Some(f) = &r.faithfulness else { continue };
+        table.row(vec![
+            format!("{}", r.tau),
+            r.method.clone(),
+            r.policy.clone(),
+            r.task.clone(),
+            r.model.clone(),
+            format!("{:.3}", f.accuracy),
+        ]);
+    }
+    if table.rows.is_empty() {
+        println!("(no faithfulness-scored records in {})", path.display());
+    }
+    table.print();
+    table.save_csv("table2_accuracy_matrix")?;
+    Ok(())
+}
+
+/// Table 6 rollup from a matrix manifest: normalized faithfulness per
+/// (method, policy) row across the task columns.
+pub fn table6_from_manifest(path: &std::path::Path) -> Result<()> {
+    let (_, recs) = manifest_records(path)?;
+    let order = ["ioi", "docstring", "greater_than"];
+    let mut table = Table::new(
+        "Table 6 (from matrix): normalized faithfulness",
+        &["method", "policy", "ioi", "docstring", "greater_than"],
+    );
+    let mut rows: std::collections::BTreeMap<(String, String), [Option<f64>; 3]> =
+        std::collections::BTreeMap::new();
+    for r in &recs {
+        let Some(norm) = r.faithfulness.as_ref().and_then(|f| f.normalized) else { continue };
+        let Some(col) = order.iter().position(|t| *t == r.task) else { continue };
+        rows.entry((r.method.clone(), r.policy.clone())).or_default()[col] = Some(norm);
+    }
+    let fmt = |v: Option<f64>| v.map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".into());
+    for ((method, policy), cols) in rows {
+        table.row(vec![method, policy, fmt(cols[0]), fmt(cols[1]), fmt(cols[2])]);
+    }
+    if table.rows.is_empty() {
+        println!("(no normalized-faithfulness records in {})", path.display());
+    }
+    table.print();
+    table.save_csv("table6_faithfulness_matrix")?;
+    Ok(())
+}
+
+/// Table 7 rollup from a matrix manifest: per model x method x policy,
+/// the circuit size and the cost of finding it — the scale comparison
+/// rendered from the grid's records in one pass.
+pub fn table7_from_manifest(path: &std::path::Path) -> Result<()> {
+    let (_, recs) = manifest_records(path)?;
+    let mut table = Table::new(
+        "Table 7 (from matrix): scale rollup",
+        &["model", "task", "method", "policy", "kept", "final metric", "evals", "wall (s)", "mem"],
+    );
+    for r in &recs {
+        table.row(vec![
+            r.model.clone(),
+            r.task.clone(),
+            r.method.clone(),
+            r.policy.clone(),
+            format!("{}/{}", r.n_kept, r.n_edges),
+            format!("{:.4}", r.final_metric),
+            r.n_evals.to_string(),
+            format!("{:.1}", r.wall_seconds),
+            human_bytes(r.measured_total_bytes()),
+        ]);
+    }
+    table.print();
+    table.save_csv("table7_scaling_matrix")?;
     Ok(())
 }
 

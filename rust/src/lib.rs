@@ -9,7 +9,8 @@
 //!   simulator, the baselines (RTN-Q / EAP / HISP / SP / Edge-Pruning)
 //!   unified behind the [`discovery::Discovery`] trait, the
 //!   metrics/evaluation stack, the schema-versioned [`discovery::RunRecord`]
-//!   artifacts CI gates on, and the table/figure harness.
+//!   artifacts CI gates on, the work-stealing [`matrix`] grid orchestrator
+//!   with its cross-run artifact store, and the table/figure harness.
 //! - **L2 (python/compile/model.py, build-time only)** — the
 //!   graph-decomposed transformer, AOT-lowered per layer to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)** — Pallas kernels for
@@ -29,6 +30,7 @@ pub mod baselines;
 pub mod discovery;
 pub mod eval;
 pub mod gpu_sim;
+pub mod matrix;
 pub mod metrics;
 pub mod model;
 pub mod patching;

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   run         one circuit-discovery run (model/task/method/tau/metric);
 //!               every run emits a machine-readable RunRecord JSON
+//!   matrix      the full method x policy x task grid as one work-stealing
+//!               job queue with cross-run reuse; emits a matrix.json
+//!               manifest plus one RunRecord per cell, resumable
 //!   table N     regenerate paper Table N (1..8)
 //!   figure N    regenerate paper Figure N (1, 3, 4)
 //!   all         regenerate every table and figure
@@ -20,7 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use pahq::acdc::sweep::SyntheticSurface;
 use pahq::acdc::{self, Candidate, FnScorer, SweepMode};
-use pahq::discovery::{self, DiscoveryConfig, RunRecord, Session, Task};
+use pahq::discovery::{self, DiscoveryConfig, RunRecord, Task};
 use pahq::experiments;
 use pahq::gpu_sim::memory::{memory_model, MethodKind};
 use pahq::gpu_sim::{CostModel, RealArch};
@@ -43,29 +46,46 @@ USAGE:
            [--method acdc|rtn-q|pahq|eap|hisp|sp|edge-pruning]
            [--policy fp32|rtn|pahq] [--tau X] [--metric kl|task]
            [--bits 4|8|16] [--trace] [--sweep serial|batched]
-           [--workers N] [--json OUT.json]
-  pahq table <1|2|3|4|5|6|7|8> [--quick]
+           [--workers N] [--seed S] [--json OUT.json]
+  pahq matrix [--models A,B] [--tasks T1,T2] [--methods M1,M2]
+              [--policies fp32,pahq,rtn] [--tau X] [--metric kl|task]
+              [--workers N] [--sweep serial|batched] [--pool-workers K]
+              [--seed S] [--quick] [--resume] [--no-faith]
+              [--out DIR] [--json MANIFEST.json]
+  pahq table <1|2|3|4|5|6|7|8> [--quick] [--from MATRIX.json]
   pahq figure <1|3|4> [--quick]
   pahq all [--quick]
   pahq groundtruth [--model M] [--task T] [--metric kl|task]
   pahq sim [--arch gpt2] [--method acdc|rtn-q|pahq] [--streams full|load|split|none]
            [--sweep serial|batched] [--workers N] [--removal-rate P]
-  pahq sweep [--quick]
+  pahq sweep [--quick] [--seed S]
   pahq bench [--json OUT.json] [--quick]
   pahq info
 
 Flags: --workers N   worker threads for --sweep batched (default: available
                      parallelism); the batched schedule is bit-identical to
-                     serial at any worker count
+                     serial at any worker count. For `matrix` this is the
+                     number of concurrent cells; --pool-workers sets the
+                     per-cell batched-sweep pool instead
+       --seed S      dataset seed through the shared (task, seed, n)
+                     resolution (0 = the python-exported artifact batch);
+                     identical inputs are bit-identical across subcommands
        --json PATH   where to write the machine-readable RunRecord /
-                     bench-snapshot artifact (run: defaults to
+                     bench-snapshot / matrix-manifest artifact (run:
+                     defaults to
                      rust/results/run_<method>_<policy>_<model>_<task>.json;
-                     bench: defaults to rust/results/bench.json)
+                     bench: rust/results/bench.json; matrix:
+                     <out>/matrix.json)
        --policy P    precision policy for the baseline methods
                      (default pahq; acdc|rtn-q|pahq imply theirs)
+       --resume      matrix: skip cells whose valid record already exists
+                     (their files stay byte-identical)
+       --from PATH   tables 2/6/7: render from a matrix manifest in one
+                     pass instead of running the grid sequentially
 
 Defaults: --model gpt2s-sim --task ioi --method pahq --tau 0.01 --metric kl
           --sweep serial --workers <available parallelism>
+          matrix: all methods x fp32,pahq x redwood2l-sim x all tasks
 Models: redwood2l-sim attn4l-sim gpt2s-sim gpt2m-sim gpt2l-sim gpt2xl-sim
 Tasks:  ioi greater_than docstring
 ";
@@ -75,10 +95,11 @@ fn main() -> Result<()> {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "matrix" => cmd_matrix(&args),
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "all" => experiments::run_all(args.flag("quick")),
-        "sweep" => experiments::sweep_scaling(args.flag("quick")),
+        "sweep" => experiments::sweep_scaling(args.flag("quick"), args.u64_or("seed", 0)?),
         "groundtruth" => cmd_groundtruth(&args),
         "sim" => cmd_sim(&args),
         "bench" => cmd_bench(&args),
@@ -114,12 +135,20 @@ fn method_policy(args: &Args) -> Result<(String, Policy)> {
     };
     let policy = match args.get("policy") {
         None => implied,
-        Some("fp32") => Policy::fp32(),
-        Some("rtn") | Some("rtn-q") => Policy::rtn(fmt),
-        Some("pahq") => Policy::pahq(fmt),
-        Some(other) => bail!("unknown policy '{other}' (fp32|rtn|pahq)"),
+        Some(p) => parse_policy(p, bits)?,
     };
     Ok((method.to_string(), policy))
+}
+
+/// Parse a policy spelling (`fp32` | `rtn` | `pahq`) at a bit width.
+fn parse_policy(name: &str, bits: u32) -> Result<Policy> {
+    let fmt = Format::by_bits(bits);
+    Ok(match name {
+        "fp32" => Policy::fp32(),
+        "rtn" | "rtn-q" => Policy::rtn(fmt),
+        "pahq" => Policy::pahq(fmt),
+        other => bail!("unknown policy '{other}' (fp32|rtn|pahq)"),
+    })
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -142,7 +171,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut cfg = DiscoveryConfig::new(tau, obj, pol.clone());
     cfg.record_trace = args.flag("trace");
     cfg.sweep = sweep;
-    let mut session = Session::new(&task)?;
+    // the evaluation batch comes from the shared (task, seed, n)
+    // resolution — bit-identical to `pahq sweep` / `pahq matrix` inputs
+    let seed = args.u64_or("seed", 0)?;
+    let mut session = pahq::matrix::seeded_session(&task, seed)?;
     session.configure(&cfg)?;
     let mut rec = method.discover(&mut session, &task, &cfg)?;
 
@@ -227,12 +259,66 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_matrix(args: &Args) -> Result<()> {
+    let mut cfg = pahq::matrix::MatrixConfig::quick();
+    cfg.quick = args.flag("quick");
+    if let Some(models) = args.list("models") {
+        cfg.models = models;
+    }
+    if let Some(tasks) = args.list("tasks") {
+        cfg.tasks = tasks;
+    }
+    if let Some(methods) = args.list("methods") {
+        cfg.methods = methods;
+    }
+    let bits = args.usize_or("bits", 8)? as u32;
+    if let Some(policies) = args.list("policies") {
+        cfg.policies =
+            policies.iter().map(|p| parse_policy(p, bits)).collect::<Result<Vec<_>>>()?;
+    }
+    cfg.tau = args.f64_or("tau", cfg.tau as f64)? as f32;
+    cfg.objective = objective(args)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.seed = args.u64_or("seed", 0)?;
+    cfg.resume = args.flag("resume");
+    if args.flag("no-faith") {
+        cfg.faithfulness = false;
+    }
+    let pool_workers = args.usize_or("pool-workers", 2)?;
+    cfg.sweep = SweepMode::parse(args.get_or("sweep", "serial"), pool_workers)?;
+    if let Some(out) = args.get("out") {
+        cfg.out_dir = PathBuf::from(out);
+    }
+    if let Some(j) = args.json_path() {
+        cfg.json_path = Some(PathBuf::from(j));
+    }
+    let outcome = pahq::matrix::run(&cfg)?;
+    if outcome.manifest.aggregate.n_error > 0 {
+        bail!(
+            "{} matrix cell(s) failed — see {}",
+            outcome.manifest.aggregate.n_error,
+            outcome.manifest_path.display()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_table(args: &Args) -> Result<()> {
     let n: usize = args
         .positional
         .get(1)
         .context("usage: pahq table <1..8>")?
         .parse()?;
+    // one-pass rollups from a matrix manifest instead of N sequential runs
+    if let Some(p) = args.get("from") {
+        let path = std::path::Path::new(p);
+        return match n {
+            2 => experiments::table2_from_manifest(path),
+            6 => experiments::table6_from_manifest(path),
+            7 => experiments::table7_from_manifest(path),
+            _ => bail!("--from renders tables 2, 6, and 7 (got {n})"),
+        };
+    }
     let quick = args.flag("quick");
     match n {
         1 => experiments::table1(quick),
@@ -489,6 +575,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             measured_weight_bytes,
             measured_cache_bytes: cache_fp32,
             faithfulness: None,
+            cache: None,
             trace: Vec::new(),
         });
     }

@@ -1,0 +1,223 @@
+//! The matrix's keyed artifact store — the cross-run reuse that makes a
+//! full method x policy x task grid cheaper than its cells run in
+//! isolation.
+//!
+//! Three artifact classes are memoized, each under a canonical string
+//! key derived from exactly the inputs that determine its bits:
+//!
+//! - **datasets** per (task, seed, n) — the evaluation batch; `seed 0`
+//!   is the python-exported artifact batch, any other seed routes
+//!   through the shared [`dataset_seed`] derivation into the Rust
+//!   generator. `pahq run`, `pahq sweep`, and every matrix cell resolve
+//!   examples through [`dataset_for`], so identical (task, seed, n)
+//!   inputs are bit-identical across subcommands.
+//! - **corrupt caches** per (model, task, seed, cache tag) — the packed
+//!   corrupted-activation cache all five methods' runs on one task
+//!   share (hi-fidelity policies share one FP32 cache; RTN-Q tags by
+//!   its own policy name because its cache lives on the low lattice).
+//! - **scores** per (method, model, task, seed, objective) — the FP32
+//!   attribution score vector EAP / HISP / SP / Edge-Pruning each
+//!   compute once per task and reuse across precision policies.
+//!
+//! Stores are thread-safe (the work-stealing cell workers share one
+//! [`ArtifactCache`]) and count hits/misses; the manifest's
+//! cache-effectiveness rollup and CI's reuse floor read those counters.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::acdc::sweep::SyntheticSurface;
+use crate::model::{Dataset, Example};
+use crate::tasks::Vocab;
+use crate::tensor::QTensor;
+
+/// FNV-1a-64 over a string (the same constants `record::kept_hash` uses).
+pub fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The one dataset-seed derivation every subcommand shares: fold the
+/// task name into the user's base seed so different tasks never draw
+/// the same generator stream at the same base.
+pub fn dataset_seed(task: &str, base: u64) -> u64 {
+    fnv64(task) ^ base.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Cache key of an evaluation dataset.
+pub fn dataset_key(task: &str, seed: u64, n: usize) -> String {
+    format!("dataset/{task}/{seed}/{n}")
+}
+
+/// Cache key of a packed corrupted-activation cache. `cache_tag` is
+/// `"fp32"` for hi-fidelity policies (they all share one FP32 cache) and
+/// the policy name for low-fidelity ones (RTN-Q packs on its own lattice).
+pub fn corrupt_key(model: &str, task: &str, seed: u64, cache_tag: &str) -> String {
+    format!("corrupt/{model}/{task}/{seed}/{cache_tag}")
+}
+
+/// Cache key of a method's FP32 attribution score vector.
+pub fn scores_key(method: &str, model: &str, task: &str, seed: u64, objective: &str) -> String {
+    format!("scores/{method}/{model}/{task}/{seed}/{objective}")
+}
+
+/// Cache key of a synthetic-substrate damage surface (the corrupt-cache
+/// analog when engine artifacts are absent).
+pub fn surface_key(model: &str, task: &str, seed: u64) -> String {
+    format!("surface/{model}/{task}/{seed}")
+}
+
+/// Resolve the evaluation examples for (task, seed, n): seed 0 is the
+/// python-exported artifact batch; any other seed routes through
+/// [`dataset_seed`] into the shared Rust generator. This is the single
+/// dataset entry point of `pahq run`, `pahq sweep`, and `pahq matrix`.
+pub fn dataset_for(task: &str, seed: u64, n: usize) -> Result<Vec<Example>> {
+    if seed == 0 {
+        return Ok(Dataset::by_task(task)?.batch(n)?.to_vec());
+    }
+    Vocab::load()?.make_dataset(task, n, dataset_seed(task, seed))
+}
+
+/// One typed store: keyed, thread-safe, hit/miss counted. Values are
+/// deterministic functions of their key, so first-writer-wins insertion
+/// is value-safe under concurrency.
+pub struct Store<V> {
+    map: Mutex<HashMap<String, Arc<V>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl<V> Default for Store<V> {
+    fn default() -> Self {
+        Store {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl<V> Store<V> {
+    /// Counted lookup — the cell-facing entry point.
+    pub fn get(&self, key: &str) -> Option<Arc<V>> {
+        let got = self.map.lock().unwrap().get(key).cloned();
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// Uncounted lookup — the seeding phase peeks without skewing the
+    /// cell-facing hit/miss statistics.
+    pub fn peek(&self, key: &str) -> Option<Arc<V>> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    /// Insert; the first writer wins (values are deterministic per key).
+    pub fn put(&self, key: &str, v: Arc<V>) {
+        self.map.lock().unwrap().entry(key.to_string()).or_insert(v);
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// The matrix's shared artifact store: one [`Store`] per reusable
+/// artifact class (see module docs), plus the synthetic-substrate
+/// surfaces whose hits count as corrupt-cache hits (they are the
+/// corrupt-cache analog).
+#[derive(Default)]
+pub struct ArtifactCache {
+    pub datasets: Store<Vec<Example>>,
+    pub corrupt: Store<Vec<QTensor>>,
+    pub scores: Store<Vec<f32>>,
+    pub surfaces: Store<SyntheticSurface>,
+}
+
+impl ArtifactCache {
+    /// Corrupt-cache hits across both substrates.
+    pub fn corrupt_hits(&self) -> usize {
+        self.corrupt.hits() + self.surfaces.hits()
+    }
+
+    /// Total counted misses across every store.
+    pub fn misses(&self) -> usize {
+        self.datasets.misses()
+            + self.corrupt.misses()
+            + self.scores.misses()
+            + self.surfaces.misses()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn keys_are_collision_free_across_inputs() {
+        let keys = [
+            dataset_key("ioi", 0, 32),
+            dataset_key("ioi", 1, 32),
+            dataset_key("ioi", 0, 64),
+            dataset_key("docstring", 0, 32),
+            corrupt_key("gpt2s-sim", "ioi", 0, "fp32"),
+            corrupt_key("gpt2s-sim", "ioi", 1, "fp32"),
+            corrupt_key("gpt2s-sim", "ioi", 0, "rtn-q-8b"),
+            corrupt_key("gpt2s-sim", "docstring", 0, "fp32"),
+            corrupt_key("redwood2l-sim", "ioi", 0, "fp32"),
+            scores_key("eap", "gpt2s-sim", "ioi", 0, "kl"),
+            scores_key("hisp", "gpt2s-sim", "ioi", 0, "kl"),
+            scores_key("eap", "gpt2s-sim", "ioi", 0, "task"),
+            scores_key("eap", "gpt2s-sim", "ioi", 7, "kl"),
+            scores_key("eap", "gpt2s-sim", "docstring", 0, "kl"),
+            surface_key("gpt2s-sim", "ioi", 0),
+            surface_key("gpt2s-sim", "ioi", 7),
+        ];
+        let uniq: HashSet<&String> = keys.iter().collect();
+        assert_eq!(uniq.len(), keys.len(), "every key distinct");
+    }
+
+    #[test]
+    fn dataset_seed_separates_tasks_and_bases() {
+        assert_ne!(dataset_seed("ioi", 1), dataset_seed("docstring", 1));
+        assert_ne!(dataset_seed("ioi", 1), dataset_seed("ioi", 2));
+        assert_eq!(dataset_seed("ioi", 3), dataset_seed("ioi", 3));
+    }
+
+    #[test]
+    fn store_counts_hits_and_misses() {
+        let s: Store<usize> = Store::default();
+        assert!(s.get("a").is_none());
+        assert_eq!((s.hits(), s.misses()), (0, 1));
+        s.put("a", Arc::new(7));
+        assert_eq!(*s.get("a").unwrap(), 7);
+        assert_eq!((s.hits(), s.misses()), (1, 1));
+        // peek never counts; first writer wins
+        assert_eq!(*s.peek("a").unwrap(), 7);
+        s.put("a", Arc::new(9));
+        assert_eq!(*s.peek("a").unwrap(), 7);
+        assert_eq!((s.hits(), s.misses()), (1, 1));
+    }
+
+    #[test]
+    fn fnv64_matches_reference_vector() {
+        // FNV-1a 64 of the empty string is the offset basis
+        assert_eq!(fnv64(""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv64("ioi"), fnv64("docstring"));
+    }
+}

@@ -1,0 +1,1247 @@
+//! `pahq matrix` — the work-stealing grid orchestrator.
+//!
+//! A matrix run executes the full method x policy x task grid as one job
+//! queue drained by a pool of cell workers inside one process, instead
+//! of one `pahq run` process per cell. Three things make the grid
+//! cheaper than its cells run in isolation:
+//!
+//! 1. **Cross-run reuse** ([`cache`]): a keyed artifact store memoizes
+//!    per-(task, seed) evaluation datasets and packed corrupt-activation
+//!    caches, and per-(method, task) FP32 attribution score vectors —
+//!    the five methods' runs on one task share one corrupt cache, and
+//!    EAP / HISP / SP / Edge-Pruning each score once per task and reuse
+//!    the vector across precision policies. A seeding phase builds every
+//!    shared artifact exactly once; the cell phase then runs all-hit.
+//! 2. **Pool sharing**: with a batched sweep schedule, each worker hands
+//!    its [`EnginePool`] to the next cell it steals
+//!    ([`Session::take_pool`] / [`Session::set_pool`]) — consecutive
+//!    cells with matching model/task/policy skip rebuilding the engine
+//!    replicas.
+//! 3. **Resumability**: every cell emits its schema-versioned
+//!    [`RunRecord`]; the `matrix.json` manifest records per-cell record
+//!    path, status, wall time, and cache hits, and `--resume` skips
+//!    cells whose valid record already exists, leaving their files
+//!    byte-identical.
+//!
+//! Cells consume the shared artifacts through
+//! [`crate::discovery::DiscoveryInputs`], so a matrix cell and a
+//! standalone `pahq run` produce bit-identical kept-edge sets — the
+//! contract `tests/matrix.rs` pins at 1 and 4 workers.
+//!
+//! When the engine artifacts are absent (CI runs `pahq matrix --quick`
+//! with no `make artifacts`), the grid falls back to a deterministic
+//! synthetic substrate: per-(task, seed) damage surfaces stand in for
+//! corrupt caches and splitmix pseudo-attributions for scoring passes,
+//! exercising the same queue, store, manifest, and resume machinery.
+
+pub mod cache;
+
+use std::collections::{BTreeSet, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::acdc::sweep::{self, Candidate, EnginePool, FnScorer, SweepMode, SyntheticSurface};
+use crate::baselines::{eap, edge_pruning, hisp, sp};
+use crate::discovery::{
+    self, CacheStats, DiscoveryConfig, DiscoveryInputs, RunRecord, Session, Task,
+};
+use crate::eval;
+use crate::gpu_sim::memory::MethodKind;
+use crate::gpu_sim::{CostModel, RealArch};
+use crate::metrics::Objective;
+use crate::model::{Graph, Manifest};
+use crate::patching::{PatchMask, PatchedForward, Policy};
+use crate::quant::FP8_E4M3;
+use crate::report::{mmss, results_dir, Table};
+use crate::scheduler::{predict_matrix_wall, predict_run, StreamConfig};
+use crate::util::json::{obj, Json};
+
+use cache::ArtifactCache;
+
+/// Version of the `matrix.json` manifest shape. Mirrored by
+/// `docs/matrix.schema.json`; bump both together.
+pub const MATRIX_SCHEMA_VERSION: usize = 1;
+
+/// Grid configuration for [`run`].
+#[derive(Clone)]
+pub struct MatrixConfig {
+    pub methods: Vec<String>,
+    pub policies: Vec<Policy>,
+    pub models: Vec<String>,
+    pub tasks: Vec<String>,
+    pub tau: f32,
+    pub objective: Objective,
+    /// per-cell evaluation schedule; batched enables pool sharing
+    pub sweep: SweepMode,
+    /// concurrent cells drained from the job queue
+    pub workers: usize,
+    /// dataset seed (0 = the python-exported artifact batch)
+    pub seed: u64,
+    /// skip cells whose valid record already exists on disk
+    pub resume: bool,
+    pub quick: bool,
+    /// score each circuit against the FP32 ground truth (real substrate)
+    pub faithfulness: bool,
+    /// where per-cell records land
+    pub out_dir: PathBuf,
+    /// where the manifest lands (default: `<out_dir>/matrix.json`)
+    pub json_path: Option<PathBuf>,
+}
+
+impl MatrixConfig {
+    /// The acceptance grid: all five methods x {fp32, pahq} on every
+    /// task of the smallest model.
+    pub fn quick() -> MatrixConfig {
+        MatrixConfig {
+            methods: discovery::METHOD_NAMES.iter().map(|s| s.to_string()).collect(),
+            policies: vec![Policy::fp32(), Policy::pahq(FP8_E4M3)],
+            models: vec!["redwood2l-sim".into()],
+            tasks: crate::experiments::TASKS.iter().map(|s| s.to_string()).collect(),
+            tau: 0.01,
+            objective: Objective::Kl,
+            sweep: SweepMode::Serial,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            seed: 0,
+            resume: false,
+            quick: true,
+            faithfulness: true,
+            out_dir: results_dir().join("matrix"),
+            json_path: None,
+        }
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.json_path.clone().unwrap_or_else(|| self.out_dir.join("matrix.json"))
+    }
+}
+
+/// One grid cell: a (method, policy, model, task) discovery run.
+#[derive(Clone)]
+pub struct Cell {
+    pub method: String,
+    pub policy: Policy,
+    pub model: String,
+    pub task: String,
+}
+
+impl Cell {
+    pub fn id(&self) -> String {
+        format!("{}_{}_{}_{}", self.method, self.policy.name, self.model, self.task)
+    }
+
+    pub fn record_name(&self) -> String {
+        format!("run_{}.json", self.id())
+    }
+}
+
+/// The grid in its stable evaluation order: model, task, method, policy.
+pub fn grid(cfg: &MatrixConfig) -> Vec<Cell> {
+    let mut out = Vec::new();
+    for model in &cfg.models {
+        for task in &cfg.tasks {
+            for method in &cfg.methods {
+                for policy in &cfg.policies {
+                    out.push(Cell {
+                        method: method.clone(),
+                        policy: policy.clone(),
+                        model: model.clone(),
+                        task: task.clone(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellStatus {
+    /// ran in this invocation
+    Ok,
+    /// valid record already on disk (`--resume`), left byte-identical
+    Cached,
+    Error,
+}
+
+impl CellStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CellStatus::Ok => "ok",
+            CellStatus::Cached => "cached",
+            CellStatus::Error => "error",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CellStatus> {
+        Ok(match s {
+            "ok" => CellStatus::Ok,
+            "cached" => CellStatus::Cached,
+            "error" => CellStatus::Error,
+            other => bail!("unknown cell status '{other}'"),
+        })
+    }
+}
+
+/// One manifest row: where a cell's record lives and what it cost.
+#[derive(Clone, Debug)]
+pub struct CellEntry {
+    pub method: String,
+    pub policy: String,
+    pub model: String,
+    pub task: String,
+    pub status: CellStatus,
+    /// record path relative to the manifest file
+    pub record: Option<String>,
+    /// wall seconds this invocation spent on the cell (0 when cached)
+    pub wall_seconds: f64,
+    pub n_evals: Option<usize>,
+    pub kept_hash: Option<String>,
+    pub cache: Option<CacheStats>,
+    pub error: Option<String>,
+}
+
+impl CellEntry {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("method", Json::from(self.method.clone())),
+            ("policy", Json::from(self.policy.clone())),
+            ("model", Json::from(self.model.clone())),
+            ("task", Json::from(self.task.clone())),
+            ("status", Json::from(self.status.as_str())),
+            ("wall_seconds", Json::from(self.wall_seconds)),
+        ];
+        if let Some(r) = &self.record {
+            pairs.push(("record", Json::from(r.clone())));
+        }
+        if let Some(n) = self.n_evals {
+            pairs.push(("n_evals", Json::from(n)));
+        }
+        if let Some(h) = &self.kept_hash {
+            pairs.push(("kept_hash", Json::from(h.clone())));
+        }
+        if let Some(c) = &self.cache {
+            pairs.push(("cache", c.to_json()));
+        }
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::from(e.clone())));
+        }
+        obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<CellEntry> {
+        Ok(CellEntry {
+            method: j.get("method")?.as_str()?.to_string(),
+            policy: j.get("policy")?.as_str()?.to_string(),
+            model: j.get("model")?.as_str()?.to_string(),
+            task: j.get("task")?.as_str()?.to_string(),
+            status: CellStatus::parse(j.get("status")?.as_str()?)?,
+            record: j.opt("record").and_then(|r| r.as_str().ok()).map(str::to_string),
+            wall_seconds: j.get("wall_seconds")?.as_f64()?,
+            n_evals: match j.opt("n_evals") {
+                None => None,
+                Some(n) => Some(n.as_usize()?),
+            },
+            kept_hash: j.opt("kept_hash").and_then(|h| h.as_str().ok()).map(str::to_string),
+            cache: match j.opt("cache") {
+                None => None,
+                Some(c) => Some(CacheStats::from_json(c)?),
+            },
+            error: j.opt("error").and_then(|e| e.as_str().ok()).map(str::to_string),
+        })
+    }
+}
+
+/// Grid-level rollups: completion, evaluation and wall totals, cache
+/// effectiveness, and the memory / faithfulness aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct Aggregate {
+    pub n_cells: usize,
+    pub n_ok: usize,
+    pub n_cached: usize,
+    pub n_error: usize,
+    pub n_evals_total: usize,
+    pub wall_seconds_total: f64,
+    pub dataset_cache_hits: usize,
+    pub corrupt_cache_hits: usize,
+    pub scores_cache_hits: usize,
+    pub cache_misses: usize,
+    pub measured_bytes_peak: usize,
+    pub faithfulness_accuracy_mean: Option<f64>,
+}
+
+impl Aggregate {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("n_cells", Json::from(self.n_cells)),
+            ("n_ok", Json::from(self.n_ok)),
+            ("n_cached", Json::from(self.n_cached)),
+            ("n_error", Json::from(self.n_error)),
+            ("n_evals_total", Json::from(self.n_evals_total)),
+            ("wall_seconds_total", Json::from(self.wall_seconds_total)),
+            ("dataset_cache_hits", Json::from(self.dataset_cache_hits)),
+            ("corrupt_cache_hits", Json::from(self.corrupt_cache_hits)),
+            ("scores_cache_hits", Json::from(self.scores_cache_hits)),
+            ("cache_misses", Json::from(self.cache_misses)),
+            ("measured_bytes_peak", Json::from(self.measured_bytes_peak)),
+        ];
+        if let Some(f) = self.faithfulness_accuracy_mean {
+            pairs.push(("faithfulness_accuracy_mean", Json::from(f)));
+        }
+        obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<Aggregate> {
+        Ok(Aggregate {
+            n_cells: j.get("n_cells")?.as_usize()?,
+            n_ok: j.get("n_ok")?.as_usize()?,
+            n_cached: j.get("n_cached")?.as_usize()?,
+            n_error: j.get("n_error")?.as_usize()?,
+            n_evals_total: j.get("n_evals_total")?.as_usize()?,
+            wall_seconds_total: j.get("wall_seconds_total")?.as_f64()?,
+            dataset_cache_hits: j.get("dataset_cache_hits")?.as_usize()?,
+            corrupt_cache_hits: j.get("corrupt_cache_hits")?.as_usize()?,
+            scores_cache_hits: j.get("scores_cache_hits")?.as_usize()?,
+            cache_misses: j.get("cache_misses")?.as_usize()?,
+            measured_bytes_peak: j.get("measured_bytes_peak")?.as_usize()?,
+            faithfulness_accuracy_mean: match j.opt("faithfulness_accuracy_mean") {
+                None => None,
+                Some(f) => Some(f.as_f64()?),
+            },
+        })
+    }
+}
+
+/// The `matrix.json` artifact: per-cell record paths, statuses, wall
+/// times and cache hits, plus the grid rollups. What `--resume` and the
+/// CI matrix gate read, and what tables 2/6/7 re-render from.
+#[derive(Clone, Debug)]
+pub struct MatrixManifest {
+    pub schema_version: usize,
+    pub tau: f64,
+    pub objective: String,
+    pub sweep: String,
+    pub workers: usize,
+    pub seed: u64,
+    pub quick: bool,
+    pub synthetic: bool,
+    pub cells: Vec<CellEntry>,
+    pub aggregate: Aggregate,
+}
+
+impl MatrixManifest {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", Json::from("matrix_manifest")),
+            ("schema_version", Json::from(self.schema_version)),
+            ("tau", Json::from(self.tau)),
+            ("objective", Json::from(self.objective.clone())),
+            ("sweep", Json::from(self.sweep.clone())),
+            ("workers", Json::from(self.workers)),
+            ("seed", Json::from(self.seed as usize)),
+            ("quick", Json::from(self.quick)),
+            ("synthetic", Json::from(self.synthetic)),
+            ("cells", Json::Arr(self.cells.iter().map(|c| c.to_json()).collect())),
+            ("aggregate", self.aggregate.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MatrixManifest> {
+        if j.get("kind")?.as_str()? != "matrix_manifest" {
+            bail!("not a matrix_manifest");
+        }
+        let version = j.get("schema_version")?.as_usize()?;
+        if version != MATRIX_SCHEMA_VERSION {
+            bail!("matrix manifest schema v{version}, this build reads v{MATRIX_SCHEMA_VERSION}");
+        }
+        Ok(MatrixManifest {
+            schema_version: version,
+            tau: j.get("tau")?.as_f64()?,
+            objective: j.get("objective")?.as_str()?.to_string(),
+            sweep: j.get("sweep")?.as_str()?.to_string(),
+            workers: j.get("workers")?.as_usize()?,
+            seed: j.get("seed")?.as_usize()? as u64,
+            quick: j.get("quick")?.as_bool()?,
+            synthetic: j.get("synthetic")?.as_bool()?,
+            cells: j
+                .get("cells")?
+                .as_arr()?
+                .iter()
+                .map(CellEntry::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            aggregate: Aggregate::from_json(j.get("aggregate")?)?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, self.to_json().dump())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<MatrixManifest> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Load every cell's RunRecord (paths are manifest-relative). A
+    /// completed cell whose record file is missing or unreadable is an
+    /// error — a silently partial grid would read as a complete one.
+    pub fn load_cell_records(&self, manifest_path: &Path) -> Result<Vec<(usize, RunRecord)>> {
+        let dir = manifest_path.parent().unwrap_or_else(|| Path::new(""));
+        let mut out = Vec::new();
+        for (i, c) in self.cells.iter().enumerate() {
+            if let Some(rel) = &c.record {
+                let rec = RunRecord::load(&dir.join(rel)).with_context(|| {
+                    format!("cell {}/{}/{}/{}: record {rel}", c.method, c.policy, c.model, c.task)
+                })?;
+                out.push((i, rec));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// What [`run`] hands back: the manifest plus where it was written.
+pub struct MatrixOutcome {
+    pub manifest: MatrixManifest,
+    pub manifest_path: PathBuf,
+}
+
+// ---------------------------------------------------------------------------
+// Shared dataset / session resolution (also the `pahq run` / `pahq sweep`
+// entry points — satellite: both subcommands route through one derivation)
+
+/// Build a discovery session whose evaluation batch comes from the
+/// shared (task, seed, n) dataset resolution ([`cache::dataset_for`]).
+/// `pahq run`, `pahq sweep`, and every matrix cell route through this,
+/// so identical (task, seed, n) inputs are bit-identical across
+/// subcommands.
+pub fn seeded_session(task: &Task, seed: u64) -> Result<Session> {
+    let manifest = Manifest::by_name(&task.model)?;
+    let examples = cache::dataset_for(&task.task, seed, manifest.batch)?;
+    Session::with_inputs(
+        task,
+        DiscoveryInputs { examples: Some(Arc::new(examples)), ..Default::default() },
+    )
+}
+
+/// One-stop seeded discovery (the `pahq sweep` body): seeded session,
+/// configure, discover.
+pub fn seeded_discover(
+    method: &str,
+    task: &Task,
+    cfg: &DiscoveryConfig,
+    seed: u64,
+) -> Result<RunRecord> {
+    let m = discovery::by_name(method)?;
+    let mut session = seeded_session(task, seed)?;
+    session.configure(cfg)?;
+    m.discover(&mut session, task, cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic substrate
+
+/// Fixed grid substrate when engine artifacts are absent (CI): a small
+/// attn+mlp graph whose damage comes from a deterministic per-(model,
+/// task, seed) synthetic surface — the corrupt-cache analog.
+pub fn synthetic_graph() -> Graph {
+    Graph { n_layer: 3, n_head: 4, has_mlp: true }
+}
+
+/// The per-(model, task, seed) damage surface of the synthetic substrate.
+pub fn synthetic_surface(model: &str, task: &str, seed: u64) -> SyntheticSurface {
+    let s = cache::fnv64(model)
+        ^ cache::fnv64(task).rotate_left(17)
+        ^ seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    SyntheticSurface::new(s, 0.001)
+}
+
+/// Deterministic pseudo-attribution scores (a splitmix64 stream keyed by
+/// method/model/task/seed) standing in for a method's FP32 scoring pass
+/// on the synthetic substrate.
+pub fn synthetic_scores(
+    method: &str,
+    model: &str,
+    task: &str,
+    seed: u64,
+    n_edges: usize,
+) -> Vec<f32> {
+    let mut x = cache::fnv64(method)
+        ^ cache::fnv64(model).rotate_left(11)
+        ^ cache::fnv64(task).rotate_left(29)
+        ^ seed;
+    (0..n_edges)
+        .map(|_| {
+            x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^= z >> 31;
+            (z >> 40) as f32 / (1u64 << 24) as f32
+        })
+        .collect()
+}
+
+/// One synthetic-substrate cell with explicit inputs — also the
+/// standalone comparator the matrix's bit-identity tests run against.
+pub fn synthetic_cell_record(
+    cell: &Cell,
+    cfg: &MatrixConfig,
+    surface: &SyntheticSurface,
+    scores: Option<&[f32]>,
+) -> Result<RunRecord> {
+    let t0 = Instant::now();
+    let g = synthetic_graph();
+    let channels = g.channels();
+    let chan_of = |ch: &crate::model::Channel| channels.iter().position(|c| c == ch).unwrap();
+    let plan: Vec<Vec<Candidate>> = if cell.method == "acdc" {
+        // reverse-topological channel groups, mirroring acdc::sweep_plan
+        let mut order = channels.clone();
+        order.reverse();
+        order
+            .iter()
+            .map(|ch| {
+                let ci = chan_of(ch);
+                let mut srcs = g.sources(*ch);
+                srcs.reverse();
+                srcs.into_iter()
+                    .map(|src| Candidate {
+                        chan: ci,
+                        src,
+                        hi: crate::acdc::hi_node_for(&cell.policy, src),
+                    })
+                    .collect()
+            })
+            .collect()
+    } else {
+        // ascending-score single group, mirroring discovery::ordered_plan
+        let own;
+        let s: &[f32] = match scores {
+            Some(s) => s,
+            None => {
+                own = synthetic_scores(
+                    &cell.method,
+                    &cell.model,
+                    &cell.task,
+                    cfg.seed,
+                    g.n_edges(),
+                );
+                own.as_slice()
+            }
+        };
+        let edges = g.edges();
+        let mut order: Vec<usize> = (0..edges.len()).collect();
+        order.sort_by(|&a, &b| s[a].total_cmp(&s[b]).then(a.cmp(&b)));
+        vec![order
+            .into_iter()
+            .map(|i| Candidate {
+                chan: chan_of(&edges[i].dst),
+                src: edges[i].src,
+                hi: crate::acdc::hi_node_for(&cell.policy, edges[i].src),
+            })
+            .collect()]
+    };
+    let score = |m: &PatchMask, c: Option<&Candidate>| surface.damage(m, c);
+    let mut scorer = FnScorer { score, workers: cfg.sweep.workers() };
+    let out = sweep::sweep(&mut scorer, channels.len(), &plan, cfg.tau, false, cfg.sweep)?;
+    let kept: Vec<bool> =
+        g.edges().iter().map(|e| !out.removed.get(chan_of(&e.dst), e.src)).collect();
+    Ok(RunRecord {
+        schema_version: discovery::SCHEMA_VERSION,
+        method: cell.method.clone(),
+        policy: cell.policy.name.clone(),
+        model: cell.model.clone(),
+        task: cell.task.clone(),
+        objective: "synthetic".into(),
+        tau: cfg.tau as f64,
+        sweep: cfg.sweep.label(),
+        workers: cfg.sweep.workers(),
+        n_edges: kept.len(),
+        n_kept: kept.iter().filter(|&&k| k).count(),
+        kept_hash: discovery::kept_hash(&kept),
+        n_evals: out.n_evals,
+        final_metric: out.final_metric as f64,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        pjrt_seconds: 0.0,
+        sim_bytes: None,
+        measured_weight_bytes: 0,
+        measured_cache_bytes: 0,
+        faithfulness: None,
+        cache: None,
+        trace: Vec::new(),
+    })
+}
+
+/// Run one cell standalone — fresh session, no cross-run cache — the
+/// reference the matrix's bit-identity contract is tested against.
+/// Makes the same grid-wide substrate decision [`run`] makes (real only
+/// when every model in the config builds), so the comparison stays
+/// apples-to-apples even with partially exported artifacts.
+pub fn standalone_cell(cell: &Cell, cfg: &MatrixConfig) -> Result<RunRecord> {
+    if substrate_is_synthetic(cfg, false)? {
+        let surface = synthetic_surface(&cell.model, &cell.task, cfg.seed);
+        return synthetic_cell_record(cell, cfg, &surface, None);
+    }
+    let task = Task::new(&cell.model, &cell.task);
+    let mut session = seeded_session(&task, cfg.seed)?;
+    let dcfg = base_config(cfg, &cell.policy);
+    session.configure(&dcfg)?;
+    discovery::by_name(&cell.method)?.discover(&mut session, &task, &dcfg)
+}
+
+// ---------------------------------------------------------------------------
+// The orchestrator
+
+fn base_config(cfg: &MatrixConfig, policy: &Policy) -> DiscoveryConfig {
+    DiscoveryConfig::new(cfg.tau, cfg.objective, policy.clone()).with_sweep(cfg.sweep)
+}
+
+/// Which corrupt cache a policy reads: hi-fidelity policies share one
+/// FP32 cache; low-fidelity ones (RTN-Q) pack on their own lattice.
+fn cache_tag(policy: &Policy) -> String {
+    if policy.hi_fidelity_refs {
+        "fp32".to_string()
+    } else {
+        policy.name.clone()
+    }
+}
+
+/// Compute a method's FP32 attribution scores on an engine whose session
+/// is already FP32 — exactly the pass `discovery::scored_at_fp32` runs,
+/// so the seeded vector is bit-identical to what the cell would compute.
+fn attribution_scores(
+    engine: &mut PatchedForward,
+    method: &str,
+    cfg: &MatrixConfig,
+) -> Result<Vec<f32>> {
+    let dcfg = base_config(cfg, &Policy::fp32());
+    match method {
+        "eap" => eap::scores(engine, cfg.objective),
+        "hisp" => hisp::scores(engine, cfg.objective),
+        "sp" => sp::scores(engine, &sp::SpConfig { steps: dcfg.sp_steps, ..Default::default() }),
+        "edge-pruning" | "ep" => {
+            let ep_cfg = edge_pruning::EpConfig { steps: dcfg.ep_steps, ..Default::default() };
+            Ok(edge_pruning::train(engine, &ep_cfg)?.edge_scores)
+        }
+        other => bail!("method '{other}' has no attribution scorer"),
+    }
+}
+
+/// Seed every shared artifact of one (model, task) combo exactly once:
+/// the dataset, each required corrupt-cache variant, the FP32 ground
+/// truth (when faithfulness is on), and every attribution method's
+/// score vector — one engine, one pass over the artifact classes.
+fn seed_combo_real(
+    cfg: &MatrixConfig,
+    store: &ArtifactCache,
+    model: &str,
+    task: &str,
+) -> Result<()> {
+    let manifest = Manifest::by_name(model)?;
+    let n = manifest.batch;
+    let dkey = cache::dataset_key(task, cfg.seed, n);
+    let examples = match store.datasets.peek(&dkey) {
+        Some(e) => e,
+        None => {
+            let e = Arc::new(cache::dataset_for(task, cfg.seed, n)?);
+            store.datasets.put(&dkey, e.clone());
+            e
+        }
+    };
+    let mut engine = PatchedForward::with_examples(manifest, examples.as_ref().clone())?;
+    // low-fidelity caches first (each lives on its own lattice)...
+    for policy in &cfg.policies {
+        if policy.hi_fidelity_refs {
+            continue;
+        }
+        let ckey = cache::corrupt_key(model, task, cfg.seed, &cache_tag(policy));
+        if store.corrupt.peek(&ckey).is_none() {
+            engine.set_session(policy.clone())?;
+            store.corrupt.put(&ckey, Arc::new(engine.corrupt_cache.clone()));
+        }
+    }
+    // ...then the FP32 session: the shared hi-fidelity cache, the ground
+    // truth (exhaustive FP32 reference sweep, disk-cached per model/task/
+    // objective — computed here once so concurrent cells only read), and
+    // every attribution method's FP32 scoring pass
+    engine.set_session(Policy::fp32())?;
+    if cfg.policies.iter().any(|p| p.hi_fidelity_refs) {
+        let ckey = cache::corrupt_key(model, task, cfg.seed, "fp32");
+        if store.corrupt.peek(&ckey).is_none() {
+            store.corrupt.put(&ckey, Arc::new(engine.corrupt_cache.clone()));
+        }
+    }
+    if cfg.faithfulness {
+        eval::ground_truth(&mut engine, model, task, cfg.objective)?;
+    }
+    for method in &cfg.methods {
+        if method == "acdc" {
+            continue;
+        }
+        let skey = cache::scores_key(method, model, task, cfg.seed, cfg.objective.key());
+        if store.scores.peek(&skey).is_some() {
+            continue;
+        }
+        match attribution_scores(&mut engine, method, cfg) {
+            Ok(s) => store.scores.put(&skey, Arc::new(s)),
+            // best-effort: the cell recomputes (and publishes) on miss
+            Err(e) => eprintln!("matrix: {model}/{task}/{method} score seeding failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn seed_combo_synthetic(cfg: &MatrixConfig, store: &ArtifactCache, model: &str, task: &str) {
+    let skey = cache::surface_key(model, task, cfg.seed);
+    if store.surfaces.peek(&skey).is_none() {
+        store.surfaces.put(&skey, Arc::new(synthetic_surface(model, task, cfg.seed)));
+    }
+    let n_edges = synthetic_graph().n_edges();
+    for method in &cfg.methods {
+        if method == "acdc" {
+            continue;
+        }
+        let key = cache::scores_key(method, model, task, cfg.seed, "synthetic");
+        if store.scores.peek(&key).is_none() {
+            let s = synthetic_scores(method, model, task, cfg.seed, n_edges);
+            store.scores.put(&key, Arc::new(s));
+        }
+    }
+}
+
+fn run_cell_real(
+    cfg: &MatrixConfig,
+    store: &ArtifactCache,
+    cell: &Cell,
+    pool_slot: &mut Option<EnginePool>,
+) -> Result<(RunRecord, CacheStats)> {
+    let task = Task::new(&cell.model, &cell.task);
+    let manifest = Manifest::by_name(&cell.model)?;
+    let dkey = cache::dataset_key(&cell.task, cfg.seed, manifest.batch);
+    let (examples, dataset_hit) = match store.datasets.get(&dkey) {
+        Some(e) => (e, true),
+        // every cell resolves its batch through the shared derivation,
+        // cached or not — a seeding failure never silently changes data
+        None => (Arc::new(cache::dataset_for(&cell.task, cfg.seed, manifest.batch)?), false),
+    };
+    let ckey = cache::corrupt_key(&cell.model, &cell.task, cfg.seed, &cache_tag(&cell.policy));
+    let corrupt = store.corrupt.get(&ckey);
+    let skey = (cell.method != "acdc").then(|| {
+        cache::scores_key(&cell.method, &cell.model, &cell.task, cfg.seed, cfg.objective.key())
+    });
+    let scores = skey.as_ref().and_then(|k| store.scores.get(k));
+    let inputs = DiscoveryInputs { examples: Some(examples), corrupt_cache: corrupt, scores };
+    let mut session = Session::with_inputs(&task, inputs)?;
+    session.cache_stats.dataset_hit = dataset_hit;
+    if let Some(p) = pool_slot.take() {
+        // pool sharing: configure keeps it on a full match, else rebuilds
+        session.set_pool(p);
+    }
+    let dcfg = base_config(cfg, &cell.policy);
+    session.configure(&dcfg)?;
+    let method = discovery::by_name(&cell.method)?;
+    let mut rec = method.discover(&mut session, &task, &dcfg)?;
+    if let (Some(k), Some(s)) = (&skey, session.take_computed_scores()) {
+        store.scores.put(k, s);
+    }
+    if cfg.faithfulness {
+        if let Err(e) = session.evaluate_faithfulness(&dcfg, &mut rec, true) {
+            eprintln!("matrix: {} faithfulness skipped: {e}", cell.id());
+        }
+    }
+    let stats = session.cache_stats.clone();
+    *pool_slot = session.take_pool();
+    Ok((rec, stats))
+}
+
+fn run_cell_synthetic(
+    cfg: &MatrixConfig,
+    store: &ArtifactCache,
+    cell: &Cell,
+) -> Result<(RunRecord, CacheStats)> {
+    let mut stats = CacheStats::default();
+    let skey = cache::surface_key(&cell.model, &cell.task, cfg.seed);
+    let surface = match store.surfaces.get(&skey) {
+        Some(s) => {
+            stats.corrupt_hit = true;
+            s
+        }
+        None => Arc::new(synthetic_surface(&cell.model, &cell.task, cfg.seed)),
+    };
+    let scores = if cell.method == "acdc" {
+        None
+    } else {
+        let key = cache::scores_key(&cell.method, &cell.model, &cell.task, cfg.seed, "synthetic");
+        match store.scores.get(&key) {
+            Some(s) => {
+                stats.scores_hit = true;
+                Some(s)
+            }
+            None => None,
+        }
+    };
+    let mut rec =
+        synthetic_cell_record(cell, cfg, &surface, scores.as_ref().map(|s| s.as_slice()))?;
+    rec.cache = stats.any().then(|| stats.clone());
+    Ok((rec, stats))
+}
+
+struct CellOutcome {
+    status: CellStatus,
+    rec: Option<RunRecord>,
+    stats: CacheStats,
+    wall: f64,
+    error: Option<String>,
+}
+
+/// Does an on-disk record belong to this cell under this config?
+/// `RunRecord` carries no seed field, so seed compatibility is
+/// established once per resume by [`resume_context_matches`] against
+/// the previous manifest (which does record the seed).
+fn record_matches(rec: &RunRecord, cell: &Cell, cfg: &MatrixConfig, expected_obj: &str) -> bool {
+    rec.method == cell.method
+        && rec.policy == cell.policy.name
+        && rec.model == cell.model
+        && rec.task == cell.task
+        && rec.objective == expected_obj
+        && (rec.tau - cfg.tau as f64).abs() < 1e-12
+        // the kept set is schedule-invariant but n_evals is not
+        // (speculation overhead), so a record from a different sweep
+        // schedule would corrupt the manifest's eval trajectory
+        && rec.sweep == cfg.sweep.label()
+}
+
+/// `--resume` trusts on-disk records only when the previous manifest
+/// ran the same seed / tau / objective / substrate — the identity a
+/// bare record cannot carry. No readable manifest means no resume
+/// (records alone could alias a different seed's grid).
+fn resume_context_matches(manifest_path: &Path, cfg: &MatrixConfig, synthetic: bool) -> bool {
+    match MatrixManifest::load(manifest_path) {
+        Ok(m) => {
+            m.seed == cfg.seed
+                && m.synthetic == synthetic
+                && m.objective == cfg.objective.key()
+                && (m.tau - cfg.tau as f64).abs() < 1e-12
+        }
+        Err(_) => false,
+    }
+}
+
+/// `path` relative to `dir`, with `..` segments when `path` is not
+/// under `dir` — the manifest's record-path contract holds wherever
+/// `--out` and `--json` point.
+fn rel_to(dir: &Path, path: &Path) -> String {
+    fn absolute(p: &Path) -> PathBuf {
+        if p.is_absolute() {
+            p.to_path_buf()
+        } else {
+            std::env::current_dir().unwrap_or_default().join(p)
+        }
+    }
+    let (dir, path) = (absolute(dir), absolute(path));
+    let d: Vec<_> = dir.components().collect();
+    let p: Vec<_> = path.components().collect();
+    let common = d.iter().zip(&p).take_while(|(a, b)| a == b).count();
+    let mut out = PathBuf::new();
+    for _ in common..d.len() {
+        out.push("..");
+    }
+    for c in &p[common..] {
+        out.push(c);
+    }
+    out.to_string_lossy().into_owned()
+}
+
+/// Substrate decision for a whole grid, shared by [`run`] and
+/// [`standalone_cell`] so the bit-identity comparison stays
+/// apples-to-apples:
+///
+/// - no model manifest and no task dataset resolves → synthetic (the
+///   artifact-less environment the fallback exists for, e.g. CI);
+/// - *some* resolve and some don't → error — partial availability is a
+///   typo'd `--models`/`--tasks` or a half-built artifact tree, and
+///   silently pseudo-scoring it into a green grid would be worse;
+/// - everything resolves → real, unless the engine itself cannot build
+///   (the vendored PJRT stub), which degrades to synthetic with notice.
+fn substrate_is_synthetic(cfg: &MatrixConfig, verbose: bool) -> Result<bool> {
+    let mut available = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    for model in &cfg.models {
+        match Manifest::by_name(model) {
+            Ok(_) => available += 1,
+            Err(e) => failures.push(format!("model {model}: {e}")),
+        }
+    }
+    for task in &cfg.tasks {
+        match crate::model::Dataset::by_task(task) {
+            Ok(_) => available += 1,
+            Err(e) => failures.push(format!("task {task}: {e}")),
+        }
+    }
+    if available == 0 {
+        if verbose {
+            println!("matrix: no model/task artifacts found; running the synthetic grid");
+        }
+        return Ok(true);
+    }
+    if !failures.is_empty() {
+        bail!(
+            "matrix: partial artifact availability — refusing to silently fall back \
+             to the synthetic grid:\n  {}",
+            failures.join("\n  ")
+        );
+    }
+    let (Some(model0), Some(task0)) = (cfg.models.first(), cfg.tasks.first()) else {
+        return Ok(true);
+    };
+    match PatchedForward::new(model0, task0) {
+        Ok(_) => Ok(false),
+        Err(e) => {
+            if verbose {
+                println!("matrix: engine unavailable ({e}); running the synthetic grid");
+            }
+            Ok(true)
+        }
+    }
+}
+
+/// Execute the grid: seed the shared artifact store (phase A, one job
+/// per (model, task) combo), then drain the cell queue with
+/// work-stealing workers (phase B), then assemble, save, and print the
+/// manifest. Deterministic at any worker count: only wall times vary.
+pub fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
+    if cfg.methods.is_empty() || cfg.policies.is_empty() || cfg.models.is_empty()
+        || cfg.tasks.is_empty()
+    {
+        bail!("matrix grid is empty (methods/policies/models/tasks all required)");
+    }
+    // validate method names up front: the synthetic substrate would
+    // otherwise happily pseudo-score a typo'd method into a green cell
+    for method in &cfg.methods {
+        discovery::by_name(method)?;
+    }
+    // the manifest stores the seed through an f64 JSON number; beyond
+    // 2^53 it would round and silently disable --resume
+    if cfg.seed > (1u64 << 53) {
+        bail!("--seed must fit in 53 bits (manifest round-trip), got {}", cfg.seed);
+    }
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating {}", cfg.out_dir.display()))?;
+    let t_run = Instant::now();
+    let cells = grid(cfg);
+    println!(
+        "matrix: {} cells ({} methods x {} policies x {} models x {} tasks), {} workers",
+        cells.len(),
+        cfg.methods.len(),
+        cfg.policies.len(),
+        cfg.models.len(),
+        cfg.tasks.len(),
+        cfg.workers
+    );
+
+    // substrate probe: partial artifact availability errors out loudly
+    let synthetic = substrate_is_synthetic(cfg, true)?;
+    let expected_obj = if synthetic { "synthetic" } else { cfg.objective.key() };
+
+    // resume: the previous manifest must match this config's identity
+    // (seed/tau/objective/substrate), then a valid on-disk record with
+    // matching cell identity keeps its cell
+    let manifest_path = cfg.manifest_path();
+    let resume = cfg.resume && resume_context_matches(&manifest_path, cfg, synthetic);
+    if cfg.resume && !resume {
+        println!(
+            "matrix: --resume ignored ({} missing or from a different config)",
+            manifest_path.display()
+        );
+    }
+    let mut outcomes: Vec<Option<CellOutcome>> = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let cached = if resume {
+            RunRecord::load(&cfg.out_dir.join(cell.record_name()))
+                .ok()
+                .filter(|r| record_matches(r, cell, cfg, expected_obj))
+        } else {
+            None
+        };
+        outcomes.push(cached.map(|rec| CellOutcome {
+            status: CellStatus::Cached,
+            stats: rec.cache.clone().unwrap_or_default(),
+            rec: Some(rec),
+            wall: 0.0,
+            error: None,
+        }));
+    }
+    let pending: Vec<usize> = (0..cells.len()).filter(|&i| outcomes[i].is_none()).collect();
+
+    // paper-scale ETA for the real substrate (greedy-makespan bound of
+    // the work-stealing queue)
+    if !synthetic && !pending.is_empty() {
+        let cost = CostModel::default();
+        let minutes: Vec<f64> = pending
+            .iter()
+            .filter_map(|&i| {
+                let cell = &cells[i];
+                RealArch::by_name(&cell.model).map(|arch| {
+                    let kind = MethodKind::of_policy(&cell.policy);
+                    let streams =
+                        if cell.policy.is_pahq() { StreamConfig::FULL } else { StreamConfig::NONE };
+                    predict_run(&arch, &cost, kind, streams).total_minutes
+                })
+            })
+            .collect();
+        if minutes.len() == pending.len() {
+            println!(
+                "matrix: predicted paper-scale grid wall on {} workers: {} (m:s)",
+                cfg.workers,
+                mmss(predict_matrix_wall(&minutes, cfg.workers))
+            );
+        }
+    }
+
+    let store = ArtifactCache::default();
+    if !pending.is_empty() {
+        // phase A: seed every shared artifact exactly once per combo
+        let combos: BTreeSet<(String, String)> = pending
+            .iter()
+            .map(|&i| (cells[i].model.clone(), cells[i].task.clone()))
+            .collect();
+        let queue: Mutex<VecDeque<(String, String)>> = Mutex::new(combos.into_iter().collect());
+        std::thread::scope(|s| {
+            for _ in 0..cfg.workers.max(1) {
+                s.spawn(|| loop {
+                    let next = queue.lock().unwrap().pop_front();
+                    let Some((model, task)) = next else { break };
+                    if synthetic {
+                        seed_combo_synthetic(cfg, &store, &model, &task);
+                    } else if let Err(e) = seed_combo_real(cfg, &store, &model, &task) {
+                        eprintln!("matrix: seeding {model}/{task} failed: {e}");
+                    }
+                });
+            }
+        });
+
+        // phase B: work-stealing cell drain; each worker hands its engine
+        // pool to the next cell it steals
+        let queue: Mutex<VecDeque<usize>> = Mutex::new(pending.iter().copied().collect());
+        let results: Mutex<Vec<Option<CellOutcome>>> =
+            Mutex::new((0..cells.len()).map(|_| None).collect());
+        std::thread::scope(|s| {
+            for _ in 0..cfg.workers.max(1).min(pending.len()) {
+                s.spawn(|| {
+                    let mut pool_slot: Option<EnginePool> = None;
+                    loop {
+                        let next = queue.lock().unwrap().pop_front();
+                        let Some(i) = next else { break };
+                        let cell = &cells[i];
+                        let t0 = Instant::now();
+                        let out = if synthetic {
+                            run_cell_synthetic(cfg, &store, cell)
+                        } else {
+                            run_cell_real(cfg, &store, cell, &mut pool_slot)
+                        };
+                        let wall = t0.elapsed().as_secs_f64();
+                        let outcome = match out.and_then(|(rec, stats)| {
+                            rec.save(&cfg.out_dir.join(cell.record_name()))?;
+                            Ok((rec, stats))
+                        }) {
+                            Ok((rec, stats)) => CellOutcome {
+                                status: CellStatus::Ok,
+                                rec: Some(rec),
+                                stats,
+                                wall,
+                                error: None,
+                            },
+                            Err(e) => CellOutcome {
+                                status: CellStatus::Error,
+                                rec: None,
+                                stats: CacheStats::default(),
+                                wall,
+                                error: Some(e.to_string()),
+                            },
+                        };
+                        results.lock().unwrap()[i] = Some(outcome);
+                    }
+                });
+            }
+        });
+        for (i, slot) in results.into_inner().unwrap().into_iter().enumerate() {
+            if let Some(o) = slot {
+                outcomes[i] = Some(o);
+            }
+        }
+    }
+
+    // manifest assembly + rollups
+    let manifest_dir = manifest_path.parent().map(Path::to_path_buf).unwrap_or_default();
+    let mut entries = Vec::with_capacity(cells.len());
+    let (mut n_ok, mut n_cached, mut n_error) = (0usize, 0usize, 0usize);
+    let (mut evals_total, mut wall_total) = (0usize, 0.0f64);
+    let (mut d_hits, mut c_hits, mut s_hits) = (0usize, 0usize, 0usize);
+    let mut bytes_peak = 0usize;
+    let (mut faith_sum, mut faith_n) = (0.0f64, 0usize);
+    let mut summary = Table::new(
+        "matrix grid",
+        &["cell", "status", "kept", "evals", "wall (s)", "cache d/c/s"],
+    );
+    for (cell, outcome) in cells.iter().zip(&outcomes) {
+        let o = outcome.as_ref().expect("every cell has an outcome");
+        match o.status {
+            CellStatus::Ok => n_ok += 1,
+            CellStatus::Cached => n_cached += 1,
+            CellStatus::Error => n_error += 1,
+        }
+        wall_total += o.wall;
+        d_hits += o.stats.dataset_hit as usize;
+        c_hits += o.stats.corrupt_hit as usize;
+        s_hits += o.stats.scores_hit as usize;
+        let (mut kept, mut evals) = ("-".to_string(), "-".to_string());
+        if let Some(rec) = &o.rec {
+            evals_total += rec.n_evals;
+            bytes_peak = bytes_peak.max(rec.measured_total_bytes());
+            if let Some(f) = &rec.faithfulness {
+                faith_sum += f.accuracy;
+                faith_n += 1;
+            }
+            kept = format!("{}/{}", rec.n_kept, rec.n_edges);
+            evals = rec.n_evals.to_string();
+        }
+        summary.row(vec![
+            cell.id(),
+            o.status.as_str().to_string(),
+            kept,
+            evals,
+            format!("{:.2}", o.wall),
+            format!(
+                "{}/{}/{}",
+                o.stats.dataset_hit as u8, o.stats.corrupt_hit as u8, o.stats.scores_hit as u8
+            ),
+        ]);
+        entries.push(CellEntry {
+            method: cell.method.clone(),
+            policy: cell.policy.name.clone(),
+            model: cell.model.clone(),
+            task: cell.task.clone(),
+            status: o.status,
+            record: o
+                .rec
+                .is_some()
+                .then(|| rel_to(&manifest_dir, &cfg.out_dir.join(cell.record_name()))),
+            wall_seconds: o.wall,
+            n_evals: o.rec.as_ref().map(|r| r.n_evals),
+            kept_hash: o.rec.as_ref().map(|r| r.kept_hash.clone()),
+            cache: o.stats.any().then(|| o.stats.clone()),
+            error: o.error.clone(),
+        });
+    }
+    let aggregate = Aggregate {
+        n_cells: cells.len(),
+        n_ok,
+        n_cached,
+        n_error,
+        n_evals_total: evals_total,
+        wall_seconds_total: wall_total,
+        dataset_cache_hits: d_hits,
+        corrupt_cache_hits: c_hits,
+        scores_cache_hits: s_hits,
+        cache_misses: store.misses(),
+        measured_bytes_peak: bytes_peak,
+        faithfulness_accuracy_mean: match faith_n {
+            0 => None,
+            n => Some(faith_sum / n as f64),
+        },
+    };
+    let manifest = MatrixManifest {
+        schema_version: MATRIX_SCHEMA_VERSION,
+        tau: cfg.tau as f64,
+        objective: cfg.objective.key().to_string(),
+        sweep: cfg.sweep.label(),
+        workers: cfg.workers,
+        seed: cfg.seed,
+        quick: cfg.quick,
+        synthetic,
+        cells: entries,
+        aggregate,
+    };
+    manifest.save(&manifest_path)?;
+    summary.print();
+    let a = &manifest.aggregate;
+    println!(
+        "matrix: {} ok / {} cached / {} error, {} evals, cache hits d/c/s {}/{}/{} \
+         ({} misses), {:.1}s total",
+        a.n_ok,
+        a.n_cached,
+        a.n_error,
+        a.n_evals_total,
+        a.dataset_cache_hits,
+        a.corrupt_cache_hits,
+        a.scores_cache_hits,
+        a.cache_misses,
+        t_run.elapsed().as_secs_f64()
+    );
+    println!("matrix manifest: {}", manifest_path.display());
+    Ok(MatrixOutcome { manifest, manifest_path })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_stable_and_complete() {
+        let mut cfg = MatrixConfig::quick();
+        cfg.models = vec!["m".into()];
+        cfg.tasks = vec!["a".into(), "b".into()];
+        let cells = grid(&cfg);
+        assert_eq!(cells.len(), 5 * 2 * 2);
+        // stable order: model, task, method, policy
+        assert_eq!(cells[0].task, "a");
+        assert_eq!(cells[0].method, "acdc");
+        assert_eq!(cells[0].policy.name, "acdc-fp32");
+        assert_eq!(cells[1].policy.name, "pahq-8b");
+        // ids are unique (record filenames collide otherwise)
+        let ids: std::collections::HashSet<String> = cells.iter().map(|c| c.id()).collect();
+        assert_eq!(ids.len(), cells.len());
+    }
+
+    #[test]
+    fn cell_status_roundtrip() {
+        for s in [CellStatus::Ok, CellStatus::Cached, CellStatus::Error] {
+            assert_eq!(CellStatus::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(CellStatus::parse("running").is_err());
+    }
+
+    #[test]
+    fn synthetic_substrate_is_deterministic_and_method_sensitive() {
+        let s1 = synthetic_scores("eap", "m", "t", 0, 32);
+        assert_eq!(s1, synthetic_scores("eap", "m", "t", 0, 32));
+        assert_ne!(s1, synthetic_scores("hisp", "m", "t", 0, 32));
+        assert_ne!(s1, synthetic_scores("eap", "m", "t", 1, 32));
+        let mut cfg = MatrixConfig::quick();
+        cfg.faithfulness = false;
+        let cell = Cell {
+            method: "eap".into(),
+            policy: Policy::pahq(FP8_E4M3),
+            model: "m".into(),
+            task: "t".into(),
+        };
+        let surface = synthetic_surface("m", "t", 0);
+        let a = synthetic_cell_record(&cell, &cfg, &surface, None).unwrap();
+        let b = synthetic_cell_record(&cell, &cfg, &surface, Some(&s1)).unwrap();
+        assert_eq!(a.kept_hash, b.kept_hash, "explicit scores equal derived scores");
+        assert!(a.n_evals > 0);
+        assert_eq!(a.n_edges, synthetic_graph().n_edges());
+    }
+
+    #[test]
+    fn cache_tag_splits_fidelity_classes() {
+        assert_eq!(cache_tag(&Policy::fp32()), "fp32");
+        assert_eq!(cache_tag(&Policy::pahq(FP8_E4M3)), "fp32");
+        assert_eq!(cache_tag(&Policy::rtn(FP8_E4M3)), "rtn-q-8b");
+    }
+}

@@ -6,8 +6,10 @@
 use crate::quant::{self, Format};
 
 /// A discovery-session precision policy (paper Eq. 3 plus the bf16 rule
-/// for non-attention components).
-#[derive(Clone, Debug)]
+/// for non-attention components). `PartialEq` compares the full
+/// configuration, not the name — two formats of the same nominal width
+/// (fp8_e4m3 vs fp8_e5m2) share a name but are different policies.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Policy {
     pub name: String,
     /// precision of attention heads that are NOT under investigation

@@ -150,6 +150,22 @@ impl PatchedForward {
     /// session precision for RTN-Q), and precomputes per-group corrupt
     /// base sums.
     pub fn set_session(&mut self, policy: Policy) -> Result<()> {
+        self.set_session_inner(policy, None)
+    }
+
+    /// Corrupt-cache handoff between sessions: switch to `policy` but
+    /// install a pre-built corrupted-activation cache instead of
+    /// re-running the corrupted forward. The cache must be exactly what
+    /// this session would compute — same model, same examples, packed at
+    /// the policy's [`Policy::cache_format`] — which the matrix
+    /// orchestrator guarantees by keying its store on those inputs;
+    /// shape and format are validated here, bit content is the caller's
+    /// contract (property-tested in this module and `tests/matrix.rs`).
+    pub fn set_session_with_cache(&mut self, policy: Policy, cache: &[QTensor]) -> Result<()> {
+        self.set_session_inner(policy, Some(cache))
+    }
+
+    fn set_session_inner(&mut self, policy: Policy, cache: Option<&[QTensor]>) -> Result<()> {
         self.ws.ensure_plane(Policy::plane_name(policy.attn_low), policy.attn_low);
         self.ws.ensure_plane(Policy::plane_name(policy.other), policy.other);
         self.session = policy.clone();
@@ -164,16 +180,43 @@ impl PatchedForward {
         // accumulation re-quantizes to anyway (fq is idempotent, so
         // packing changes no bits downstream).
         let cache_fmt = policy.cache_format();
-        let empty = self.empty_patches();
-        let _ = self.forward_inner(&cache_policy, &empty, None, true)?;
-        self.corrupt_cache =
-            self.node_out.iter().map(|t| QTensor::from_tensor(t, cache_fmt)).collect();
+        match cache {
+            Some(cc) => {
+                if cc.len() != self.graph.n_nodes() {
+                    bail!(
+                        "corrupt-cache handoff: {} node tensors, graph has {}",
+                        cc.len(),
+                        self.graph.n_nodes()
+                    );
+                }
+                let m = &self.manifest;
+                let elems = m.batch * m.seq_len * m.d_model;
+                if let Some(t) = cc.iter().find(|t| t.format() != cache_fmt || t.len() != elems) {
+                    bail!(
+                        "corrupt-cache handoff: tensor is {} elems at {:?}, session needs \
+                         {} at {:?}",
+                        t.len(),
+                        t.format(),
+                        elems,
+                        cache_fmt
+                    );
+                }
+                self.corrupt_cache = cc.to_vec();
+            }
+            None => {
+                let empty = self.empty_patches();
+                let _ = self.forward_inner(&cache_policy, &empty, None, true)?;
+                self.corrupt_cache =
+                    self.node_out.iter().map(|t| QTensor::from_tensor(t, cache_fmt)).collect();
+            }
+        }
 
         // clean run -> reference distribution + logits, computed under the
         // *session* policy (the paper's L(E_G(z)) flows through the same
         // quantized pipeline as the patched runs, so the systematic
         // quantization bias cancels in ΔL; only the patched activations
         // themselves are held at FP32).
+        let empty = self.empty_patches();
         let logits = self.forward_inner(&policy, &empty, None, false)?;
         self.ref_probs = crate::metrics::probs_at_positions(&logits, &self.examples);
         self.ref_logit_diff = crate::metrics::logit_diff(&logits, &self.examples);
@@ -780,6 +823,30 @@ mod tests {
         e.set_session(Policy::rtn(quant::FP8_E4M3)).unwrap();
         let rtn = e.measured_footprint();
         assert!(rtn.act_cache < acdc.act_cache / 3);
+    }
+
+    #[test]
+    fn corrupt_cache_handoff_is_bit_identical() {
+        // A session given a pre-built corrupt cache (matrix handoff) must
+        // behave bit-for-bit like one that computed its own.
+        let Some(mut a) = engine("redwood2l-sim", "ioi") else { return };
+        a.set_session(Policy::pahq(quant::FP8_E4M3)).unwrap();
+        let cache = a.corrupt_cache.clone();
+        let Some(mut b) = engine("redwood2l-sim", "ioi") else { return };
+        b.set_session_with_cache(Policy::pahq(quant::FP8_E4M3), &cache).unwrap();
+        assert_eq!(a.ref_probs, b.ref_probs, "clean references agree");
+        let mut patches = a.empty_patches();
+        let ci = a.chan_index(Channel::Final);
+        patches.set(ci, a.graph.head_node(1, 2), true);
+        let hi = Some(a.graph.head_node(1, 2));
+        let da = a.damage(&patches, hi, Objective::Kl).unwrap();
+        let db = b.damage(&patches, hi, Objective::Kl).unwrap();
+        assert_eq!(da.to_bits(), db.to_bits(), "damage bit-identical");
+        // shape/format mismatches are rejected loudly
+        assert!(b.set_session_with_cache(Policy::rtn(quant::FP8_E4M3), &cache).is_err());
+        assert!(b
+            .set_session_with_cache(Policy::pahq(quant::FP8_E4M3), &cache[1..])
+            .is_err());
     }
 
     #[test]

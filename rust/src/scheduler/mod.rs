@@ -300,12 +300,49 @@ pub fn predict_sweep(
     }
 }
 
+/// Greedy list-scheduling makespan of a matrix grid on `workers`
+/// work-stealing cell workers: longest cell first, each onto the
+/// least-loaded worker — the standard LPT bound for the `pahq matrix`
+/// job queue. Returns minutes when fed minutes.
+pub fn predict_matrix_wall(cell_minutes: &[f64], workers: usize) -> f64 {
+    let mut loads = vec![0.0f64; workers.max(1)];
+    let mut cells: Vec<f64> = cell_minutes.to_vec();
+    cells.sort_by(|a, b| b.total_cmp(a));
+    for c in cells {
+        let i = loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("workers >= 1");
+        loads[i] += c;
+    }
+    loads.into_iter().fold(0.0, f64::max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn gpt2() -> RealArch {
         RealArch::by_name("gpt2").unwrap()
+    }
+
+    #[test]
+    fn matrix_wall_is_lpt_makespan() {
+        assert_eq!(predict_matrix_wall(&[], 4), 0.0);
+        // one worker: the sum
+        let cells = [3.0, 1.0, 2.0, 2.0];
+        assert!((predict_matrix_wall(&cells, 1) - 8.0).abs() < 1e-12);
+        // many workers: the longest cell dominates
+        assert!((predict_matrix_wall(&cells, 8) - 3.0).abs() < 1e-12);
+        // in between: bounded by both
+        let two = predict_matrix_wall(&cells, 2);
+        assert!(two >= 4.0 - 1e-12 && two <= 8.0, "makespan {two}");
+        // LPT on this instance is optimal: {3,1} and {2,2}
+        assert!((two - 4.0).abs() < 1e-12);
+        // workers = 0 clamps to 1
+        assert!((predict_matrix_wall(&cells, 0) - 8.0).abs() < 1e-12);
     }
 
     #[test]

@@ -56,6 +56,14 @@ impl Args {
         }
     }
 
+    /// Seed-sized integer option (`--seed S` and friends).
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -120,6 +128,9 @@ mod tests {
         assert!(a.usize_or("n", 1).is_err());
         assert_eq!(a.usize_or("m", 5).unwrap(), 5);
         assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+        assert!(a.u64_or("n", 1).is_err());
+        assert_eq!(a.u64_or("seed", 9).unwrap(), 9);
+        assert_eq!(parse("--seed 7").u64_or("seed", 0).unwrap(), 7);
     }
 
     #[test]

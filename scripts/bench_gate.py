@@ -5,6 +5,8 @@ committed baseline and fail CI on regressions of the sweep hot path.
 Usage:
     python scripts/bench_gate.py BENCH_baseline.json bench.json \
         [--max-wall-regress 0.25] [--max-mem-regress 0.10]
+    python scripts/bench_gate.py BENCH_baseline.json matrix.json --matrix \
+        [--max-wall-regress 0.25]
 
 Checks (stdlib only):
 
@@ -20,6 +22,16 @@ Checks (stdlib only):
 3. **Correctness** — every sweep mode in the snapshot reports the same
    kept-set hash (batched bit-identity), and batched modes do not
    inflate evaluations beyond the speculation model's bound.
+
+With --matrix the current artifact is a `pahq matrix` manifest instead:
+
+4. **Cache effectiveness floor** — cross-run reuse must be real: the
+   gate fails when the quick grid reports zero corrupt-cache hits (or
+   zero attribution-score hits), so the matrix's reuse cannot silently
+   regress to N isolated runs.
+5. **matrix_quick_wall** — the grid's `wall_seconds_total` against the
+   baseline's `matrix_quick_wall` field, same regress bound as the
+   sweep wall gate.
 
 A baseline field set to null skips its check (used to stage new fields
 before the first trustworthy baseline lands).
@@ -45,15 +57,71 @@ def serial_row(doc, path):
     sys.exit(f"{path}: no serial row in sweep_hot_path")
 
 
+def gate_matrix(base, current_path, max_wall_regress):
+    """Matrix-manifest mode: cache-effectiveness floor + quick-grid wall."""
+    with open(current_path) as f:
+        cur = json.load(f)
+    if cur.get("kind") != "matrix_manifest":
+        sys.exit(f"{current_path}: not a matrix_manifest")
+    agg = cur.get("aggregate", {})
+    failures = []
+
+    if agg.get("n_error", 0):
+        failures.append(f"{agg['n_error']} matrix cell(s) failed")
+    corrupt = agg.get("corrupt_cache_hits", 0)
+    scores = agg.get("scores_cache_hits", 0)
+    status = "FAIL" if corrupt == 0 or scores == 0 else "ok"
+    print(f"reuse [{status}]: corrupt-cache hits {corrupt}, score-cache hits {scores}")
+    if corrupt == 0:
+        failures.append("corrupt-cache hit rate across the grid is 0 — cross-run reuse regressed")
+    if scores == 0:
+        failures.append("attribution-score cache hit rate is 0 — cross-run reuse regressed")
+
+    base_wall = base.get("matrix_quick_wall")
+    cur_wall = agg.get("wall_seconds_total")
+    if base_wall is None:
+        print("matrix wall gate skipped: baseline matrix_quick_wall is null")
+    elif not cur.get("quick"):
+        # the baseline is the --quick grid's wall; a full grid is
+        # legitimately slower and must not trip the quick gate
+        print("matrix wall gate skipped: manifest is not a --quick grid")
+    elif cur_wall is None:
+        failures.append("manifest has no aggregate.wall_seconds_total to gate")
+    else:
+        limit = base_wall * (1 + max_wall_regress)
+        status = "FAIL" if cur_wall > limit else "ok"
+        print(
+            f"mwall [{status}]: matrix quick grid {cur_wall:.2f}s vs baseline "
+            f"{base_wall:.2f}s (limit {limit:.2f}s)"
+        )
+        if cur_wall > limit:
+            failures.append(f"matrix quick grid wall regressed: {cur_wall:.2f} > {limit:.2f}")
+
+    if failures:
+        print("\nperf gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nperf gate OK")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
     ap.add_argument("current")
     ap.add_argument("--max-wall-regress", type=float, default=0.25)
     ap.add_argument("--max-mem-regress", type=float, default=0.10)
+    ap.add_argument(
+        "--matrix",
+        action="store_true",
+        help="current is a pahq matrix manifest: gate cache effectiveness + quick wall",
+    )
     args = ap.parse_args()
 
     base = load(args.baseline)
+    if args.matrix:
+        return gate_matrix(base, args.current, args.max_wall_regress)
     cur = load(args.current)
     failures = []
 

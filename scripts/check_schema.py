@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate RunRecord artifacts against docs/run_record.schema.json.
+"""Validate RunRecord / matrix-manifest artifacts against their schemas.
 
 Stdlib-only subset of JSON Schema: type, properties, required, items,
 enum, minimum, pattern. That subset is the contract — if the schema file
@@ -8,13 +8,20 @@ rather than silently passing.
 
 Usage:
     python scripts/check_schema.py docs/run_record.schema.json ARTIFACT.json
+    python scripts/check_schema.py docs/matrix.schema.json matrix.json \
+        [--records docs/run_record.schema.json]
 
-ARTIFACT.json is either a bare RunRecord (kind == "run_record") or a
-bench snapshot (kind == "bench_snapshot") whose "records" array holds
-RunRecords; every record found is validated.
+ARTIFACT.json is a bare RunRecord (kind == "run_record"), a bench
+snapshot (kind == "bench_snapshot") whose "records" array holds
+RunRecords, or a matrix manifest (kind == "matrix_manifest"). For a
+matrix manifest the gate additionally asserts that every cell completed
+(status ok/cached) with nonzero evals, and — with --records — loads each
+cell's RunRecord file (manifest-relative path) and validates it against
+the record schema.
 """
 
 import json
+import os
 import re
 import sys
 
@@ -102,7 +109,50 @@ def extract_records(doc):
     raise SchemaError(f"unrecognized artifact kind {kind!r}")
 
 
+def check_matrix(doc, schema, manifest_path, records_schema):
+    """Validate a matrix manifest, its completion gate, and (optionally)
+    every cell's RunRecord file against the record schema."""
+    check(doc, schema, "$")
+    cells = doc.get("cells", [])
+    if not cells:
+        raise SchemaError("matrix manifest has no cells")
+    n_records = 0
+    base = os.path.dirname(manifest_path)
+    for i, cell in enumerate(cells):
+        where = f"$.cells[{i}]"
+        if cell.get("status") not in ("ok", "cached"):
+            raise SchemaError(
+                f"{where}: status {cell.get('status')!r} "
+                f"({cell.get('error', 'no error message')})"
+            )
+        if not cell.get("n_evals"):
+            raise SchemaError(f"{where}: cell completed with zero evals")
+        if records_schema is not None:
+            rel = cell.get("record")
+            if not rel:
+                raise SchemaError(f"{where}: completed cell has no record path")
+            rec_path = os.path.join(base, rel)
+            try:
+                with open(rec_path) as f:
+                    rec = json.load(f)
+            except OSError as e:
+                raise SchemaError(f"{where}: cannot read record {rel!r}: {e}")
+            check(rec, records_schema, f"{where}.record")
+            if not rec.get("n_evals"):
+                raise SchemaError(f"{where}: record {rel!r} reports zero evals")
+            n_records += 1
+    return len(cells), n_records
+
+
 def main(argv):
+    records_schema_path = None
+    if "--records" in argv:
+        i = argv.index("--records")
+        if i + 1 >= len(argv):
+            print(__doc__)
+            return 2
+        records_schema_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2 :]
     if len(argv) != 3:
         print(__doc__)
         return 2
@@ -110,7 +160,18 @@ def main(argv):
         schema = json.load(f)
     with open(argv[2]) as f:
         doc = json.load(f)
+    records_schema = None
+    if records_schema_path is not None:
+        with open(records_schema_path) as f:
+            records_schema = json.load(f)
     try:
+        if isinstance(doc, dict) and doc.get("kind") == "matrix_manifest":
+            n_cells, n_records = check_matrix(doc, schema, argv[2], records_schema)
+            print(
+                f"schema check OK: matrix manifest with {n_cells} completed cell(s)"
+                + (f", {n_records} record(s) valid" if records_schema else "")
+            )
+            return 0
         records = extract_records(doc)
         if not records:
             raise SchemaError("artifact contains no RunRecords to validate")
