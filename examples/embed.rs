@@ -1,0 +1,62 @@
+//! Embedding PAHQ as a library — the README "Library use" example.
+//!
+//! Builds a validated [`RunSpec`] with the typed builder, launches it
+//! through the one public entry point ([`pahq::api::run`]), and reads
+//! the discovered circuit + faithfulness back from the returned
+//! [`RunRecord`] — no CLI, no `util::cli`, no string plumbing.
+//!
+//! With `make artifacts` built this drives the real engine; without
+//! artifacts (e.g. CI) the spec's `Substrate::Auto` resolves to the
+//! deterministic synthetic surface, so the example still runs end to
+//! end and still emits a schema-valid record.
+//!
+//! Run: `cargo run --release --example embed [-- RECORD.json]`
+
+use anyhow::Result;
+use pahq::api::{self, OutputSink, RunSpec};
+
+fn main() -> Result<()> {
+    let out = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "rust/results/embed_record.json".to_string());
+
+    // A typed, validated run: EAP attribution ordering, verified through
+    // the shared sweep under the PAHQ 8-bit policy, scored against the
+    // FP32 ground truth when the real substrate is available.
+    let spec = RunSpec::builder("redwood2l-sim", "ioi")
+        .method("eap".parse()?)
+        .bits(8)
+        .tau(0.01)
+        .objective("kl".parse()?)
+        .seed(0)
+        .faithfulness(Some(true))
+        .sink(OutputSink::Path(out.clone().into()))
+        .build()?;
+
+    println!(
+        "embed: {} / {} / {} under {} (tau={})",
+        spec.model, spec.task, spec.method, spec.policy, spec.tau
+    );
+
+    let rec = api::run(&spec)?;
+
+    println!(
+        "discovered circuit: {} of {} edges kept ({} evals, {:.2}s wall)",
+        rec.n_kept, rec.n_edges, rec.n_evals, rec.wall_seconds
+    );
+    println!("kept-set hash: {} (objective {})", rec.kept_hash, rec.objective);
+    match &rec.faithfulness {
+        Some(f) => {
+            println!(
+                "faithfulness vs FP32 ground truth: TPR={:.3} FPR={:.3} acc={:.3}{}",
+                f.tpr,
+                f.fpr,
+                f.accuracy,
+                f.normalized.map(|n| format!(" normalized={n:.2}")).unwrap_or_default()
+            );
+        }
+        None => println!("faithfulness: not available on this substrate"),
+    }
+    println!("record: {out}");
+    Ok(())
+}

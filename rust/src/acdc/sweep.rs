@@ -82,6 +82,38 @@ impl SweepMode {
             SweepMode::Batched { workers } => format!("batched[{workers}]"),
         }
     }
+
+    /// The CLI spellings, in display order (drives the generated help).
+    pub const SPELLINGS: [&'static str; 2] = ["serial", "batched"];
+}
+
+/// Writes [`SweepMode::label`] (`serial` / `batched[N]`), so
+/// `format!("{mode}")` round-trips through [`SweepMode::from_str`].
+impl std::fmt::Display for SweepMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Parses `serial`, `batched` (workers = available parallelism), and the
+/// `batched[N]` label form — the full round trip of [`SweepMode::label`].
+impl std::str::FromStr for SweepMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SweepMode> {
+        if let Some(n) = s.strip_prefix("batched[").and_then(|r| r.strip_suffix(']')) {
+            let workers: usize = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad worker count in sweep mode '{s}'"))?;
+            if workers == 0 {
+                bail!("sweep mode '{s}': batched worker count must be >= 1");
+            }
+            return Ok(SweepMode::Batched { workers });
+        }
+        let default_workers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        SweepMode::parse(s, default_workers)
+    }
 }
 
 /// One candidate edge evaluation: patch source `src` into destination

@@ -1,0 +1,325 @@
+//! Generated CLI help — assembled from the same enum spellings, default
+//! constants, and model/task registries the spec builders parse with,
+//! so the text cannot drift from what the parsers accept (the old
+//! hand-maintained `USAGE` string drifted across PRs 3–4).
+
+use super::{DEFAULT_BITS, DEFAULT_MODEL, DEFAULT_TASK, DEFAULT_TAU, MethodKind};
+use crate::acdc::SweepMode;
+use crate::experiments::{BASE_MODELS, SCALE_MODELS, TASKS};
+use crate::metrics::Objective;
+use crate::patching::Policy;
+
+/// `acdc|rtn-q|pahq|eap|hisp|sp|edge-pruning` — every [`MethodKind`].
+pub fn method_spellings() -> String {
+    MethodKind::ALL.map(|m| m.as_str()).join("|")
+}
+
+/// `fp32|rtn|pahq` — the [`Policy::FAMILIES`].
+pub fn policy_spellings() -> String {
+    Policy::FAMILIES.join("|")
+}
+
+/// `kl|task` — the [`Objective::SPELLINGS`].
+pub fn objective_spellings() -> String {
+    Objective::SPELLINGS.join("|")
+}
+
+/// `serial|batched` — the [`SweepMode::SPELLINGS`].
+pub fn sweep_spellings() -> String {
+    SweepMode::SPELLINGS.join("|")
+}
+
+/// Every model name the artifact registry knows.
+pub fn model_names() -> String {
+    BASE_MODELS.iter().chain(SCALE_MODELS.iter()).copied().collect::<Vec<_>>().join(" ")
+}
+
+/// Every task name.
+pub fn task_names() -> String {
+    TASKS.join(" ")
+}
+
+/// (name, one-line synopsis) of every subcommand, in display order.
+pub fn subcommands() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("run", "one circuit-discovery run; emits a RunRecord JSON"),
+        ("matrix", "the full method x policy x task grid, work-stealing + resumable"),
+        ("table", "regenerate paper Table N (1..8)"),
+        ("figure", "regenerate paper Figure N (1, 3, 4)"),
+        ("all", "regenerate every table and figure"),
+        ("sweep", "serial-vs-batched sweep scaling (predicted + measured)"),
+        ("groundtruth", "compute/cache the FP32 reference circuit"),
+        ("sim", "DES runtime/memory prediction for a method on real arches"),
+        ("bench", "deterministic perf snapshot for CI's perf gate"),
+        ("info", "model/artifact inventory"),
+        ("help", "this overview, or `pahq help <subcommand>` for flags"),
+    ]
+}
+
+fn render(cmd: &str, synopsis: &str, flags: &[(String, String)]) -> String {
+    let mut out = format!("pahq {cmd} — {synopsis}\n");
+    if flags.is_empty() {
+        return out;
+    }
+    out.push_str("\nFlags:\n");
+    let w = flags.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    for (name, help) in flags {
+        out.push_str(&format!("  {name:<w$}  {help}\n"));
+    }
+    out
+}
+
+fn run_flags() -> Vec<(String, String)> {
+    vec![
+        ("--model M".into(), format!("model name (default {DEFAULT_MODEL}; see Models)")),
+        ("--task T".into(), format!("task name (default {DEFAULT_TASK}; see Tasks)")),
+        (
+            "--method M".into(),
+            format!(
+                "{} (default pahq; acdc|rtn-q|pahq imply their policy)",
+                method_spellings()
+            ),
+        ),
+        (
+            "--policy P".into(),
+            format!(
+                "explicit session policy: {} at --bits, or a full name like \
+                 pahq-4b. Only --method acdc and the baselines accept an \
+                 override; rtn-q/pahq imply theirs and reject a contradiction",
+                policy_spellings()
+            ),
+        ),
+        (
+            "--bits N".into(),
+            format!("nominal width of the low-precision policy, 4|8|16 (default {DEFAULT_BITS})"),
+        ),
+        ("--tau X".into(), format!("ACDC threshold (default {DEFAULT_TAU})")),
+        ("--metric O".into(), format!("{} (default kl)", objective_spellings())),
+        (
+            "--sweep S".into(),
+            format!(
+                "{} or batched[N] (default serial; kept sets are bit-identical)",
+                sweep_spellings()
+            ),
+        ),
+        (
+            "--workers N".into(),
+            "scoring threads; only with --sweep batched (default: available parallelism)".into(),
+        ),
+        (
+            "--seed S".into(),
+            "dataset seed through the shared (task, seed, n) resolution \
+             (default 0 = the python-exported artifact batch)"
+                .into(),
+        ),
+        ("--trace".into(), "record the per-step sweep trace into the record (Fig. 3)".into()),
+        ("--no-faith".into(), "skip scoring against the FP32 ground truth".into()),
+        (
+            "--json PATH".into(),
+            "where the RunRecord lands (default \
+             rust/results/run_<method>_<policy>_<model>_<task>.json)"
+                .into(),
+        ),
+    ]
+}
+
+fn matrix_flags() -> Vec<(String, String)> {
+    vec![
+        ("--models A,B".into(), "model axis (default redwood2l-sim)".into()),
+        ("--tasks T1,T2".into(), format!("task axis (default {})", task_names())),
+        (
+            "--methods M1,M2".into(),
+            "discovery-method axis (default acdc,eap,hisp,sp,edge-pruning; \
+             rtn-q/pahq belong on --policies)"
+                .into(),
+        ),
+        (
+            "--policies P1,P2".into(),
+            format!("policy axis: {} at --bits (default fp32,pahq)", policy_spellings()),
+        ),
+        ("--bits N".into(), format!("nominal policy width, 4|8|16 (default {DEFAULT_BITS})")),
+        ("--tau X".into(), format!("ACDC threshold (default {DEFAULT_TAU})")),
+        ("--metric O".into(), format!("{} (default kl)", objective_spellings())),
+        ("--workers N".into(), "concurrent grid cells (default: available parallelism)".into()),
+        (
+            "--sweep S".into(),
+            format!("per-cell schedule: {} or batched[N] (default serial)", sweep_spellings()),
+        ),
+        (
+            "--pool-workers K".into(),
+            "per-cell batched-sweep pool size; only with --sweep batched (default 2)".into(),
+        ),
+        ("--seed S".into(), "dataset seed, shared with `pahq run` (default 0)".into()),
+        ("--quick".into(), "the small acceptance grid".into()),
+        (
+            "--resume".into(),
+            "skip cells whose valid record already exists (files stay byte-identical)".into(),
+        ),
+        ("--no-faith".into(), "skip scoring against the FP32 ground truth".into()),
+        ("--out DIR".into(), "where per-cell records land (default rust/results/matrix)".into()),
+        ("--json PATH".into(), "manifest path (default <out>/matrix.json)".into()),
+    ]
+}
+
+fn sim_flags() -> Vec<(String, String)> {
+    vec![
+        ("--arch A".into(), "real architecture to simulate (default gpt2)".into()),
+        (
+            "--method M".into(),
+            format!(
+                "{} (default pahq; the baselines verify through the ACDC \
+                 sweep under their policy, so they share PAHQ's cost model)",
+                method_spellings()
+            ),
+        ),
+        ("--streams S".into(), "full|load|split|none (default full)".into()),
+        ("--sweep S".into(), format!("{} (default serial)", sweep_spellings())),
+        ("--workers N".into(), "batched sweep width for the prediction (default: cores)".into()),
+        ("--removal-rate P".into(), "assumed edge-removal rate (default 0.9)".into()),
+    ]
+}
+
+/// Full per-subcommand help. `None` for unknown names.
+pub fn subcommand(name: &str) -> Option<String> {
+    let synopsis = |n: &str| {
+        subcommands()
+            .into_iter()
+            .find(|(s, _)| *s == n)
+            .map(|(_, syn)| syn.to_string())
+            .unwrap_or_default()
+    };
+    let text = match name {
+        "run" => render("run", &synopsis("run"), &run_flags()),
+        "matrix" => render("matrix", &synopsis("matrix"), &matrix_flags()),
+        "table" => render(
+            "table <1..8>",
+            &synopsis("table"),
+            &[
+                ("--quick".to_string(), "smaller models / fewer thresholds".to_string()),
+                (
+                    "--from PATH".to_string(),
+                    "tables 2/6/7: render from a matrix manifest in one pass".to_string(),
+                ),
+            ],
+        ),
+        "figure" => render(
+            "figure <1|3|4>",
+            &synopsis("figure"),
+            &[("--quick".to_string(), "smaller models / fewer thresholds".to_string())],
+        ),
+        "all" => render(
+            "all",
+            &synopsis("all"),
+            &[("--quick".to_string(), "smaller models / fewer thresholds".to_string())],
+        ),
+        "sweep" => render(
+            "sweep",
+            &synopsis("sweep"),
+            &[
+                ("--quick".to_string(), "fewer architectures".to_string()),
+                ("--seed S".to_string(), "dataset seed, shared with `pahq run`".to_string()),
+            ],
+        ),
+        "groundtruth" => render(
+            "groundtruth",
+            &synopsis("groundtruth"),
+            &[
+                ("--model M".to_string(), format!("model name (default {DEFAULT_MODEL})")),
+                ("--task T".to_string(), format!("task name (default {DEFAULT_TASK})")),
+                ("--metric O".to_string(), format!("{} (default kl)", objective_spellings())),
+            ],
+        ),
+        "sim" => render("sim", &synopsis("sim"), &sim_flags()),
+        "bench" => render(
+            "bench",
+            &synopsis("bench"),
+            &[
+                ("--quick".to_string(), "fewer repetitions".to_string()),
+                (
+                    "--json PATH".to_string(),
+                    "snapshot path (default rust/results/bench.json)".to_string(),
+                ),
+            ],
+        ),
+        "info" => render("info", &synopsis("info"), &[]),
+        _ => return None,
+    };
+    Some(text)
+}
+
+/// The top-level overview (`pahq` / `pahq help`).
+pub fn usage() -> String {
+    let mut out = String::from(
+        "pahq — PAHQ: accelerating automated circuit discovery (paper reproduction)\n\n\
+         USAGE: pahq <subcommand> [flags]   (pahq help <subcommand> or \
+         pahq <subcommand> --help for flags)\n\nSubcommands:\n",
+    );
+    let subs = subcommands();
+    let w = subs.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    for (name, synopsis) in &subs {
+        out.push_str(&format!("  {name:<w$}  {synopsis}\n"));
+    }
+    out.push_str(&format!(
+        "\nMethods:  {}\nPolicies: {} (at --bits 4|8|16)\nModels:   {}\nTasks:    {}\n",
+        method_spellings(),
+        policy_spellings(),
+        model_names(),
+        task_names(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_lists_every_spelling_and_subcommand() {
+        let u = usage();
+        for m in MethodKind::ALL {
+            assert!(u.contains(m.as_str()), "usage misses method {m}");
+        }
+        for fam in Policy::FAMILIES {
+            assert!(u.contains(fam), "usage misses policy family {fam}");
+        }
+        for (name, _) in subcommands() {
+            assert!(u.contains(name), "usage misses subcommand {name}");
+        }
+        for model in BASE_MODELS.iter().chain(SCALE_MODELS.iter()) {
+            assert!(u.contains(model), "usage misses model {model}");
+        }
+    }
+
+    #[test]
+    fn every_subcommand_has_help() {
+        for (name, _) in subcommands() {
+            if name == "help" {
+                continue;
+            }
+            let h = subcommand(name).unwrap_or_else(|| panic!("no help for {name}"));
+            assert!(h.starts_with(&format!("pahq {name}")), "{name}: {h}");
+        }
+        assert!(subcommand("frobnicate").is_none());
+    }
+
+    #[test]
+    fn run_help_covers_every_flag_the_parser_reads() {
+        // anti-drift: every flag RunSpec::from_cli consults appears in
+        // the generated help (and vice versa is by construction)
+        let h = subcommand("run").unwrap();
+        for flag in [
+            "--model", "--task", "--method", "--policy", "--bits", "--tau", "--metric",
+            "--sweep", "--workers", "--seed", "--trace", "--no-faith", "--json",
+        ] {
+            assert!(h.contains(flag), "run help misses {flag}");
+        }
+        let m = subcommand("matrix").unwrap();
+        for flag in [
+            "--models", "--tasks", "--methods", "--policies", "--bits", "--tau", "--metric",
+            "--workers", "--sweep", "--pool-workers", "--seed", "--quick", "--resume",
+            "--no-faith", "--out", "--json",
+        ] {
+            assert!(m.contains(flag), "matrix help misses {flag}");
+        }
+    }
+}

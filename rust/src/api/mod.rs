@@ -1,0 +1,1013 @@
+//! The typed public facade: one validated [`RunSpec`] / [`MatrixSpec`]
+//! entry point for the CLI, the matrix orchestrator, the experiment
+//! harness, the integration tests, and library embedders.
+//!
+//! The paper's pitch is that PAHQ "readily integrates with existing
+//! edge-based circuit discovery techniques"; this module is where a
+//! downstream tool integrates with *us*. Instead of four call sites
+//! re-deriving method/policy/sweep semantics from strings, everything
+//! funnels through two launch functions:
+//!
+//! - [`run`] — one discovery run from a validated [`RunSpec`], returning
+//!   (and optionally writing) its schema-versioned
+//!   [`RunRecord`](crate::discovery::RunRecord);
+//! - [`matrix`] — a full method x policy x task grid from a validated
+//!   [`MatrixSpec`], returning the manifest.
+//!
+//! Specs are built with [`RunSpecBuilder`] / [`MatrixSpecBuilder`],
+//! which validate cross-field constraints up front (a `rtn-q` method
+//! implies the rtn policy family, `workers` is only meaningful with a
+//! batched sweep, a matrix `methods` axis never carries policy
+//! spellings, ...) with errors that name the offending field. Every
+//! enum in a spec ([`MethodKind`], [`Policy`], [`SweepMode`],
+//! [`Objective`]) implements `FromStr`/`Display`, so the CLI parsers
+//! ([`RunSpec::from_cli`] / [`MatrixSpec::from_cli`]) and the generated
+//! help text ([`help`]) share one source of spellings and cannot drift.
+//!
+//! A spec resolves its substrate like `pahq matrix` always has: real
+//! engine artifacts when they are built, the deterministic synthetic
+//! grid when none exist (so CI and artifact-less embedders still get a
+//! schema-complete record), and a loud error on partial availability.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::acdc::SweepMode;
+use crate::discovery::{self, DiscoveryConfig, RunRecord, Session, Task};
+use crate::gpu_sim::memory;
+use crate::matrix::{self, Cell, MatrixConfig, MatrixOutcome};
+use crate::metrics::Objective;
+use crate::patching::Policy;
+use crate::report::results_dir;
+use crate::util::cli::Args;
+
+pub mod help;
+
+/// Default model of `pahq run` (shared by the CLI and the help text).
+pub const DEFAULT_MODEL: &str = "gpt2s-sim";
+/// Default task of `pahq run`.
+pub const DEFAULT_TASK: &str = "ioi";
+/// Default ACDC threshold.
+pub const DEFAULT_TAU: f32 = 0.01;
+/// Default nominal bit width of the low-precision policy families.
+pub const DEFAULT_BITS: u32 = 8;
+
+// ---------------------------------------------------------------------------
+// MethodKind
+
+/// Every method spelling the CLI accepts, typed. The classic spellings
+/// `acdc` / `rtn-q` / `pahq` all verify with the ACDC sweep under their
+/// implied precision policy; the baselines score attribution first and
+/// verify the ranked plan through the same sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    /// ACDC under an explicit policy (FP32 by default).
+    Acdc,
+    /// ACDC under the whole-pipeline RTN quantization baseline.
+    RtnQ,
+    /// ACDC under the paper's mixed-precision policy.
+    Pahq,
+    /// Edge Attribution Patching (gradient baseline).
+    Eap,
+    /// Head Importance Score Pruning (gradient baseline).
+    Hisp,
+    /// Subnetwork Probing (learned gates).
+    Sp,
+    /// Edge Pruning (learned edge masks).
+    EdgePruning,
+}
+
+impl MethodKind {
+    /// Every method, in the CLI's display order.
+    pub const ALL: [MethodKind; 7] = [
+        MethodKind::Acdc,
+        MethodKind::RtnQ,
+        MethodKind::Pahq,
+        MethodKind::Eap,
+        MethodKind::Hisp,
+        MethodKind::Sp,
+        MethodKind::EdgePruning,
+    ];
+
+    /// Canonical CLI spelling (what [`std::fmt::Display`] writes).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MethodKind::Acdc => "acdc",
+            MethodKind::RtnQ => "rtn-q",
+            MethodKind::Pahq => "pahq",
+            MethodKind::Eap => "eap",
+            MethodKind::Hisp => "hisp",
+            MethodKind::Sp => "sp",
+            MethodKind::EdgePruning => "edge-pruning",
+        }
+    }
+
+    /// The [`crate::discovery`] registry name this method runs as:
+    /// the classic spellings are all ACDC under an implied policy.
+    pub fn discovery_name(self) -> &'static str {
+        match self {
+            MethodKind::Acdc | MethodKind::RtnQ | MethodKind::Pahq => "acdc",
+            other => other.as_str(),
+        }
+    }
+
+    /// Is this spelling really an (ACDC, policy) pair? Those belong on
+    /// a matrix's *policies* axis, not its methods axis.
+    pub fn is_policy_spelling(self) -> bool {
+        matches!(self, MethodKind::RtnQ | MethodKind::Pahq)
+    }
+
+    /// The precision policy this method implies when none is given
+    /// explicitly: its own for the classic spellings, PAHQ for the
+    /// baselines (that integration is what this repo exists to show).
+    pub fn implied_policy(self, bits: u32) -> Result<Policy> {
+        match self {
+            MethodKind::Acdc => Ok(Policy::fp32()),
+            MethodKind::RtnQ => Policy::by_name("rtn", bits),
+            _ => Policy::by_name("pahq", bits),
+        }
+    }
+
+    /// The DES cost-model kind `pahq sim` predicts with. The baselines
+    /// verify through the same ACDC sweep under their (PAHQ-default)
+    /// policy, so they share PAHQ's per-edge cost model.
+    pub fn sim_kind(self) -> memory::MethodKind {
+        match self {
+            MethodKind::Acdc => memory::MethodKind::AcdcFp32,
+            MethodKind::RtnQ => memory::MethodKind::RtnQ,
+            _ => memory::MethodKind::Pahq,
+        }
+    }
+}
+
+impl std::fmt::Display for MethodKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Parses every canonical spelling plus the `rtn` / `ep` aliases.
+impl std::str::FromStr for MethodKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<MethodKind> {
+        Ok(match s {
+            "acdc" => MethodKind::Acdc,
+            "rtn-q" | "rtn" => MethodKind::RtnQ,
+            "pahq" => MethodKind::Pahq,
+            "eap" => MethodKind::Eap,
+            "hisp" => MethodKind::Hisp,
+            "sp" => MethodKind::Sp,
+            "edge-pruning" | "ep" => MethodKind::EdgePruning,
+            other => bail!("unknown method '{other}' ({})", help::method_spellings()),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Substrate / output sink
+
+/// Which substrate a spec runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Substrate {
+    /// Real engine artifacts when they are built; the deterministic
+    /// synthetic surface when *none* exist (CI, artifact-less
+    /// embedders). Partial availability errors loudly.
+    #[default]
+    Auto,
+    /// Real engine artifacts or an error — never pseudo-score.
+    Real,
+    /// The deterministic synthetic surface, unconditionally.
+    Synthetic,
+}
+
+/// Where [`run`] writes the resulting [`RunRecord`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum OutputSink {
+    /// Keep the record in memory only (library default).
+    #[default]
+    Memory,
+    /// The CLI's default location:
+    /// `rust/results/run_<method>_<policy>_<model>_<task>.json`.
+    Default,
+    /// An explicit path.
+    Path(PathBuf),
+}
+
+impl OutputSink {
+    /// Resolve where a record lands (`None` = memory only).
+    pub fn path_for(&self, rec: &RunRecord) -> Option<PathBuf> {
+        match self {
+            OutputSink::Memory => None,
+            OutputSink::Path(p) => Some(p.clone()),
+            OutputSink::Default => Some(results_dir().join(format!(
+                "run_{}_{}_{}_{}.json",
+                rec.method, rec.policy, rec.model, rec.task
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunSpec
+
+/// One validated discovery run: everything `pahq run`, a matrix cell's
+/// standalone comparator, `experiments`, and a library embedder need to
+/// launch work, in one typed value. Construct with [`RunSpec::builder`]
+/// (cross-field validation with field-naming errors) or parse CLI flags
+/// with [`RunSpec::from_cli`]; launch with [`run`].
+///
+/// ```
+/// use pahq::api::RunSpec;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let spec = RunSpec::builder("gpt2s-sim", "ioi")
+///     .method("eap".parse()?)
+///     .tau(0.05)
+///     .build()?;
+/// assert_eq!(spec.method.discovery_name(), "eap");
+/// assert_eq!(spec.policy.name, "pahq-8b"); // baselines imply PAHQ
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    pub model: String,
+    pub task: String,
+    pub method: MethodKind,
+    /// session precision policy (defaults to the method's implied one)
+    pub policy: Policy,
+    pub tau: f32,
+    pub objective: Objective,
+    /// evaluation schedule; kept sets are bit-identical across modes
+    pub sweep: SweepMode,
+    /// dataset seed through the shared (task, seed, n) resolution
+    /// (0 = the python-exported artifact batch)
+    pub seed: u64,
+    /// record the per-step sweep trace into the record (Fig. 3)
+    pub record_trace: bool,
+    /// score the circuit against the FP32 ground truth; the bool asks
+    /// for the extra normalized-faithfulness forwards. `None` skips.
+    pub faithfulness: Option<bool>,
+    /// propagate faithfulness errors instead of skipping with a notice
+    pub faith_required: bool,
+    pub substrate: Substrate,
+    /// SP gate-training steps
+    pub sp_steps: usize,
+    /// Edge-Pruning mask-training steps
+    pub ep_steps: usize,
+    /// where the record lands
+    pub sink: OutputSink,
+}
+
+impl RunSpec {
+    /// Start a spec for `model`/`task` with every other field at its
+    /// documented default.
+    pub fn builder(model: &str, task: &str) -> RunSpecBuilder {
+        RunSpecBuilder {
+            model: model.to_string(),
+            task: task.to_string(),
+            method: MethodKind::Pahq,
+            policy: None,
+            bits: DEFAULT_BITS,
+            tau: DEFAULT_TAU,
+            objective: Objective::Kl,
+            sweep: SweepMode::Serial,
+            workers: None,
+            seed: 0,
+            record_trace: false,
+            faithfulness: None,
+            faith_required: false,
+            substrate: Substrate::Auto,
+            sp_steps: 80,
+            ep_steps: 60,
+            sink: OutputSink::Memory,
+        }
+    }
+
+    /// Parse `pahq run` flags into a validated spec — the CLI is a thin
+    /// shell over this, so a flag set and the equivalent builder chain
+    /// produce identical records by construction.
+    pub fn from_cli(args: &Args) -> Result<RunSpec> {
+        let bits = args.usize_or("bits", DEFAULT_BITS as usize)? as u32;
+        let mut b = RunSpec::builder(
+            args.get_or("model", DEFAULT_MODEL),
+            args.get_or("task", DEFAULT_TASK),
+        )
+        .method(args.get_or("method", "pahq").parse()?)
+        .bits(bits)
+        .tau(args.f64_or("tau", DEFAULT_TAU as f64)? as f32)
+        .objective(args.get_or("metric", "kl").parse()?)
+        .sweep(args.get_or("sweep", "serial").parse()?)
+        .seed(args.u64_or("seed", 0)?)
+        .trace(args.flag("trace"));
+        if let Some(p) = args.get("policy") {
+            b = b.policy(Policy::by_name(p, bits)?);
+        }
+        if let Some(w) = args.usize_opt("workers")? {
+            b = b.workers(w);
+        }
+        if !args.flag("no-faith") {
+            b = b.faithfulness(Some(false));
+        }
+        b = b.sink(match args.json_path() {
+            Some(p) => OutputSink::Path(PathBuf::from(p)),
+            None => OutputSink::Default,
+        });
+        b.build()
+    }
+
+    /// The method-agnostic [`DiscoveryConfig`] this spec configures its
+    /// session with.
+    pub fn discovery_config(&self) -> DiscoveryConfig {
+        let mut cfg = DiscoveryConfig::new(self.tau, self.objective, self.policy.clone());
+        cfg.sweep = self.sweep;
+        cfg.record_trace = self.record_trace;
+        cfg.sp_steps = self.sp_steps;
+        cfg.ep_steps = self.ep_steps;
+        cfg
+    }
+
+    /// Cross-field validation; every error names the offending field.
+    /// [`RunSpecBuilder::build`] runs this, and [`run`] re-runs it so a
+    /// hand-constructed spec cannot bypass it.
+    pub fn validate(&self) -> Result<()> {
+        if self.model.is_empty() {
+            bail!("model: must not be empty");
+        }
+        if self.task.is_empty() {
+            bail!("task: must not be empty");
+        }
+        if !self.tau.is_finite() || self.tau < 0.0 {
+            bail!("tau: must be a finite non-negative threshold, got {}", self.tau);
+        }
+        // match the variant directly: SweepMode::workers() clamps to 1,
+        // so a zero hiding in a hand-built spec would pass a clamped check
+        if matches!(self.sweep, SweepMode::Batched { workers: 0 }) {
+            bail!("sweep: batched worker count must be >= 1");
+        }
+        if self.sp_steps == 0 {
+            bail!("sp_steps: must be >= 1");
+        }
+        if self.ep_steps == 0 {
+            bail!("ep_steps: must be >= 1");
+        }
+        // the classic policy-carrying spellings must not contradict an
+        // explicit policy; `acdc` is the generic verifier and accepts any
+        let family = memory::MethodKind::of_policy(&self.policy);
+        match self.method {
+            MethodKind::RtnQ if family != memory::MethodKind::RtnQ => bail!(
+                "policy: method 'rtn-q' implies the rtn policy family, got '{}' — \
+                 use method 'acdc' for an explicit policy override",
+                self.policy.name
+            ),
+            MethodKind::Pahq if family != memory::MethodKind::Pahq => bail!(
+                "policy: method 'pahq' implies the pahq policy family, got '{}' — \
+                 use method 'acdc' for an explicit policy override",
+                self.policy.name
+            ),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Builder for [`RunSpec`]. Unset fields keep the documented defaults;
+/// [`build`](RunSpecBuilder::build) resolves the implied policy and
+/// runs the cross-field validation.
+///
+/// ```
+/// use pahq::api::RunSpec;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// // workers only mean something under a batched sweep:
+/// let err = RunSpec::builder("gpt2s-sim", "ioi").workers(4).build();
+/// assert!(err.unwrap_err().to_string().starts_with("workers:"));
+///
+/// let spec = RunSpec::builder("gpt2s-sim", "ioi")
+///     .sweep("batched".parse()?)
+///     .workers(4)
+///     .build()?;
+/// assert_eq!(spec.sweep.workers(), 4);
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Clone, Debug)]
+pub struct RunSpecBuilder {
+    model: String,
+    task: String,
+    method: MethodKind,
+    policy: Option<Policy>,
+    bits: u32,
+    tau: f32,
+    objective: Objective,
+    sweep: SweepMode,
+    workers: Option<usize>,
+    seed: u64,
+    record_trace: bool,
+    faithfulness: Option<bool>,
+    faith_required: bool,
+    substrate: Substrate,
+    sp_steps: usize,
+    ep_steps: usize,
+    sink: OutputSink,
+}
+
+impl RunSpecBuilder {
+    pub fn method(mut self, method: MethodKind) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Explicit session policy (otherwise the method's implied one at
+    /// [`RunSpecBuilder::bits`]).
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Nominal bit width of the *implied* policy (ignored when an
+    /// explicit [`RunSpecBuilder::policy`] is set).
+    pub fn bits(mut self, bits: u32) -> Self {
+        self.bits = bits;
+        self
+    }
+
+    pub fn tau(mut self, tau: f32) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    pub fn sweep(mut self, sweep: SweepMode) -> Self {
+        self.sweep = sweep;
+        self
+    }
+
+    /// Scoring threads for the batched sweep. Only meaningful with
+    /// `sweep=batched` — [`RunSpecBuilder::build`] rejects it otherwise.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Record the per-step sweep trace into the record (Fig. 3).
+    pub fn trace(mut self, record_trace: bool) -> Self {
+        self.record_trace = record_trace;
+        self
+    }
+
+    /// Score against the FP32 ground truth; the bool asks for the extra
+    /// normalized-faithfulness forward passes.
+    pub fn faithfulness(mut self, normalized: Option<bool>) -> Self {
+        self.faithfulness = normalized;
+        self
+    }
+
+    /// Propagate faithfulness errors instead of skipping with a notice.
+    pub fn faith_required(mut self, required: bool) -> Self {
+        self.faith_required = required;
+        self
+    }
+
+    pub fn substrate(mut self, substrate: Substrate) -> Self {
+        self.substrate = substrate;
+        self
+    }
+
+    /// SP gate-training steps (baseline budget).
+    pub fn sp_steps(mut self, steps: usize) -> Self {
+        self.sp_steps = steps;
+        self
+    }
+
+    /// Edge-Pruning mask-training steps (baseline budget).
+    pub fn ep_steps(mut self, steps: usize) -> Self {
+        self.ep_steps = steps;
+        self
+    }
+
+    pub fn sink(mut self, sink: OutputSink) -> Self {
+        self.sink = sink;
+        self
+    }
+
+    /// Resolve the implied policy and validate every cross-field
+    /// constraint (errors name the offending field).
+    pub fn build(self) -> Result<RunSpec> {
+        let mut sweep = self.sweep;
+        if let Some(w) = self.workers {
+            if w == 0 {
+                bail!("workers: must be >= 1");
+            }
+            match sweep {
+                SweepMode::Batched { .. } => sweep = SweepMode::Batched { workers: w },
+                SweepMode::Serial => {
+                    bail!("workers: only meaningful with sweep=batched (got sweep=serial)")
+                }
+            }
+        }
+        let policy = match self.policy {
+            Some(p) => p,
+            None => self.method.implied_policy(self.bits)?,
+        };
+        let spec = RunSpec {
+            model: self.model,
+            task: self.task,
+            method: self.method,
+            policy,
+            tau: self.tau,
+            objective: self.objective,
+            sweep,
+            seed: self.seed,
+            record_trace: self.record_trace,
+            faithfulness: self.faithfulness,
+            faith_required: self.faith_required,
+            substrate: self.substrate,
+            sp_steps: self.sp_steps,
+            ep_steps: self.ep_steps,
+            sink: self.sink,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MatrixSpec
+
+/// A validated method x policy x model x task grid. Construct with
+/// [`MatrixSpec::builder`] or [`MatrixSpec::from_cli`]; launch with
+/// [`matrix`]. The underlying [`MatrixConfig`] is private, so every
+/// grid that runs has passed the axis validation.
+#[derive(Clone)]
+pub struct MatrixSpec {
+    config: MatrixConfig,
+}
+
+impl MatrixSpec {
+    /// Start from the acceptance grid's defaults (every registered
+    /// discovery method x {fp32, pahq-8b} on every task of the smallest
+    /// model). The method axis derives from
+    /// [`discovery::METHOD_NAMES`](crate::discovery::METHOD_NAMES), so
+    /// registering a sixth method automatically lands in the default
+    /// grid (and the CI matrix gate).
+    pub fn builder() -> MatrixSpecBuilder {
+        let d = MatrixConfig::quick();
+        MatrixSpecBuilder {
+            methods: discovery::METHOD_NAMES
+                .iter()
+                .map(|m| m.parse().expect("registry names parse as MethodKind"))
+                .collect(),
+            policies: d.policies,
+            models: d.models,
+            tasks: d.tasks,
+            tau: d.tau,
+            objective: d.objective,
+            sweep: d.sweep,
+            pool_workers: None,
+            workers: d.workers,
+            seed: d.seed,
+            resume: false,
+            quick: false,
+            faithfulness: d.faithfulness,
+            out_dir: d.out_dir,
+            json_path: None,
+        }
+    }
+
+    /// Parse `pahq matrix` flags into a validated spec.
+    pub fn from_cli(args: &Args) -> Result<MatrixSpec> {
+        let bits = args.usize_or("bits", DEFAULT_BITS as usize)? as u32;
+        let mut b = MatrixSpec::builder().quick(args.flag("quick")).resume(args.flag("resume"));
+        if let Some(models) = args.list("models") {
+            b = b.models(&models);
+        }
+        if let Some(tasks) = args.list("tasks") {
+            b = b.tasks(&tasks);
+        }
+        if let Some(methods) = args.list("methods") {
+            b = b.methods(
+                methods.iter().map(|m| m.parse()).collect::<Result<Vec<MethodKind>>>()?,
+            );
+        }
+        if let Some(policies) = args.list("policies") {
+            b = b.policies(
+                policies.iter().map(|p| Policy::by_name(p, bits)).collect::<Result<Vec<_>>>()?,
+            );
+        }
+        if args.get("tau").is_some() {
+            b = b.tau(args.f64_or("tau", DEFAULT_TAU as f64)? as f32);
+        }
+        if let Some(m) = args.get("metric") {
+            b = b.objective(m.parse()?);
+        }
+        if let Some(w) = args.usize_opt("workers")? {
+            b = b.workers(w);
+        }
+        b = b.seed(args.u64_or("seed", 0)?);
+        // every sweep spelling `pahq run` accepts parses here too; the
+        // bare `batched` defaults the per-cell pool to 2 replicas, and
+        // an explicit --pool-workers overrides the count (a validation
+        // error under a serial sweep)
+        let pool_workers = args.usize_opt("pool-workers")?;
+        let sweep = match args.get_or("sweep", "serial") {
+            "batched" => SweepMode::Batched { workers: pool_workers.unwrap_or(2).max(1) },
+            other => other.parse()?,
+        };
+        b = b.sweep(sweep);
+        if let Some(k) = pool_workers {
+            b = b.pool_workers(k);
+        }
+        if args.flag("no-faith") {
+            b = b.faithfulness(false);
+        }
+        if let Some(out) = args.get("out") {
+            b = b.out_dir(PathBuf::from(out));
+        }
+        if let Some(j) = args.json_path() {
+            b = b.json_path(PathBuf::from(j));
+        }
+        b.build()
+    }
+
+    /// The validated grid configuration (read-only).
+    pub fn config(&self) -> &MatrixConfig {
+        &self.config
+    }
+
+    /// The grid in its stable evaluation order.
+    pub fn cells(&self) -> Vec<Cell> {
+        matrix::grid(&self.config)
+    }
+}
+
+/// Builder for [`MatrixSpec`] — the grid axes plus orchestration knobs,
+/// validated as a whole by [`build`](MatrixSpecBuilder::build).
+#[derive(Clone)]
+pub struct MatrixSpecBuilder {
+    methods: Vec<MethodKind>,
+    policies: Vec<Policy>,
+    models: Vec<String>,
+    tasks: Vec<String>,
+    tau: f32,
+    objective: Objective,
+    sweep: SweepMode,
+    pool_workers: Option<usize>,
+    workers: usize,
+    seed: u64,
+    resume: bool,
+    quick: bool,
+    faithfulness: bool,
+    out_dir: PathBuf,
+    json_path: Option<PathBuf>,
+}
+
+impl MatrixSpecBuilder {
+    pub fn methods(mut self, methods: Vec<MethodKind>) -> Self {
+        self.methods = methods;
+        self
+    }
+
+    pub fn policies(mut self, policies: Vec<Policy>) -> Self {
+        self.policies = policies;
+        self
+    }
+
+    pub fn models(mut self, models: &[String]) -> Self {
+        self.models = models.to_vec();
+        self
+    }
+
+    pub fn tasks(mut self, tasks: &[String]) -> Self {
+        self.tasks = tasks.to_vec();
+        self
+    }
+
+    pub fn tau(mut self, tau: f32) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Per-cell evaluation schedule; batched enables pool sharing
+    /// between consecutive cells on one worker.
+    pub fn sweep(mut self, sweep: SweepMode) -> Self {
+        self.sweep = sweep;
+        self
+    }
+
+    /// Per-cell batched-sweep pool size. Only meaningful with
+    /// `sweep=batched` — [`MatrixSpecBuilder::build`] rejects it
+    /// otherwise.
+    pub fn pool_workers(mut self, workers: usize) -> Self {
+        self.pool_workers = Some(workers);
+        self
+    }
+
+    /// Concurrent cell workers draining the grid's job queue.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Skip cells whose valid record already exists on disk.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
+        self
+    }
+
+    pub fn quick(mut self, quick: bool) -> Self {
+        self.quick = quick;
+        self
+    }
+
+    /// Score each circuit against the FP32 ground truth (real substrate).
+    pub fn faithfulness(mut self, faithfulness: bool) -> Self {
+        self.faithfulness = faithfulness;
+        self
+    }
+
+    /// Where per-cell records land.
+    pub fn out_dir(mut self, out_dir: PathBuf) -> Self {
+        self.out_dir = out_dir;
+        self
+    }
+
+    /// Where the manifest lands (default: `<out_dir>/matrix.json`).
+    pub fn json_path(mut self, json_path: PathBuf) -> Self {
+        self.json_path = Some(json_path);
+        self
+    }
+
+    /// Validate the grid axes and orchestration knobs (errors name the
+    /// offending field) and freeze the configuration.
+    pub fn build(self) -> Result<MatrixSpec> {
+        fn no_dupes(field: &str, names: &[String]) -> Result<()> {
+            if names.is_empty() {
+                bail!("{field}: at least one entry required");
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            for n in names {
+                if n.is_empty() {
+                    bail!("{field}: entries must not be empty");
+                }
+                if !seen.insert(n.clone()) {
+                    bail!("{field}: duplicate '{n}' (cell record filenames would collide)");
+                }
+            }
+            Ok(())
+        }
+        for m in &self.methods {
+            if m.is_policy_spelling() {
+                bail!(
+                    "methods: '{m}' is acdc under its implied policy — put it on the \
+                     policies axis instead (e.g. policies=[{}])",
+                    if *m == MethodKind::RtnQ { "rtn" } else { "pahq" }
+                );
+            }
+        }
+        let method_names: Vec<String> =
+            self.methods.iter().map(|m| m.discovery_name().to_string()).collect();
+        no_dupes("methods", &method_names)?;
+        let policy_names: Vec<String> =
+            self.policies.iter().map(|p| p.name.clone()).collect();
+        no_dupes("policies", &policy_names)?;
+        no_dupes("models", &self.models)?;
+        no_dupes("tasks", &self.tasks)?;
+        if !self.tau.is_finite() || self.tau < 0.0 {
+            bail!("tau: must be a finite non-negative threshold, got {}", self.tau);
+        }
+        if self.workers < 1 {
+            bail!("workers: at least one cell worker required");
+        }
+        let mut sweep = self.sweep;
+        if let Some(k) = self.pool_workers {
+            if k == 0 {
+                bail!("pool_workers: must be >= 1");
+            }
+            match sweep {
+                SweepMode::Batched { .. } => sweep = SweepMode::Batched { workers: k },
+                SweepMode::Serial => {
+                    bail!("pool_workers: only meaningful with sweep=batched (got sweep=serial)")
+                }
+            }
+        }
+        if matches!(sweep, SweepMode::Batched { workers: 0 }) {
+            bail!("sweep: batched worker count must be >= 1");
+        }
+        // the manifest stores the seed through an f64 JSON number; beyond
+        // 2^53 it would round and silently disable --resume
+        if self.seed > (1u64 << 53) {
+            bail!("seed: must fit in 53 bits (manifest round-trip), got {}", self.seed);
+        }
+        let mut config = MatrixConfig::quick();
+        config.methods = method_names;
+        config.policies = self.policies;
+        config.models = self.models;
+        config.tasks = self.tasks;
+        config.tau = self.tau;
+        config.objective = self.objective;
+        config.sweep = sweep;
+        config.workers = self.workers;
+        config.seed = self.seed;
+        config.resume = self.resume;
+        config.quick = self.quick;
+        config.faithfulness = self.faithfulness;
+        config.out_dir = self.out_dir;
+        config.json_path = self.json_path;
+        Ok(MatrixSpec { config })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Launch
+
+/// Run one discovery from a validated spec — THE way a single run is
+/// launched, whether by `pahq run`, a matrix cell's standalone
+/// comparator, the experiment harness, or a library embedder.
+///
+/// ```no_run
+/// use pahq::api::{self, OutputSink, RunSpec};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let spec = RunSpec::builder("redwood2l-sim", "ioi")
+///     .method("pahq".parse()?)
+///     .faithfulness(Some(false))
+///     .sink(OutputSink::Memory)
+///     .build()?;
+/// let rec = api::run(&spec)?;
+/// println!("kept {} of {} edges", rec.n_kept, rec.n_edges);
+/// # Ok(())
+/// # }
+/// ```
+pub fn run(spec: &RunSpec) -> Result<RunRecord> {
+    run_with_session(spec).map(|(rec, _)| rec)
+}
+
+/// [`run`], additionally handing back the live [`Session`] (real
+/// substrate only) for callers that inspect the engine afterwards —
+/// measured footprints, kept-edge labels, extra forwards. The CLI's
+/// pretty-printing is built on this.
+pub fn run_with_session(spec: &RunSpec) -> Result<(RunRecord, Option<Session>)> {
+    spec.validate()?;
+    // Substrate resolution mirrors the matrix orchestrator: real when
+    // the artifacts resolve AND the engine comes up, synthetic when
+    // nothing resolves (or the engine cannot build under Auto), a loud
+    // error on partial availability. The availability probe is cheap —
+    // whether the engine itself comes up is decided by constructing the
+    // actual session, so a run never builds a throwaway probe engine.
+    let try_real = match spec.substrate {
+        Substrate::Synthetic => false,
+        Substrate::Real => true,
+        // (the probe re-parses two small artifact metadata files that
+        // seeded_examples loads again — a deliberate, once-per-run cost
+        // that keeps the partial-availability error class intact)
+        Substrate::Auto => matrix::artifacts_available(
+            std::slice::from_ref(&spec.model),
+            std::slice::from_ref(&spec.task),
+        )?,
+    };
+    if try_real {
+        let task = Task::new(&spec.model, &spec.task);
+        let cfg = spec.discovery_config();
+        // Engine *bring-up* (dataset resolution + weights + PJRT
+        // executables) is the only failure class that may degrade to
+        // the synthetic surface under Auto — the same class the matrix
+        // probe tests. Everything after a live engine (configure,
+        // discovery, faithfulness) is a real error and propagates.
+        let built = matrix::seeded_examples(&task, spec.seed)
+            .and_then(|ex| Session::builder(&task).examples(ex).build());
+        match built {
+            Ok(mut session) => {
+                session.configure(&cfg)?;
+                let method = discovery::by_name(spec.method.discovery_name())?;
+                let mut rec = method.discover(&mut session, &task, &cfg)?;
+                if let Some(normalized) = spec.faithfulness {
+                    match session.evaluate_faithfulness(&cfg, &mut rec, normalized) {
+                        Ok(()) => {}
+                        Err(e) if spec.faith_required => return Err(e),
+                        Err(e) => eprintln!("faithfulness skipped: {e}"),
+                    }
+                }
+                write_record(spec, &rec)?;
+                return Ok((rec, Some(session)));
+            }
+            // engine bring-up failing under Real is the caller's error;
+            // under Auto it degrades to the synthetic surface exactly
+            // like the matrix's engine-unavailable path
+            Err(e) if spec.substrate == Substrate::Real => return Err(e),
+            Err(e) => eprintln!("engine unavailable ({e}); running the synthetic surface"),
+        }
+    }
+    // a caller that declared faithfulness mandatory cannot be handed a
+    // synthetic record that silently lacks it
+    if spec.faith_required && spec.faithfulness.is_some() {
+        bail!(
+            "faithfulness: required, but the synthetic substrate has no FP32 ground \
+             truth to score against — build the engine artifacts or drop faith_required"
+        );
+    }
+    let cell = Cell {
+        method: spec.method.discovery_name().to_string(),
+        policy: spec.policy.clone(),
+        model: spec.model.clone(),
+        task: spec.task.clone(),
+    };
+    let surface = matrix::synthetic_surface(&spec.model, &spec.task, spec.seed);
+    let rec =
+        matrix::synthetic_cell_record(&cell, spec.tau, spec.sweep, spec.seed, &surface, None)?;
+    write_record(spec, &rec)?;
+    Ok((rec, None))
+}
+
+fn write_record(spec: &RunSpec, rec: &RunRecord) -> Result<()> {
+    if let Some(path) = spec.sink.path_for(rec) {
+        rec.save(&path)?;
+    }
+    Ok(())
+}
+
+/// Run a full grid from a validated spec — THE way a matrix is
+/// launched. Returns the manifest plus where it was written.
+pub fn matrix(spec: &MatrixSpec) -> Result<MatrixOutcome> {
+    matrix::run(&spec.config)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_spellings_round_trip() {
+        for m in MethodKind::ALL {
+            assert_eq!(m.as_str().parse::<MethodKind>().unwrap(), m);
+        }
+        assert_eq!("rtn".parse::<MethodKind>().unwrap(), MethodKind::RtnQ);
+        assert_eq!("ep".parse::<MethodKind>().unwrap(), MethodKind::EdgePruning);
+        assert!("turbo".parse::<MethodKind>().is_err());
+    }
+
+    #[test]
+    fn implied_policies_follow_the_paper() {
+        assert_eq!(MethodKind::Acdc.implied_policy(8).unwrap().name, "acdc-fp32");
+        assert_eq!(MethodKind::RtnQ.implied_policy(4).unwrap().name, "rtn-q-4b");
+        assert_eq!(MethodKind::Pahq.implied_policy(8).unwrap().name, "pahq-8b");
+        assert_eq!(MethodKind::Eap.implied_policy(8).unwrap().name, "pahq-8b");
+        assert!(MethodKind::Pahq.implied_policy(7).is_err());
+    }
+
+    #[test]
+    fn sim_kinds_cover_every_method() {
+        assert_eq!(MethodKind::Acdc.sim_kind(), memory::MethodKind::AcdcFp32);
+        assert_eq!(MethodKind::RtnQ.sim_kind(), memory::MethodKind::RtnQ);
+        for m in [MethodKind::Pahq, MethodKind::Eap, MethodKind::Hisp, MethodKind::Sp] {
+            assert_eq!(m.sim_kind(), memory::MethodKind::Pahq);
+        }
+    }
+
+    #[test]
+    fn sink_paths_resolve() {
+        let spec = RunSpec::builder("m", "t").build().unwrap();
+        let rec_path = |sink: OutputSink| {
+            let mut s = spec.clone();
+            s.sink = sink;
+            let cell = Cell {
+                method: "acdc".into(),
+                policy: Policy::fp32(),
+                model: "m".into(),
+                task: "t".into(),
+            };
+            let surface = matrix::synthetic_surface("m", "t", 0);
+            let rec =
+                matrix::synthetic_cell_record(&cell, 0.01, SweepMode::Serial, 0, &surface, None)
+                    .unwrap();
+            s.sink.path_for(&rec)
+        };
+        assert_eq!(rec_path(OutputSink::Memory), None);
+        assert_eq!(
+            rec_path(OutputSink::Path(PathBuf::from("x.json"))),
+            Some(PathBuf::from("x.json"))
+        );
+        let def = rec_path(OutputSink::Default).unwrap();
+        assert!(def.to_string_lossy().ends_with("run_acdc_acdc-fp32_m_t.json"));
+    }
+}

@@ -100,14 +100,102 @@ impl DiscoveryConfig {
 /// Every field is optional; an all-`None` value (the default) reproduces
 /// the classic build-everything-yourself session exactly.
 #[derive(Clone, Default)]
-pub struct DiscoveryInputs {
+struct DiscoveryInputs {
     /// evaluation batch (must be exactly `manifest.batch` examples)
-    pub examples: Option<Arc<Vec<Example>>>,
+    examples: Option<Arc<Vec<Example>>>,
     /// packed corrupted-activation cache, bit-identical to what this
     /// session would compute (same model, examples, and cache format)
-    pub corrupt_cache: Option<Arc<Vec<QTensor>>>,
+    corrupt_cache: Option<Arc<Vec<QTensor>>>,
     /// FP32 attribution scores for the cell's method (graph.edges() order)
+    scores: Option<Arc<Vec<f32>>>,
+}
+
+/// The one value a matrix cell worker passes between consecutive cells
+/// (and between a cell and the shared artifact store): the engine pool,
+/// the packed corrupt-activation cache, and the FP32 attribution score
+/// vector, bundled. Inbound it seeds a [`SessionBuilder`]; outbound
+/// ([`Session::take_handoff`]) it carries the pool onward and any scores
+/// the session computed itself for publication.
+///
+/// Replaces the old four-setter dance
+/// (`set_pool`/`take_pool`/`set_session_with_cache`/`take_computed_scores`).
+#[derive(Default)]
+pub struct Handoff {
+    /// batched-sweep engine pool; kept by the next session's `configure`
+    /// when model/task/policy/workers/objective match, rebuilt otherwise
+    pub pool: Option<EnginePool>,
+    /// packed corrupted-activation cache (inbound only; the matrix store
+    /// owns the canonical copy, so outbound handoffs leave this `None`)
+    pub corrupt_cache: Option<Arc<Vec<QTensor>>>,
+    /// FP32 attribution scores in `graph.edges()` order — pre-built
+    /// inbound, self-computed outbound
     pub scores: Option<Arc<Vec<f32>>>,
+}
+
+/// Staged construction of a [`Session`]: examples, a [`Handoff`], and a
+/// [`DiscoveryConfig`] collected up front, one fallible [`build`]
+/// producing a fully configured session.
+///
+/// ```
+/// use pahq::discovery::{DiscoveryConfig, Session, Task};
+/// use pahq::metrics::Objective;
+/// use pahq::patching::Policy;
+///
+/// # fn demo() -> anyhow::Result<()> {
+/// let task = Task::new("redwood2l-sim", "ioi");
+/// let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::fp32());
+/// let session = Session::builder(&task).config(&cfg).build()?;
+/// # let _ = session; Ok(())
+/// # }
+/// ```
+///
+/// [`build`]: SessionBuilder::build
+pub struct SessionBuilder {
+    task: Task,
+    examples: Option<Arc<Vec<Example>>>,
+    handoff: Handoff,
+    config: Option<DiscoveryConfig>,
+}
+
+impl SessionBuilder {
+    /// Evaluation batch (must be exactly `manifest.batch` examples);
+    /// defaults to the task artifact's exported batch.
+    pub fn examples(mut self, examples: Arc<Vec<Example>>) -> SessionBuilder {
+        self.examples = Some(examples);
+        self
+    }
+
+    /// Attach pre-built artifacts from a previous cell / the matrix store.
+    pub fn handoff(mut self, handoff: Handoff) -> SessionBuilder {
+        self.handoff = handoff;
+        self
+    }
+
+    /// Configure the session as part of [`SessionBuilder::build`] (policy
+    /// session + worker pool), instead of a separate `configure` call.
+    pub fn config(mut self, cfg: &DiscoveryConfig) -> SessionBuilder {
+        self.config = Some(cfg.clone());
+        self
+    }
+
+    /// Construct the session: engine (on the explicit batch when given),
+    /// attached pool, and — when a config was staged — the configured
+    /// policy session and worker pool.
+    pub fn build(self) -> Result<Session> {
+        let inputs = DiscoveryInputs {
+            examples: self.examples,
+            corrupt_cache: self.handoff.corrupt_cache,
+            scores: self.handoff.scores,
+        };
+        let mut session = Session::with_inputs(&self.task, inputs)?;
+        if let Some(pool) = self.handoff.pool {
+            session.set_pool(pool);
+        }
+        if let Some(cfg) = &self.config {
+            session.configure(cfg)?;
+        }
+        Ok(session)
+    }
 }
 
 /// A configured discovery session: the primary engine plus — for
@@ -139,11 +227,22 @@ impl Session {
         Self::with_inputs(task, DiscoveryInputs::default())
     }
 
+    /// Staged construction: examples + [`Handoff`] + config in one
+    /// fallible build (see [`SessionBuilder`]).
+    pub fn builder(task: &Task) -> SessionBuilder {
+        SessionBuilder {
+            task: task.clone(),
+            examples: None,
+            handoff: Handoff::default(),
+            config: None,
+        }
+    }
+
     /// Build a session around pre-built inputs: the engine's evaluation
     /// batch comes from `inputs.examples` when given, and `configure`
     /// installs `inputs.corrupt_cache` instead of re-running the
     /// corrupted forward.
-    pub fn with_inputs(task: &Task, inputs: DiscoveryInputs) -> Result<Session> {
+    fn with_inputs(task: &Task, inputs: DiscoveryInputs) -> Result<Session> {
         let engine = match &inputs.examples {
             Some(ex) => {
                 let manifest = Manifest::by_name(&task.model)?;
@@ -170,16 +269,9 @@ impl Session {
     /// evaluation) reuses the cache instead of re-running the corrupted
     /// forward. Returns whether the handoff happened.
     fn enter_policy(&mut self, policy: &Policy) -> Result<bool> {
-        match self.inputs.corrupt_cache.clone() {
-            Some(cc) if cc.first().map(|t| t.format()) == Some(policy.cache_format()) => {
-                self.engine.set_session_with_cache(policy.clone(), &cc)?;
-                Ok(true)
-            }
-            _ => {
-                self.engine.set_session(policy.clone())?;
-                Ok(false)
-            }
-        }
+        let cache = self.inputs.corrupt_cache.clone();
+        self.engine
+            .set_session_handoff(policy.clone(), cache.as_ref().map(|c| c.as_slice()))
     }
 
     /// Apply a config: set the engine's precision session (installing the
@@ -230,20 +322,23 @@ impl Session {
     /// model/task/policy/workers/objective match instead of rebuilding
     /// the replicas. PJRT time the pool accrued in earlier cells is
     /// snapshotted here so it never bills against this session's runs.
-    pub fn set_pool(&mut self, pool: EnginePool) {
+    fn set_pool(&mut self, pool: EnginePool) {
         self.pool_pjrt_base = pool.pjrt_time();
         self.pool = Some(pool);
     }
 
-    /// Detach the engine pool so the next cell on this worker can reuse it.
-    pub fn take_pool(&mut self) -> Option<EnginePool> {
-        self.pool.take()
-    }
-
-    /// Scores this session computed itself (None after a cache hit); the
-    /// matrix publishes them into its store for the next cell.
-    pub fn take_computed_scores(&mut self) -> Option<Arc<Vec<f32>>> {
-        self.computed_scores.take()
+    /// Detach everything the next cell (or the artifact store) can
+    /// reuse: the engine pool travels to the next session on this
+    /// worker, and `scores` carries any attribution vector this session
+    /// computed itself (None after a score-cache hit) for publication.
+    /// The canonical corrupt cache lives in the matrix store, so the
+    /// outbound `corrupt_cache` is always `None`.
+    pub fn take_handoff(&mut self) -> Handoff {
+        Handoff {
+            pool: self.pool.take(),
+            corrupt_cache: None,
+            scores: self.computed_scores.take(),
+        }
     }
 
     /// Kept flags of the last discovery run (graph.edges() order).
@@ -447,10 +542,10 @@ pub fn ordered_plan(engine: &PatchedForward, scores: &[f32]) -> Vec<Vec<Candidat
 /// already FP32.
 ///
 /// When the session carries a pre-built score vector
-/// ([`DiscoveryInputs::scores`], matrix cross-run reuse) it is returned
+/// ([`Handoff::scores`], matrix cross-run reuse) it is returned
 /// directly — no toggle, no scoring pass — and the hit is recorded in
 /// the session's [`CacheStats`]. Scores computed here are retained for
-/// publication via [`Session::take_computed_scores`].
+/// publication via [`Session::take_handoff`].
 pub fn scored_at_fp32<F>(
     session: &mut Session,
     cfg: &DiscoveryConfig,
@@ -529,14 +624,6 @@ pub fn by_name(name: &str) -> Result<Box<dyn Discovery>> {
         "edge-pruning" | "ep" => Box::new(crate::baselines::edge_pruning::EdgePruning),
         other => bail!("unknown discovery method '{other}' ({})", METHOD_NAMES.join("|")),
     })
-}
-
-/// One-stop discovery: build a session, configure it, run the method.
-pub fn discover(method: &str, task: &Task, cfg: &DiscoveryConfig) -> Result<RunRecord> {
-    let m = by_name(method)?;
-    let mut session = Session::new(task)?;
-    session.configure(cfg)?;
-    m.discover(&mut session, task, cfg)
 }
 
 #[cfg(test)]

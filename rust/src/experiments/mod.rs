@@ -47,10 +47,13 @@ fn fp32_gt(model: &str, task: &str, obj: Objective) -> Result<(PatchedForward, G
     Ok((engine, gt))
 }
 
-/// The shared body of every discovery-driven table: build a session,
-/// run `method` under `cfg`, and — when `faith` is set — score the
-/// circuit against the FP32 ground truth (`Some(true)` additionally
-/// computes the Hanna et al. normalized faithfulness).
+/// The shared body of every discovery-driven table: build a validated
+/// [`crate::api::RunSpec`] and launch it through [`crate::api::run`] —
+/// the same entry point the CLI and library embedders use. `faith =
+/// Some(..)` scores the circuit against the FP32 ground truth
+/// (`Some(true)` additionally computes the Hanna et al. normalized
+/// faithfulness), and any faithfulness failure propagates (a table row
+/// without its score would render as silently wrong data).
 fn discover_run(
     model: &str,
     task: &str,
@@ -58,15 +61,20 @@ fn discover_run(
     cfg: &DiscoveryConfig,
     faith: Option<bool>,
 ) -> Result<RunRecord> {
-    let t = Task::new(model, task);
-    let m = discovery::by_name(method)?;
-    let mut session = Session::new(&t)?;
-    session.configure(cfg)?;
-    let mut rec = m.discover(&mut session, &t, cfg)?;
-    if let Some(normalized) = faith {
-        session.evaluate_faithfulness(cfg, &mut rec, normalized)?;
-    }
-    Ok(rec)
+    let spec = crate::api::RunSpec::builder(model, task)
+        .method(method.parse()?)
+        .policy(cfg.policy.clone())
+        .tau(cfg.tau)
+        .objective(cfg.objective)
+        .sweep(cfg.sweep)
+        .trace(cfg.record_trace)
+        .sp_steps(cfg.sp_steps)
+        .ep_steps(cfg.ep_steps)
+        .faithfulness(faith)
+        .faith_required(true)
+        .substrate(crate::api::Substrate::Real)
+        .build()?;
+    crate::api::run(&spec)
 }
 
 /// The Tab. 1/2/3/6 method triple: label + session policy, ACDC verified.
@@ -610,16 +618,22 @@ pub fn sweep_scaling(quick: bool, seed: u64) -> Result<()> {
 
     // Real measurement when the sim-model artifacts exist: the batched
     // sweep must reproduce the serial circuit bit for bit. Both runs are
-    // emitted as RunRecord artifacts for the perf trajectory.
-    let task = Task::new("redwood2l-sim", "ioi");
-    let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::fp32());
-    match crate::matrix::seeded_discover("acdc", &task, &cfg, seed) {
+    // emitted as RunRecord artifacts for the perf trajectory, and both
+    // launch through the one public entry point (`api::run`) on the
+    // shared seeded-dataset resolution.
+    let serial_spec = crate::api::RunSpec::builder("redwood2l-sim", "ioi")
+        .method(crate::api::MethodKind::Acdc)
+        .tau(0.01)
+        .seed(seed)
+        .substrate(crate::api::Substrate::Real)
+        .build()?;
+    match crate::api::run(&serial_spec) {
         Ok(serial) => {
             let workers =
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-            let batched_cfg =
-                cfg.clone().with_sweep(SweepMode::Batched { workers });
-            let batched = crate::matrix::seeded_discover("acdc", &task, &batched_cfg, seed)?;
+            let mut batched_spec = serial_spec.clone();
+            batched_spec.sweep = SweepMode::Batched { workers };
+            let batched = crate::api::run(&batched_spec)?;
             assert_eq!(
                 serial.kept_hash, batched.kept_hash,
                 "batched sweep diverged from serial"

@@ -11,6 +11,10 @@
 //!   metrics/evaluation stack, the schema-versioned [`discovery::RunRecord`]
 //!   artifacts CI gates on, the work-stealing [`matrix`] grid orchestrator
 //!   with its cross-run artifact store, and the table/figure harness.
+//!   Everything is launched through the typed [`api`] facade: a validated
+//!   [`api::RunSpec`] / [`api::MatrixSpec`] is the one entry point shared
+//!   by the CLI, the experiment harness, the tests, and library embedders
+//!   (see `examples/embed.rs`).
 //! - **L2 (python/compile/model.py, build-time only)** — the
 //!   graph-decomposed transformer, AOT-lowered per layer to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)** — Pallas kernels for
@@ -26,6 +30,7 @@
 //! binary is self-contained.
 
 pub mod acdc;
+pub mod api;
 pub mod baselines;
 pub mod discovery;
 pub mod eval;

@@ -1,4 +1,14 @@
-//! `pahq` — the coordinator CLI.
+//! `pahq` — the coordinator CLI: a thin flag-parsing shell over the
+//! typed [`pahq::api`] facade.
+//!
+//! Every subcommand parses its flags into a validated spec
+//! ([`RunSpec::from_cli`] / [`MatrixSpec::from_cli`]) and launches it
+//! through [`api::run`] / [`api::matrix`] — the same two entry points
+//! the experiment harness, the integration tests, and library embedders
+//! use — so a CLI invocation and the equivalent builder chain produce
+//! identical records by construction. Help text is generated from the
+//! same spec builders ([`pahq::api::help`]), so it cannot drift from
+//! the flags the parsers accept.
 //!
 //! Subcommands:
 //!   run         one circuit-discovery run (model/task/method/tau/metric);
@@ -14,6 +24,7 @@
 //!   bench       deterministic perf snapshot (sweep hot path + packed
 //!               memory) for CI's perf gate — see scripts/bench_gate.py
 //!   info        model/artifact inventory
+//!   help        generated overview; `pahq help <sub>` / `--help` for flags
 
 use std::hint::black_box;
 use std::path::PathBuf;
@@ -23,14 +34,15 @@ use anyhow::{bail, Context, Result};
 
 use pahq::acdc::sweep::SyntheticSurface;
 use pahq::acdc::{self, Candidate, FnScorer, SweepMode};
-use pahq::discovery::{self, DiscoveryConfig, RunRecord, Task};
+use pahq::api::{self, help, MatrixSpec, MethodKind, RunSpec, Substrate};
+use pahq::discovery::{self, RunRecord};
 use pahq::experiments;
-use pahq::gpu_sim::memory::{memory_model, MethodKind};
+use pahq::gpu_sim::memory::{memory_model, MethodKind as SimMethod};
 use pahq::gpu_sim::{CostModel, RealArch};
 use pahq::metrics::Objective;
 use pahq::model::{Graph, Manifest};
-use pahq::patching::{PatchMask, PatchedForward, Policy};
-use pahq::quant::{Format, BF16, FP8_E4M3};
+use pahq::patching::{PatchMask, PatchedForward};
+use pahq::quant::{BF16, FP8_E4M3};
 use pahq::report::{human_bytes, mmss, results_dir, Table};
 use pahq::scheduler::{predict_run, predict_sweep, StreamConfig};
 use pahq::tensor::QTensor;
@@ -38,61 +50,23 @@ use pahq::util::cli::Args;
 use pahq::util::json::{obj, Json};
 use pahq::util::rng::Rng;
 
-const USAGE: &str = "\
-pahq — PAHQ: accelerating automated circuit discovery (paper reproduction)
-
-USAGE:
-  pahq run [--model M] [--task T]
-           [--method acdc|rtn-q|pahq|eap|hisp|sp|edge-pruning]
-           [--policy fp32|rtn|pahq] [--tau X] [--metric kl|task]
-           [--bits 4|8|16] [--trace] [--sweep serial|batched]
-           [--workers N] [--seed S] [--json OUT.json]
-  pahq matrix [--models A,B] [--tasks T1,T2] [--methods M1,M2]
-              [--policies fp32,pahq,rtn] [--tau X] [--metric kl|task]
-              [--workers N] [--sweep serial|batched] [--pool-workers K]
-              [--seed S] [--quick] [--resume] [--no-faith]
-              [--out DIR] [--json MANIFEST.json]
-  pahq table <1|2|3|4|5|6|7|8> [--quick] [--from MATRIX.json]
-  pahq figure <1|3|4> [--quick]
-  pahq all [--quick]
-  pahq groundtruth [--model M] [--task T] [--metric kl|task]
-  pahq sim [--arch gpt2] [--method acdc|rtn-q|pahq] [--streams full|load|split|none]
-           [--sweep serial|batched] [--workers N] [--removal-rate P]
-  pahq sweep [--quick] [--seed S]
-  pahq bench [--json OUT.json] [--quick]
-  pahq info
-
-Flags: --workers N   worker threads for --sweep batched (default: available
-                     parallelism); the batched schedule is bit-identical to
-                     serial at any worker count. For `matrix` this is the
-                     number of concurrent cells; --pool-workers sets the
-                     per-cell batched-sweep pool instead
-       --seed S      dataset seed through the shared (task, seed, n)
-                     resolution (0 = the python-exported artifact batch);
-                     identical inputs are bit-identical across subcommands
-       --json PATH   where to write the machine-readable RunRecord /
-                     bench-snapshot / matrix-manifest artifact (run:
-                     defaults to
-                     rust/results/run_<method>_<policy>_<model>_<task>.json;
-                     bench: rust/results/bench.json; matrix:
-                     <out>/matrix.json)
-       --policy P    precision policy for the baseline methods
-                     (default pahq; acdc|rtn-q|pahq imply theirs)
-       --resume      matrix: skip cells whose valid record already exists
-                     (their files stay byte-identical)
-       --from PATH   tables 2/6/7: render from a matrix manifest in one
-                     pass instead of running the grid sequentially
-
-Defaults: --model gpt2s-sim --task ioi --method pahq --tau 0.01 --metric kl
-          --sweep serial --workers <available parallelism>
-          matrix: all methods x fp32,pahq x redwood2l-sim x all tasks
-Models: redwood2l-sim attn4l-sim gpt2s-sim gpt2m-sim gpt2l-sim gpt2xl-sim
-Tasks:  ioi greater_than docstring
-";
-
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    if cmd == "help" {
+        let topic = args.positional.get(1).map(String::as_str);
+        match topic.and_then(help::subcommand) {
+            Some(h) => print!("{h}"),
+            None => print!("{}", help::usage()),
+        }
+        return Ok(());
+    }
+    if args.flag("help") {
+        if let Some(h) = help::subcommand(cmd) {
+            print!("{h}");
+            return Ok(());
+        }
+    }
     match cmd {
         "run" => cmd_run(&args),
         "matrix" => cmd_matrix(&args),
@@ -105,78 +79,26 @@ fn main() -> Result<()> {
         "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         _ => {
-            print!("{USAGE}");
+            print!("{}", help::usage());
             Ok(())
         }
     }
 }
 
-fn objective(args: &Args) -> Result<Objective> {
-    Objective::parse(args.get_or("metric", "kl"))
-}
-
-/// Resolve `--method` / `--policy` / `--bits` into a discovery method
-/// name plus a session policy. The classic spellings `acdc` / `rtn-q` /
-/// `pahq` are ACDC under the implied policy; the baselines default to
-/// the PAHQ policy (that is the integration this repo exists to show)
-/// and accept an explicit `--policy` override.
-fn method_policy(args: &Args) -> Result<(String, Policy)> {
-    let bits = args.usize_or("bits", 8)? as u32;
-    let fmt = Format::by_bits(bits);
-    let name = args.get_or("method", "pahq");
-    let (method, implied) = match name {
-        "acdc" => ("acdc", Policy::fp32()),
-        "rtn-q" | "rtn" => ("acdc", Policy::rtn(fmt)),
-        "pahq" => ("acdc", Policy::pahq(fmt)),
-        "eap" | "hisp" | "sp" | "edge-pruning" | "ep" => (name, Policy::pahq(fmt)),
-        other => bail!(
-            "unknown method '{other}' (acdc|rtn-q|pahq|eap|hisp|sp|edge-pruning)"
-        ),
-    };
-    let policy = match args.get("policy") {
-        None => implied,
-        Some(p) => parse_policy(p, bits)?,
-    };
-    Ok((method.to_string(), policy))
-}
-
-/// Parse a policy spelling (`fp32` | `rtn` | `pahq`) at a bit width.
-fn parse_policy(name: &str, bits: u32) -> Result<Policy> {
-    let fmt = Format::by_bits(bits);
-    Ok(match name {
-        "fp32" => Policy::fp32(),
-        "rtn" | "rtn-q" => Policy::rtn(fmt),
-        "pahq" => Policy::pahq(fmt),
-        other => bail!("unknown policy '{other}' (fp32|rtn|pahq)"),
-    })
-}
-
 fn cmd_run(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "gpt2s-sim");
-    let task_name = args.get_or("task", "ioi");
-    let tau = args.f64_or("tau", 0.01)? as f32;
-    let obj = objective(args)?;
-    let (method_name, pol) = method_policy(args)?;
-    let method = discovery::by_name(&method_name)?;
-    let sweep = args.sweep_mode()?;
+    let spec = RunSpec::from_cli(args)?;
     println!(
-        "discovering circuit: {model} / {task_name} / {} / {} / tau={tau} / {} / sweep={}",
-        method.name(),
-        pol.name,
-        obj.label(),
-        sweep.label()
+        "discovering circuit: {} / {} / {} / {} / tau={} / {} / sweep={}",
+        spec.model,
+        spec.task,
+        spec.method.discovery_name(),
+        spec.policy,
+        spec.tau,
+        spec.objective.label(),
+        spec.sweep
     );
 
-    let task = Task::new(model, task_name);
-    let mut cfg = DiscoveryConfig::new(tau, obj, pol.clone());
-    cfg.record_trace = args.flag("trace");
-    cfg.sweep = sweep;
-    // the evaluation batch comes from the shared (task, seed, n)
-    // resolution — bit-identical to `pahq sweep` / `pahq matrix` inputs
-    let seed = args.u64_or("seed", 0)?;
-    let mut session = pahq::matrix::seeded_session(&task, seed)?;
-    session.configure(&cfg)?;
-    let mut rec = method.discover(&mut session, &task, &cfg)?;
+    let (rec, session) = api::run_with_session(&spec)?;
 
     println!(
         "\ncircuit: {} / {} edges kept ({} evals, {:.1}s wall, {:.1}s in PJRT)",
@@ -190,109 +112,76 @@ fn cmd_run(args: &Args) -> Result<()> {
     // bytes, not billed estimates.
     if let Some(sim) = rec.sim_bytes {
         println!(
-            "memory (simulated, {model} @ paper scale): {:.2} GB",
+            "memory (simulated, {} @ paper scale): {:.2} GB",
+            spec.model,
             sim as f64 / 1e9
         );
     }
-    let fp = session.engine.measured_footprint();
-    let fp32_ref = session.engine.measured_fp32_footprint();
-    let planes = fp
-        .weight_planes
-        .iter()
-        .map(|(n, b)| format!("{n} {}", human_bytes(*b)))
-        .collect::<Vec<_>>()
-        .join(" + ");
-    // a batched run replicates planes + cache once per pool worker; the
-    // measured line reports one engine and says so
-    let replica_note = match sweep {
-        SweepMode::Batched { workers } if workers > 1 => {
-            format!(" per engine (x{workers} pool replicas)")
-        }
-        _ => String::new(),
-    };
-    println!(
-        "memory (measured, {}): planes [{planes}] + cache {} = {}{replica_note}",
-        fp.method,
-        human_bytes(fp.act_cache),
-        human_bytes(fp.total()),
-    );
-    let saved = 100.0 * (1.0 - fp.total() as f64 / fp32_ref.total() as f64);
-    println!(
-        "memory (measured, acdc-fp32 same session): {} ({})",
-        human_bytes(fp32_ref.total()),
-        if fp.total() < fp32_ref.total() {
-            format!("packed saves {saved:.1}%")
-        } else {
-            "no packed saving at fp32".to_string()
-        },
-    );
-
-    let kept = session.last_kept().unwrap_or(&[]).to_vec();
-    let labels = discovery::kept_labels(&session.engine, &kept);
-    println!("\nkept edges (first 40):");
-    for l in labels.iter().take(40) {
-        println!("  {l}");
-    }
-    if labels.len() > 40 {
-        println!("  ... and {} more", labels.len() - 40);
-    }
-
-    // compare against ground truth when available; lands in the record
-    if session.evaluate_faithfulness(&cfg, &mut rec, false).is_ok() {
-        if let Some(f) = &rec.faithfulness {
+    match &session {
+        None => println!("(synthetic substrate: no engine memory / edge labels to report)"),
+        Some(session) => {
+            let fp = session.engine.measured_footprint();
+            let fp32_ref = session.engine.measured_fp32_footprint();
+            let planes = fp
+                .weight_planes
+                .iter()
+                .map(|(n, b)| format!("{n} {}", human_bytes(*b)))
+                .collect::<Vec<_>>()
+                .join(" + ");
+            // a batched run replicates planes + cache once per pool
+            // worker; the measured line reports one engine and says so
+            let replica_note = match spec.sweep {
+                SweepMode::Batched { workers } if workers > 1 => {
+                    format!(" per engine (x{workers} pool replicas)")
+                }
+                _ => String::new(),
+            };
             println!(
-                "\nvs FP32 ground truth: TPR={:.3} FPR={:.3} acc={:.3}",
-                f.tpr, f.fpr, f.accuracy
+                "memory (measured, {}): planes [{planes}] + cache {} = {}{replica_note}",
+                fp.method,
+                human_bytes(fp.act_cache),
+                human_bytes(fp.total()),
             );
+            let saved = 100.0 * (1.0 - fp.total() as f64 / fp32_ref.total() as f64);
+            println!(
+                "memory (measured, acdc-fp32 same session): {} ({})",
+                human_bytes(fp32_ref.total()),
+                if fp.total() < fp32_ref.total() {
+                    format!("packed saves {saved:.1}%")
+                } else {
+                    "no packed saving at fp32".to_string()
+                },
+            );
+
+            let kept = session.last_kept().unwrap_or(&[]).to_vec();
+            let labels = discovery::kept_labels(&session.engine, &kept);
+            println!("\nkept edges (first 40):");
+            for l in labels.iter().take(40) {
+                println!("  {l}");
+            }
+            if labels.len() > 40 {
+                println!("  ... and {} more", labels.len() - 40);
+            }
         }
     }
 
-    let path = match args.json_path() {
-        Some(p) => PathBuf::from(p),
-        None => results_dir().join(format!(
-            "run_{}_{}_{}_{}.json",
-            rec.method, rec.policy, rec.model, rec.task
-        )),
-    };
-    rec.save(&path)?;
-    println!("run record: {}", path.display());
+    // ground-truth comparison (computed by api::run unless --no-faith)
+    if let Some(f) = &rec.faithfulness {
+        println!(
+            "\nvs FP32 ground truth: TPR={:.3} FPR={:.3} acc={:.3}",
+            f.tpr, f.fpr, f.accuracy
+        );
+    }
+
+    if let Some(path) = spec.sink.path_for(&rec) {
+        println!("run record: {}", path.display());
+    }
     Ok(())
 }
 
 fn cmd_matrix(args: &Args) -> Result<()> {
-    let mut cfg = pahq::matrix::MatrixConfig::quick();
-    cfg.quick = args.flag("quick");
-    if let Some(models) = args.list("models") {
-        cfg.models = models;
-    }
-    if let Some(tasks) = args.list("tasks") {
-        cfg.tasks = tasks;
-    }
-    if let Some(methods) = args.list("methods") {
-        cfg.methods = methods;
-    }
-    let bits = args.usize_or("bits", 8)? as u32;
-    if let Some(policies) = args.list("policies") {
-        cfg.policies =
-            policies.iter().map(|p| parse_policy(p, bits)).collect::<Result<Vec<_>>>()?;
-    }
-    cfg.tau = args.f64_or("tau", cfg.tau as f64)? as f32;
-    cfg.objective = objective(args)?;
-    cfg.workers = args.usize_or("workers", cfg.workers)?;
-    cfg.seed = args.u64_or("seed", 0)?;
-    cfg.resume = args.flag("resume");
-    if args.flag("no-faith") {
-        cfg.faithfulness = false;
-    }
-    let pool_workers = args.usize_or("pool-workers", 2)?;
-    cfg.sweep = SweepMode::parse(args.get_or("sweep", "serial"), pool_workers)?;
-    if let Some(out) = args.get("out") {
-        cfg.out_dir = PathBuf::from(out);
-    }
-    if let Some(j) = args.json_path() {
-        cfg.json_path = Some(PathBuf::from(j));
-    }
-    let outcome = pahq::matrix::run(&cfg)?;
+    let spec = MatrixSpec::from_cli(args)?;
+    let outcome = api::matrix(&spec)?;
     if outcome.manifest.aggregate.n_error > 0 {
         bail!(
             "{} matrix cell(s) failed — see {}",
@@ -349,9 +238,9 @@ fn cmd_figure(args: &Args) -> Result<()> {
 }
 
 fn cmd_groundtruth(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "gpt2s-sim");
-    let task = args.get_or("task", "ioi");
-    let obj = objective(args)?;
+    let model = args.get_or("model", api::DEFAULT_MODEL);
+    let task = args.get_or("task", api::DEFAULT_TASK);
+    let obj: Objective = args.get_or("metric", "kl").parse()?;
     let mut engine = PatchedForward::new(model, task)?;
     let gt = pahq::eval::ground_truth(&mut engine, model, task, obj)?;
     println!(
@@ -373,11 +262,17 @@ fn cmd_groundtruth(args: &Args) -> Result<()> {
 fn cmd_sim(args: &Args) -> Result<()> {
     let arch_name = args.get_or("arch", "gpt2");
     let arch = RealArch::by_name(arch_name).context("unknown arch")?;
-    let method = match args.get_or("method", "pahq") {
-        "acdc" => MethodKind::AcdcFp32,
-        "rtn-q" | "rtn" => MethodKind::RtnQ,
-        _ => MethodKind::Pahq,
-    };
+    // every method spelling is accepted: the baselines verify through
+    // the same ACDC sweep under their (PAHQ-default) policy, so they
+    // share PAHQ's DES cost model — said out loud rather than silently
+    let method: MethodKind = args.get_or("method", "pahq").parse()?;
+    let kind = method.sim_kind();
+    if method.discovery_name() != "acdc" {
+        println!(
+            "sim: '{method}' orders edges by attribution, then verifies through the \
+             ACDC sweep under the PAHQ policy — predicting that sweep ({kind:?})"
+        );
+    }
     let streams = match args.get_or("streams", "full") {
         "full" => StreamConfig::FULL,
         "load" => StreamConfig::LOAD_ONLY,
@@ -385,12 +280,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
         _ => StreamConfig::NONE,
     };
     let cost = CostModel::default();
-    let p = predict_run(&arch, &cost, method, streams);
-    let mem = memory_model(&arch, method);
+    let p = predict_run(&arch, &cost, kind, streams);
+    let mem = memory_model(&arch, kind);
     println!("arch {}: {} edges", arch.name, p.n_edges);
     println!(
         "{:?} {streams:?}: per-edge {:.0} µs, total {} (m:s), mem {:.2} GB",
-        method,
+        kind,
         p.per_edge_us,
         mmss(p.total_minutes),
         mem.total_gb()
@@ -402,7 +297,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let sweep = args.sweep_mode()?;
     if let SweepMode::Batched { .. } = sweep {
         let removal = args.f64_or("removal-rate", 0.9)?;
-        let sp = predict_sweep(&arch, &cost, method, streams, sweep, removal);
+        let sp = predict_sweep(&arch, &cost, kind, streams, sweep, removal);
         println!(
             "sweep {}: eval inflation {:.2}x, total {} (m:s), speedup {:.2}x",
             sweep.label(),
@@ -590,12 +485,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // DES predictions (deterministic): the simulated headline numbers
     let arch = RealArch::by_name("gpt2").unwrap();
     let cost = CostModel::default();
-    let p_pahq = predict_run(&arch, &cost, MethodKind::Pahq, StreamConfig::FULL);
-    let p_acdc = predict_run(&arch, &cost, MethodKind::AcdcFp32, StreamConfig::NONE);
+    let p_pahq = predict_run(&arch, &cost, SimMethod::Pahq, StreamConfig::FULL);
+    let p_acdc = predict_run(&arch, &cost, SimMethod::AcdcFp32, StreamConfig::NONE);
     let sp8 = predict_sweep(
         &arch,
         &cost,
-        MethodKind::Pahq,
+        SimMethod::Pahq,
         StreamConfig::FULL,
         SweepMode::Batched { workers: 8 },
         0.9,
@@ -613,10 +508,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
 
     // real-engine record when the artifacts are built (optional: CI has
-    // no artifacts, the local dev loop does)
-    let task = Task::new("redwood2l-sim", "ioi");
-    let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
-    match discovery::discover("acdc", &task, &cfg) {
+    // no artifacts, the local dev loop does) — the one launch path,
+    // pinned to the real substrate so a synthetic stand-in can never
+    // sneak into the perf-gate snapshot
+    let spec = RunSpec::builder("redwood2l-sim", "ioi")
+        .method(MethodKind::Pahq)
+        .tau(0.01)
+        .substrate(Substrate::Real)
+        .build()?;
+    match api::run(&spec) {
         Ok(rec) => {
             println!(
                 "real engine: acdc/pahq-8b kept {} of {} ({:.1}s)",

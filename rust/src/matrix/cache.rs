@@ -8,9 +8,10 @@
 //! - **datasets** per (task, seed, n) — the evaluation batch; `seed 0`
 //!   is the python-exported artifact batch, any other seed routes
 //!   through the shared [`dataset_seed`] derivation into the Rust
-//!   generator. `pahq run`, `pahq sweep`, and every matrix cell resolve
-//!   examples through [`dataset_for`], so identical (task, seed, n)
-//!   inputs are bit-identical across subcommands.
+//!   generator. Every launch path — [`crate::api::run`] (and therefore
+//!   `pahq run` / `pahq sweep` / library embedders) and every matrix
+//!   cell — resolves examples through [`dataset_for`], so identical
+//!   (task, seed, n) inputs are bit-identical across entry points.
 //! - **corrupt caches** per (model, task, seed, cache tag) — the packed
 //!   corrupted-activation cache all five methods' runs on one task
 //!   share (hi-fidelity policies share one FP32 cache; RTN-Q tags by
@@ -77,7 +78,7 @@ pub fn surface_key(model: &str, task: &str, seed: u64) -> String {
 /// Resolve the evaluation examples for (task, seed, n): seed 0 is the
 /// python-exported artifact batch; any other seed routes through
 /// [`dataset_seed`] into the shared Rust generator. This is the single
-/// dataset entry point of `pahq run`, `pahq sweep`, and `pahq matrix`.
+/// dataset entry point behind [`crate::api::run`] and `pahq matrix`.
 pub fn dataset_for(task: &str, seed: u64, n: usize) -> Result<Vec<Example>> {
     if seed == 0 {
         return Ok(Dataset::by_task(task)?.batch(n)?.to_vec());

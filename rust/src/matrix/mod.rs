@@ -13,8 +13,8 @@
 //!    the vector across precision policies. A seeding phase builds every
 //!    shared artifact exactly once; the cell phase then runs all-hit.
 //! 2. **Pool sharing**: with a batched sweep schedule, each worker hands
-//!    its [`EnginePool`] to the next cell it steals
-//!    ([`Session::take_pool`] / [`Session::set_pool`]) — consecutive
+//!    its [`EnginePool`] to the next cell it steals — one [`Handoff`]
+//!    value in, one out ([`Session::take_handoff`]) — so consecutive
 //!    cells with matching model/task/policy skip rebuilding the engine
 //!    replicas.
 //! 3. **Resumability**: every cell emits its schema-versioned
@@ -23,10 +23,12 @@
 //!    cells whose valid record already exists, leaving their files
 //!    byte-identical.
 //!
-//! Cells consume the shared artifacts through
-//! [`crate::discovery::DiscoveryInputs`], so a matrix cell and a
-//! standalone `pahq run` produce bit-identical kept-edge sets — the
-//! contract `tests/matrix.rs` pins at 1 and 4 workers.
+//! Cells consume the shared artifacts through a [`Handoff`] staged into
+//! the cell's [`crate::discovery::SessionBuilder`], so a matrix cell
+//! and a standalone [`crate::api::run`] produce bit-identical kept-edge
+//! sets — the contract `tests/matrix.rs` pins at 1 and 4 workers. Grids
+//! are launched exclusively through [`crate::api::matrix`] on a
+//! validated [`crate::api::MatrixSpec`].
 //!
 //! When the engine artifacts are absent (CI runs `pahq matrix --quick`
 //! with no `make artifacts`), the grid falls back to a deterministic
@@ -43,10 +45,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::acdc::sweep::{self, Candidate, EnginePool, FnScorer, SweepMode, SyntheticSurface};
+use crate::acdc::sweep::{self, Candidate, FnScorer, SweepMode, SyntheticSurface};
 use crate::baselines::{eap, edge_pruning, hisp, sp};
 use crate::discovery::{
-    self, CacheStats, DiscoveryConfig, DiscoveryInputs, RunRecord, Session, Task,
+    self, CacheStats, DiscoveryConfig, Handoff, RunRecord, Session, Task,
 };
 use crate::eval;
 use crate::gpu_sim::memory::MethodKind;
@@ -65,7 +67,8 @@ use cache::ArtifactCache;
 /// `docs/matrix.schema.json`; bump both together.
 pub const MATRIX_SCHEMA_VERSION: usize = 1;
 
-/// Grid configuration for [`run`].
+/// Grid configuration for the grid executor (`run`, launched via
+/// [`crate::api::matrix`]).
 #[derive(Clone)]
 pub struct MatrixConfig {
     pub methods: Vec<String>,
@@ -405,7 +408,8 @@ impl MatrixManifest {
     }
 }
 
-/// What [`run`] hands back: the manifest plus where it was written.
+/// What the grid executor hands back through [`crate::api::matrix`]:
+/// the manifest plus where it was written.
 pub struct MatrixOutcome {
     pub manifest: MatrixManifest,
     pub manifest_path: PathBuf,
@@ -415,32 +419,18 @@ pub struct MatrixOutcome {
 // Shared dataset / session resolution (also the `pahq run` / `pahq sweep`
 // entry points — satellite: both subcommands route through one derivation)
 
-/// Build a discovery session whose evaluation batch comes from the
-/// shared (task, seed, n) dataset resolution ([`cache::dataset_for`]).
-/// `pahq run`, `pahq sweep`, and every matrix cell route through this,
-/// so identical (task, seed, n) inputs are bit-identical across
-/// subcommands.
-pub fn seeded_session(task: &Task, seed: u64) -> Result<Session> {
+/// Resolve a task's evaluation batch through the shared (task, seed, n)
+/// dataset resolution ([`cache::dataset_for`]). [`crate::api::run`] and
+/// every matrix cell route through this, so identical (task, seed, n)
+/// inputs are bit-identical across entry points.
+pub fn seeded_examples(task: &Task, seed: u64) -> Result<Arc<Vec<crate::model::Example>>> {
     let manifest = Manifest::by_name(&task.model)?;
-    let examples = cache::dataset_for(&task.task, seed, manifest.batch)?;
-    Session::with_inputs(
-        task,
-        DiscoveryInputs { examples: Some(Arc::new(examples)), ..Default::default() },
-    )
+    Ok(Arc::new(cache::dataset_for(&task.task, seed, manifest.batch)?))
 }
 
-/// One-stop seeded discovery (the `pahq sweep` body): seeded session,
-/// configure, discover.
-pub fn seeded_discover(
-    method: &str,
-    task: &Task,
-    cfg: &DiscoveryConfig,
-    seed: u64,
-) -> Result<RunRecord> {
-    let m = discovery::by_name(method)?;
-    let mut session = seeded_session(task, seed)?;
-    session.configure(cfg)?;
-    m.discover(&mut session, task, cfg)
+/// Build a discovery session on the shared seeded batch.
+pub fn seeded_session(task: &Task, seed: u64) -> Result<Session> {
+    Session::builder(task).examples(seeded_examples(task, seed)?).build()
 }
 
 // ---------------------------------------------------------------------------
@@ -488,10 +478,14 @@ pub fn synthetic_scores(
 }
 
 /// One synthetic-substrate cell with explicit inputs — also the
-/// standalone comparator the matrix's bit-identity tests run against.
+/// substrate [`crate::api::run`] falls back to, so a synthetic matrix
+/// cell and a standalone synthetic run are bit-identical by
+/// construction.
 pub fn synthetic_cell_record(
     cell: &Cell,
-    cfg: &MatrixConfig,
+    tau: f32,
+    sweep_mode: SweepMode,
+    seed: u64,
     surface: &SyntheticSurface,
     scores: Option<&[f32]>,
 ) -> Result<RunRecord> {
@@ -524,13 +518,7 @@ pub fn synthetic_cell_record(
         let s: &[f32] = match scores {
             Some(s) => s,
             None => {
-                own = synthetic_scores(
-                    &cell.method,
-                    &cell.model,
-                    &cell.task,
-                    cfg.seed,
-                    g.n_edges(),
-                );
+                own = synthetic_scores(&cell.method, &cell.model, &cell.task, seed, g.n_edges());
                 own.as_slice()
             }
         };
@@ -547,8 +535,8 @@ pub fn synthetic_cell_record(
             .collect()]
     };
     let score = |m: &PatchMask, c: Option<&Candidate>| surface.damage(m, c);
-    let mut scorer = FnScorer { score, workers: cfg.sweep.workers() };
-    let out = sweep::sweep(&mut scorer, channels.len(), &plan, cfg.tau, false, cfg.sweep)?;
+    let mut scorer = FnScorer { score, workers: sweep_mode.workers() };
+    let out = sweep::sweep(&mut scorer, channels.len(), &plan, tau, false, sweep_mode)?;
     let kept: Vec<bool> =
         g.edges().iter().map(|e| !out.removed.get(chan_of(&e.dst), e.src)).collect();
     Ok(RunRecord {
@@ -558,9 +546,9 @@ pub fn synthetic_cell_record(
         model: cell.model.clone(),
         task: cell.task.clone(),
         objective: "synthetic".into(),
-        tau: cfg.tau as f64,
-        sweep: cfg.sweep.label(),
-        workers: cfg.sweep.workers(),
+        tau: tau as f64,
+        sweep: sweep_mode.label(),
+        workers: sweep_mode.workers(),
         n_edges: kept.len(),
         n_kept: kept.iter().filter(|&&k| k).count(),
         kept_hash: discovery::kept_hash(&kept),
@@ -579,19 +567,21 @@ pub fn synthetic_cell_record(
 
 /// Run one cell standalone — fresh session, no cross-run cache — the
 /// reference the matrix's bit-identity contract is tested against.
-/// Makes the same grid-wide substrate decision [`run`] makes (real only
-/// when every model in the config builds), so the comparison stays
-/// apples-to-apples even with partially exported artifacts.
+/// Routes through the public [`crate::api::run`] entry point with the
+/// same substrate-resolution rules the grid executor uses, so the
+/// comparison is
+/// literally "grid cell vs the public API" — apples-to-apples even with
+/// partially exported artifacts.
 pub fn standalone_cell(cell: &Cell, cfg: &MatrixConfig) -> Result<RunRecord> {
-    if substrate_is_synthetic(cfg, false)? {
-        let surface = synthetic_surface(&cell.model, &cell.task, cfg.seed);
-        return synthetic_cell_record(cell, cfg, &surface, None);
-    }
-    let task = Task::new(&cell.model, &cell.task);
-    let mut session = seeded_session(&task, cfg.seed)?;
-    let dcfg = base_config(cfg, &cell.policy);
-    session.configure(&dcfg)?;
-    discovery::by_name(&cell.method)?.discover(&mut session, &task, &dcfg)
+    let spec = crate::api::RunSpec::builder(&cell.model, &cell.task)
+        .method(cell.method.parse()?)
+        .policy(cell.policy.clone())
+        .tau(cfg.tau)
+        .objective(cfg.objective)
+        .sweep(cfg.sweep)
+        .seed(cfg.seed)
+        .build()?;
+    crate::api::run(&spec)
 }
 
 // ---------------------------------------------------------------------------
@@ -718,7 +708,7 @@ fn run_cell_real(
     cfg: &MatrixConfig,
     store: &ArtifactCache,
     cell: &Cell,
-    pool_slot: &mut Option<EnginePool>,
+    slot: &mut Handoff,
 ) -> Result<(RunRecord, CacheStats)> {
     let task = Task::new(&cell.model, &cell.task);
     let manifest = Manifest::by_name(&cell.model)?;
@@ -730,32 +720,36 @@ fn run_cell_real(
         None => (Arc::new(cache::dataset_for(&cell.task, cfg.seed, manifest.batch)?), false),
     };
     let ckey = cache::corrupt_key(&cell.model, &cell.task, cfg.seed, &cache_tag(&cell.policy));
-    let corrupt = store.corrupt.get(&ckey);
     let skey = (cell.method != "acdc").then(|| {
         cache::scores_key(&cell.method, &cell.model, &cell.task, cfg.seed, cfg.objective.key())
     });
-    let scores = skey.as_ref().and_then(|k| store.scores.get(k));
-    let inputs = DiscoveryInputs { examples: Some(examples), corrupt_cache: corrupt, scores };
-    let mut session = Session::with_inputs(&task, inputs)?;
-    session.cache_stats.dataset_hit = dataset_hit;
-    if let Some(p) = pool_slot.take() {
-        // pool sharing: configure keeps it on a full match, else rebuilds
-        session.set_pool(p);
-    }
+    // ONE value in: the previous cell's pool plus this cell's store
+    // artifacts (pool sharing: configure keeps the pool on a full
+    // match, else rebuilds its replicas)
+    let inbound = Handoff {
+        pool: slot.pool.take(),
+        corrupt_cache: store.corrupt.get(&ckey),
+        scores: skey.as_ref().and_then(|k| store.scores.get(k)),
+    };
     let dcfg = base_config(cfg, &cell.policy);
-    session.configure(&dcfg)?;
+    let mut session =
+        Session::builder(&task).examples(examples).handoff(inbound).config(&dcfg).build()?;
+    session.cache_stats.dataset_hit = dataset_hit;
     let method = discovery::by_name(&cell.method)?;
     let mut rec = method.discover(&mut session, &task, &dcfg)?;
-    if let (Some(k), Some(s)) = (&skey, session.take_computed_scores()) {
-        store.scores.put(k, s);
-    }
     if cfg.faithfulness {
         if let Err(e) = session.evaluate_faithfulness(&dcfg, &mut rec, true) {
             eprintln!("matrix: {} faithfulness skipped: {e}", cell.id());
         }
     }
     let stats = session.cache_stats.clone();
-    *pool_slot = session.take_pool();
+    // ONE value out: the pool travels to the next cell on this worker,
+    // self-computed scores publish into the store
+    let outbound = session.take_handoff();
+    if let (Some(k), Some(s)) = (&skey, &outbound.scores) {
+        store.scores.put(k, s.clone());
+    }
+    *slot = outbound;
     Ok((rec, stats))
 }
 
@@ -785,8 +779,14 @@ fn run_cell_synthetic(
             None => None,
         }
     };
-    let mut rec =
-        synthetic_cell_record(cell, cfg, &surface, scores.as_ref().map(|s| s.as_slice()))?;
+    let mut rec = synthetic_cell_record(
+        cell,
+        cfg.tau,
+        cfg.sweep,
+        cfg.seed,
+        &surface,
+        scores.as_ref().map(|s| s.as_slice()),
+    )?;
     rec.cache = stats.any().then(|| stats.clone());
     Ok((rec, stats))
 }
@@ -857,9 +857,10 @@ fn rel_to(dir: &Path, path: &Path) -> String {
     out.to_string_lossy().into_owned()
 }
 
-/// Substrate decision for a whole grid, shared by [`run`] and
-/// [`standalone_cell`] so the bit-identity comparison stays
-/// apples-to-apples:
+/// Substrate decision shared by the grid executor (`run`) and every
+/// single-run entry point ([`crate::api::run`] under
+/// [`crate::api::Substrate::Auto`]), so a cell and its standalone
+/// comparator always agree:
 ///
 /// - no model manifest and no task dataset resolves → synthetic (the
 ///   artifact-less environment the fallback exists for, e.g. CI);
@@ -868,35 +869,14 @@ fn rel_to(dir: &Path, path: &Path) -> String {
 ///   silently pseudo-scoring it into a green grid would be worse;
 /// - everything resolves → real, unless the engine itself cannot build
 ///   (the vendored PJRT stub), which degrades to synthetic with notice.
-fn substrate_is_synthetic(cfg: &MatrixConfig, verbose: bool) -> Result<bool> {
-    let mut available = 0usize;
-    let mut failures: Vec<String> = Vec::new();
-    for model in &cfg.models {
-        match Manifest::by_name(model) {
-            Ok(_) => available += 1,
-            Err(e) => failures.push(format!("model {model}: {e}")),
-        }
-    }
-    for task in &cfg.tasks {
-        match crate::model::Dataset::by_task(task) {
-            Ok(_) => available += 1,
-            Err(e) => failures.push(format!("task {task}: {e}")),
-        }
-    }
-    if available == 0 {
+pub fn substrate_probe(models: &[String], tasks: &[String], verbose: bool) -> Result<bool> {
+    if !artifacts_available(models, tasks)? {
         if verbose {
             println!("matrix: no model/task artifacts found; running the synthetic grid");
         }
         return Ok(true);
     }
-    if !failures.is_empty() {
-        bail!(
-            "matrix: partial artifact availability — refusing to silently fall back \
-             to the synthetic grid:\n  {}",
-            failures.join("\n  ")
-        );
-    }
-    let (Some(model0), Some(task0)) = (cfg.models.first(), cfg.tasks.first()) else {
+    let (Some(model0), Some(task0)) = (models.first(), tasks.first()) else {
         return Ok(true);
     };
     match PatchedForward::new(model0, task0) {
@@ -910,11 +890,50 @@ fn substrate_is_synthetic(cfg: &MatrixConfig, verbose: bool) -> Result<bool> {
     }
 }
 
+/// The cheap half of the substrate decision — no engine construction:
+/// `Ok(true)` when every named model manifest and task dataset
+/// resolves, `Ok(false)` when *none* do (the synthetic fallback's
+/// environment), and the partial-availability error otherwise.
+/// [`crate::api::run`] uses this so a single run probes without
+/// building a throwaway engine; whether the engine itself comes up is
+/// then decided by actually constructing the session.
+pub fn artifacts_available(models: &[String], tasks: &[String]) -> Result<bool> {
+    let mut available = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    for model in models {
+        match Manifest::by_name(model) {
+            Ok(_) => available += 1,
+            Err(e) => failures.push(format!("model {model}: {e}")),
+        }
+    }
+    for task in tasks {
+        match crate::model::Dataset::by_task(task) {
+            Ok(_) => available += 1,
+            Err(e) => failures.push(format!("task {task}: {e}")),
+        }
+    }
+    if available == 0 {
+        return Ok(false);
+    }
+    if !failures.is_empty() {
+        bail!(
+            "substrate: partial artifact availability — refusing to silently fall back \
+             to the synthetic surface:\n  {}",
+            failures.join("\n  ")
+        );
+    }
+    Ok(true)
+}
+
 /// Execute the grid: seed the shared artifact store (phase A, one job
 /// per (model, task) combo), then drain the cell queue with
 /// work-stealing workers (phase B), then assemble, save, and print the
 /// manifest. Deterministic at any worker count: only wall times vary.
-pub fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
+///
+/// Crate-private on purpose: grids are launched through
+/// [`crate::api::matrix`] on a validated [`crate::api::MatrixSpec`],
+/// which has already checked the axes up front.
+pub(crate) fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
     if cfg.methods.is_empty() || cfg.policies.is_empty() || cfg.models.is_empty()
         || cfg.tasks.is_empty()
     {
@@ -945,7 +964,7 @@ pub fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
     );
 
     // substrate probe: partial artifact availability errors out loudly
-    let synthetic = substrate_is_synthetic(cfg, true)?;
+    let synthetic = substrate_probe(&cfg.models, &cfg.tasks, true)?;
     let expected_obj = if synthetic { "synthetic" } else { cfg.objective.key() };
 
     // resume: the previous manifest must match this config's identity
@@ -1033,7 +1052,9 @@ pub fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
         std::thread::scope(|s| {
             for _ in 0..cfg.workers.max(1).min(pending.len()) {
                 s.spawn(|| {
-                    let mut pool_slot: Option<EnginePool> = None;
+                    // the ONE value consecutive cells on this worker pass
+                    // between each other (pool + publishable artifacts)
+                    let mut slot = Handoff::default();
                     loop {
                         let next = queue.lock().unwrap().pop_front();
                         let Some(i) = next else { break };
@@ -1042,7 +1063,7 @@ pub fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
                         let out = if synthetic {
                             run_cell_synthetic(cfg, &store, cell)
                         } else {
-                            run_cell_real(cfg, &store, cell, &mut pool_slot)
+                            run_cell_real(cfg, &store, cell, &mut slot)
                         };
                         let wall = t0.elapsed().as_secs_f64();
                         let outcome = match out.and_then(|(rec, stats)| {
@@ -1222,8 +1243,6 @@ mod tests {
         assert_eq!(s1, synthetic_scores("eap", "m", "t", 0, 32));
         assert_ne!(s1, synthetic_scores("hisp", "m", "t", 0, 32));
         assert_ne!(s1, synthetic_scores("eap", "m", "t", 1, 32));
-        let mut cfg = MatrixConfig::quick();
-        cfg.faithfulness = false;
         let cell = Cell {
             method: "eap".into(),
             policy: Policy::pahq(FP8_E4M3),
@@ -1231,8 +1250,9 @@ mod tests {
             task: "t".into(),
         };
         let surface = synthetic_surface("m", "t", 0);
-        let a = synthetic_cell_record(&cell, &cfg, &surface, None).unwrap();
-        let b = synthetic_cell_record(&cell, &cfg, &surface, Some(&s1)).unwrap();
+        let a = synthetic_cell_record(&cell, 0.01, SweepMode::Serial, 0, &surface, None).unwrap();
+        let b =
+            synthetic_cell_record(&cell, 0.01, SweepMode::Serial, 0, &surface, Some(&s1)).unwrap();
         assert_eq!(a.kept_hash, b.kept_hash, "explicit scores equal derived scores");
         assert!(a.n_evals > 0);
         assert_eq!(a.n_edges, synthetic_graph().n_edges());

@@ -105,6 +105,27 @@ impl Objective {
         }
     }
 
+    /// Every CLI spelling, in display order (drives the generated help).
+    pub const SPELLINGS: [&'static str; 2] = ["kl", "task"];
+}
+
+/// Writes the stable machine-readable key ([`Objective::key`]), so
+/// `format!("{obj}")` round-trips through [`Objective::from_str`].
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+impl std::str::FromStr for Objective {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Objective> {
+        Objective::parse(s)
+    }
+}
+
+impl Objective {
     /// Scalar "damage" of a patched run vs the clean reference.
     pub fn damage(
         &self,

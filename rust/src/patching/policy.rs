@@ -102,6 +102,77 @@ impl Policy {
     pub fn cache_format(&self) -> Format {
         if self.hi_fidelity_refs { quant::FP32 } else { self.resid }
     }
+
+    /// The policy-family spellings the CLI accepts (a family plus
+    /// `--bits`, or a full canonical name like `pahq-4b`).
+    pub const FAMILIES: [&'static str; 3] = ["fp32", "rtn", "pahq"];
+
+    /// Resolve a policy spelling at an explicit nominal bit width:
+    /// family names (`fp32` | `rtn` | `rtn-q` | `pahq`) take `bits`;
+    /// full canonical names (`pahq-4b`, `rtn-q-8b`, `acdc-fp32`) carry
+    /// their own width and ignore it.
+    pub fn by_name(name: &str, bits: u32) -> anyhow::Result<Policy> {
+        match name {
+            "fp32" | "acdc" | "acdc-fp32" => Ok(Policy::fp32()),
+            "rtn" | "rtn-q" => Ok(Policy::rtn(checked_format(name, bits)?)),
+            "pahq" => Ok(Policy::pahq(checked_format(name, bits)?)),
+            full => full.parse(),
+        }
+    }
+}
+
+/// Nominal bit width for a low-precision policy family; rejects widths
+/// [`crate::quant::Format::by_bits`] would silently round to FP32.
+fn checked_format(family: &str, bits: u32) -> anyhow::Result<Format> {
+    match bits {
+        4 | 8 | 16 => Ok(Format::by_bits(bits)),
+        other => anyhow::bail!(
+            "bits: policy family '{family}' supports 4|8|16, got {other}"
+        ),
+    }
+}
+
+/// Writes the canonical policy name (`acdc-fp32` | `rtn-q-<N>b` |
+/// `pahq-<N>b`), so `format!("{policy}")` round-trips through
+/// [`Policy::from_str`] for every [`Format::by_bits`]-constructed policy.
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
+/// Parses both the family spellings (`fp32` / `rtn` / `rtn-q` / `pahq`,
+/// width defaulting to 8 bits) and the canonical names the policies
+/// print (`acdc-fp32`, `rtn-q-4b`, `pahq-16b`, ...).
+impl std::str::FromStr for Policy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Policy> {
+        // split a trailing `-<N>b` width suffix off the family stem
+        let (stem, suffix_bits) = match s.rfind('-') {
+            Some(i) => match s[i + 1..].strip_suffix('b').and_then(|n| n.parse::<u32>().ok()) {
+                Some(b) => (&s[..i], Some(b)),
+                None => (s, None),
+            },
+            None => (s, None),
+        };
+        let bits = suffix_bits.unwrap_or(8);
+        match stem {
+            "fp32" | "acdc" | "acdc-fp32" => {
+                // fp32 has no width variants: "fp32-99b" must be loud,
+                // not a silently full-width run
+                if suffix_bits.is_some() {
+                    anyhow::bail!("unknown policy '{s}' (fp32 has no bit-width variants)");
+                }
+                Ok(Policy::fp32())
+            }
+            "rtn" | "rtn-q" => Ok(Policy::rtn(checked_format(stem, bits)?)),
+            "pahq" => Ok(Policy::pahq(checked_format(stem, bits)?)),
+            _ => anyhow::bail!(
+                "unknown policy '{s}' (fp32|rtn|pahq, optionally with a -<bits>b suffix)"
+            ),
+        }
+    }
 }
 
 /// Nominal bit width of a format — with packed storage this is simply

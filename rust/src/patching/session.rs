@@ -165,6 +165,29 @@ impl PatchedForward {
         self.set_session_inner(policy, Some(cache))
     }
 
+    /// Policy switch with an *optional* pre-built cache — the engine half
+    /// of the [`crate::discovery::Handoff`] contract. The cache is
+    /// installed only when its packed format matches the policy's
+    /// [`Policy::cache_format`] (a PAHQ cell cannot read an RTN-Q
+    /// lattice); any mismatch falls back to re-running the corrupted
+    /// forward. Returns whether the handoff applied.
+    pub fn set_session_handoff(
+        &mut self,
+        policy: Policy,
+        cache: Option<&[QTensor]>,
+    ) -> Result<bool> {
+        match cache {
+            Some(cc) if cc.first().map(|t| t.format()) == Some(policy.cache_format()) => {
+                self.set_session_inner(policy, Some(cc))?;
+                Ok(true)
+            }
+            _ => {
+                self.set_session_inner(policy, None)?;
+                Ok(false)
+            }
+        }
+    }
+
     fn set_session_inner(&mut self, policy: Policy, cache: Option<&[QTensor]>) -> Result<()> {
         self.ws.ensure_plane(Policy::plane_name(policy.attn_low), policy.attn_low);
         self.ws.ensure_plane(Policy::plane_name(policy.other), policy.other);

@@ -56,6 +56,21 @@ impl Args {
         }
     }
 
+    /// Present-or-absent integer option — `None` when the flag was not
+    /// given at all. The spec builders ([`crate::api`]) use this for
+    /// flags whose *presence* changes validation (`--workers` is only
+    /// legal with a batched sweep), where a default would erase the
+    /// distinction.
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
     /// Seed-sized integer option (`--seed S` and friends).
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
@@ -131,6 +146,13 @@ mod tests {
         assert!(a.u64_or("n", 1).is_err());
         assert_eq!(a.u64_or("seed", 9).unwrap(), 9);
         assert_eq!(parse("--seed 7").u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn optional_integers_track_presence() {
+        assert_eq!(parse("--workers 6").usize_opt("workers").unwrap(), Some(6));
+        assert_eq!(parse("run").usize_opt("workers").unwrap(), None);
+        assert!(parse("--workers six").usize_opt("workers").is_err());
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Tests for the typed `pahq::api` facade: FromStr/Display round trips
+//! for every spec enum, cross-field spec validation (every invalid
+//! combination produces an error naming the offending field), and
+//! CLI-vs-API identity (a record produced via `api::run` is byte
+//! identical to one from the `pahq run` flag path with the same seed).
+
+use pahq::acdc::SweepMode;
+use pahq::api::{self, MatrixSpec, MethodKind, OutputSink, RunSpec, Substrate};
+use pahq::discovery::RunRecord;
+use pahq::matrix::{self, Cell};
+use pahq::metrics::Objective;
+use pahq::patching::Policy;
+use pahq::quant::Format;
+use pahq::util::cli::Args;
+
+fn args(line: &str) -> Args {
+    Args::parse(line.split_whitespace().map(String::from))
+}
+
+/// A record with its timing fields zeroed — everything else in a
+/// deterministic run must be byte-identical across invocations.
+fn normalized_dump(mut rec: RunRecord) -> String {
+    rec.wall_seconds = 0.0;
+    rec.pjrt_seconds = 0.0;
+    rec.to_json().dump()
+}
+
+// ---------------------------------------------------------------------------
+// FromStr / Display round trips
+
+#[test]
+fn method_kind_round_trips_and_aliases() {
+    for m in MethodKind::ALL {
+        assert_eq!(m.to_string().parse::<MethodKind>().unwrap(), m, "{m}");
+    }
+    assert_eq!("rtn".parse::<MethodKind>().unwrap(), MethodKind::RtnQ);
+    assert_eq!("ep".parse::<MethodKind>().unwrap(), MethodKind::EdgePruning);
+    let err = "turbo".parse::<MethodKind>().unwrap_err().to_string();
+    assert!(err.contains("edge-pruning"), "error lists the spellings: {err}");
+}
+
+#[test]
+fn policy_round_trips_for_every_constructor() {
+    let mut policies = vec![Policy::fp32()];
+    for bits in [4u32, 8, 16] {
+        policies.push(Policy::rtn(Format::by_bits(bits)));
+        policies.push(Policy::pahq(Format::by_bits(bits)));
+    }
+    for p in policies {
+        let back: Policy = p.to_string().parse().unwrap();
+        assert_eq!(back, p, "round trip of '{p}'");
+    }
+    // family spellings resolve at an explicit width
+    assert_eq!(Policy::by_name("pahq", 4).unwrap().name, "pahq-4b");
+    assert_eq!(Policy::by_name("rtn", 16).unwrap().name, "rtn-q-16b");
+    assert_eq!(Policy::by_name("rtn-q", 8).unwrap().name, "rtn-q-8b");
+    assert_eq!(Policy::by_name("acdc", 8).unwrap().name, "acdc-fp32");
+    assert_eq!(Policy::by_name("pahq-16b", 4).unwrap().name, "pahq-16b");
+    // invalid widths and names are loud
+    assert!(Policy::by_name("pahq", 7).unwrap_err().to_string().contains("bits:"));
+    assert!("turbo".parse::<Policy>().is_err());
+    assert!("pahq-3b".parse::<Policy>().is_err());
+    // fp32 has no width variants — a bogus suffix must not silently
+    // produce a full-width run
+    assert!("fp32-99b".parse::<Policy>().is_err());
+    assert!("acdc-4b".parse::<Policy>().is_err());
+}
+
+#[test]
+fn sweep_mode_round_trips() {
+    for mode in [
+        SweepMode::Serial,
+        SweepMode::Batched { workers: 1 },
+        SweepMode::Batched { workers: 2 },
+        SweepMode::Batched { workers: 7 },
+        SweepMode::Batched { workers: 16 },
+    ] {
+        assert_eq!(mode.to_string().parse::<SweepMode>().unwrap(), mode, "{mode}");
+    }
+    // the bare spelling defaults the worker count to the machine
+    assert!("batched".parse::<SweepMode>().unwrap().workers() >= 1);
+    assert!("batched[x]".parse::<SweepMode>().is_err());
+    assert!("batched[0]".parse::<SweepMode>().is_err(), "zero workers is loud, not clamped");
+    assert!("turbo".parse::<SweepMode>().is_err());
+}
+
+#[test]
+fn objective_round_trips() {
+    for obj in [Objective::Kl, Objective::LogitDiff] {
+        assert_eq!(obj.to_string().parse::<Objective>().unwrap(), obj);
+    }
+    assert_eq!(Objective::SPELLINGS, ["kl", "task"]);
+    assert!("speed".parse::<Objective>().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Spec validation: every invalid combination names the offending field
+
+fn run_err(build: impl FnOnce() -> anyhow::Result<RunSpec>) -> String {
+    build().unwrap_err().to_string()
+}
+
+#[test]
+fn run_spec_validation_names_the_field() {
+    assert!(run_err(|| RunSpec::builder("", "ioi").build()).starts_with("model:"));
+    assert!(run_err(|| RunSpec::builder("m", "").build()).starts_with("task:"));
+    assert!(run_err(|| RunSpec::builder("m", "t").tau(f32::NAN).build()).starts_with("tau:"));
+    assert!(run_err(|| RunSpec::builder("m", "t").tau(-0.5).build()).starts_with("tau:"));
+    assert!(run_err(|| RunSpec::builder("m", "t").workers(4).build()).starts_with("workers:"));
+    assert!(run_err(|| {
+        RunSpec::builder("m", "t").sweep(SweepMode::Batched { workers: 2 }).workers(0).build()
+    })
+    .starts_with("workers:"));
+    assert!(run_err(|| RunSpec::builder("m", "t").bits(7).build()).starts_with("bits:"));
+    assert!(run_err(|| RunSpec::builder("m", "t").sp_steps(0).build()).starts_with("sp_steps:"));
+    assert!(run_err(|| RunSpec::builder("m", "t").ep_steps(0).build()).starts_with("ep_steps:"));
+    // the classic policy-carrying spellings reject a contradicting policy
+    let e = run_err(|| {
+        RunSpec::builder("m", "t").method(MethodKind::Pahq).policy(Policy::fp32()).build()
+    });
+    assert!(e.starts_with("policy:"), "{e}");
+    let e = run_err(|| {
+        RunSpec::builder("m", "t")
+            .method(MethodKind::RtnQ)
+            .policy(Policy::pahq(Format::by_bits(8)))
+            .build()
+    });
+    assert!(e.starts_with("policy:"), "{e}");
+    // acdc is the generic verifier: any explicit policy is fine
+    let spec = RunSpec::builder("m", "t")
+        .method(MethodKind::Acdc)
+        .policy(Policy::pahq(Format::by_bits(8)))
+        .build()
+        .unwrap();
+    assert_eq!(spec.policy.name, "pahq-8b");
+    // a hand-mutated spec cannot sneak past validation at launch
+    let mut bad = RunSpec::builder("m", "t").build().unwrap();
+    bad.tau = f32::INFINITY;
+    assert!(api::run(&bad).unwrap_err().to_string().starts_with("tau:"));
+}
+
+#[test]
+fn run_spec_builder_resolves_implied_policies() {
+    let spec = RunSpec::builder("m", "t").build().unwrap();
+    assert_eq!(spec.method, MethodKind::Pahq);
+    assert_eq!(spec.policy.name, "pahq-8b");
+    let spec = RunSpec::builder("m", "t").method(MethodKind::RtnQ).bits(4).build().unwrap();
+    assert_eq!(spec.policy.name, "rtn-q-4b");
+    let spec = RunSpec::builder("m", "t").method(MethodKind::Acdc).build().unwrap();
+    assert_eq!(spec.policy.name, "acdc-fp32");
+    let spec = RunSpec::builder("m", "t").method(MethodKind::Hisp).build().unwrap();
+    assert_eq!(spec.policy.name, "pahq-8b", "baselines imply the PAHQ policy");
+    // workers land in the sweep schedule
+    let spec = RunSpec::builder("m", "t")
+        .sweep(SweepMode::Batched { workers: 1 })
+        .workers(6)
+        .build()
+        .unwrap();
+    assert_eq!(spec.sweep, SweepMode::Batched { workers: 6 });
+}
+
+#[test]
+fn matrix_spec_validation_names_the_field() {
+    let err = |b: api::MatrixSpecBuilder| b.build().unwrap_err().to_string();
+    let b = MatrixSpec::builder;
+    assert!(err(b().methods(vec![])).starts_with("methods:"));
+    let e = err(b().methods(vec![MethodKind::RtnQ]));
+    assert!(e.starts_with("methods:") && e.contains("policies"), "{e}");
+    assert!(err(b().methods(vec![MethodKind::Pahq])).starts_with("methods:"));
+    assert!(
+        err(b().methods(vec![MethodKind::Acdc, MethodKind::Acdc])).contains("duplicate"),
+        "duplicate methods"
+    );
+    assert!(err(b().policies(vec![])).starts_with("policies:"));
+    assert!(
+        err(b().policies(vec![Policy::fp32(), Policy::fp32()])).starts_with("policies:"),
+        "duplicate policies collide on record filenames"
+    );
+    assert!(err(b().models(&[])).starts_with("models:"));
+    assert!(err(b().models(&["m".into(), "m".into()])).starts_with("models:"));
+    assert!(err(b().tasks(&["".into()])).starts_with("tasks:"));
+    assert!(err(b().tau(f32::NAN)).starts_with("tau:"));
+    assert!(err(b().workers(0)).starts_with("workers:"));
+    assert!(err(b().seed(1 << 54)).starts_with("seed:"));
+    // pool workers only mean something under a batched sweep, and zero
+    // is loud rather than clamped
+    assert!(err(b().pool_workers(2)).starts_with("pool_workers:"));
+    assert!(err(b().sweep(SweepMode::Batched { workers: 2 }).pool_workers(0))
+        .starts_with("pool_workers:"));
+    let spec = b()
+        .sweep(SweepMode::Batched { workers: 1 })
+        .pool_workers(3)
+        .build()
+        .unwrap();
+    assert_eq!(spec.config().sweep, SweepMode::Batched { workers: 3 });
+    // the default grid is the five discovery methods x {fp32, pahq-8b}
+    let spec = b().build().unwrap();
+    assert_eq!(spec.cells().len(), 5 * 2 * 3);
+}
+
+// ---------------------------------------------------------------------------
+// CLI flag parsing == typed builder, and record byte-identity
+
+#[test]
+fn cli_flags_and_builder_produce_the_same_spec() {
+    let parsed = RunSpec::from_cli(&args(
+        "run --model synthetic-m --task alpha --method eap --tau 0.25 --metric task \
+         --sweep batched --workers 3 --seed 9 --trace --json out.json",
+    ))
+    .unwrap();
+    let built = RunSpec::builder("synthetic-m", "alpha")
+        .method(MethodKind::Eap)
+        .tau(0.25)
+        .objective(Objective::LogitDiff)
+        .sweep(SweepMode::Batched { workers: 3 })
+        .seed(9)
+        .trace(true)
+        .faithfulness(Some(false))
+        .sink(OutputSink::Path("out.json".into()))
+        .build()
+        .unwrap();
+    assert_eq!(parsed, built);
+
+    // policy family + bits compose; --no-faith clears the default
+    let parsed = RunSpec::from_cli(&args(
+        "run --method acdc --policy pahq --bits 4 --no-faith",
+    ))
+    .unwrap();
+    assert_eq!(parsed.policy.name, "pahq-4b");
+    assert_eq!(parsed.faithfulness, None);
+    assert_eq!(parsed.sink, OutputSink::Default);
+
+    // invalid combinations surface the same field-naming errors
+    let e = RunSpec::from_cli(&args("run --workers 4")).unwrap_err().to_string();
+    assert!(e.starts_with("workers:"), "{e}");
+    let e = MatrixSpec::from_cli(&args("matrix --pool-workers 4")).unwrap_err().to_string();
+    assert!(e.starts_with("pool_workers:"), "{e}");
+    let e = MatrixSpec::from_cli(&args("matrix --methods acdc,rtn-q"))
+        .unwrap_err()
+        .to_string();
+    assert!(e.starts_with("methods:"), "{e}");
+}
+
+#[test]
+fn run_and_matrix_accept_the_same_sweep_spellings() {
+    // `batched[N]` is one spelling, not two: both subcommands parse it
+    let r = RunSpec::from_cli(&args("run --sweep batched[4]")).unwrap();
+    assert_eq!(r.sweep, SweepMode::Batched { workers: 4 });
+    let m = MatrixSpec::from_cli(&args("matrix --sweep batched[4]")).unwrap();
+    assert_eq!(m.config().sweep, SweepMode::Batched { workers: 4 });
+    // the bare spelling keeps the classic per-cell pool default of 2
+    let m = MatrixSpec::from_cli(&args("matrix --sweep batched")).unwrap();
+    assert_eq!(m.config().sweep, SweepMode::Batched { workers: 2 });
+    // ...and --pool-workers overrides either form
+    let m = MatrixSpec::from_cli(&args("matrix --sweep batched[4] --pool-workers 3")).unwrap();
+    assert_eq!(m.config().sweep, SweepMode::Batched { workers: 3 });
+}
+
+#[test]
+fn required_faithfulness_never_silently_synthesizes() {
+    // a spec that declares faithfulness mandatory must error on the
+    // synthetic substrate (it has no FP32 ground truth), not hand back
+    // a record that silently lacks the score
+    let spec = RunSpec::builder("synthetic-m", "alpha")
+        .faithfulness(Some(false))
+        .faith_required(true)
+        .build()
+        .unwrap();
+    let e = api::run(&spec).unwrap_err().to_string();
+    assert!(e.starts_with("faithfulness:"), "{e}");
+    // without the requirement the synthetic record comes back (sans score)
+    let mut relaxed = spec;
+    relaxed.faith_required = false;
+    let rec = api::run(&relaxed).unwrap();
+    assert!(rec.faithfulness.is_none());
+}
+
+#[test]
+fn cli_and_api_records_are_byte_identical_synthetic() {
+    // Always runs: made-up model/task names resolve to the synthetic
+    // substrate under Substrate::Auto, exactly like `pahq matrix` in CI.
+    let mut spec = RunSpec::from_cli(&args(
+        "run --model synthetic-m --task alpha --method eap --tau 0.4 --seed 3",
+    ))
+    .unwrap();
+    spec.sink = OutputSink::Memory;
+    let a = api::run(&spec).unwrap();
+    let b = api::run(&spec).unwrap();
+    assert_eq!(normalized_dump(a.clone()), normalized_dump(b), "api::run is deterministic");
+
+    // ...and identical to the matrix's standalone comparator for the
+    // same cell under the same grid config
+    let grid = MatrixSpec::builder()
+        .models(&["synthetic-m".to_string()])
+        .tasks(&["alpha".to_string()])
+        .tau(0.4)
+        .seed(3)
+        .build()
+        .unwrap();
+    let cell = Cell {
+        method: "eap".into(),
+        policy: spec.policy.clone(),
+        model: spec.model.clone(),
+        task: spec.task.clone(),
+    };
+    let standalone = matrix::standalone_cell(&cell, grid.config()).unwrap();
+    assert_eq!(
+        normalized_dump(a),
+        normalized_dump(standalone),
+        "api::run equals the grid's standalone comparator"
+    );
+}
+
+#[test]
+fn cli_and_api_records_are_byte_identical_on_engine() {
+    // Engine-backed (skips without artifacts): the `pahq run` flag path
+    // and a hand-built spec with the same seed produce byte-identical
+    // records (timing normalized).
+    if pahq::patching::PatchedForward::new("redwood2l-sim", "ioi").is_err() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut parsed = RunSpec::from_cli(&args(
+        "run --model redwood2l-sim --task ioi --method pahq --tau 0.01 --seed 7 --no-faith",
+    ))
+    .unwrap();
+    parsed.sink = OutputSink::Memory;
+    let built = RunSpec::builder("redwood2l-sim", "ioi")
+        .method(MethodKind::Pahq)
+        .tau(0.01)
+        .seed(7)
+        .substrate(Substrate::Real)
+        .build()
+        .unwrap();
+    let a = api::run(&parsed).unwrap();
+    let b = api::run(&built).unwrap();
+    assert_eq!(normalized_dump(a), normalized_dump(b), "CLI flags vs typed builder");
+}

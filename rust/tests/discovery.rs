@@ -8,18 +8,34 @@
 //!   engine's serial-vs-batched bit-identity, per method-shaped
 //!   ordering.
 //! - **Engine-backed** (skips when `make artifacts` has not run): every
-//!   registered method through [`pahq::discovery::discover`] — batched
-//!   kept set identical to serial, and (the paper's core claim) the
-//!   kept-edge set identical under the FP32 and PAHQ policies on the
-//!   seeded synthetic tasks.
+//!   registered method through the public [`pahq::api::run`] entry
+//!   point on a validated spec — batched kept set identical to serial,
+//!   and (the paper's core claim) the kept-edge set identical under the
+//!   FP32 and PAHQ policies on the seeded synthetic tasks.
 
 use pahq::acdc::sweep::{self, Candidate, FnScorer, SweepMode, SweepOutcome, SyntheticSurface};
-use pahq::discovery::{self, DiscoveryConfig, Task};
+use pahq::api::{self, RunSpec, Substrate};
+use pahq::discovery::{self, DiscoveryConfig, RunRecord, Task};
 use pahq::metrics::Objective;
 use pahq::model::{Channel, Graph};
 use pahq::patching::{PatchMask, Policy};
 use pahq::quant::FP8_E4M3;
 use pahq::util::rng::Rng;
+
+/// Every engine-backed test launches through the one public entry
+/// point, pinned to the real substrate so "artifacts missing" skips
+/// instead of silently running the synthetic surface.
+fn discover(method: &str, task: &Task, cfg: &DiscoveryConfig) -> anyhow::Result<RunRecord> {
+    let spec = RunSpec::builder(&task.model, &task.task)
+        .method(method.parse()?)
+        .policy(cfg.policy.clone())
+        .tau(cfg.tau)
+        .objective(cfg.objective)
+        .sweep(cfg.sweep)
+        .substrate(Substrate::Real)
+        .build()?;
+    api::run(&spec)
+}
 
 /// Deterministic pseudo-attribution scores shaped like each baseline's
 /// output: EAP/SP/EP score per edge; HISP scores per source node with
@@ -157,19 +173,16 @@ fn every_method_serial_equals_batched_on_engine() {
     let task = engine_task();
     for method in discovery::METHOD_NAMES {
         let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
-        let serial = match discovery::discover(method, &task, &cfg) {
+        let serial = match discover(method, &task, &cfg) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("skipping {method}: {e}");
                 continue;
             }
         };
-        let batched = discovery::discover(
-            method,
-            &task,
-            &cfg.clone().with_sweep(SweepMode::Batched { workers: 3 }),
-        )
-        .unwrap();
+        let batched =
+            discover(method, &task, &cfg.clone().with_sweep(SweepMode::Batched { workers: 3 }))
+                .unwrap();
         assert_eq!(serial.kept_hash, batched.kept_hash, "{method}: kept set");
         assert_eq!(serial.n_kept, batched.n_kept, "{method}: kept count");
         assert_eq!(
@@ -191,7 +204,7 @@ fn baseline_kept_sets_identical_under_fp32_and_pahq() {
     let task = engine_task();
     for method in discovery::METHOD_NAMES {
         let fp32_cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::fp32());
-        let fp32 = match discovery::discover(method, &task, &fp32_cfg) {
+        let fp32 = match discover(method, &task, &fp32_cfg) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("skipping {method}: {e}");
@@ -199,7 +212,7 @@ fn baseline_kept_sets_identical_under_fp32_and_pahq() {
             }
         };
         let pahq_cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
-        let pahq = discovery::discover(method, &task, &pahq_cfg).unwrap();
+        let pahq = discover(method, &task, &pahq_cfg).unwrap();
         assert_eq!(
             fp32.kept_hash, pahq.kept_hash,
             "{method}: PAHQ preserves the FP32 kept-edge set ({} vs {} kept)",
@@ -219,7 +232,7 @@ fn run_record_from_engine_is_schema_complete() {
     // populated (the shape `docs/run_record.schema.json` pins).
     let task = engine_task();
     let cfg = DiscoveryConfig::new(0.01, Objective::Kl, Policy::pahq(FP8_E4M3));
-    let rec = match discovery::discover("acdc", &task, &cfg) {
+    let rec = match discover("acdc", &task, &cfg) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("skipping: {e}");

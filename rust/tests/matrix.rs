@@ -1,4 +1,6 @@
-//! Property tests for the `pahq matrix` grid orchestrator.
+//! Property tests for the `pahq matrix` grid orchestrator, driven
+//! through the public [`pahq::api`] facade (grids launch only via
+//! [`pahq::api::matrix`] on a validated [`MatrixSpec`]).
 //!
 //! The synthetic-substrate tests use made-up model/task names so they
 //! run identically with or without `make artifacts` (the probe falls
@@ -9,48 +11,50 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 use pahq::acdc::SweepMode;
+use pahq::api::{self, MatrixSpec, MatrixSpecBuilder, MethodKind};
 use pahq::discovery::{RunRecord, Task};
-use pahq::matrix::{self, cache, MatrixConfig};
+use pahq::matrix::{self, cache};
 use pahq::patching::Policy;
 use pahq::quant::FP8_E4M3;
 
-/// A synthetic-substrate grid config writing into a unique temp dir.
-fn test_cfg(tag: &str, workers: usize) -> MatrixConfig {
-    let mut cfg = MatrixConfig::quick();
-    cfg.models = vec!["synthetic-m".into()];
-    cfg.tasks = vec!["alpha".into(), "beta".into()];
-    cfg.workers = workers;
-    cfg.faithfulness = false;
-    cfg.out_dir = std::env::temp_dir().join(format!("pahq_matrix_{tag}_{}", std::process::id()));
-    cfg.json_path = Some(cfg.out_dir.join("matrix.json"));
-    cfg
+/// A synthetic-substrate grid builder writing into a unique temp dir.
+fn test_builder(tag: &str, workers: usize) -> MatrixSpecBuilder {
+    let out_dir =
+        std::env::temp_dir().join(format!("pahq_matrix_{tag}_{}", std::process::id()));
+    MatrixSpec::builder()
+        .models(&["synthetic-m".to_string()])
+        .tasks(&["alpha".to_string(), "beta".to_string()])
+        .workers(workers)
+        .faithfulness(false)
+        .json_path(out_dir.join("matrix.json"))
+        .out_dir(out_dir)
 }
 
-fn cleanup(cfg: &MatrixConfig) {
-    std::fs::remove_dir_all(&cfg.out_dir).ok();
+fn cleanup(spec: &MatrixSpec) {
+    std::fs::remove_dir_all(&spec.config().out_dir).ok();
 }
 
-fn record_paths(cfg: &MatrixConfig) -> Vec<PathBuf> {
-    matrix::grid(cfg).iter().map(|c| cfg.out_dir.join(c.record_name())).collect()
+fn record_paths(spec: &MatrixSpec) -> Vec<PathBuf> {
+    spec.cells().iter().map(|c| spec.config().out_dir.join(c.record_name())).collect()
 }
 
 #[test]
 fn matrix_matches_standalone_at_1_and_4_workers() {
     // (a) every cell's kept-edge hash from the matrix equals the
-    // standalone (cache-free) run, at 1 and at 4 workers — and the two
-    // worker counts agree with each other.
+    // standalone (cache-free) run through the public api::run, at 1 and
+    // at 4 workers — and the two worker counts agree with each other.
     let mut by_workers: Vec<HashMap<String, String>> = Vec::new();
     for workers in [1usize, 4] {
-        let cfg = test_cfg(&format!("bitid{workers}"), workers);
-        cleanup(&cfg);
-        let out = matrix::run(&cfg).unwrap();
+        let spec = test_builder(&format!("bitid{workers}"), workers).build().unwrap();
+        cleanup(&spec);
+        let out = api::matrix(&spec).unwrap();
         assert_eq!(out.manifest.aggregate.n_error, 0, "no failed cells");
         assert!(out.manifest.synthetic, "made-up models force the synthetic substrate");
-        let cells = matrix::grid(&cfg);
+        let cells = spec.cells();
         assert_eq!(cells.len(), out.manifest.cells.len());
         let mut hashes = HashMap::new();
         for (cell, entry) in cells.iter().zip(&out.manifest.cells) {
-            let standalone = matrix::standalone_cell(cell, &cfg).unwrap();
+            let standalone = matrix::standalone_cell(cell, spec.config()).unwrap();
             assert_eq!(
                 entry.kept_hash.as_deref(),
                 Some(standalone.kept_hash.as_str()),
@@ -58,7 +62,8 @@ fn matrix_matches_standalone_at_1_and_4_workers() {
                 cell.id()
             );
             // the saved record agrees bit-for-bit on the sweep outcome
-            let rec = RunRecord::load(&cfg.out_dir.join(cell.record_name())).unwrap();
+            let rec =
+                RunRecord::load(&spec.config().out_dir.join(cell.record_name())).unwrap();
             assert_eq!(rec.kept_hash, standalone.kept_hash, "{}", cell.id());
             assert_eq!(rec.n_kept, standalone.n_kept);
             assert_eq!(rec.n_evals, standalone.n_evals);
@@ -71,7 +76,7 @@ fn matrix_matches_standalone_at_1_and_4_workers() {
             hashes.insert(cell.id(), rec.kept_hash);
         }
         by_workers.push(hashes);
-        cleanup(&cfg);
+        cleanup(&spec);
     }
     assert_eq!(by_workers[0], by_workers[1], "1-worker and 4-worker grids agree");
 }
@@ -80,19 +85,19 @@ fn matrix_matches_standalone_at_1_and_4_workers() {
 fn resume_reruns_only_missing_cells() {
     // (b) --resume leaves completed cells' records byte-identical and
     // re-runs only the missing ones.
-    let cfg = test_cfg("resume", 2);
-    cleanup(&cfg);
-    let first = matrix::run(&cfg).unwrap();
+    let builder = test_builder("resume", 2);
+    let spec = builder.clone().build().unwrap();
+    cleanup(&spec);
+    let first = api::matrix(&spec).unwrap();
     assert_eq!(first.manifest.aggregate.n_error, 0);
-    let paths = record_paths(&cfg);
+    let paths = record_paths(&spec);
     let before: Vec<Vec<u8>> = paths.iter().map(|p| std::fs::read(p).unwrap()).collect();
     let missing = [1usize, paths.len() - 2];
     for &i in &missing {
         std::fs::remove_file(&paths[i]).unwrap();
     }
-    let mut cfg2 = cfg.clone();
-    cfg2.resume = true;
-    let second = matrix::run(&cfg2).unwrap();
+    let spec2 = builder.resume(true).build().unwrap();
+    let second = api::matrix(&spec2).unwrap();
     assert_eq!(second.manifest.aggregate.n_error, 0);
     assert_eq!(second.manifest.aggregate.n_ok, missing.len(), "only missing cells re-ran");
     assert_eq!(second.manifest.aggregate.n_cached, paths.len() - missing.len());
@@ -112,7 +117,7 @@ fn resume_reruns_only_missing_cells() {
             assert_eq!(second.manifest.cells[i].status.as_str(), "cached");
         }
     }
-    cleanup(&cfg);
+    cleanup(&spec);
 }
 
 #[test]
@@ -120,9 +125,9 @@ fn manifest_reports_reuse_and_roundtrips() {
     // The acceptance contract on the manifest itself: schema-complete
     // cells, nonzero evals, and >= 1 corrupt-cache and >= 1 score-cache
     // hit from cross-run reuse.
-    let cfg = test_cfg("shape", 2);
-    cleanup(&cfg);
-    let out = matrix::run(&cfg).unwrap();
+    let spec = test_builder("shape", 2).build().unwrap();
+    cleanup(&spec);
+    let out = api::matrix(&spec).unwrap();
     let m = &out.manifest;
     assert_eq!(m.schema_version, 1);
     assert!(m.synthetic);
@@ -150,7 +155,7 @@ fn manifest_reports_reuse_and_roundtrips() {
     // and the records it points at validate as run_records
     let recs = back.load_cell_records(&out.manifest_path).unwrap();
     assert_eq!(recs.len(), m.cells.len());
-    cleanup(&cfg);
+    cleanup(&spec);
 }
 
 #[test]
@@ -178,9 +183,9 @@ fn cache_keys_collide_nowhere_across_the_grid() {
 
 #[test]
 fn run_and_sweep_share_the_dataset_resolution() {
-    // Regression (satellite): `pahq run` and `pahq sweep` both resolve
-    // their batch through cache::dataset_for — identical (task, seed, n)
-    // inputs are bit-identical across subcommands.
+    // Regression (satellite): every entry point resolves its batch
+    // through cache::dataset_for — identical (task, seed, n) inputs are
+    // bit-identical across subcommands.
     let Ok(a) = cache::dataset_for("ioi", 7, 8) else {
         eprintln!("skipping: artifacts not built");
         return;
@@ -195,7 +200,7 @@ fn run_and_sweep_share_the_dataset_resolution() {
     // a different seed draws a different stream
     let c = cache::dataset_for("ioi", 8, 8).unwrap();
     assert!(a.iter().zip(&c).any(|(x, y)| x.clean != y.clean), "seed changes the batch");
-    // the session entry point both subcommands use agrees with itself
+    // the session entry point api::run uses agrees with itself
     let task = Task::new("redwood2l-sim", "ioi");
     let Ok(s1) = matrix::seeded_session(&task, 7) else {
         eprintln!("skipping: engine substrate unavailable");
@@ -213,24 +218,27 @@ fn run_and_sweep_share_the_dataset_resolution() {
 fn real_grid_smoke_with_pool_sharing() {
     // Engine-backed (skips without artifacts): a tiny real grid under a
     // batched sweep — consecutive cells on one worker hand the engine
-    // pool over — still matches the standalone serial result.
-    let mut cfg = test_cfg("real", 1);
-    cfg.models = vec!["redwood2l-sim".into()];
-    cfg.tasks = vec!["ioi".into()];
-    cfg.methods = vec!["acdc".into()];
-    cfg.policies = vec![Policy::fp32(), Policy::pahq(FP8_E4M3)];
-    cfg.sweep = SweepMode::Batched { workers: 2 };
-    cleanup(&cfg);
+    // pool over in one Handoff value — still matches the standalone
+    // serial result.
     if pahq::patching::PatchedForward::new("redwood2l-sim", "ioi").is_err() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let out = matrix::run(&cfg).unwrap();
+    let spec = test_builder("real", 1)
+        .models(&["redwood2l-sim".to_string()])
+        .tasks(&["ioi".to_string()])
+        .methods(vec![MethodKind::Acdc])
+        .policies(vec![Policy::fp32(), Policy::pahq(FP8_E4M3)])
+        .sweep(SweepMode::Batched { workers: 2 })
+        .build()
+        .unwrap();
+    cleanup(&spec);
+    let out = api::matrix(&spec).unwrap();
     assert_eq!(out.manifest.aggregate.n_error, 0);
     assert!(!out.manifest.synthetic);
-    let mut serial_cfg = cfg.clone();
+    let mut serial_cfg = spec.config().clone();
     serial_cfg.sweep = SweepMode::Serial;
-    for (cell, entry) in matrix::grid(&cfg).iter().zip(&out.manifest.cells) {
+    for (cell, entry) in spec.cells().iter().zip(&out.manifest.cells) {
         let standalone = matrix::standalone_cell(cell, &serial_cfg).unwrap();
         assert_eq!(
             entry.kept_hash.as_deref(),
@@ -241,5 +249,5 @@ fn real_grid_smoke_with_pool_sharing() {
         // cross-run reuse was real: the corrupt cache was handed off
         assert!(entry.cache.as_ref().unwrap().corrupt_hit, "{}", cell.id());
     }
-    cleanup(&cfg);
+    cleanup(&spec);
 }

@@ -18,6 +18,11 @@ matrix manifest the gate additionally asserts that every cell completed
 (status ok/cached) with nonzero evals, and — with --records — loads each
 cell's RunRecord file (manifest-relative path) and validates it against
 the record schema.
+
+With --completed, bare records (and bench-snapshot records) must also
+pass the cell-completion gate: nonzero evals and n_kept <= n_edges.
+CI uses this on the record `examples/embed.rs` emits, so the embedding
+example is gated on actually *running* a discovery, not just compiling.
 """
 
 import json
@@ -109,9 +114,12 @@ def extract_records(doc):
     raise SchemaError(f"unrecognized artifact kind {kind!r}")
 
 
-def check_matrix(doc, schema, manifest_path, records_schema):
+def check_matrix(doc, schema, manifest_path, records_schema, completed=False):
     """Validate a matrix manifest, its completion gate, and (optionally)
-    every cell's RunRecord file against the record schema."""
+    every cell's RunRecord file against the record schema. With
+    ``completed``, each loaded cell record additionally passes the
+    bare-record completion gate (the per-cell n_evals check always
+    runs regardless)."""
     check(doc, schema, "$")
     cells = doc.get("cells", [])
     if not cells:
@@ -140,12 +148,28 @@ def check_matrix(doc, schema, manifest_path, records_schema):
             check(rec, records_schema, f"{where}.record")
             if not rec.get("n_evals"):
                 raise SchemaError(f"{where}: record {rel!r} reports zero evals")
+            if completed:
+                check_completed(rec, f"{where}.record")
             n_records += 1
     return len(cells), n_records
 
 
+def check_completed(rec, where):
+    """The cell-completion gate, applied to a bare record."""
+    if not rec.get("n_evals"):
+        raise SchemaError(f"{where}: record reports zero evals")
+    if rec.get("n_kept", 0) > rec.get("n_edges", 0):
+        raise SchemaError(
+            f"{where}: n_kept {rec.get('n_kept')} exceeds n_edges {rec.get('n_edges')}"
+        )
+
+
 def main(argv):
     records_schema_path = None
+    completed = False
+    if "--completed" in argv:
+        completed = True
+        argv = [a for a in argv if a != "--completed"]
     if "--records" in argv:
         i = argv.index("--records")
         if i + 1 >= len(argv):
@@ -166,7 +190,7 @@ def main(argv):
             records_schema = json.load(f)
     try:
         if isinstance(doc, dict) and doc.get("kind") == "matrix_manifest":
-            n_cells, n_records = check_matrix(doc, schema, argv[2], records_schema)
+            n_cells, n_records = check_matrix(doc, schema, argv[2], records_schema, completed)
             print(
                 f"schema check OK: matrix manifest with {n_cells} completed cell(s)"
                 + (f", {n_records} record(s) valid" if records_schema else "")
@@ -177,6 +201,8 @@ def main(argv):
             raise SchemaError("artifact contains no RunRecords to validate")
         for i, rec in enumerate(records):
             check(rec, schema, f"records[{i}]")
+            if completed:
+                check_completed(rec, f"records[{i}]")
     except SchemaError as e:
         print(f"schema check FAILED: {e}")
         return 1
