@@ -10,10 +10,15 @@
 //! deterministic synthetic surface, so the example still runs end to
 //! end and still emits a schema-valid record.
 //!
+//! The second leg repeats the run against a temporary *disk* artifact
+//! store ([`StoreSpec::Disk`]): the first pass publishes its artifacts,
+//! the second pulls them back — the same durable store `pahq matrix
+//! --store disk` seeds, so an embedder and a grid can share work.
+//!
 //! Run: `cargo run --release --example embed [-- RECORD.json]`
 
 use anyhow::Result;
-use pahq::api::{self, OutputSink, RunSpec};
+use pahq::api::{self, OutputSink, RunSpec, StoreSpec};
 
 fn main() -> Result<()> {
     let out = std::env::args()
@@ -58,5 +63,28 @@ fn main() -> Result<()> {
         None => println!("faithfulness: not available on this substrate"),
     }
     println!("record: {out}");
+
+    // Same spec, durable artifact store: run twice against a temp disk
+    // root — the first pass publishes the artifacts, the second starts
+    // cold and reuses them, with a bit-identical kept set.
+    let store_root = std::env::temp_dir().join(format!("pahq-embed-store-{}", std::process::id()));
+    let disk = StoreSpec::Disk { root: store_root.clone(), gc_horizon: None };
+    let disk_spec = RunSpec::builder("redwood2l-sim", "ioi")
+        .method("eap".parse()?)
+        .bits(8)
+        .tau(0.01)
+        .objective("kl".parse()?)
+        .seed(0)
+        .store(disk)
+        .build()?;
+    let cold = api::run(&disk_spec)?;
+    let warm = api::run(&disk_spec)?;
+    assert_eq!(cold.kept_hash, warm.kept_hash, "disk-store reuse changed the circuit");
+    println!(
+        "disk store at {}: second run reused the published artifacts (cache: {})",
+        store_root.display(),
+        warm.cache.is_some()
+    );
+    std::fs::remove_dir_all(&store_root).ok();
     Ok(())
 }

@@ -513,6 +513,27 @@ impl SyntheticSurface {
         SyntheticSurface { seed, interaction }
     }
 
+    /// Durable-store wire form: seed (u64 LE) then interaction (f32
+    /// bits, LE). The surface is a pure function of these two values,
+    /// so the round trip reproduces every damage score bit-identically.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12);
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.interaction.to_bits().to_le_bytes());
+        out
+    }
+
+    /// Exact inverse of [`SyntheticSurface::to_bytes`].
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<SyntheticSurface> {
+        if b.len() != 12 {
+            anyhow::bail!("synthetic-surface wire data is {} bytes, expected 12", b.len());
+        }
+        Ok(SyntheticSurface {
+            seed: u64::from_le_bytes(b[..8].try_into().unwrap()),
+            interaction: f32::from_bits(u32::from_le_bytes(b[8..12].try_into().unwrap())),
+        })
+    }
+
     /// Fixed weight of an edge, in [0, 1) (splitmix64 of (seed, chan, src)).
     pub fn weight(&self, chan: usize, src: NodeId) -> f32 {
         let mut x = self

@@ -3,7 +3,7 @@
 //! so the text cannot drift from what the parsers accept (the old
 //! hand-maintained `USAGE` string drifted across PRs 3–4).
 
-use super::{DEFAULT_BITS, DEFAULT_MODEL, DEFAULT_TASK, DEFAULT_TAU, MethodKind};
+use super::{DEFAULT_BITS, DEFAULT_MODEL, DEFAULT_TASK, DEFAULT_TAU, MethodKind, StoreSpec};
 use crate::acdc::SweepMode;
 use crate::experiments::{BASE_MODELS, SCALE_MODELS, TASKS};
 use crate::metrics::Objective;
@@ -29,6 +29,11 @@ pub fn sweep_spellings() -> String {
     SweepMode::SPELLINGS.join("|")
 }
 
+/// `mem|disk|disk:PATH` — the [`StoreSpec::SPELLINGS`].
+pub fn store_spellings() -> String {
+    StoreSpec::SPELLINGS.join("|")
+}
+
 /// Every model name the artifact registry knows.
 pub fn model_names() -> String {
     BASE_MODELS.iter().chain(SCALE_MODELS.iter()).copied().collect::<Vec<_>>().join(" ")
@@ -51,6 +56,7 @@ pub fn subcommands() -> Vec<(&'static str, &'static str)> {
         ("groundtruth", "compute/cache the FP32 reference circuit"),
         ("sim", "DES runtime/memory prediction for a method on real arches"),
         ("bench", "deterministic perf snapshot for CI's perf gate"),
+        ("store", "inspect / garbage-collect the durable artifact store"),
         ("info", "model/artifact inventory"),
         ("help", "this overview, or `pahq help <subcommand>` for flags"),
     ]
@@ -114,6 +120,8 @@ fn run_flags() -> Vec<(String, String)> {
         ),
         ("--trace".into(), "record the per-step sweep trace into the record (Fig. 3)".into()),
         ("--no-faith".into(), "skip scoring against the FP32 ground truth".into()),
+        store_flag(),
+        gc_horizon_flag(),
         (
             "--json PATH".into(),
             "where the RunRecord lands (default \
@@ -121,6 +129,29 @@ fn run_flags() -> Vec<(String, String)> {
                 .into(),
         ),
     ]
+}
+
+/// The `--store` flag, shared verbatim by `run`, `matrix`, and `store`.
+fn store_flag() -> (String, String) {
+    (
+        "--store S".into(),
+        format!(
+            "artifact store backend: {} (default mem; disk is the durable \
+             content-addressed store at rust/results/store or PATH, shared \
+             across processes)",
+            store_spellings()
+        ),
+    )
+}
+
+/// The `--gc-horizon` flag, shared by `run`, `matrix`, and `store gc`.
+fn gc_horizon_flag() -> (String, String) {
+    (
+        "--gc-horizon N".into(),
+        "collect disk-store entries unused for N generations (>= 1); \
+         only with --store disk"
+            .into(),
+    )
 }
 
 fn matrix_flags() -> Vec<(String, String)> {
@@ -158,6 +189,21 @@ fn matrix_flags() -> Vec<(String, String)> {
         ("--no-faith".into(), "skip scoring against the FP32 ground truth".into()),
         ("--out DIR".into(), "where per-cell records land (default rust/results/matrix)".into()),
         ("--json PATH".into(), "manifest path (default <out>/matrix.json)".into()),
+        store_flag(),
+        gc_horizon_flag(),
+    ]
+}
+
+fn store_cmd_flags() -> Vec<(String, String)> {
+    vec![
+        (
+            "--store S".into(),
+            format!("which store to operate on: {} (default disk)", store_spellings()),
+        ),
+        (
+            "--gc-horizon N".into(),
+            "gc: collect entries unused for N generations (default 2)".into(),
+        ),
     ]
 }
 
@@ -241,6 +287,7 @@ pub fn subcommand(name: &str) -> Option<String> {
                 ),
             ],
         ),
+        "store" => render("store <ls|gc>", &synopsis("store"), &store_cmd_flags()),
         "info" => render("info", &synopsis("info"), &[]),
         _ => return None,
     };
@@ -309,7 +356,8 @@ mod tests {
         let h = subcommand("run").unwrap();
         for flag in [
             "--model", "--task", "--method", "--policy", "--bits", "--tau", "--metric",
-            "--sweep", "--workers", "--seed", "--trace", "--no-faith", "--json",
+            "--sweep", "--workers", "--seed", "--trace", "--no-faith", "--store",
+            "--gc-horizon", "--json",
         ] {
             assert!(h.contains(flag), "run help misses {flag}");
         }
@@ -317,9 +365,17 @@ mod tests {
         for flag in [
             "--models", "--tasks", "--methods", "--policies", "--bits", "--tau", "--metric",
             "--workers", "--sweep", "--pool-workers", "--seed", "--quick", "--resume",
-            "--no-faith", "--out", "--json",
+            "--no-faith", "--out", "--json", "--store", "--gc-horizon",
         ] {
             assert!(m.contains(flag), "matrix help misses {flag}");
+        }
+        let s = subcommand("store").unwrap();
+        for flag in ["--store", "--gc-horizon"] {
+            assert!(s.contains(flag), "store help misses {flag}");
+        }
+        // the --store value spellings come from the StoreSpec list
+        for spelling in StoreSpec::SPELLINGS {
+            assert!(h.contains(spelling), "run help misses store spelling {spelling}");
         }
     }
 }

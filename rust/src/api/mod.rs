@@ -34,7 +34,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use crate::acdc::SweepMode;
-use crate::discovery::{self, DiscoveryConfig, RunRecord, Session, Task};
+use crate::discovery::{self, CacheStats, DiscoveryConfig, RunRecord, Session, Task};
 use crate::gpu_sim::memory;
 use crate::matrix::{self, Cell, MatrixConfig, MatrixOutcome};
 use crate::metrics::Objective;
@@ -43,6 +43,11 @@ use crate::report::results_dir;
 use crate::util::cli::Args;
 
 pub mod help;
+
+// a library embedder pointing two tools at one store only needs the
+// facade: the backend trait (and its two implementations) re-export
+// here next to the `StoreSpec` that selects between them
+pub use crate::matrix::cache::{ArtifactStore, DiskStore, MemoryStore};
 
 /// Default model of `pahq run` (shared by the CLI and the help text).
 pub const DEFAULT_MODEL: &str = "gpt2s-sim";
@@ -210,6 +215,84 @@ impl OutputSink {
 }
 
 // ---------------------------------------------------------------------------
+// StoreSpec
+
+/// Which artifact-store backend a spec's launch opens: the in-process
+/// memory backend (classic behavior, artifacts die with the process),
+/// or the durable content-addressed disk store
+/// ([`DiskStore`](crate::matrix::cache::DiskStore)) shared across
+/// processes and grids.
+///
+/// Parses from the CLI spellings `--store mem` / `--store disk` /
+/// `--store disk:PATH` ([`std::fmt::Display`] writes them back), with
+/// the optional `--gc-horizon N` generation horizon folded into the
+/// `Disk` variant by [`RunSpecBuilder::build`] /
+/// [`MatrixSpecBuilder::build`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum StoreSpec {
+    /// In-process only (the default).
+    #[default]
+    Memory,
+    /// The durable on-disk store rooted at `root`; `gc_horizon` opts
+    /// into a generation-GC sweep when the store is opened.
+    Disk {
+        root: PathBuf,
+        /// entries last used more than this many generations ago are
+        /// collected at open (`None` = never sweep); >= 1 so two
+        /// concurrent grids never collect each other's live artifacts
+        gc_horizon: Option<u64>,
+    },
+}
+
+impl StoreSpec {
+    /// The CLI spellings `--store` accepts (shared with the generated
+    /// help, like every other spec enum).
+    pub const SPELLINGS: [&'static str; 3] = ["mem", "disk", "disk:PATH"];
+
+    /// Where a bare `--store disk` lands: `<results>/store`.
+    pub fn default_disk_root() -> PathBuf {
+        results_dir().join("store")
+    }
+
+    /// The configured disk root, when this spec is disk-backed.
+    pub fn disk_root(&self) -> Option<&PathBuf> {
+        match self {
+            StoreSpec::Memory => None,
+            StoreSpec::Disk { root, .. } => Some(root),
+        }
+    }
+}
+
+impl std::str::FromStr for StoreSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<StoreSpec> {
+        match s {
+            "mem" | "memory" => Ok(StoreSpec::Memory),
+            "disk" => Ok(StoreSpec::Disk { root: StoreSpec::default_disk_root(), gc_horizon: None }),
+            other => match other.strip_prefix("disk:") {
+                Some(path) if !path.is_empty() => {
+                    Ok(StoreSpec::Disk { root: PathBuf::from(path), gc_horizon: None })
+                }
+                _ => bail!(
+                    "store: unknown spelling '{other}' (expected {})",
+                    StoreSpec::SPELLINGS.join(" | ")
+                ),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for StoreSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreSpec::Memory => write!(f, "mem"),
+            StoreSpec::Disk { root, .. } => write!(f, "disk:{}", root.display()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // RunSpec
 
 /// One validated discovery run: everything `pahq run`, a matrix cell's
@@ -259,6 +342,9 @@ pub struct RunSpec {
     pub ep_steps: usize,
     /// where the record lands
     pub sink: OutputSink,
+    /// which artifact-store backend the launch opens (dataset, corrupt
+    /// cache, attribution scores — reused on hit, published on miss)
+    pub store: StoreSpec,
 }
 
 impl RunSpec {
@@ -283,6 +369,8 @@ impl RunSpec {
             sp_steps: 80,
             ep_steps: 60,
             sink: OutputSink::Memory,
+            store: StoreSpec::Memory,
+            gc_horizon: None,
         }
     }
 
@@ -310,6 +398,12 @@ impl RunSpec {
         }
         if !args.flag("no-faith") {
             b = b.faithfulness(Some(false));
+        }
+        if let Some(s) = args.get("store") {
+            b = b.store(s.parse()?);
+        }
+        if args.get("gc-horizon").is_some() {
+            b = b.gc_horizon(args.u64_or("gc-horizon", 0)?);
         }
         b = b.sink(match args.json_path() {
             Some(p) => OutputSink::Path(PathBuf::from(p)),
@@ -352,6 +446,9 @@ impl RunSpec {
         }
         if self.ep_steps == 0 {
             bail!("ep_steps: must be >= 1");
+        }
+        if let StoreSpec::Disk { gc_horizon: Some(0), .. } = &self.store {
+            bail!("gc_horizon: must be >= 1 (a zero horizon could collect live artifacts)");
         }
         // the classic policy-carrying spellings must not contradict an
         // explicit policy; `acdc` is the generic verifier and accepts any
@@ -411,6 +508,8 @@ pub struct RunSpecBuilder {
     sp_steps: usize,
     ep_steps: usize,
     sink: OutputSink,
+    store: StoreSpec,
+    gc_horizon: Option<u64>,
 }
 
 impl RunSpecBuilder {
@@ -501,9 +600,24 @@ impl RunSpecBuilder {
         self
     }
 
+    /// Artifact-store backend ([`StoreSpec::Memory`] by default).
+    pub fn store(mut self, store: StoreSpec) -> Self {
+        self.store = store;
+        self
+    }
+
+    /// Generation horizon for the disk store's GC sweep at open. Only
+    /// meaningful with a disk store —
+    /// [`build`](RunSpecBuilder::build) rejects it otherwise.
+    pub fn gc_horizon(mut self, horizon: u64) -> Self {
+        self.gc_horizon = Some(horizon);
+        self
+    }
+
     /// Resolve the implied policy and validate every cross-field
     /// constraint (errors name the offending field).
     pub fn build(self) -> Result<RunSpec> {
+        let store = resolve_store(self.store, self.gc_horizon)?;
         let mut sweep = self.sweep;
         if let Some(w) = self.workers {
             if w == 0 {
@@ -536,9 +650,25 @@ impl RunSpecBuilder {
             sp_steps: self.sp_steps,
             ep_steps: self.ep_steps,
             sink: self.sink,
+            store,
         };
         spec.validate()?;
         Ok(spec)
+    }
+}
+
+/// Fold a builder's `--gc-horizon` into its store (an explicit horizon
+/// wins over one already carried by a hand-built `Disk` variant) — and
+/// reject the flag when there is no disk store for it to govern.
+fn resolve_store(store: StoreSpec, gc_horizon: Option<u64>) -> Result<StoreSpec> {
+    match (store, gc_horizon) {
+        (StoreSpec::Memory, Some(_)) => {
+            bail!("gc_horizon: only meaningful with --store disk[:PATH] (got --store mem)")
+        }
+        (StoreSpec::Disk { root, gc_horizon: carried }, h) => {
+            Ok(StoreSpec::Disk { root, gc_horizon: h.or(carried) })
+        }
+        (s, None) => Ok(s),
     }
 }
 
@@ -582,6 +712,8 @@ impl MatrixSpec {
             faithfulness: d.faithfulness,
             out_dir: d.out_dir,
             json_path: None,
+            store: d.store,
+            gc_horizon: None,
         }
     }
 
@@ -637,6 +769,12 @@ impl MatrixSpec {
         if let Some(j) = args.json_path() {
             b = b.json_path(PathBuf::from(j));
         }
+        if let Some(s) = args.get("store") {
+            b = b.store(s.parse()?);
+        }
+        if args.get("gc-horizon").is_some() {
+            b = b.gc_horizon(args.u64_or("gc-horizon", 0)?);
+        }
         b.build()
     }
 
@@ -670,6 +808,8 @@ pub struct MatrixSpecBuilder {
     faithfulness: bool,
     out_dir: PathBuf,
     json_path: Option<PathBuf>,
+    store: StoreSpec,
+    gc_horizon: Option<u64>,
 }
 
 impl MatrixSpecBuilder {
@@ -758,6 +898,22 @@ impl MatrixSpecBuilder {
         self
     }
 
+    /// Artifact-store backend every cell shares ([`StoreSpec::Memory`]
+    /// by default; `Disk` makes the grid's seeding durable, so a cold
+    /// `--resume` re-runs only the missing cells).
+    pub fn store(mut self, store: StoreSpec) -> Self {
+        self.store = store;
+        self
+    }
+
+    /// Generation horizon for the disk store's GC sweep at startup.
+    /// Only meaningful with a disk store —
+    /// [`build`](MatrixSpecBuilder::build) rejects it otherwise.
+    pub fn gc_horizon(mut self, horizon: u64) -> Self {
+        self.gc_horizon = Some(horizon);
+        self
+    }
+
     /// Validate the grid axes and orchestration knobs (errors name the
     /// offending field) and freeze the configuration.
     pub fn build(self) -> Result<MatrixSpec> {
@@ -819,6 +975,27 @@ impl MatrixSpecBuilder {
         if self.seed > (1u64 << 53) {
             bail!("seed: must fit in 53 bits (manifest round-trip), got {}", self.seed);
         }
+        let store = resolve_store(self.store, self.gc_horizon)?;
+        if let StoreSpec::Disk { gc_horizon: Some(0), .. } = &store {
+            bail!("gc_horizon: must be >= 1 (a zero horizon could collect live artifacts)");
+        }
+        // a resume that would open a store written by a different store
+        // schema cannot reuse its artifacts — fail by name up front
+        // instead of silently recomputing the whole grid
+        if self.resume {
+            if let StoreSpec::Disk { root, .. } = &store {
+                if let Some(v) = matrix::store::manifest_schema_at(root)? {
+                    if v != matrix::store::STORE_SCHEMA_VERSION {
+                        bail!(
+                            "store: --resume against {} found store-manifest schema v{v}, but \
+                             this build writes v{} — point --store at a fresh root",
+                            root.display(),
+                            matrix::store::STORE_SCHEMA_VERSION
+                        );
+                    }
+                }
+            }
+        }
         let mut config = MatrixConfig::quick();
         config.methods = method_names;
         config.policies = self.policies;
@@ -834,6 +1011,7 @@ impl MatrixSpecBuilder {
         config.faithfulness = self.faithfulness;
         config.out_dir = self.out_dir;
         config.json_path = self.json_path;
+        config.store = store;
         Ok(MatrixSpec { config })
     }
 }
@@ -886,19 +1064,40 @@ pub fn run_with_session(spec: &RunSpec) -> Result<(RunRecord, Option<Session>)> 
             std::slice::from_ref(&spec.task),
         )?,
     };
+    // The spec's artifact store fronts every launch: in-memory (fresh,
+    // classic behavior) or the durable disk store a grid seeded —
+    // dataset/corrupt-cache/score reuse on hit, publish-back on miss.
+    let store = matrix::open_cache(&spec.store, false)?;
     if try_real {
         let task = Task::new(&spec.model, &spec.task);
         let cfg = spec.discovery_config();
+        let keys = matrix::store_keys(
+            spec.method.discovery_name(),
+            &spec.model,
+            &spec.task,
+            &spec.policy,
+            spec.seed,
+            spec.objective.key(),
+        );
         // Engine *bring-up* (dataset resolution + weights + PJRT
         // executables) is the only failure class that may degrade to
         // the synthetic surface under Auto — the same class the matrix
         // probe tests. Everything after a live engine (configure,
         // discovery, faithfulness) is a real error and propagates.
-        let built = matrix::seeded_examples(&task, spec.seed)
-            .and_then(|ex| Session::builder(&task).examples(ex).build());
+        let built = matrix::seeded_examples_cached(&store, &task, spec.seed).and_then(
+            |(ex, dataset_hit)| {
+                let inbound = matrix::store_handoff(&store, &keys);
+                Session::builder(&task)
+                    .examples(ex)
+                    .handoff(inbound)
+                    .build()
+                    .map(|s| (s, dataset_hit))
+            },
+        );
         match built {
-            Ok(mut session) => {
+            Ok((mut session, dataset_hit)) => {
                 session.configure(&cfg)?;
+                session.cache_stats.dataset_hit = dataset_hit;
                 let method = discovery::by_name(spec.method.discovery_name())?;
                 let mut rec = method.discover(&mut session, &task, &cfg)?;
                 if let Some(normalized) = spec.faithfulness {
@@ -907,6 +1106,26 @@ pub fn run_with_session(spec: &RunSpec) -> Result<(RunRecord, Option<Session>)> 
                         Err(e) if spec.faith_required => return Err(e),
                         Err(e) => eprintln!("faithfulness skipped: {e}"),
                     }
+                }
+                // publish-back: a freshly packed corrupt cache and any
+                // self-computed attribution scores land in the store, so
+                // the next process (or a grid) starts warm
+                if !session.cache_stats.corrupt_hit
+                    && store.peek_corrupt(&keys.corrupt).is_none()
+                {
+                    store.put_corrupt(
+                        &keys.corrupt,
+                        std::sync::Arc::new(session.engine.corrupt_cache.clone()),
+                    );
+                }
+                if let (Some(k), Some(s)) = (&keys.scores, session.computed_scores()) {
+                    store.put_scores(k, s);
+                }
+                // store reuse lands in the record like a grid cell's
+                // (absent when nothing hit, so memory-store records are
+                // byte-identical to the pre-store format)
+                if session.cache_stats.any() {
+                    rec.cache = Some(session.cache_stats.clone());
                 }
                 write_record(spec, &rec)?;
                 return Ok((rec, Some(session)));
@@ -932,9 +1151,16 @@ pub fn run_with_session(spec: &RunSpec) -> Result<(RunRecord, Option<Session>)> 
         model: spec.model.clone(),
         task: spec.task.clone(),
     };
-    let surface = matrix::synthetic_surface(&spec.model, &spec.task, spec.seed);
-    let rec =
+    let (surface, surface_hit) =
+        matrix::synthetic_surface_cached(&store, &spec.model, &spec.task, spec.seed);
+    let mut rec =
         matrix::synthetic_cell_record(&cell, spec.tau, spec.sweep, spec.seed, &surface, None)?;
+    if surface_hit {
+        // record the store hit like a synthetic grid cell would
+        let mut stats = CacheStats::default();
+        stats.corrupt_hit = true;
+        rec.cache = Some(stats);
+    }
     write_record(spec, &rec)?;
     Ok((rec, None))
 }

@@ -341,6 +341,14 @@ impl Session {
         }
     }
 
+    /// Scores this session computed itself (`None` after a score-cache
+    /// hit), *without* detaching the pool — [`crate::api::run`]
+    /// publishes these into its artifact store while handing the live
+    /// session back to the caller.
+    pub fn computed_scores(&self) -> Option<Arc<Vec<f32>>> {
+        self.computed_scores.clone()
+    }
+
     /// Kept flags of the last discovery run (graph.edges() order).
     pub fn last_kept(&self) -> Option<&[bool]> {
         self.last_kept.as_deref()

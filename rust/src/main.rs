@@ -23,6 +23,8 @@
 //!   sim         DES runtime/memory prediction for a method on real arches
 //!   bench       deterministic perf snapshot (sweep hot path + packed
 //!               memory) for CI's perf gate — see scripts/bench_gate.py
+//!   store       inspect (`ls`) / garbage-collect (`gc`) the durable
+//!               content-addressed artifact store backing --store disk
 //!   info        model/artifact inventory
 //!   help        generated overview; `pahq help <sub>` / `--help` for flags
 
@@ -77,6 +79,7 @@ fn main() -> Result<()> {
         "groundtruth" => cmd_groundtruth(&args),
         "sim" => cmd_sim(&args),
         "bench" => cmd_bench(&args),
+        "store" => cmd_store(&args),
         "info" => cmd_info(),
         _ => {
             print!("{}", help::usage());
@@ -572,6 +575,62 @@ fn cmd_bench(args: &Args) -> Result<()> {
         t_total.elapsed().as_secs_f64()
     );
     Ok(())
+}
+
+/// `pahq store <ls|gc>` — inspect or garbage-collect the durable
+/// content-addressed artifact store that `--store disk` runs share.
+/// `gc` is generation-based: opening the store bumps its generation,
+/// and only entries last used more than `--gc-horizon` generations ago
+/// are collected, so concurrent grids never collect each other's live
+/// artifacts.
+fn cmd_store(args: &Args) -> Result<()> {
+    let action = args.positional.get(1).map(String::as_str).unwrap_or("ls");
+    let spec: api::StoreSpec = args.get_or("store", "disk").parse()?;
+    let root = match spec.disk_root() {
+        Some(root) => root.clone(),
+        None => bail!("store: `pahq store` operates on the disk store (--store disk[:PATH])"),
+    };
+    let store = pahq::matrix::cache::DiskStore::open(&root)?;
+    match action {
+        "ls" => {
+            let entries = store.entries();
+            println!(
+                "store {} — generation {}, {} entries (schema v{}, codec v{})",
+                root.display(),
+                store.generation(),
+                entries.len(),
+                pahq::matrix::cache::STORE_SCHEMA_VERSION,
+                pahq::matrix::cache::CODEC_VERSION,
+            );
+            for (addr, e) in entries {
+                println!(
+                    "  {}  {:>10}  used gen {:<5} {}",
+                    &addr[..8],
+                    human_bytes(e.bytes),
+                    e.last_used,
+                    e.key
+                );
+            }
+            Ok(())
+        }
+        "gc" => {
+            let horizon = args.u64_or("gc-horizon", 2)?;
+            if horizon == 0 {
+                bail!("gc_horizon: must be >= 1 (a zero horizon could collect live artifacts)");
+            }
+            let r = store.gc(horizon)?;
+            println!(
+                "gc horizon {horizon}: {} live, {} collected ({} freed), {} missing row(s) \
+                 dropped",
+                r.live,
+                r.collected,
+                human_bytes(r.bytes_freed),
+                r.missing
+            );
+            Ok(())
+        }
+        other => bail!("store: unknown action '{other}' (expected ls | gc)"),
+    }
 }
 
 fn cmd_info() -> Result<()> {

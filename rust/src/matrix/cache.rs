@@ -23,17 +23,28 @@
 //! Stores are thread-safe (the work-stealing cell workers share one
 //! [`ArtifactCache`]) and count hits/misses; the manifest's
 //! cache-effectiveness rollup and CI's reuse floor read those counters.
+//!
+//! Since PR 6 the cache fronts a byte-level [`ArtifactStore`] backend
+//! (in-memory or the durable on-disk store in [`super::store`]): every
+//! typed accessor decodes through the bit-identical value codecs below,
+//! so a cold process pointed at a populated disk store resumes with
+//! exactly the artifacts a warm one computed.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::acdc::sweep::SyntheticSurface;
 use crate::model::{Dataset, Example};
 use crate::tasks::Vocab;
 use crate::tensor::QTensor;
+
+pub use super::store::{
+    address, ArtifactStore, DiskStore, GcReport, MemoryStore, CODEC_VERSION,
+    STORE_SCHEMA_VERSION,
+};
 
 /// FNV-1a-64 over a string (the same constants `record::kept_hash` uses).
 pub fn fnv64(s: &str) -> u64 {
@@ -135,24 +146,380 @@ impl<V> Store<V> {
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
     }
+
+    fn count_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn count_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
-/// The matrix's shared artifact store: one [`Store`] per reusable
-/// artifact class (see module docs), plus the synthetic-substrate
-/// surfaces whose hits count as corrupt-cache hits (they are the
-/// corrupt-cache analog).
-#[derive(Default)]
+// ---------------------------------------------------------------------------
+// Value codecs — the typed artifact classes to/from durable bytes.
+// Every codec is length-prefixed little-endian with f32 carried as raw
+// bits, so decode(encode(x)) is bit-identical (property-tested in
+// tests/properties.rs). Bumping any layout here bumps
+// [`CODEC_VERSION`], which re-addresses every stored artifact.
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, x: f32) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over an encoded artifact.
+struct Rd<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, at: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.at + n > self.b.len() {
+            bail!("artifact bytes truncated at {} (need {n} more)", self.at);
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        // cheap sanity bound: no artifact holds more elements than bytes
+        if n > self.b.len() as u64 {
+            bail!("artifact length {n} exceeds payload size");
+        }
+        Ok(n as usize)
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap())))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.at != self.b.len() {
+            bail!("artifact has {} trailing bytes", self.b.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+/// FP32 score vector: u64 count + raw f32 bits per element.
+pub fn encode_scores(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 4 * v.len());
+    put_u64(&mut out, v.len() as u64);
+    for &x in v {
+        put_f32(&mut out, x);
+    }
+    out
+}
+
+/// Exact inverse of [`encode_scores`].
+pub fn decode_scores(b: &[u8]) -> Result<Vec<f32>> {
+    let mut r = Rd::new(b);
+    let n = r.len()?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(r.f32()?);
+    }
+    r.done()?;
+    Ok(v)
+}
+
+/// Packed corrupt-activation cache: u64 plane count, then each plane as
+/// a u64-length-prefixed [`QTensor::to_bytes`] record (the packed-plane
+/// byte layout from PR 2, carried verbatim).
+pub fn encode_corrupt(v: &[QTensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, v.len() as u64);
+    for q in v {
+        let b = q.to_bytes();
+        put_u64(&mut out, b.len() as u64);
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+/// Exact inverse of [`encode_corrupt`].
+pub fn decode_corrupt(b: &[u8]) -> Result<Vec<QTensor>> {
+    let mut r = Rd::new(b);
+    let n = r.len()?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = r.len()?;
+        v.push(QTensor::from_bytes(r.bytes(len)?)?);
+    }
+    r.done()?;
+    Ok(v)
+}
+
+fn put_sparse(out: &mut Vec<u8>, v: &[(usize, f32)]) {
+    put_u64(out, v.len() as u64);
+    for &(tok, w) in v {
+        put_u64(out, tok as u64);
+        put_f32(out, w);
+    }
+}
+
+fn read_sparse(r: &mut Rd) -> Result<Vec<(usize, f32)>> {
+    let n = r.len()?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let tok = r.u64()? as usize;
+        v.push((tok, r.f32()?));
+    }
+    Ok(v)
+}
+
+/// Evaluation batch: u64 example count, then per example the clean and
+/// corrupt token streams, answer position, sparse answer/distractor
+/// distributions (weights as raw f32 bits), and label.
+pub fn encode_examples(v: &[Example]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, v.len() as u64);
+    for ex in v {
+        for stream in [&ex.clean, &ex.corrupt] {
+            put_u64(&mut out, stream.len() as u64);
+            for &t in stream {
+                put_u64(&mut out, t as u64);
+            }
+        }
+        put_u64(&mut out, ex.pos as u64);
+        put_sparse(&mut out, &ex.ans);
+        put_sparse(&mut out, &ex.dis);
+        put_u64(&mut out, ex.label as u64);
+    }
+    out
+}
+
+/// Exact inverse of [`encode_examples`].
+pub fn decode_examples(b: &[u8]) -> Result<Vec<Example>> {
+    let mut r = Rd::new(b);
+    let n = r.len()?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut streams = [Vec::new(), Vec::new()];
+        for stream in &mut streams {
+            let len = r.len()?;
+            stream.reserve(len);
+            for _ in 0..len {
+                stream.push(r.u64()? as usize);
+            }
+        }
+        let [clean, corrupt] = streams;
+        let pos = r.u64()? as usize;
+        let ans = read_sparse(&mut r)?;
+        let dis = read_sparse(&mut r)?;
+        let label = r.u64()? as usize;
+        v.push(Example { clean, corrupt, pos, ans, dis, label });
+    }
+    r.done()?;
+    Ok(v)
+}
+
+/// The matrix's shared artifact store: one decoded [`Store`] front per
+/// reusable artifact class (see module docs) — the synthetic-substrate
+/// surfaces' hits count as corrupt-cache hits, they are the
+/// corrupt-cache analog — over one byte-level [`ArtifactStore`]
+/// backend. The typed accessors below are the only mutation path: a
+/// counted `get` consults the front, then the backend (decoding through
+/// the bit-identical codecs); a `put` populates both. The `peek`
+/// variants are the seeding phase's uncounted lookups, so cell-facing
+/// hit/miss statistics stay exactly what they were in-memory.
 pub struct ArtifactCache {
-    pub datasets: Store<Vec<Example>>,
-    pub corrupt: Store<Vec<QTensor>>,
-    pub scores: Store<Vec<f32>>,
-    pub surfaces: Store<SyntheticSurface>,
+    datasets: Store<Vec<Example>>,
+    corrupt: Store<Vec<QTensor>>,
+    scores: Store<Vec<f32>>,
+    surfaces: Store<SyntheticSurface>,
+    backend: Arc<dyn ArtifactStore>,
+}
+
+impl Default for ArtifactCache {
+    fn default() -> Self {
+        Self::in_memory()
+    }
+}
+
+/// Counted or peeking read-through: front first, then the backend
+/// (decoded values warm the front). Backend read/decode failures
+/// degrade to a miss with a notice — the cell recomputes.
+fn read_through<V>(
+    front: &Store<V>,
+    backend: &Arc<dyn ArtifactStore>,
+    key: &str,
+    counted: bool,
+    decode: impl Fn(&[u8]) -> Result<V>,
+) -> Option<Arc<V>> {
+    if let Some(v) = front.peek(key) {
+        if counted {
+            front.count_hit();
+        }
+        return Some(v);
+    }
+    let fetched = match backend.get(key) {
+        Ok(Some(bytes)) => match decode(&bytes) {
+            Ok(v) => Some(Arc::new(v)),
+            Err(e) => {
+                eprintln!("store: decoding '{key}' failed ({e}); recomputing");
+                None
+            }
+        },
+        Ok(None) => None,
+        Err(e) => {
+            eprintln!("store: reading '{key}' failed ({e}); recomputing");
+            None
+        }
+    };
+    match fetched {
+        Some(v) => {
+            front.put(key, v.clone());
+            if counted {
+                front.count_hit();
+            }
+            Some(v)
+        }
+        None => {
+            if counted {
+                front.count_miss();
+            }
+            None
+        }
+    }
+}
+
+/// Write-through: the front keeps the decoded `Arc`, the backend gets
+/// the encoded bytes. A durable-write failure keeps the run alive
+/// in-memory (the store is an optimization, not a correctness
+/// dependency) but is reported, since a later cold resume would
+/// recompute.
+fn write_through<V>(
+    front: &Store<V>,
+    backend: &Arc<dyn ArtifactStore>,
+    key: &str,
+    v: Arc<V>,
+    encode: impl Fn(&V) -> Vec<u8>,
+) {
+    if let Err(e) = backend.put(key, &encode(&v)) {
+        eprintln!("store: writing '{key}' failed ({e}); artifact stays in-memory only");
+    }
+    front.put(key, v);
 }
 
 impl ArtifactCache {
+    /// Process-local cache over the in-memory backend — dies with the
+    /// process, exactly the pre-PR-6 behavior.
+    pub fn in_memory() -> Self {
+        Self::with_backend(Arc::new(MemoryStore::default()))
+    }
+
+    /// Cache over an explicit backend (the durable [`DiskStore`], a
+    /// test double, …).
+    pub fn with_backend(backend: Arc<dyn ArtifactStore>) -> Self {
+        ArtifactCache {
+            datasets: Store::default(),
+            corrupt: Store::default(),
+            scores: Store::default(),
+            surfaces: Store::default(),
+            backend,
+        }
+    }
+
+    /// The byte-level backend (shared; GC sweeps go through here).
+    pub fn backend(&self) -> Arc<dyn ArtifactStore> {
+        self.backend.clone()
+    }
+
+    // -- datasets ----------------------------------------------------------
+
+    /// Counted dataset lookup — the cell-facing entry point.
+    pub fn dataset(&self, key: &str) -> Option<Arc<Vec<Example>>> {
+        read_through(&self.datasets, &self.backend, key, true, decode_examples)
+    }
+
+    /// Uncounted dataset lookup for the seeding phase.
+    pub fn peek_dataset(&self, key: &str) -> Option<Arc<Vec<Example>>> {
+        read_through(&self.datasets, &self.backend, key, false, decode_examples)
+    }
+
+    pub fn put_dataset(&self, key: &str, v: Arc<Vec<Example>>) {
+        write_through(&self.datasets, &self.backend, key, v, |v| encode_examples(v));
+    }
+
+    // -- corrupt-activation caches ----------------------------------------
+
+    /// Counted corrupt-cache lookup.
+    pub fn corrupt(&self, key: &str) -> Option<Arc<Vec<QTensor>>> {
+        read_through(&self.corrupt, &self.backend, key, true, decode_corrupt)
+    }
+
+    /// Uncounted corrupt-cache lookup for the seeding phase.
+    pub fn peek_corrupt(&self, key: &str) -> Option<Arc<Vec<QTensor>>> {
+        read_through(&self.corrupt, &self.backend, key, false, decode_corrupt)
+    }
+
+    pub fn put_corrupt(&self, key: &str, v: Arc<Vec<QTensor>>) {
+        write_through(&self.corrupt, &self.backend, key, v, |v| encode_corrupt(v));
+    }
+
+    // -- attribution score vectors -----------------------------------------
+
+    /// Counted score-vector lookup.
+    pub fn scores(&self, key: &str) -> Option<Arc<Vec<f32>>> {
+        read_through(&self.scores, &self.backend, key, true, decode_scores)
+    }
+
+    /// Uncounted score-vector lookup for the seeding phase.
+    pub fn peek_scores(&self, key: &str) -> Option<Arc<Vec<f32>>> {
+        read_through(&self.scores, &self.backend, key, false, decode_scores)
+    }
+
+    pub fn put_scores(&self, key: &str, v: Arc<Vec<f32>>) {
+        write_through(&self.scores, &self.backend, key, v, |v| encode_scores(v));
+    }
+
+    // -- synthetic surfaces ------------------------------------------------
+
+    /// Counted surface lookup (the synthetic corrupt-cache analog).
+    pub fn surface(&self, key: &str) -> Option<Arc<SyntheticSurface>> {
+        read_through(&self.surfaces, &self.backend, key, true, SyntheticSurface::from_bytes)
+    }
+
+    /// Uncounted surface lookup for the seeding phase.
+    pub fn peek_surface(&self, key: &str) -> Option<Arc<SyntheticSurface>> {
+        read_through(&self.surfaces, &self.backend, key, false, SyntheticSurface::from_bytes)
+    }
+
+    pub fn put_surface(&self, key: &str, v: Arc<SyntheticSurface>) {
+        write_through(&self.surfaces, &self.backend, key, v, |s| s.to_bytes());
+    }
+
+    // -- counters ----------------------------------------------------------
+
+    /// Counted dataset hits.
+    pub fn dataset_hits(&self) -> usize {
+        self.datasets.hits()
+    }
+
     /// Corrupt-cache hits across both substrates.
     pub fn corrupt_hits(&self) -> usize {
         self.corrupt.hits() + self.surfaces.hits()
+    }
+
+    /// Counted attribution-score hits.
+    pub fn scores_hits(&self) -> usize {
+        self.scores.hits()
     }
 
     /// Total counted misses across every store.

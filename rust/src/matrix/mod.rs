@@ -37,6 +37,7 @@
 //! exercising the same queue, store, manifest, and resume machinery.
 
 pub mod cache;
+pub mod store;
 
 use std::collections::{BTreeSet, VecDeque};
 use std::path::{Path, PathBuf};
@@ -61,7 +62,9 @@ use crate::report::{mmss, results_dir, Table};
 use crate::scheduler::{predict_matrix_wall, predict_run, StreamConfig};
 use crate::util::json::{obj, Json};
 
+use crate::api::StoreSpec;
 use cache::ArtifactCache;
+use store::DiskStore;
 
 /// Version of the `matrix.json` manifest shape. Mirrored by
 /// `docs/matrix.schema.json`; bump both together.
@@ -92,6 +95,10 @@ pub struct MatrixConfig {
     pub out_dir: PathBuf,
     /// where the manifest lands (default: `<out_dir>/matrix.json`)
     pub json_path: Option<PathBuf>,
+    /// which [`cache::ArtifactStore`] backend the grid's artifact cache
+    /// sits on (in-memory, or the durable disk store with optional
+    /// startup GC)
+    pub store: StoreSpec,
 }
 
 impl MatrixConfig {
@@ -113,6 +120,7 @@ impl MatrixConfig {
             faithfulness: true,
             out_dir: results_dir().join("matrix"),
             json_path: None,
+            store: StoreSpec::Memory,
         }
     }
 
@@ -433,6 +441,62 @@ pub fn seeded_session(task: &Task, seed: u64) -> Result<Session> {
     Session::builder(task).examples(seeded_examples(task, seed)?).build()
 }
 
+/// [`seeded_examples`] through an [`ArtifactCache`]: read-through on
+/// the shared dataset key, publishing on miss — so a disk-backed
+/// `pahq run` resolves the exact batch a grid seeded (and vice versa).
+/// Returns the batch plus whether it was a cache hit.
+pub(crate) fn seeded_examples_cached(
+    store: &ArtifactCache,
+    task: &Task,
+    seed: u64,
+) -> Result<(Arc<Vec<crate::model::Example>>, bool)> {
+    let manifest = Manifest::by_name(&task.model)?;
+    let dkey = cache::dataset_key(&task.task, seed, manifest.batch);
+    match store.dataset(&dkey) {
+        Some(e) => Ok((e, true)),
+        None => {
+            let e = Arc::new(cache::dataset_for(&task.task, seed, manifest.batch)?);
+            store.put_dataset(&dkey, e.clone());
+            Ok((e, false))
+        }
+    }
+}
+
+/// The store keys one (method, model, task, policy, seed, objective)
+/// cell reads and publishes — the same derivation `run_cell_real`
+/// uses, exposed so [`crate::api::run`] shares artifacts with grids.
+pub(crate) struct StoreKeys {
+    pub corrupt: String,
+    /// `None` for acdc (it scores nothing up front)
+    pub scores: Option<String>,
+}
+
+pub(crate) fn store_keys(
+    method: &str,
+    model: &str,
+    task: &str,
+    policy: &Policy,
+    seed: u64,
+    objective_key: &str,
+) -> StoreKeys {
+    StoreKeys {
+        corrupt: cache::corrupt_key(model, task, seed, &cache_tag(policy)),
+        scores: (method != "acdc")
+            .then(|| cache::scores_key(method, model, task, seed, objective_key)),
+    }
+}
+
+/// The inbound [`Handoff`] a single run pulls from the store: the
+/// cell's corrupt-cache variant plus the method's attribution scores,
+/// when present (both counted hits/misses, like a grid cell).
+pub(crate) fn store_handoff(store: &ArtifactCache, keys: &StoreKeys) -> Handoff {
+    Handoff {
+        pool: None,
+        corrupt_cache: store.corrupt(&keys.corrupt),
+        scores: keys.scores.as_ref().and_then(|k| store.scores(k)),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Synthetic substrate
 
@@ -441,6 +505,27 @@ pub fn seeded_session(task: &Task, seed: u64) -> Result<Session> {
 /// task, seed) synthetic surface — the corrupt-cache analog.
 pub fn synthetic_graph() -> Graph {
     Graph { n_layer: 3, n_head: 4, has_mlp: true }
+}
+
+/// [`synthetic_surface`] through an [`ArtifactCache`] (read-through,
+/// publish on miss) — the synthetic analog of the corrupt cache, so
+/// single synthetic runs exercise a disk store too. Returns the
+/// surface plus whether it was a cache hit.
+pub(crate) fn synthetic_surface_cached(
+    store: &ArtifactCache,
+    model: &str,
+    task: &str,
+    seed: u64,
+) -> (Arc<SyntheticSurface>, bool) {
+    let key = cache::surface_key(model, task, seed);
+    match store.surface(&key) {
+        Some(s) => (s, true),
+        None => {
+            let s = Arc::new(synthetic_surface(model, task, seed));
+            store.put_surface(&key, s.clone());
+            (s, false)
+        }
+    }
 }
 
 /// The per-(model, task, seed) damage surface of the synthetic substrate.
@@ -565,6 +650,38 @@ pub fn synthetic_cell_record(
     })
 }
 
+/// Open the [`ArtifactCache`] a [`StoreSpec`] describes: the
+/// in-process memory backend, or the durable [`DiskStore`] — with the
+/// opt-in generation GC sweep when a horizon is configured. Shared by
+/// the grid executor and [`crate::api::run`], so `--store disk` means
+/// the same artifacts everywhere.
+pub(crate) fn open_cache(spec: &StoreSpec, verbose: bool) -> Result<ArtifactCache> {
+    match spec {
+        StoreSpec::Memory => Ok(ArtifactCache::in_memory()),
+        StoreSpec::Disk { root, gc_horizon } => {
+            let disk = Arc::new(DiskStore::open(root)?);
+            if verbose {
+                println!(
+                    "store: durable artifacts at {} (generation {})",
+                    root.display(),
+                    disk.generation()
+                );
+            }
+            if let Some(h) = gc_horizon {
+                let r = disk.gc(*h)?;
+                if verbose {
+                    println!(
+                        "store: gc horizon {h} — {} live, {} collected ({} B freed), \
+                         {} missing row(s) dropped",
+                        r.live, r.collected, r.bytes_freed, r.missing
+                    );
+                }
+            }
+            Ok(ArtifactCache::with_backend(disk))
+        }
+    }
+}
+
 /// Run one cell standalone — fresh session, no cross-run cache — the
 /// reference the matrix's bit-identity contract is tested against.
 /// Routes through the public [`crate::api::run`] entry point with the
@@ -635,11 +752,11 @@ fn seed_combo_real(
     let manifest = Manifest::by_name(model)?;
     let n = manifest.batch;
     let dkey = cache::dataset_key(task, cfg.seed, n);
-    let examples = match store.datasets.peek(&dkey) {
+    let examples = match store.peek_dataset(&dkey) {
         Some(e) => e,
         None => {
             let e = Arc::new(cache::dataset_for(task, cfg.seed, n)?);
-            store.datasets.put(&dkey, e.clone());
+            store.put_dataset(&dkey, e.clone());
             e
         }
     };
@@ -650,9 +767,9 @@ fn seed_combo_real(
             continue;
         }
         let ckey = cache::corrupt_key(model, task, cfg.seed, &cache_tag(policy));
-        if store.corrupt.peek(&ckey).is_none() {
+        if store.peek_corrupt(&ckey).is_none() {
             engine.set_session(policy.clone())?;
-            store.corrupt.put(&ckey, Arc::new(engine.corrupt_cache.clone()));
+            store.put_corrupt(&ckey, Arc::new(engine.corrupt_cache.clone()));
         }
     }
     // ...then the FP32 session: the shared hi-fidelity cache, the ground
@@ -662,8 +779,8 @@ fn seed_combo_real(
     engine.set_session(Policy::fp32())?;
     if cfg.policies.iter().any(|p| p.hi_fidelity_refs) {
         let ckey = cache::corrupt_key(model, task, cfg.seed, "fp32");
-        if store.corrupt.peek(&ckey).is_none() {
-            store.corrupt.put(&ckey, Arc::new(engine.corrupt_cache.clone()));
+        if store.peek_corrupt(&ckey).is_none() {
+            store.put_corrupt(&ckey, Arc::new(engine.corrupt_cache.clone()));
         }
     }
     if cfg.faithfulness {
@@ -674,11 +791,11 @@ fn seed_combo_real(
             continue;
         }
         let skey = cache::scores_key(method, model, task, cfg.seed, cfg.objective.key());
-        if store.scores.peek(&skey).is_some() {
+        if store.peek_scores(&skey).is_some() {
             continue;
         }
         match attribution_scores(&mut engine, method, cfg) {
-            Ok(s) => store.scores.put(&skey, Arc::new(s)),
+            Ok(s) => store.put_scores(&skey, Arc::new(s)),
             // best-effort: the cell recomputes (and publishes) on miss
             Err(e) => eprintln!("matrix: {model}/{task}/{method} score seeding failed: {e}"),
         }
@@ -688,8 +805,8 @@ fn seed_combo_real(
 
 fn seed_combo_synthetic(cfg: &MatrixConfig, store: &ArtifactCache, model: &str, task: &str) {
     let skey = cache::surface_key(model, task, cfg.seed);
-    if store.surfaces.peek(&skey).is_none() {
-        store.surfaces.put(&skey, Arc::new(synthetic_surface(model, task, cfg.seed)));
+    if store.peek_surface(&skey).is_none() {
+        store.put_surface(&skey, Arc::new(synthetic_surface(model, task, cfg.seed)));
     }
     let n_edges = synthetic_graph().n_edges();
     for method in &cfg.methods {
@@ -697,9 +814,9 @@ fn seed_combo_synthetic(cfg: &MatrixConfig, store: &ArtifactCache, model: &str, 
             continue;
         }
         let key = cache::scores_key(method, model, task, cfg.seed, "synthetic");
-        if store.scores.peek(&key).is_none() {
+        if store.peek_scores(&key).is_none() {
             let s = synthetic_scores(method, model, task, cfg.seed, n_edges);
-            store.scores.put(&key, Arc::new(s));
+            store.put_scores(&key, Arc::new(s));
         }
     }
 }
@@ -713,7 +830,7 @@ fn run_cell_real(
     let task = Task::new(&cell.model, &cell.task);
     let manifest = Manifest::by_name(&cell.model)?;
     let dkey = cache::dataset_key(&cell.task, cfg.seed, manifest.batch);
-    let (examples, dataset_hit) = match store.datasets.get(&dkey) {
+    let (examples, dataset_hit) = match store.dataset(&dkey) {
         Some(e) => (e, true),
         // every cell resolves its batch through the shared derivation,
         // cached or not — a seeding failure never silently changes data
@@ -728,8 +845,8 @@ fn run_cell_real(
     // match, else rebuilds its replicas)
     let inbound = Handoff {
         pool: slot.pool.take(),
-        corrupt_cache: store.corrupt.get(&ckey),
-        scores: skey.as_ref().and_then(|k| store.scores.get(k)),
+        corrupt_cache: store.corrupt(&ckey),
+        scores: skey.as_ref().and_then(|k| store.scores(k)),
     };
     let dcfg = base_config(cfg, &cell.policy);
     let mut session =
@@ -747,7 +864,7 @@ fn run_cell_real(
     // self-computed scores publish into the store
     let outbound = session.take_handoff();
     if let (Some(k), Some(s)) = (&skey, &outbound.scores) {
-        store.scores.put(k, s.clone());
+        store.put_scores(k, s.clone());
     }
     *slot = outbound;
     Ok((rec, stats))
@@ -760,7 +877,7 @@ fn run_cell_synthetic(
 ) -> Result<(RunRecord, CacheStats)> {
     let mut stats = CacheStats::default();
     let skey = cache::surface_key(&cell.model, &cell.task, cfg.seed);
-    let surface = match store.surfaces.get(&skey) {
+    let surface = match store.surface(&skey) {
         Some(s) => {
             stats.corrupt_hit = true;
             s
@@ -771,7 +888,7 @@ fn run_cell_synthetic(
         None
     } else {
         let key = cache::scores_key(&cell.method, &cell.model, &cell.task, cfg.seed, "synthetic");
-        match store.scores.get(&key) {
+        match store.scores(&key) {
             Some(s) => {
                 stats.scores_hit = true;
                 Some(s)
@@ -1022,7 +1139,7 @@ pub(crate) fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
         }
     }
 
-    let store = ArtifactCache::default();
+    let store = open_cache(&cfg.store, true)?;
     if !pending.is_empty() {
         // phase A: seed every shared artifact exactly once per combo
         let combos: BTreeSet<(String, String)> = pending

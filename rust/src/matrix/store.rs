@@ -1,0 +1,538 @@
+//! Durable content-addressed artifact storage behind [`ArtifactStore`].
+//!
+//! The grid's reusable artifacts (datasets, corrupt-activation caches,
+//! attribution score vectors, synthetic surfaces — see
+//! [`super::cache`]) are deterministic functions of their logical cache
+//! key, so a byte store addressed by a hash of that key is safe to
+//! share across processes: two writers racing on one address write the
+//! same bytes. Two backends implement the trait:
+//!
+//! - [`MemoryStore`] — the in-process map the matrix always had; dies
+//!   with the process.
+//! - [`DiskStore`] — one file per artifact under a sharded
+//!   `store/ab/cdef…` layout with atomic tmp-file+rename writes, a
+//!   schema'd `store-manifest.json` carrying per-entry
+//!   generation/last-used stamps, and checksum verification that
+//!   *quarantines* corrupt entries (moves them aside and reports a
+//!   miss) instead of panicking.
+//!
+//! ## Addressing
+//!
+//! `address(key)` folds the store schema version and the value-codec
+//! version into the hash, so a codec change maps every artifact to a
+//! fresh address instead of mis-decoding stale bytes.
+//!
+//! ## Generation-based, coordination-free GC
+//!
+//! Every process that opens a [`DiskStore`] bumps the manifest's
+//! generation counter and stamps the entries it touches with its own
+//! generation. [`DiskStore::gc`] collects only entries whose
+//! `last_used` is more than `horizon` generations behind the current
+//! one, and re-reads + merges the on-disk manifest (max-stamp wins)
+//! right before collecting — so two concurrent grids on one store
+//! never block on each other and never collect each other's live
+//! artifacts as long as the horizon covers the concurrent-open window
+//! (any `horizon >= 1` does for two processes). There are no lock
+//! files and no daemons: a missed merge can only *delay* a collection,
+//! never lose live data, because a live entry's re-`put` recreates it.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Version of the on-disk layout (file header + manifest shape).
+pub const STORE_SCHEMA_VERSION: usize = 1;
+/// Version of the typed value codecs ([`super::cache`] encode/decode).
+pub const CODEC_VERSION: usize = 1;
+
+/// Artifact-file magic; the trailing byte is the schema version.
+const MAGIC: &[u8; 8] = b"PAHQART1";
+const MANIFEST_NAME: &str = "store-manifest.json";
+
+/// FNV-1a-64 over raw bytes (the string variant lives in
+/// [`super::cache::fnv64`]; checksums here run over encoded payloads).
+pub fn fnv64_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content address of a logical cache key: 32 hex chars from two salted
+/// FNV-1a-64 passes, with the store schema and codec versions folded in
+/// so incompatible layouts never alias.
+pub fn address(key: &str) -> String {
+    let salted = format!("pahq-store/s{STORE_SCHEMA_VERSION}/c{CODEC_VERSION}/{key}");
+    let lo = super::cache::fnv64(&salted);
+    let hi = super::cache::fnv64(&format!("{salted}#hi"));
+    format!("{hi:016x}{lo:016x}")
+}
+
+/// Byte-level keyed storage over content-addressed artifacts. Values
+/// are deterministic per key (see module docs), so `put` is
+/// first-writer-wins and concurrent duplicate writes are benign.
+pub trait ArtifactStore: Send + Sync {
+    /// Fetch the bytes under `key`; `Ok(None)` on a miss (including a
+    /// quarantined corrupt entry).
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>>;
+    /// Durably store `bytes` under `key`.
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()>;
+    /// Does `key` currently resolve (without touching its GC stamp)?
+    fn contains(&self, key: &str) -> Result<bool>;
+    /// Logical keys of every live entry.
+    fn list(&self) -> Result<Vec<String>>;
+    /// Drop `key`; `Ok(true)` when an entry existed.
+    fn remove(&self, key: &str) -> Result<bool>;
+}
+
+/// The in-process backend: a plain keyed byte map.
+#[derive(Default)]
+pub struct MemoryStore {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+}
+
+impl ArtifactStore for MemoryStore {
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        Ok(self.map.lock().unwrap().get(key).cloned())
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.map.lock().unwrap().entry(key.to_string()).or_insert_with(|| bytes.to_vec());
+        Ok(())
+    }
+
+    fn contains(&self, key: &str) -> Result<bool> {
+        Ok(self.map.lock().unwrap().contains_key(key))
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let mut keys: Vec<String> = self.map.lock().unwrap().keys().cloned().collect();
+        keys.sort();
+        Ok(keys)
+    }
+
+    fn remove(&self, key: &str) -> Result<bool> {
+        Ok(self.map.lock().unwrap().remove(key).is_some())
+    }
+}
+
+/// One manifest row: where an artifact came from and when it was last
+/// touched, in store generations.
+#[derive(Clone, Debug)]
+pub struct StoreEntry {
+    /// Logical cache key (`dataset/…`, `corrupt/…`, …).
+    pub key: String,
+    /// Generation that first wrote the entry.
+    pub created: u64,
+    /// Generation that last read or wrote it — the GC stamp.
+    pub last_used: u64,
+    /// Encoded payload size.
+    pub bytes: usize,
+}
+
+/// What one [`DiskStore::gc`] sweep did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GcReport {
+    /// Entries kept (stamped within the horizon).
+    pub live: usize,
+    /// Entries collected (file + manifest row removed).
+    pub collected: usize,
+    /// Manifest rows dropped because their file had vanished.
+    pub missing: usize,
+    /// Payload bytes freed by the collected entries.
+    pub bytes_freed: usize,
+}
+
+/// The durable backend. See the module docs for layout and GC model.
+pub struct DiskStore {
+    root: PathBuf,
+    /// This process's generation (manifest counter + 1 at open).
+    generation: u64,
+    state: Mutex<StoreState>,
+}
+
+#[derive(Default)]
+struct StoreState {
+    entries: BTreeMap<String, StoreEntry>,
+    /// Addresses this handle removed/collected/quarantined — the
+    /// merge-on-write persist must not resurrect their manifest rows
+    /// from a stale on-disk copy.
+    dead: std::collections::HashSet<String>,
+}
+
+/// Parse `store-manifest.json`, strictly on identity fields.
+fn parse_manifest(path: &Path) -> Result<(u64, BTreeMap<String, StoreEntry>)> {
+    let j = Json::parse_file(path)?;
+    let schema = j.get("schema_version")?.as_usize()?;
+    if schema != STORE_SCHEMA_VERSION {
+        bail!(
+            "store: manifest {} has schema v{schema}, this build reads v{STORE_SCHEMA_VERSION} \
+             — point --store at a fresh directory or delete the stale store",
+            path.display()
+        );
+    }
+    let generation = j.get("generation")?.as_usize()? as u64;
+    let mut entries = BTreeMap::new();
+    for e in j.get("entries")?.as_arr()? {
+        entries.insert(
+            e.get("address")?.as_str()?.to_string(),
+            StoreEntry {
+                key: e.get("key")?.as_str()?.to_string(),
+                created: e.get("created")?.as_usize()? as u64,
+                last_used: e.get("last_used")?.as_usize()? as u64,
+                bytes: e.get("bytes")?.as_usize()?,
+            },
+        );
+    }
+    Ok((generation, entries))
+}
+
+/// The store-manifest schema version at `root`, if a manifest exists.
+/// The spec builders use this to fail `--resume` against an
+/// incompatible store *by field name* instead of silently recomputing.
+pub fn manifest_schema_at(root: &Path) -> Result<Option<usize>> {
+    let path = root.join(MANIFEST_NAME);
+    if !path.exists() {
+        return Ok(None);
+    }
+    Ok(Some(Json::parse_file(&path)?.get("schema_version")?.as_usize()?))
+}
+
+impl DiskStore {
+    /// Open (creating if needed) the store at `root` and bump the
+    /// generation counter — this process's uses stamp entries with the
+    /// new generation.
+    pub fn open(root: &Path) -> Result<DiskStore> {
+        std::fs::create_dir_all(root.join("tmp"))
+            .with_context(|| format!("store: creating {}", root.display()))?;
+        let manifest = root.join(MANIFEST_NAME);
+        let (disk_gen, entries) = if manifest.exists() {
+            parse_manifest(&manifest)?
+        } else {
+            (0, BTreeMap::new())
+        };
+        let store = DiskStore {
+            root: root.to_path_buf(),
+            generation: disk_gen + 1,
+            state: Mutex::new(StoreState { entries, dead: Default::default() }),
+        };
+        store.persist()?;
+        Ok(store)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The generation this handle stamps entries with.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    fn shard_path(&self, address: &str) -> PathBuf {
+        self.root.join(&address[..2]).join(&address[2..])
+    }
+
+    /// Merge-on-write manifest persistence: re-read the on-disk
+    /// manifest, merge stamps (max wins), write tmp + rename. Keeps
+    /// concurrent handles from erasing each other's GC stamps.
+    fn persist(&self) -> Result<()> {
+        let mut state = self.state.lock().unwrap();
+        let manifest = self.root.join(MANIFEST_NAME);
+        let mut generation = self.generation;
+        if let Ok((disk_gen, disk_entries)) = parse_manifest(&manifest) {
+            generation = generation.max(disk_gen);
+            for (addr, theirs) in disk_entries {
+                if state.dead.contains(&addr) {
+                    continue;
+                }
+                state
+                    .entries
+                    .entry(addr)
+                    .and_modify(|ours| {
+                        ours.last_used = ours.last_used.max(theirs.last_used);
+                        ours.created = ours.created.min(theirs.created);
+                    })
+                    .or_insert(theirs);
+            }
+        }
+        let rows: Vec<Json> = state
+            .entries
+            .iter()
+            .map(|(addr, e)| {
+                obj(vec![
+                    ("address", Json::from(addr.clone())),
+                    ("key", Json::from(e.key.clone())),
+                    ("created", Json::from(e.created as usize)),
+                    ("last_used", Json::from(e.last_used as usize)),
+                    ("bytes", Json::from(e.bytes)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("kind", Json::from("store_manifest")),
+            ("schema_version", Json::from(STORE_SCHEMA_VERSION)),
+            ("codec_version", Json::from(CODEC_VERSION)),
+            ("generation", Json::from(generation as usize)),
+            ("entries", Json::Arr(rows)),
+        ]);
+        self.write_atomic(&manifest, doc.dump().as_bytes())
+    }
+
+    /// tmp-file + rename; the only way bytes land under `root`.
+    fn write_atomic(&self, dest: &Path, bytes: &[u8]) -> Result<()> {
+        let tmp = self.root.join("tmp").join(format!(
+            "{}.{}",
+            dest.file_name().unwrap_or_default().to_string_lossy(),
+            std::process::id()
+        ));
+        std::fs::write(&tmp, bytes).with_context(|| format!("store: writing {}", tmp.display()))?;
+        if let Some(dir) = dest.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::rename(&tmp, dest)
+            .with_context(|| format!("store: publishing {}", dest.display()))
+    }
+
+    /// Move a failed-verification file aside (never panic, never
+    /// delete evidence) and drop its manifest row.
+    fn quarantine(&self, address: &str, why: &str) {
+        let from = self.shard_path(address);
+        let qdir = self.root.join("quarantine");
+        let moved = std::fs::create_dir_all(&qdir)
+            .and_then(|_| std::fs::rename(&from, qdir.join(address)));
+        eprintln!(
+            "store: quarantined corrupt entry {address} ({why}){}",
+            if moved.is_err() { " — move failed, treating as miss" } else { "" }
+        );
+        let mut state = self.state.lock().unwrap();
+        state.entries.remove(address);
+        state.dead.insert(address.to_string());
+        drop(state);
+        self.persist().ok();
+    }
+
+    /// Stamp an entry as used at this handle's generation.
+    fn touch(&self, address: &str, key: &str, bytes: usize) -> Result<()> {
+        {
+            let mut state = self.state.lock().unwrap();
+            state.dead.remove(address);
+            let gen = self.generation;
+            let e = state.entries.entry(address.to_string()).or_insert(StoreEntry {
+                key: key.to_string(),
+                created: gen,
+                last_used: gen,
+                bytes,
+            });
+            e.last_used = e.last_used.max(gen);
+            e.bytes = bytes;
+        }
+        self.persist()
+    }
+
+    /// Every manifest entry (merged view), keyed by address.
+    pub fn entries(&self) -> BTreeMap<String, StoreEntry> {
+        self.persist().ok();
+        self.state.lock().unwrap().entries.clone()
+    }
+
+    /// Collect entries whose `last_used` stamp is more than `horizon`
+    /// generations behind this handle's generation. Quarantined files
+    /// live outside the shard tree and are never touched.
+    pub fn gc(&self, horizon: u64) -> Result<GcReport> {
+        // merge the freshest stamps from disk before deciding anything
+        self.persist()?;
+        let mut report = GcReport::default();
+        let mut state = self.state.lock().unwrap();
+        let mut doomed: Vec<String> = Vec::new();
+        for (addr, e) in state.entries.iter() {
+            if !self.shard_path(addr).exists() {
+                report.missing += 1;
+                doomed.push(addr.clone());
+            } else if e.last_used.saturating_add(horizon) < self.generation {
+                report.collected += 1;
+                report.bytes_freed += e.bytes;
+                doomed.push(addr.clone());
+            } else {
+                report.live += 1;
+            }
+        }
+        for addr in &doomed {
+            std::fs::remove_file(self.shard_path(addr)).ok();
+            state.entries.remove(addr);
+            state.dead.insert(addr.clone());
+        }
+        drop(state);
+        self.persist()?;
+        Ok(report)
+    }
+}
+
+/// Artifact file wire form: magic, schema/codec (u32 LE each), logical
+/// key (u32 length + utf8), payload (u64 length + bytes), then an
+/// FNV-1a-64 checksum of the payload. Verification failures quarantine.
+fn encode_file(key: &str, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 4 + 4 + 4 + key.len() + 8 + payload.len() + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(STORE_SCHEMA_VERSION as u32).to_le_bytes());
+    out.extend_from_slice(&(CODEC_VERSION as u32).to_le_bytes());
+    out.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    out.extend_from_slice(key.as_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&fnv64_bytes(payload).to_le_bytes());
+    out
+}
+
+/// Inverse of [`encode_file`]; any structural or checksum mismatch is
+/// an error (the caller quarantines).
+fn decode_file(key: &str, b: &[u8]) -> Result<Vec<u8>> {
+    if b.len() < 8 + 4 + 4 + 4 || &b[..8] != MAGIC {
+        bail!("bad magic");
+    }
+    let schema = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+    let codec = u32::from_le_bytes(b[12..16].try_into().unwrap()) as usize;
+    if schema != STORE_SCHEMA_VERSION || codec != CODEC_VERSION {
+        bail!("schema/codec v{schema}/v{codec}, expected v{STORE_SCHEMA_VERSION}/v{CODEC_VERSION}");
+    }
+    let klen = u32::from_le_bytes(b[16..20].try_into().unwrap()) as usize;
+    if b.len() < 20 + klen + 8 + 8 {
+        bail!("truncated header");
+    }
+    let stored_key = std::str::from_utf8(&b[20..20 + klen]).map_err(|_| {
+        anyhow::anyhow!("non-utf8 key")
+    })?;
+    if stored_key != key {
+        bail!("address collision: file holds key '{stored_key}'");
+    }
+    let at = 20 + klen;
+    let plen = u64::from_le_bytes(b[at..at + 8].try_into().unwrap()) as usize;
+    if b.len() != at + 8 + plen + 8 {
+        bail!("payload length mismatch");
+    }
+    let payload = &b[at + 8..at + 8 + plen];
+    let sum = u64::from_le_bytes(b[at + 8 + plen..].try_into().unwrap());
+    if sum != fnv64_bytes(payload) {
+        bail!("checksum mismatch");
+    }
+    Ok(payload.to_vec())
+}
+
+impl ArtifactStore for DiskStore {
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let addr = address(key);
+        let path = self.shard_path(&addr);
+        let raw = match std::fs::read(&path) {
+            Ok(raw) => raw,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("store: reading {}", path.display())),
+        };
+        match decode_file(key, &raw) {
+            Ok(payload) => {
+                self.touch(&addr, key, payload.len())?;
+                Ok(Some(payload))
+            }
+            Err(why) => {
+                self.quarantine(&addr, &why.to_string());
+                Ok(None)
+            }
+        }
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        let addr = address(key);
+        let path = self.shard_path(&addr);
+        if !path.exists() {
+            self.write_atomic(&path, &encode_file(key, bytes))?;
+        }
+        self.touch(&addr, key, bytes.len())
+    }
+
+    fn contains(&self, key: &str) -> Result<bool> {
+        Ok(self.shard_path(&address(key)).exists())
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.persist()?;
+        Ok(self.state.lock().unwrap().entries.values().map(|e| e.key.clone()).collect())
+    }
+
+    fn remove(&self, key: &str) -> Result<bool> {
+        let addr = address(key);
+        let existed = std::fs::remove_file(self.shard_path(&addr)).is_ok();
+        let mut state = self.state.lock().unwrap();
+        let had_entry = state.entries.remove(&addr).is_some();
+        state.dead.insert(addr);
+        drop(state);
+        self.persist()?;
+        Ok(existed || had_entry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("pahq_store_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    #[test]
+    fn addresses_are_versioned_and_sharded() {
+        let a = address("dataset/ioi/0/32");
+        assert_eq!(a.len(), 32);
+        assert!(a.bytes().all(|b| b.is_ascii_hexdigit()));
+        assert_ne!(a, address("dataset/ioi/1/32"));
+    }
+
+    #[test]
+    fn memory_store_round_trips_the_trait() {
+        let s = MemoryStore::default();
+        assert!(s.get("k").unwrap().is_none());
+        s.put("k", b"abc").unwrap();
+        assert_eq!(s.get("k").unwrap().unwrap(), b"abc");
+        assert!(s.contains("k").unwrap());
+        assert_eq!(s.list().unwrap(), vec!["k".to_string()]);
+        // first writer wins (deterministic values per key)
+        s.put("k", b"zzz").unwrap();
+        assert_eq!(s.get("k").unwrap().unwrap(), b"abc");
+        assert!(s.remove("k").unwrap());
+        assert!(!s.remove("k").unwrap());
+    }
+
+    #[test]
+    fn disk_store_round_trips_and_survives_reopen() {
+        let root = tmp_root("roundtrip");
+        let s = DiskStore::open(&root).unwrap();
+        s.put("scores/eap/m/t/0/kl", b"\x01\x02\x03").unwrap();
+        assert_eq!(s.get("scores/eap/m/t/0/kl").unwrap().unwrap(), b"\x01\x02\x03");
+        drop(s);
+        let s2 = DiskStore::open(&root).unwrap();
+        assert_eq!(s2.generation(), 2, "each open bumps the generation");
+        assert_eq!(s2.get("scores/eap/m/t/0/kl").unwrap().unwrap(), b"\x01\x02\x03");
+        assert_eq!(s2.list().unwrap(), vec!["scores/eap/m/t/0/kl".to_string()]);
+        assert!(s2.remove("scores/eap/m/t/0/kl").unwrap());
+        assert!(s2.get("scores/eap/m/t/0/kl").unwrap().is_none());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn file_codec_rejects_tampering() {
+        let enc = encode_file("k", b"payload");
+        assert_eq!(decode_file("k", &enc).unwrap(), b"payload");
+        let mut bad = enc.clone();
+        let n = bad.len();
+        bad[n - 9] ^= 0x40; // flip a payload bit
+        assert!(decode_file("k", &bad).is_err());
+        assert!(decode_file("other", &enc).is_err(), "key mismatch detected");
+        assert!(decode_file("k", &enc[..10]).is_err(), "truncation detected");
+    }
+}

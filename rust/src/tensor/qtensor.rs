@@ -243,6 +243,108 @@ impl QTensor {
         self.decode_into(&mut out.data);
         out
     }
+
+    /// Serialize to the durable-store wire layout. The payload words go
+    /// out verbatim in their packed widths (the same bytes [`bytes`]
+    /// measures), so `from_bytes(to_bytes(q)) == q` is bit-identical by
+    /// construction — no re-quantization round trip. Layout (all
+    /// little-endian): payload tag `u8`, format triple `3 x f32` bits,
+    /// element count `u64`, rank `u32`, dims `u64` each, payload byte
+    /// count `u64`, payload words.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let (tag, payload): (u8, Vec<u8>) = match &self.payload {
+            Payload::F32(v) => (0, v.iter().flat_map(|x| x.to_bits().to_le_bytes()).collect()),
+            Payload::U16(v) => (1, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            Payload::U8(v) => (2, v.clone()),
+            Payload::U4(v) => (3, v.clone()),
+        };
+        let mut out = Vec::with_capacity(1 + 12 + 8 + 4 + 8 * self.shape.len() + 8 + payload.len());
+        out.push(tag);
+        for f in [self.format.mbits, self.format.emin, self.format.maxv] {
+            out.extend_from_slice(&f.to_bits().to_le_bytes());
+        }
+        out.extend_from_slice(&(self.len as u64).to_le_bytes());
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Exact inverse of [`QTensor::to_bytes`]. Errors (never panics) on
+    /// truncated or structurally inconsistent input — the durable store
+    /// quarantines such entries and recomputes.
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<QTensor> {
+        use anyhow::bail;
+        let mut at = 0usize;
+        let mut take = |n: usize| -> anyhow::Result<&[u8]> {
+            if at + n > b.len() {
+                bail!("qtensor wire data truncated at byte {at} (need {n} more)");
+            }
+            let s = &b[at..at + n];
+            at += n;
+            Ok(s)
+        };
+        let tag = take(1)?[0];
+        let mut f32_at = |s: &[u8]| f32::from_bits(u32::from_le_bytes(s.try_into().unwrap()));
+        let format = Format {
+            mbits: f32_at(take(4)?),
+            emin: f32_at(take(4)?),
+            maxv: f32_at(take(4)?),
+        };
+        let len = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
+        let rank = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize);
+        }
+        if shape.iter().product::<usize>() != len {
+            bail!("qtensor wire shape {shape:?} does not cover {len} elements");
+        }
+        let n_payload = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
+        let words = take(n_payload)?;
+        let expect = |n: usize, have: usize| -> anyhow::Result<()> {
+            if n != have {
+                bail!("qtensor wire payload holds {have} elements, header says {n}");
+            }
+            Ok(())
+        };
+        let payload = match tag {
+            0 => {
+                expect(len * 4, n_payload)?;
+                Payload::F32(
+                    words
+                        .chunks_exact(4)
+                        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                        .collect(),
+                )
+            }
+            1 => {
+                expect(len * 2, n_payload)?;
+                Payload::U16(
+                    words
+                        .chunks_exact(2)
+                        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            2 => {
+                expect(len, n_payload)?;
+                Payload::U8(words.to_vec())
+            }
+            3 => {
+                expect(len.div_ceil(2), n_payload)?;
+                Payload::U4(words.to_vec())
+            }
+            t => bail!("qtensor wire payload tag {t} unknown"),
+        };
+        if at != b.len() {
+            bail!("qtensor wire data has {} trailing bytes", b.len() - at);
+        }
+        Ok(QTensor { shape, len, format, payload })
+    }
 }
 
 /// `dst += src`, decoding packed bytes inline (no scratch buffer). The

@@ -256,6 +256,90 @@ fn run_and_matrix_accept_the_same_sweep_spellings() {
     assert_eq!(m.config().sweep, SweepMode::Batched { workers: 3 });
 }
 
+// ---------------------------------------------------------------------------
+// StoreSpec: spellings, horizon folding, and resume-schema validation
+
+#[test]
+fn store_spec_round_trips_and_rejects_unknown_spellings() {
+    use pahq::api::StoreSpec;
+    assert_eq!("mem".parse::<StoreSpec>().unwrap(), StoreSpec::Memory);
+    assert_eq!("memory".parse::<StoreSpec>().unwrap(), StoreSpec::Memory, "alias");
+    assert_eq!(StoreSpec::Memory.to_string(), "mem");
+    let d: StoreSpec = "disk:/x/y".parse().unwrap();
+    assert_eq!(d, StoreSpec::Disk { root: "/x/y".into(), gc_horizon: None });
+    assert_eq!(d.to_string(), "disk:/x/y");
+    assert_eq!(d.to_string().parse::<StoreSpec>().unwrap(), d, "display round-trips");
+    let bare: StoreSpec = "disk".parse().unwrap();
+    assert_eq!(bare.disk_root(), Some(&StoreSpec::default_disk_root()));
+    assert_eq!(StoreSpec::Memory.disk_root(), None);
+    for bad in ["turbo", "disk:"] {
+        let e = bad.parse::<StoreSpec>().unwrap_err().to_string();
+        assert!(e.starts_with("store:") && e.contains("disk:PATH"), "{e}");
+    }
+}
+
+#[test]
+fn store_flags_validate_by_field_name() {
+    use pahq::api::StoreSpec;
+    // --gc-horizon without a disk store to govern is loud on both specs
+    let e = run_err(|| RunSpec::builder("m", "t").gc_horizon(2).build());
+    assert!(e.starts_with("gc_horizon:"), "{e}");
+    let e = MatrixSpec::builder().gc_horizon(2).build().unwrap_err().to_string();
+    assert!(e.starts_with("gc_horizon:"), "{e}");
+    // a zero horizon could collect live artifacts — rejected, not clamped
+    let e = run_err(|| {
+        RunSpec::builder("m", "t")
+            .store(StoreSpec::Disk { root: "/x".into(), gc_horizon: None })
+            .gc_horizon(0)
+            .build()
+    });
+    assert!(e.starts_with("gc_horizon:"), "{e}");
+    // an explicit flag wins over a horizon carried by a hand-built Disk
+    let spec = RunSpec::builder("m", "t")
+        .store(StoreSpec::Disk { root: "/x".into(), gc_horizon: Some(9) })
+        .gc_horizon(3)
+        .build()
+        .unwrap();
+    assert_eq!(spec.store, StoreSpec::Disk { root: "/x".into(), gc_horizon: Some(3) });
+    // the CLI spellings land in exactly the same place
+    let parsed = RunSpec::from_cli(&args("run --store disk:/x --gc-horizon 3")).unwrap();
+    assert_eq!(parsed.store, spec.store);
+    let e = RunSpec::from_cli(&args("run --gc-horizon 2")).unwrap_err().to_string();
+    assert!(e.starts_with("gc_horizon:"), "{e}");
+    let e = MatrixSpec::from_cli(&args("matrix --store mem --gc-horizon 2"))
+        .unwrap_err()
+        .to_string();
+    assert!(e.starts_with("gc_horizon:"), "{e}");
+    // the default stays exactly what it always was: in-memory
+    assert_eq!(RunSpec::builder("m", "t").build().unwrap().store, StoreSpec::Memory);
+    assert_eq!(MatrixSpec::builder().build().unwrap().config().store, StoreSpec::Memory);
+}
+
+#[test]
+fn matrix_resume_rejects_an_incompatible_store_schema() {
+    use pahq::api::StoreSpec;
+    let root = std::env::temp_dir().join(format!("pahq_api_schema_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    std::fs::write(
+        root.join("store-manifest.json"),
+        r#"{"kind": "store_manifest", "schema_version": 99, "codec_version": 1, "generation": 4, "entries": []}"#,
+    )
+    .unwrap();
+    let disk = StoreSpec::Disk { root: root.clone(), gc_horizon: None };
+    let e = MatrixSpec::builder()
+        .store(disk.clone())
+        .resume(true)
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(e.starts_with("store:") && e.contains("v99"), "{e}");
+    // without --resume there is nothing to reuse, so the spec builds
+    // (the stale store itself still refuses to open at run time)
+    assert!(MatrixSpec::builder().store(disk).build().is_ok());
+    std::fs::remove_dir_all(&root).ok();
+}
+
 #[test]
 fn required_faithfulness_never_silently_synthesizes() {
     // a spec that declares faithfulness mandatory must error on the

@@ -604,6 +604,128 @@ fn packed_corrupt_cache_keeps_sweep_bit_identity() {
 }
 
 #[test]
+fn qtensor_wire_codec_round_trips_bit_identically() {
+    // The durable store's QTensor codec: from_bytes(to_bytes(q)) must
+    // reproduce the packed payload verbatim — every format (including
+    // the f32 passthrough), odd lengths exercising the fp4 nibble tail,
+    // and multi-dim shapes — with no re-quantization round trip.
+    let mut rng = Rng::new(616);
+    let mut formats = PACKED_FORMATS.to_vec();
+    formats.push(quant::FP32);
+    for f in formats {
+        for n in [1usize, 2, 7, 63, 255, 1024] {
+            let mut raw: Vec<f32> = (0..n).map(|_| rng.normal() * 8.0).collect();
+            raw[0] = 0.0;
+            if n > 1 {
+                raw[1] = -0.0;
+            }
+            let shape: Vec<usize> = if n % 2 == 0 { vec![2, n / 2] } else { vec![n] };
+            let qt = QTensor::from_slice(&shape, &raw, f);
+            let wire = qt.to_bytes();
+            let back = QTensor::from_bytes(&wire).unwrap();
+            assert_eq!(back.to_bytes(), wire, "{f:?} n={n}: wire fixed point");
+            assert_eq!(back.bytes(), qt.bytes(), "{f:?} n={n}: payload width");
+            let (mut a, mut b) = (vec![0.0f32; n], vec![0.0f32; n]);
+            qt.decode_into(&mut a);
+            back.decode_into(&mut b);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{f:?} n={n} [{i}]: decoded bits");
+            }
+        }
+    }
+    // structural damage errors (never panics): the store quarantines
+    let qt = QTensor::from_slice(&[5], &[1.0, -2.0, 3.0, -4.0, 5.0], quant::FP4_E2M1);
+    let wire = qt.to_bytes();
+    assert!(QTensor::from_bytes(&wire[..wire.len() - 1]).is_err(), "truncated payload");
+    assert!(QTensor::from_bytes(&wire[..3]).is_err(), "truncated header");
+    let mut trailing = wire.clone();
+    trailing.push(0);
+    assert!(QTensor::from_bytes(&trailing).is_err(), "trailing bytes");
+    let mut bad_tag = wire.clone();
+    bad_tag[0] = 9;
+    assert!(QTensor::from_bytes(&bad_tag).is_err(), "unknown payload tag");
+}
+
+#[test]
+fn artifact_value_codecs_round_trip_bit_identically() {
+    // The typed store codecs (scores / corrupt caches / datasets) carry
+    // f32 as raw bits — decode(encode(x)) is exact even for NaN,
+    // infinities, signed zero, and subnormals — and reject truncation
+    // and trailing garbage instead of mis-decoding.
+    use pahq::matrix::cache::{
+        decode_corrupt, decode_examples, decode_scores, encode_corrupt, encode_examples,
+        encode_scores,
+    };
+    use pahq::model::Example;
+
+    let mut rng = Rng::new(717);
+
+    // score vectors, including the pathological f32s
+    let mut scores: Vec<f32> = (0..257).map(|_| rng.normal() * 100.0).collect();
+    scores.extend([0.0, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1e-45]);
+    let enc = encode_scores(&scores);
+    let dec = decode_scores(&enc).unwrap();
+    assert_eq!(dec.len(), scores.len());
+    for (i, (x, y)) in scores.iter().zip(&dec).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "scores[{i}]");
+    }
+    assert_eq!(decode_scores(&encode_scores(&[])).unwrap(), Vec::<f32>::new());
+    assert!(decode_scores(&enc[..enc.len() - 1]).is_err(), "truncated scores");
+    let mut trailing = enc.clone();
+    trailing.push(0x7f);
+    assert!(decode_scores(&trailing).is_err(), "trailing garbage");
+
+    // corrupt caches: mixed-format plane lists round-trip per-plane bytes
+    for round in 0..8u64 {
+        let planes: Vec<QTensor> = (0..1 + rng.below(6))
+            .map(|_| {
+                let n = 1 + rng.below(40);
+                let raw: Vec<f32> = (0..n).map(|_| rng.normal() * 4.0).collect();
+                let f = [quant::FP32, quant::BF16, quant::FP8_E4M3, quant::FP4_E2M1]
+                    [rng.below(4)];
+                QTensor::from_slice(&[n], &raw, f)
+            })
+            .collect();
+        let enc = encode_corrupt(&planes);
+        let back = decode_corrupt(&enc).unwrap();
+        assert_eq!(back.len(), planes.len(), "round {round}: plane count");
+        for (i, (p, q)) in planes.iter().zip(&back).enumerate() {
+            assert_eq!(p.to_bytes(), q.to_bytes(), "round {round} plane {i}");
+        }
+        assert!(decode_corrupt(&enc[..enc.len() - 1]).is_err(), "truncated cache");
+    }
+
+    // evaluation batches: token streams, sparse distributions, labels
+    let examples: Vec<Example> = (0..5)
+        .map(|_| Example {
+            clean: (0..3 + rng.below(10)).map(|_| rng.below(50_000)).collect(),
+            corrupt: (0..3 + rng.below(10)).map(|_| rng.below(50_000)).collect(),
+            pos: rng.below(12),
+            ans: (0..1 + rng.below(3)).map(|_| (rng.below(50_000), rng.f32())).collect(),
+            dis: (0..rng.below(3)).map(|_| (rng.below(50_000), -rng.f32())).collect(),
+            label: rng.below(50_000),
+        })
+        .collect();
+    let enc = encode_examples(&examples);
+    let back = decode_examples(&enc).unwrap();
+    assert_eq!(back.len(), examples.len());
+    for (i, (a, b)) in examples.iter().zip(&back).enumerate() {
+        assert_eq!(a.clean, b.clean, "example {i}: clean stream");
+        assert_eq!(a.corrupt, b.corrupt, "example {i}: corrupt stream");
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.label, b.label);
+        for (x, y) in a.ans.iter().zip(&b.ans).chain(a.dis.iter().zip(&b.dis)) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "example {i}: sparse weight bits");
+        }
+    }
+    assert!(decode_examples(&enc[..enc.len() - 1]).is_err(), "truncated batch");
+    let mut trailing = enc.clone();
+    trailing.push(0);
+    assert!(decode_examples(&trailing).is_err(), "trailing garbage");
+}
+
+#[test]
 fn format_bits_roundtrip_and_storage_sanity() {
     for bits in [4u32, 8, 16, 32] {
         let f = Format::by_bits(bits);

@@ -1,0 +1,209 @@
+//! Tests for the durable content-addressed artifact store: generation
+//! GC semantics, concurrent-handle safety, corrupt-entry quarantine,
+//! and the cold-start `--resume` contract — a fresh process against a
+//! populated disk store re-runs cells without recomputing (or even
+//! re-writing) any shared artifact.
+//!
+//! Everything here runs on the synthetic substrate (made-up model/task
+//! names), so it behaves identically with or without `make artifacts`.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use pahq::api::{self, MatrixSpec, MatrixSpecBuilder, StoreSpec};
+use pahq::matrix::store::{address, ArtifactStore, DiskStore};
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("pahq_storetest_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+#[test]
+fn gc_collects_only_entries_beyond_the_horizon() {
+    let root = tmp_root("gc");
+    // gen 1: two entries; gens 2..4: one entry each; gen 5: the sweeper
+    {
+        let s = DiskStore::open(&root).unwrap();
+        s.put("gen1/a", b"a").unwrap();
+        s.put("gen1/b", b"bb").unwrap();
+    }
+    for g in 2..=4u64 {
+        let s = DiskStore::open(&root).unwrap();
+        assert_eq!(s.generation(), g, "each open bumps the generation");
+        s.put(&format!("gen{g}/a"), b"xx").unwrap();
+    }
+    let s = DiskStore::open(&root).unwrap();
+    assert_eq!(s.generation(), 5);
+    let r = s.gc(2).unwrap();
+    // collect iff last_used + horizon < generation: gens 1 and 2 go,
+    // gens 3 and 4 stay
+    assert_eq!(r.collected, 3, "both gen-1 entries plus the gen-2 one");
+    assert_eq!(r.live, 2);
+    assert_eq!(r.bytes_freed, 1 + 2 + 2);
+    assert_eq!(r.missing, 0);
+    assert!(s.get("gen1/a").unwrap().is_none());
+    assert!(s.get("gen1/b").unwrap().is_none());
+    assert!(s.get("gen2/a").unwrap().is_none());
+    assert_eq!(s.get("gen3/a").unwrap().unwrap(), b"xx");
+    assert_eq!(s.get("gen4/a").unwrap().unwrap(), b"xx");
+    // those reads stamped the survivors at gen 5: even the tightest
+    // horizon keeps an entry touched within it
+    let r = s.gc(1).unwrap();
+    assert_eq!((r.collected, r.live), (0, 2), "touched entries never collect");
+    // a vanished file is a dropped manifest row, not a collection
+    let addr = address("gen3/a");
+    std::fs::remove_file(root.join(&addr[..2]).join(&addr[2..])).unwrap();
+    let r = s.gc(1).unwrap();
+    assert_eq!((r.missing, r.live), (1, 1));
+    assert!(s.get("gen3/a").unwrap().is_none());
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn concurrent_handles_never_collect_each_others_live_artifacts() {
+    // Two processes sharing one store root: each opens its own handle
+    // (adjacent generations), touches its own artifacts, and sweeps —
+    // with any horizon >= 1 neither sweep collects the other's live
+    // entries; only the genuinely stale one goes.
+    let root = tmp_root("concurrent");
+    {
+        let s = DiskStore::open(&root).unwrap();
+        s.put("live/a", b"aa").unwrap();
+        s.put("live/b", b"bb").unwrap();
+        s.put("stale/z", b"zz").unwrap();
+    }
+    for _ in 0..3 {
+        DiskStore::open(&root).unwrap();
+    }
+    let a = DiskStore::open(&root).unwrap();
+    let b = DiskStore::open(&root).unwrap();
+    assert_eq!(a.generation() + 1, b.generation(), "adjacent generations");
+    assert!(a.get("live/a").unwrap().is_some(), "handle A touches its artifact");
+    assert!(b.get("live/b").unwrap().is_some(), "handle B touches its artifact");
+    let ra = a.gc(1).unwrap();
+    let rb = b.gc(1).unwrap();
+    assert_eq!(ra.collected, 1, "A's sweep takes only the stale entry");
+    assert_eq!(rb.collected, 0, "B's sweep finds nothing left to take");
+    // both live artifacts survive both sweeps, visible through either
+    // handle (merge-on-write keeps the freshest stamp on disk)
+    for handle in [&a, &b] {
+        assert_eq!(handle.get("live/a").unwrap().unwrap(), b"aa");
+        assert_eq!(handle.get("live/b").unwrap().unwrap(), b"bb");
+        assert!(handle.get("stale/z").unwrap().is_none());
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn corrupt_entries_quarantine_instead_of_failing() {
+    let root = tmp_root("quarantine");
+    let s = DiskStore::open(&root).unwrap();
+    let key = "scores/eap/synthetic-m/alpha/0/synthetic";
+    s.put(key, b"payload-bytes").unwrap();
+    let addr = address(key);
+    let shard = root.join(&addr[..2]).join(&addr[2..]);
+    assert!(shard.exists());
+    // flip the file to garbage under the store's feet (torn write,
+    // disk fault, hostile edit — all the same to the checksum)
+    std::fs::write(&shard, b"not an artifact").unwrap();
+    assert!(s.get(key).unwrap().is_none(), "corrupt entry reads as a miss, not a panic");
+    assert!(!shard.exists(), "the bad file left the shard tree");
+    assert!(root.join("quarantine").join(&addr).exists(), "evidence kept aside");
+    assert!(!s.entries().contains_key(&addr), "manifest row dropped");
+    assert!(!s.contains(key).unwrap());
+    // the address is reusable: a fresh put repopulates and verifies
+    s.put(key, b"payload-bytes").unwrap();
+    assert_eq!(s.get(key).unwrap().unwrap(), b"payload-bytes");
+    // GC walks the shard tree only — quarantined files are never touched
+    s.gc(1).unwrap();
+    assert!(root.join("quarantine").join(&addr).exists());
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Every artifact file currently in the shard tree, as `ab/cdef…`
+/// relative names (manifest, tmp/, and quarantine/ excluded).
+fn shard_files(root: &Path) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for dir in std::fs::read_dir(root).unwrap() {
+        let dir = dir.unwrap();
+        let name = dir.file_name().to_string_lossy().to_string();
+        if !dir.path().is_dir() || name.len() != 2 {
+            continue;
+        }
+        for f in std::fs::read_dir(dir.path()).unwrap() {
+            out.insert(format!("{name}/{}", f.unwrap().file_name().to_string_lossy()));
+        }
+    }
+    out
+}
+
+fn disk_builder(base: &Path, store_root: &Path) -> MatrixSpecBuilder {
+    MatrixSpec::builder()
+        .models(&["synthetic-m".to_string()])
+        .tasks(&["alpha".to_string(), "beta".to_string()])
+        .workers(2)
+        .faithfulness(false)
+        .store(StoreSpec::Disk { root: store_root.to_path_buf(), gc_horizon: None })
+        .json_path(base.join("matrix.json"))
+        .out_dir(base.to_path_buf())
+}
+
+#[test]
+fn cold_start_resume_recomputes_no_artifacts() {
+    // The acceptance contract: populate a disk store with one grid run,
+    // then resume from a fresh process state. With records intact the
+    // resume is a no-op (byte-identical records); with records deleted
+    // every cell re-runs all-hit against the store — same kept sets,
+    // and not a single new artifact file written.
+    let base = tmp_root("resume");
+    let store_root = base.join("store");
+    let spec = disk_builder(&base, &store_root).build().unwrap();
+    let first = api::matrix(&spec).unwrap();
+    assert_eq!(first.manifest.aggregate.n_error, 0);
+    let n_cells = first.manifest.cells.len();
+    let hashes: Vec<Option<String>> =
+        first.manifest.cells.iter().map(|c| c.kept_hash.clone()).collect();
+    let artifacts = shard_files(&store_root);
+    assert!(!artifacts.is_empty(), "the grid published artifacts durably");
+
+    let record_paths: Vec<PathBuf> =
+        spec.cells().iter().map(|c| base.join(c.record_name())).collect();
+    let before: Vec<Vec<u8>> =
+        record_paths.iter().map(|p| std::fs::read(p).unwrap()).collect();
+
+    // resume with everything intact: pure cache, records byte-identical
+    let second = api::matrix(&disk_builder(&base, &store_root).resume(true).build().unwrap())
+        .unwrap();
+    assert_eq!(second.manifest.aggregate.n_cached, n_cells, "nothing re-ran");
+    for (path, bytes) in record_paths.iter().zip(&before) {
+        assert_eq!(&std::fs::read(path).unwrap(), bytes, "cached record untouched");
+    }
+
+    // cold start: records gone, store intact — cells re-run all-hit
+    for p in &record_paths {
+        std::fs::remove_file(p).unwrap();
+    }
+    let third = api::matrix(&disk_builder(&base, &store_root).resume(true).build().unwrap())
+        .unwrap();
+    assert_eq!(third.manifest.aggregate.n_error, 0);
+    assert_eq!(third.manifest.aggregate.n_ok, n_cells, "every cell re-ran");
+    for (i, cell) in third.manifest.cells.iter().enumerate() {
+        assert_eq!(cell.status.as_str(), "ok");
+        assert_eq!(cell.kept_hash, hashes[i], "re-run rediscovers the same circuit");
+        let stats = cell.cache.as_ref().expect("every re-run cell pulled from the store");
+        assert!(stats.corrupt_hit, "{}: corrupt-analog served from disk", cell.method);
+        assert_eq!(
+            stats.scores_hit,
+            cell.method != "acdc",
+            "{}: scores served from disk",
+            cell.method
+        );
+    }
+    assert_eq!(
+        shard_files(&store_root),
+        artifacts,
+        "zero artifacts recomputed or re-written on the cold resume"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}

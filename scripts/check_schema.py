@@ -13,11 +13,14 @@ Usage:
 
 ARTIFACT.json is a bare RunRecord (kind == "run_record"), a bench
 snapshot (kind == "bench_snapshot") whose "records" array holds
-RunRecords, or a matrix manifest (kind == "matrix_manifest"). For a
-matrix manifest the gate additionally asserts that every cell completed
-(status ok/cached) with nonzero evals, and — with --records — loads each
-cell's RunRecord file (manifest-relative path) and validates it against
-the record schema.
+RunRecords, a matrix manifest (kind == "matrix_manifest"), or a durable
+artifact-store manifest (kind == "store_manifest", validated against
+docs/store_manifest.schema.json). For a matrix manifest the gate
+additionally asserts that every cell completed (status ok/cached) with
+nonzero evals, and — with --records — loads each cell's RunRecord file
+(manifest-relative path) and validates it against the record schema.
+For a store manifest the gate additionally asserts the generation
+invariants (created <= last_used <= generation) and unique addresses.
 
 With --completed, bare records (and bench-snapshot records) must also
 pass the cell-completion gate: nonzero evals and n_kept <= n_edges.
@@ -154,6 +157,26 @@ def check_matrix(doc, schema, manifest_path, records_schema, completed=False):
     return len(cells), n_records
 
 
+def check_store(doc, schema):
+    """Validate a durable-store manifest plus the generation invariants
+    the subset validator cannot express."""
+    check(doc, schema, "$")
+    generation = doc["generation"]
+    seen = set()
+    for i, entry in enumerate(doc.get("entries", [])):
+        where = f"$.entries[{i}]"
+        addr = entry["address"]
+        if addr in seen:
+            raise SchemaError(f"{where}: duplicate address {addr!r}")
+        seen.add(addr)
+        if not entry["created"] <= entry["last_used"] <= generation:
+            raise SchemaError(
+                f"{where}: created {entry['created']} <= last_used "
+                f"{entry['last_used']} <= generation {generation} violated"
+            )
+    return len(seen)
+
+
 def check_completed(rec, where):
     """The cell-completion gate, applied to a bare record."""
     if not rec.get("n_evals"):
@@ -189,6 +212,13 @@ def main(argv):
         with open(records_schema_path) as f:
             records_schema = json.load(f)
     try:
+        if isinstance(doc, dict) and doc.get("kind") == "store_manifest":
+            n_entries = check_store(doc, schema)
+            print(
+                f"schema check OK: store manifest at generation "
+                f"{doc['generation']} with {n_entries} entr(y/ies)"
+            )
+            return 0
         if isinstance(doc, dict) and doc.get("kind") == "matrix_manifest":
             n_cells, n_records = check_matrix(doc, schema, argv[2], records_schema, completed)
             print(
