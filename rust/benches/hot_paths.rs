@@ -9,8 +9,9 @@
 //! realistic per-eval cost floor), and — when artifacts are built — the
 //! full patched forward. Results feed EXPERIMENTS.md §Perf.
 //!
-//! CI smoke: `cargo bench --bench hot_paths -- sweep` runs only the
-//! short sweep group (300 ms warm-up, 1 s measurement, 30 samples).
+//! CI smoke: `cargo bench --bench hot_paths -- sweep` and
+//! `cargo bench --bench hot_paths -- packed_assembly` each run one short
+//! group (300 ms warm-up, 1 s measurement, 30 samples).
 
 use std::time::Duration;
 
@@ -23,7 +24,7 @@ use pahq::gpu_sim::{CostModel, RealArch};
 use pahq::metrics::Objective;
 use pahq::model::Graph;
 use pahq::patching::{PatchMask, PatchedForward, Policy};
-use pahq::quant::{self, BF16, FP8_E4M3};
+use pahq::quant::{self, BF16, FP4_E2M1, FP8_E4M3};
 use pahq::tensor::{self, QTensor};
 use pahq::util::json::Json;
 use pahq::util::rng::Rng;
@@ -48,23 +49,28 @@ fn bench_assembly(c: &mut Criterion) {
     g.finish();
 }
 
-/// Residual assembly against *packed* storage: the fused
-/// decode-accumulate kernel vs the plain f32 add it replaces, and vs the
-/// pre-packing alternative (decode into scratch, then f32 add). At fp8
-/// the fused kernel touches 1/4 of the bytes per source operand; this
-/// group records where that bandwidth win lands on this substrate
-/// (EXPERIMENTS.md §Perf).
+/// Residual assembly against *packed* storage: the word-parallel fused
+/// decode-accumulate kernels vs (a) the plain f32 add they replace and
+/// (b) the retained scalar decode path (`decode_range_into_scalar` +
+/// f32 add) that PR 7 vectorized away. At fp8 the fused kernel touches
+/// 1/4 of the bytes per source operand; the `scalar_ref_*` entries make
+/// the scalar-vs-word-parallel speedup visible in one run
+/// (EXPERIMENTS.md §Perf; CI smoke runs this group with the same
+/// 300 ms / 1 s / 30-sample discipline as `sweep`).
 fn bench_packed_assembly(c: &mut Criterion) {
     let mut rng = Rng::new(43);
     let n = 163_840usize;
     let src: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
     let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
     let mut g = c.benchmark_group("packed_assembly");
+    g.warm_up_time(Duration::from_millis(300))
+        .measurement_time(Duration::from_secs(1))
+        .sample_size(30);
     let mut dst = base.clone();
     g.bench_function(BenchmarkId::new("add_assign_f32", n), |bch| {
         bch.iter(|| tensor::add_assign(black_box(&mut dst), black_box(&src)))
     });
-    for (label, fmt) in [("fp8_e4m3", FP8_E4M3), ("bf16", BF16)] {
+    for (label, fmt) in [("fp8_e4m3", FP8_E4M3), ("fp4_e2m1", FP4_E2M1), ("bf16", BF16)] {
         let qt = QTensor::from_slice(&[n], &src, fmt);
         let mut dstq = base.clone();
         g.bench_function(BenchmarkId::new(&format!("add_assign_packed_{label}"), n), |bch| {
@@ -72,26 +78,20 @@ fn bench_packed_assembly(c: &mut Criterion) {
         });
         let mut dsts = base.clone();
         let mut scratch = vec![0.0f32; n];
-        g.bench_function(BenchmarkId::new(&format!("decode_then_add_{label}"), n), |bch| {
+        g.bench_function(BenchmarkId::new(&format!("scalar_ref_{label}"), n), |bch| {
             bch.iter(|| {
-                qt.decode_into(black_box(&mut scratch));
+                qt.decode_range_into_scalar(0, black_box(&mut scratch));
                 tensor::add_assign(black_box(&mut dsts), black_box(&scratch));
             })
         });
-        let mut dstp = base.clone();
-        g.bench_function(
-            BenchmarkId::new(&format!("add_sub_assign_packed_{label}"), n),
-            |bch| {
-                bch.iter(|| {
-                    tensor::add_sub_assign_packed(
-                        black_box(&mut dstp),
-                        black_box(&qt),
-                        black_box(&src),
-                    )
-                })
-            },
-        );
     }
+    let qt = QTensor::from_slice(&[n], &src, FP8_E4M3);
+    let mut dstp = base.clone();
+    g.bench_function(BenchmarkId::new("add_sub_assign_packed_fp8_e4m3", n), |bch| {
+        bch.iter(|| {
+            tensor::add_sub_assign_packed(black_box(&mut dstp), black_box(&qt), black_box(&src))
+        })
+    });
     g.finish();
 }
 

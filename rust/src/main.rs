@@ -21,8 +21,9 @@
 //!   all         regenerate every table and figure
 //!   groundtruth compute/cache the FP32 reference circuit
 //!   sim         DES runtime/memory prediction for a method on real arches
-//!   bench       deterministic perf snapshot (sweep hot path + packed
-//!               memory) for CI's perf gate — see scripts/bench_gate.py
+//!   bench       deterministic perf snapshot (sweep hot path, packed
+//!               memory, word-parallel packed-kernel throughput) for
+//!               CI's perf gate — see scripts/bench_gate.py
 //!   store       inspect (`ls`) / garbage-collect (`gc`) the durable
 //!               content-addressed artifact store backing --store disk
 //!   info        model/artifact inventory
@@ -44,10 +45,10 @@ use pahq::gpu_sim::{CostModel, RealArch};
 use pahq::metrics::Objective;
 use pahq::model::{Graph, Manifest};
 use pahq::patching::{PatchMask, PatchedForward};
-use pahq::quant::{BF16, FP8_E4M3};
+use pahq::quant::{BF16, Format, FP4_E2M1, FP8_E4M3};
 use pahq::report::{human_bytes, mmss, results_dir, Table};
 use pahq::scheduler::{predict_run, predict_sweep, StreamConfig};
-use pahq::tensor::QTensor;
+use pahq::tensor::{self, QTensor};
 use pahq::util::cli::Args;
 use pahq::util::json::{obj, Json};
 use pahq::util::rng::Rng;
@@ -328,6 +329,34 @@ fn bench_spin(x: f32) -> f32 {
     y
 }
 
+/// One packed fused-kernel measurement: best-of-reps wall for the
+/// word-parallel `add_assign_packed` and for the retained scalar
+/// reference (`decode_range_into_scalar` + f32 add) on the same
+/// payload. Returns `(wide_bytes_per_sec, scalar_bytes_per_sec)`;
+/// bytes count the decoded f32 output (`n * 4`) so formats are
+/// comparable, and the wide/scalar ratio is machine-independent —
+/// that ratio is what the perf gate pins (scripts/bench_gate.py).
+fn bench_packed_kernel(ks: &[f32], fmt: Format, reps: usize) -> (f64, f64) {
+    let n = ks.len();
+    let qt = QTensor::from_slice(&[n], ks, fmt);
+    let mut dst = ks.to_vec();
+    let mut scratch = vec![0.0f32; n];
+    let mut best_wide = f64::MAX;
+    let mut best_scalar = f64::MAX;
+    for _ in 0..reps {
+        let t = Instant::now();
+        tensor::add_assign_packed(&mut dst, &qt);
+        best_wide = best_wide.min(t.elapsed().as_secs_f64());
+        let t = Instant::now();
+        qt.decode_range_into_scalar(0, &mut scratch);
+        tensor::add_assign(&mut dst, &scratch);
+        best_scalar = best_scalar.min(t.elapsed().as_secs_f64());
+    }
+    black_box(&dst);
+    let bytes = (n * 4) as f64;
+    (bytes / best_wide, bytes / best_scalar)
+}
+
 /// The attn-4l-shaped synthetic sweep plan (mirrors
 /// `benches/hot_paths.rs`): reverse-topological channels, PAHQ-style
 /// `hi` overrides.
@@ -510,6 +539,21 @@ fn cmd_bench(args: &Args) -> Result<()> {
         p_pahq.per_edge_us, p_acdc.per_edge_us, sp8.speedup
     );
 
+    // packed-kernel probe: word-parallel fused decode-accumulate vs the
+    // retained scalar reference on the gated fp8/fp4 formats
+    let ks: Vec<f32> = (0..1usize << 18).map(|_| rng.normal()).collect();
+    let kernel_reps = if quick { 5 } else { 20 };
+    let (fp8_bps, fp8_scalar_bps) = bench_packed_kernel(&ks, FP8_E4M3, kernel_reps);
+    let (fp4_bps, fp4_scalar_bps) = bench_packed_kernel(&ks, FP4_E2M1, kernel_reps);
+    let fp8_speedup = fp8_bps / fp8_scalar_bps;
+    let fp4_speedup = fp4_bps / fp4_scalar_bps;
+    println!(
+        "packed kernels: fp8 {:.2} GB/s ({fp8_speedup:.2}x scalar), fp4 {:.2} GB/s \
+         ({fp4_speedup:.2}x scalar)",
+        fp8_bps / 1e9,
+        fp4_bps / 1e9
+    );
+
     // real-engine record when the artifacts are built (optional: CI has
     // no artifacts, the local dev loop does) — the one launch path,
     // pinned to the real substrate so a synthetic stand-in can never
@@ -553,6 +597,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 ("pahq_per_edge_us", Json::from(p_pahq.per_edge_us)),
                 ("acdc_per_edge_us", Json::from(p_acdc.per_edge_us)),
                 ("batched8_speedup", Json::from(sp8.speedup)),
+            ]),
+        ),
+        (
+            "packed_kernels",
+            obj(vec![
+                ("elems", Json::from(ks.len())),
+                ("fp8_bytes_per_sec", Json::from(fp8_bps)),
+                ("fp8_scalar_bytes_per_sec", Json::from(fp8_scalar_bps)),
+                ("fp8_speedup", Json::from(fp8_speedup)),
+                ("fp4_bytes_per_sec", Json::from(fp4_bps)),
+                ("fp4_scalar_bytes_per_sec", Json::from(fp4_scalar_bps)),
+                ("fp4_speedup", Json::from(fp4_speedup)),
             ]),
         ),
         (

@@ -9,14 +9,33 @@
 //! swaps read the corrupted cache through the fused packed kernels
 //! ([`crate::tensor::add_sub_assign_packed`]), decoding bytes inline
 //! instead of dequantizing whole tensors into scratch first.
+//!
+//! ## Cache blocking
+//!
+//! Assembly streams in [`ASM_TILE`]-element tiles (4 KiB of f32), and
+//! the multi-channel entry point ([`Assembler::assemble_channels`])
+//! walks all destination channels *inside* the tile loop: each packed
+//! corrupt plane's words are decoded once per assembly pass and the
+//! decoded tile applied to every destination that swaps that source,
+//! instead of re-decoding the plane once per destination channel. The
+//! per-group corrupt bases get the same treatment
+//! ([`Assembler::rebuild_corrupt_base`]): one decode per source plane
+//! per tile, accumulated into every group that contains the source.
+//! Tiling never reorders arithmetic — per element, each destination
+//! sees the same operations in the same source order as the untiled
+//! per-channel loop (source lists are ascending by construction, see
+//! `Assembler::new`), so results stay bit-identical.
 
 use crate::model::{Graph, Manifest, NodeId};
-use crate::tensor::{
-    accumulate_quantized_packed, add_assign, add_assign_packed, add_sub_assign_packed,
-    add_sub_assign_packed_rev, QTensor, Tensor,
-};
+use crate::quant::accumulate_quantized;
+use crate::tensor::{add_assign, add_sub_assign, QTensor, Tensor};
 
 use super::policy::Policy;
+
+/// Elements per assembly tile: 4 KiB of f32 keeps a decoded source
+/// tile, a destination tile or three, and the clean plane's span
+/// L1-resident together.
+const ASM_TILE: usize = 1024;
 
 // ---------------------------------------------------------------------------
 // Patch masks
@@ -125,7 +144,10 @@ impl Scratch {
 /// the scratch pool; assembles channel inputs against the caller's node
 /// outputs and packed corrupt cache.
 pub(crate) struct Assembler {
-    /// distinct source sets (all head channels of one layer share theirs)
+    /// distinct source sets (all head channels of one layer share theirs);
+    /// each list is ascending (graph sources are sorted), which is what
+    /// lets the tiled passes iterate sources globally without reordering
+    /// any group's accumulation
     groups: Vec<Vec<NodeId>>,
     /// channel index -> group id
     chan_group: Vec<usize>,
@@ -144,6 +166,7 @@ impl Assembler {
         let mut chan_group = Vec::with_capacity(channels.len());
         for ch in channels {
             let srcs = graph.sources(*ch);
+            debug_assert!(srcs.windows(2).all(|w| w[0] < w[1]), "sources must be ascending");
             let gid = groups.iter().position(|g| *g == srcs).unwrap_or_else(|| {
                 groups.push(srcs.clone());
                 groups.len() - 1
@@ -157,20 +180,38 @@ impl Assembler {
         self.chan_group[ci]
     }
 
-    /// Recompute the per-group corrupt base sums from a (packed) cache.
+    /// Recompute the per-group corrupt base sums from a (packed) cache,
+    /// cache-blocked: per tile, each source plane is decoded once and
+    /// accumulated into every group containing it. Groups hold ascending
+    /// source lists, so the ascending global source walk adds each
+    /// group's sources in exactly the order the per-group loop did —
+    /// bit-identical sums.
     pub(crate) fn rebuild_corrupt_base(&mut self, cache: &[QTensor]) {
         let bsd = self.scratch.base.len();
-        self.corrupt_base = self
-            .groups
-            .iter()
-            .map(|srcs| {
-                let mut base = vec![0.0f32; bsd];
-                for &s in srcs {
-                    add_assign_packed(&mut base, &cache[s]);
+        let mut bases = vec![vec![0.0f32; bsd]; self.groups.len()];
+        // source -> groups that contain it
+        let mut users: Vec<Vec<usize>> = vec![Vec::new(); cache.len()];
+        for (gid, srcs) in self.groups.iter().enumerate() {
+            for &s in srcs {
+                users[s].push(gid);
+            }
+        }
+        let mut tile = [0.0f32; ASM_TILE];
+        let mut off = 0;
+        while off < bsd {
+            let len = (bsd - off).min(ASM_TILE);
+            for (s, gids) in users.iter().enumerate() {
+                if gids.is_empty() {
+                    continue;
                 }
-                base
-            })
-            .collect();
+                cache[s].decode_range_into(off, &mut tile[..len]);
+                for &gid in gids {
+                    add_assign(&mut bases[gid][off..off + len], &tile[..len]);
+                }
+            }
+            off += len;
+        }
+        self.corrupt_base = bases;
     }
 
     /// Σ of current node outputs over a group's sources into scratch.base
@@ -196,42 +237,279 @@ impl Assembler {
         cache: &[QTensor],
         dst: &mut [f32],
     ) {
-        let gid = self.chan_group[ci];
+        self.assemble_channels(&[ci], patches, policy, node_out, cache, &mut [dst]);
+    }
+
+    /// Assemble several channels of ONE source group in a single
+    /// cache-blocked pass. All `cis` must share a group, and `dsts`
+    /// pairs with `cis`. Per [`ASM_TILE`]-sized tile, each packed source
+    /// plane is decoded once and its tile applied to every destination
+    /// whose patch mask swaps that source — the plane's words are
+    /// touched once per assembly pass, not once per destination.
+    ///
+    /// Bit-identity with the historical per-channel loop: every
+    /// destination still receives, per element, the same start value
+    /// (clean or corrupt base) and the same add/sub swaps in the same
+    /// ascending source order; only the loop nesting changed.
+    pub(crate) fn assemble_channels(
+        &self,
+        cis: &[usize],
+        patches: &PatchMask,
+        policy: &Policy,
+        node_out: &[Tensor],
+        cache: &[QTensor],
+        dsts: &mut [&mut [f32]],
+    ) {
+        debug_assert_eq!(cis.len(), dsts.len());
+        if cis.is_empty() {
+            return;
+        }
+        let gid = self.chan_group[cis[0]];
+        debug_assert!(cis.iter().all(|&ci| self.chan_group[ci] == gid));
         let srcs = &self.groups[gid];
-        let mask = patches.mask(ci);
+        let src_bits = srcs.iter().fold(0u128, |m, &s| m | 1 << s);
+        let masks: Vec<u128> = cis.iter().map(|&ci| patches.mask(ci) & src_bits).collect();
+        let n = dsts.first().map_or(0, |d| d.len());
+        debug_assert!(dsts.iter().all(|d| d.len() == n));
+        let mut tile = [0.0f32; ASM_TILE];
 
         if !policy.resid.is_passthrough() {
-            // RTN-Q path: sequential quantized accumulation — order matters
-            // for mantissa loss, so this mirrors "sum in fp8" faithfully.
+            // RTN-Q path: sequential quantized accumulation — order
+            // matters for mantissa loss, so per destination this mirrors
+            // "sum in fp8" faithfully, tile by tile.
+            for d in dsts.iter_mut() {
+                d.fill(0.0);
+            }
+            let mut off = 0;
+            while off < n {
+                let len = (n - off).min(ASM_TILE);
+                for &src in srcs {
+                    if masks.iter().any(|m| m >> src & 1 == 1) {
+                        cache[src].decode_range_into(off, &mut tile[..len]);
+                    }
+                    for (d, m) in dsts.iter_mut().zip(&masks) {
+                        let x: &[f32] = if m >> src & 1 == 1 {
+                            &tile[..len]
+                        } else {
+                            &node_out[src].data[off..off + len]
+                        };
+                        accumulate_quantized(&mut d[off..off + len], x, policy.resid);
+                    }
+                }
+                off += len;
+            }
+            return;
+        }
+
+        // Fast path: per destination, start from whichever base needs
+        // fewer swaps, then splice per-source deltas. `few[i]` chooses
+        // the direction exactly as the per-channel loop did.
+        let few: Vec<bool> =
+            masks.iter().map(|m| (m.count_ones() as usize) * 2 <= srcs.len()).collect();
+        let mut off = 0;
+        while off < n {
+            let len = (n - off).min(ASM_TILE);
+            for (d, &fw) in dsts.iter_mut().zip(&few) {
+                let from = if fw { &self.scratch.base } else { &self.corrupt_base[gid] };
+                d[off..off + len].copy_from_slice(&from[off..off + len]);
+            }
+            for &src in srcs {
+                // a destination swaps this source when it is patched
+                // under a few-patched mask (corruption spliced in) or
+                // unpatched under a mostly-patched one (clean spliced
+                // back) — i.e. when the patch bit equals `few`
+                let swaps = |i: usize| (masks[i] >> src & 1 == 1) == few[i];
+                if !(0..masks.len()).any(swaps) {
+                    continue;
+                }
+                cache[src].decode_range_into(off, &mut tile[..len]);
+                let clean = &node_out[src].data[off..off + len];
+                for (i, d) in dsts.iter_mut().enumerate() {
+                    if (masks[i] >> src & 1 == 1) != few[i] {
+                        continue;
+                    }
+                    if few[i] {
+                        add_sub_assign(&mut d[off..off + len], &tile[..len], clean);
+                    } else {
+                        add_sub_assign(&mut d[off..off + len], clean, &tile[..len]);
+                    }
+                }
+            }
+            off += len;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{FP32, FP8_E4M3};
+    use crate::tensor::{
+        accumulate_quantized_packed, add_assign_packed, add_sub_assign_packed,
+        add_sub_assign_packed_rev,
+    };
+    use crate::util::rng::Rng;
+
+    /// Untiled reference: the historical per-channel assembly loop,
+    /// kept verbatim as the oracle for the cache-blocked pass.
+    fn assemble_channel_reference(
+        asm: &Assembler,
+        ci: usize,
+        patches: &PatchMask,
+        policy: &Policy,
+        node_out: &[Tensor],
+        cache: &[QTensor],
+        dst: &mut [f32],
+    ) {
+        let gid = asm.chan_group[ci];
+        let srcs = &asm.groups[gid];
+        let mask = patches.mask(ci);
+        if !policy.resid.is_passthrough() {
             dst.fill(0.0);
             for &src in srcs {
                 if mask >> src & 1 == 1 {
                     accumulate_quantized_packed(dst, &cache[src], policy.resid);
                 } else {
-                    crate::quant::accumulate_quantized(dst, &node_out[src].data, policy.resid);
+                    accumulate_quantized(dst, &node_out[src].data, policy.resid);
                 }
             }
             return;
         }
-
         let n_patched = (mask & srcs.iter().fold(0u128, |m, &s| m | 1 << s)).count_ones() as usize;
         if n_patched == 0 {
-            dst.copy_from_slice(&self.scratch.base);
+            dst.copy_from_slice(&asm.scratch.base);
         } else if n_patched * 2 <= srcs.len() {
-            // few patches: start from the clean base, swap in corruptions
-            dst.copy_from_slice(&self.scratch.base);
+            dst.copy_from_slice(&asm.scratch.base);
             for &src in srcs {
                 if mask >> src & 1 == 1 {
                     add_sub_assign_packed(dst, &cache[src], &node_out[src].data);
                 }
             }
         } else {
-            // mostly patched: start from the corrupt base, swap clean back
-            dst.copy_from_slice(&self.corrupt_base[gid]);
+            dst.copy_from_slice(&asm.corrupt_base[gid]);
             for &src in srcs {
                 if mask >> src & 1 != 1 {
                     add_sub_assign_packed_rev(dst, &node_out[src].data, &cache[src]);
                 }
+            }
+        }
+    }
+
+    /// Untiled reference for the corrupt bases.
+    fn rebuild_corrupt_base_reference(asm: &Assembler, cache: &[QTensor]) -> Vec<Vec<f32>> {
+        let bsd = asm.scratch.base.len();
+        asm.groups
+            .iter()
+            .map(|srcs| {
+                let mut base = vec![0.0f32; bsd];
+                for &s in srcs {
+                    add_assign_packed(&mut base, &cache[s]);
+                }
+                base
+            })
+            .collect()
+    }
+
+    /// A hand-built assembler over synthetic source groups (no Graph
+    /// needed — `Manifest` is a plain struct): `bsd`-element planes,
+    /// one channel per entry of `chan_group`.
+    fn synthetic_assembler(
+        bsd: usize,
+        groups: Vec<Vec<NodeId>>,
+        chan_group: Vec<usize>,
+    ) -> Assembler {
+        let manifest = Manifest {
+            name: "synthetic-asm".into(),
+            n_layer: 1,
+            n_head: 1,
+            d_model: 1,
+            d_head: 1,
+            d_mlp: 0,
+            seq_len: bsd,
+            vocab: 1,
+            batch: 1,
+            n_params: 0,
+            params: Vec::new(),
+            artifacts: Vec::new(),
+            dir: std::path::PathBuf::new(),
+        };
+        let mut asm = Assembler {
+            groups,
+            chan_group,
+            corrupt_base: Vec::new(),
+            scratch: Scratch::new(&manifest),
+        };
+        assert_eq!(asm.scratch.base.len(), bsd);
+        asm.scratch.base.fill(0.0);
+        asm
+    }
+
+    /// Random clean node outputs plus a corrupt cache mixing every
+    /// packed width (fp8 / bf16 / fp4 / f32) across sources.
+    fn synthetic_world(r: &mut Rng, bsd: usize, n_src: usize) -> (Vec<Tensor>, Vec<QTensor>) {
+        let node_out: Vec<Tensor> = (0..n_src)
+            .map(|_| Tensor::from_vec(&[bsd], (0..bsd).map(|_| r.normal()).collect()).unwrap())
+            .collect();
+        let cache: Vec<QTensor> = (0..n_src)
+            .map(|i| {
+                let xs: Vec<f32> = (0..bsd).map(|_| r.normal() * 4.0).collect();
+                let f = [FP8_E4M3, crate::quant::BF16, crate::quant::FP4_E2M1, FP32][i % 4];
+                QTensor::from_slice(&[bsd], &xs, f)
+            })
+            .collect();
+        (node_out, cache)
+    }
+
+    #[test]
+    fn tiled_corrupt_base_matches_per_group_reference() {
+        let mut r = Rng::new(21);
+        // lengths below / at / ragged-past the tile size
+        for bsd in [5usize, ASM_TILE, ASM_TILE * 2 + 357] {
+            let groups = vec![vec![0, 1, 2, 3], vec![1, 3], vec![0, 1, 2, 3, 4, 5]];
+            let mut asm = synthetic_assembler(bsd, groups, vec![0, 1, 2]);
+            let (_, cache) = synthetic_world(&mut r, bsd, 6);
+            asm.rebuild_corrupt_base(&cache);
+            let want = rebuild_corrupt_base_reference(&asm, &cache);
+            assert_eq!(asm.corrupt_base, want, "bsd={bsd}");
+        }
+    }
+
+    #[test]
+    fn tiled_multi_channel_assembly_matches_per_channel_reference() {
+        let mut r = Rng::new(22);
+        let bsd = ASM_TILE + 123; // straddles a tile boundary
+        let n_chan = 4;
+        // all four channels share one deduped source group, as a layer's
+        // head channels do in the real session
+        let srcs: Vec<NodeId> = (0..6).collect();
+        let mut asm = synthetic_assembler(bsd, vec![srcs], vec![0; n_chan]);
+        let (node_out, cache) = synthetic_world(&mut r, bsd, 6);
+        asm.rebuild_corrupt_base(&cache);
+        asm.scratch.base.fill(0.0);
+        for s in 0..6 {
+            add_assign(&mut asm.scratch.base, &node_out[s].data);
+        }
+        for policy in [Policy::fp32(), Policy::pahq(FP8_E4M3), Policy::rtn(FP8_E4M3)] {
+            // masks spanning empty / few / mostly / all patched
+            let mut patches = PatchMask::empty(n_chan);
+            for (ci, bits) in [0u128, 0b000010, 0b111011, 0b111111].into_iter().enumerate() {
+                for s in 0..6 {
+                    patches.set(ci, s, bits >> s & 1 == 1);
+                }
+            }
+            let mut tiled = vec![vec![0.0f32; bsd]; n_chan];
+            {
+                let mut dsts: Vec<&mut [f32]> =
+                    tiled.iter_mut().map(|v| v.as_mut_slice()).collect();
+                let cis: Vec<usize> = (0..n_chan).collect();
+                asm.assemble_channels(&cis, &patches, &policy, &node_out, &cache, &mut dsts);
+            }
+            for (ci, got) in tiled.iter().enumerate() {
+                let mut want = vec![0.0f32; bsd];
+                assemble_channel_reference(
+                    &asm, ci, &patches, &policy, &node_out, &cache, &mut want,
+                );
+                assert_eq!(got, &want, "channel {ci} policy {:?}", policy.resid);
             }
         }
     }

@@ -497,42 +497,68 @@ impl PatchedForward {
             let head_ch = Channel::Head { layer: l, head: 0, comp: 0 };
             let head_gid = self.asm.group_of(self.chan_idx[&head_ch]);
             self.asm.compute_group_base(head_gid, policy, &self.node_out);
-            // Assemble each distinct patch mask once and memcpy for the
-            // duplicates — within a layer, most of the 3*H channels share
+            // Assemble each distinct patch mask once — all of them in a
+            // single cache-blocked pass (each packed corrupt plane is
+            // decoded once per tile for every distinct mask, see
+            // `Assembler::assemble_channels`) — then memcpy for the
+            // duplicates. Within a layer, most of the 3*H channels share
             // the same mask (usually the empty one). This matters most for
             // the RTN session, whose sequential quantized accumulation is
             // the expensive faithful path (EXPERIMENTS.md §Perf).
-            let mut assembled: Vec<(u128, u8, usize)> = Vec::new(); // (mask, comp, head)
+            let mut owners: Vec<(u128, u8, usize, usize)> = Vec::new(); // (mask, comp, head, ci)
+            let mut owner_of = vec![0usize; 3 * h]; // [comp * h + head] -> owners index
             for comp in 0..3u8 {
                 for head in 0..h {
                     let ci = self.chan_idx[&Channel::Head { layer: l, head, comp }];
                     debug_assert_eq!(self.asm.group_of(ci), head_gid);
                     let mask = patches.mask(ci);
-                    let dup = assembled.iter().find(|&&(m, _, _)| m == mask).copied();
-                    let mut qkv = std::mem::take(&mut self.asm.scratch.qkv[comp as usize]);
-                    match dup {
-                        Some((_, src_comp, src_head)) if src_comp == comp => {
-                            qkv.copy_within(src_head * bsd..(src_head + 1) * bsd, head * bsd);
-                        }
-                        Some((_, src_comp, src_head)) => {
-                            let src_buf = &self.asm.scratch.qkv[src_comp as usize];
-                            qkv[head * bsd..(head + 1) * bsd]
-                                .copy_from_slice(&src_buf[src_head * bsd..(src_head + 1) * bsd]);
-                        }
-                        None => {
-                            self.asm.assemble_channel(
-                                ci,
-                                patches,
-                                policy,
-                                &self.node_out,
-                                &self.corrupt_cache,
-                                &mut qkv[head * bsd..(head + 1) * bsd],
-                            );
-                            assembled.push((mask, comp, head));
-                        }
-                    }
-                    self.asm.scratch.qkv[comp as usize] = qkv;
+                    let idx = owners.iter().position(|&(m, ..)| m == mask).unwrap_or_else(|| {
+                        owners.push((mask, comp, head, ci));
+                        owners.len() - 1
+                    });
+                    owner_of[comp as usize * h + head] = idx;
                 }
+            }
+            let mut qkv_bufs = [0, 1, 2].map(|c| std::mem::take(&mut self.asm.scratch.qkv[c]));
+            {
+                let mut parts: Vec<Vec<Option<&mut [f32]>>> =
+                    qkv_bufs.iter_mut().map(|b| b.chunks_mut(bsd).map(Some).collect()).collect();
+                let cis: Vec<usize> = owners.iter().map(|&(.., ci)| ci).collect();
+                let mut dsts: Vec<&mut [f32]> = owners
+                    .iter()
+                    .map(|&(_, comp, head, _)| {
+                        parts[comp as usize][head].take().expect("distinct owner slot")
+                    })
+                    .collect();
+                self.asm.assemble_channels(
+                    &cis,
+                    patches,
+                    policy,
+                    &self.node_out,
+                    &self.corrupt_cache,
+                    &mut dsts,
+                );
+            }
+            for comp in 0..3usize {
+                for head in 0..h {
+                    let (_, oc, oh, _) = owners[owner_of[comp * h + head]];
+                    let oc = oc as usize;
+                    if (oc, oh) == (comp, head) {
+                        continue;
+                    }
+                    if oc == comp {
+                        qkv_bufs[comp].copy_within(oh * bsd..(oh + 1) * bsd, head * bsd);
+                    } else {
+                        let (lo, hi) = qkv_bufs.split_at_mut(comp.max(oc));
+                        let (src_buf, dst_buf) =
+                            if oc < comp { (&lo[oc], &mut hi[0]) } else { (&hi[0], &mut lo[comp]) };
+                        dst_buf[head * bsd..(head + 1) * bsd]
+                            .copy_from_slice(&src_buf[oh * bsd..(oh + 1) * bsd]);
+                    }
+                }
+            }
+            for (c, buf) in qkv_bufs.into_iter().enumerate() {
+                self.asm.scratch.qkv[c] = buf;
             }
 
             // mixed-precision weights + qp rows

@@ -11,6 +11,13 @@
 //! comment in quantize.py — identical steps, identical rounding
 //! (`round_ties_even`), identical quantum construction via exponent bit
 //! placement.
+//!
+//! [`accumulate_quantized`] is the RTN lattice walk the packed kernels
+//! must respect: each step is `acc = fq(acc + fq(x), f)` in element
+//! order, so any vectorization of the packed variant
+//! (`tensor::accumulate_quantized_packed`) may only batch the *decode*
+//! of `x` — the accumulation itself is a sequential data dependence
+//! through `fq` and is re-run here verbatim on each decoded tile.
 
 use crate::tensor::Tensor;
 

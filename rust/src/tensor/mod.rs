@@ -10,7 +10,10 @@
 //! (weight planes, corrupted-activation caches) lives in format-native
 //! packed storage ([`QTensor`], see [`qtensor`]) with fused
 //! decode-accumulate kernels so the assembly loop reads packed bytes
-//! directly.
+//! directly. The kernels decode word-parallel — 64-bit payload words
+//! expanded through per-format LUTs or the u16 bit rebase (see the
+//! [`qtensor`] module doc) — and stay bit-identical to the scalar
+//! decode they replaced.
 
 pub mod qtensor;
 

@@ -460,6 +460,137 @@ fn packed_kernels_bitwise_match_plain_ops() {
 }
 
 #[test]
+fn word_parallel_decode_matches_scalar_on_word_boundaries() {
+    // The PR 7 word-parallel decoders vs the retained scalar oracle
+    // (`decode_range_into_scalar`): every packed format, adversarial
+    // lengths around the 64-bit word size (8 fp8 lanes / 16 fp4 nibbles
+    // / 4 u16 lanes per word), unaligned range starts that straddle a
+    // word — including odd nibble offsets — and special values (±0,
+    // Inf saturating to maxv, the format-subnormal ladder, flushed f32
+    // subnormals) packed into the same word.
+    let mut rng = Rng::new(818);
+    let lens = [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 64, 79];
+    let starts = [0usize, 1, 3, 5, 7, 8, 9, 15, 16, 17];
+    for f in PACKED_FORMATS {
+        let m = f.mbits as i32;
+        let emin = f.emin as i32;
+        let mut raw: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f.maxv,
+            -f.maxv,
+            2f32.powi(emin),         // smallest normal
+            2f32.powi(emin - m),     // smallest format subnormal
+            -(2f32.powi(emin - m)),
+            2f32.powi(emin - m - 1), // below half the quantum: rounds to zero
+            1e-45, // f32 subnormal: flushed to zero before encode
+            -1e-42,
+            1.0,
+            -1.0,
+        ];
+        while raw.len() < 96 {
+            raw.push(rng.normal() * 8.0);
+        }
+        let qt = QTensor::from_slice(&[raw.len()], &raw, f);
+        for &n in &lens {
+            for &start in &starts {
+                if start + n > raw.len() {
+                    continue;
+                }
+                let mut wide = vec![f32::NAN; n];
+                let mut scalar = vec![f32::NAN; n];
+                qt.decode_range_into(start, &mut wide);
+                qt.decode_range_into_scalar(start, &mut scalar);
+                for i in 0..n {
+                    assert_eq!(
+                        wide[i].to_bits(),
+                        scalar[i].to_bits(),
+                        "{f:?} start={start} n={n} [{i}]: wide {} vs scalar {}",
+                        wide[i],
+                        scalar[i]
+                    );
+                }
+            }
+        }
+    }
+    // NaN lanes ride the f32 passthrough payload only: the packed
+    // formats have no NaN encoding (Inf/NaN-free by construction — fq
+    // saturates Inf and rejects NaN), so passthrough is where NaN bit
+    // patterns must survive the word loop untouched.
+    let raw = [f32::NAN, -0.0, f32::INFINITY, -f32::NAN, 1e-45, 2.5, f32::NEG_INFINITY, 0.0];
+    let qt = QTensor::from_slice(&[raw.len()], &raw, quant::FP32);
+    for start in 0..raw.len() {
+        let n = raw.len() - start;
+        let mut wide = vec![0.0f32; n];
+        let mut scalar = vec![0.0f32; n];
+        qt.decode_range_into(start, &mut wide);
+        qt.decode_range_into_scalar(start, &mut scalar);
+        for i in 0..n {
+            assert_eq!(wide[i].to_bits(), scalar[i].to_bits(), "fp32 passthrough [{start}+{i}]");
+        }
+    }
+}
+
+#[test]
+fn fused_kernels_match_scalar_composition_on_word_boundaries() {
+    // Each fused word-parallel kernel vs its scalar-oracle composition
+    // (`decode_range_into_scalar` + the plain f32 op) at lengths that
+    // exercise empty inputs, the unrolled word body, and every
+    // head/tail combination — bitwise, for every packed format plus
+    // the f32 passthrough.
+    let mut rng = Rng::new(919);
+    let mut formats = PACKED_FORMATS.to_vec();
+    formats.push(quant::FP32);
+    for f in formats {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 255, 256, 257] {
+            let raw: Vec<f32> = (0..n).map(|_| rng.normal() * 8.0).collect();
+            let other: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let qt = QTensor::from_slice(&[n], &raw, f);
+            let mut dec = vec![0.0f32; n];
+            qt.decode_range_into_scalar(0, &mut dec);
+
+            let mut a = base.clone();
+            add_assign_packed(&mut a, &qt);
+            let mut aw = base.clone();
+            add_assign(&mut aw, &dec);
+            let mut b = base.clone();
+            add_sub_assign_packed(&mut b, &qt, &other);
+            let mut bw = base.clone();
+            add_sub_assign(&mut bw, &dec, &other);
+            let mut c = base.clone();
+            add_sub_assign_packed_rev(&mut c, &other, &qt);
+            let mut cw = base.clone();
+            add_sub_assign(&mut cw, &other, &dec);
+            let mut d = base.clone();
+            accumulate_quantized_packed(&mut d, &qt, quant::FP8_E4M3);
+            let mut dw = base.clone();
+            quant::accumulate_quantized(&mut dw, &dec, quant::FP8_E4M3);
+            for i in 0..n {
+                assert_eq!(a[i].to_bits(), aw[i].to_bits(), "add_assign_packed {f:?} n={n} [{i}]");
+                assert_eq!(
+                    b[i].to_bits(),
+                    bw[i].to_bits(),
+                    "add_sub_assign_packed {f:?} n={n} [{i}]"
+                );
+                assert_eq!(
+                    c[i].to_bits(),
+                    cw[i].to_bits(),
+                    "add_sub_assign_packed_rev {f:?} n={n} [{i}]"
+                );
+                assert_eq!(
+                    d[i].to_bits(),
+                    dw[i].to_bits(),
+                    "accumulate_quantized_packed {f:?} n={n} [{i}]"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn packed_corrupt_cache_keeps_sweep_bit_identity() {
     // The tentpole invariant at the sweep level: running the greedy sweep
     // over a damage surface assembled from a PACKED corrupt cache gives

@@ -22,14 +22,19 @@ Checks (stdlib only):
 3. **Correctness** — every sweep mode in the snapshot reports the same
    kept-set hash (batched bit-identity), and batched modes do not
    inflate evaluations beyond the speculation model's bound.
+4. **Packed-kernel throughput** — `packed_kernels.{fp8,fp4}_bytes_per_sec`
+   (the word-parallel fused decode-accumulate kernels) against the
+   baseline floors with the same tolerance applied downward, plus the
+   machine-independent wide-vs-scalar speedup ratio against
+   `packed_kernels.min_speedup` (the PR 7 acceptance floor, 2x).
 
 With --matrix the current artifact is a `pahq matrix` manifest instead:
 
-4. **Cache effectiveness floor** — cross-run reuse must be real: the
+5. **Cache effectiveness floor** — cross-run reuse must be real: the
    gate fails when the quick grid reports zero corrupt-cache hits (or
    zero attribution-score hits), so the matrix's reuse cannot silently
    regress to N isolated runs.
-5. **matrix_quick_wall** — the grid's `wall_seconds_total` against the
+6. **matrix_quick_wall** — the grid's `wall_seconds_total` against the
    baseline's `matrix_quick_wall` field, same regress bound as the
    sweep wall gate.
 
@@ -175,6 +180,48 @@ def main():
         )
         if cur_mem > limit:
             failures.append(f"measured packed memory regressed: {cur_mem} > {limit:.0f}")
+
+    # 4. word-parallel packed-kernel throughput: absolute bytes/sec
+    #    floors (same tolerance, applied downward: slower than
+    #    baseline*(1-tol) fails) and the machine-independent
+    #    wide-vs-scalar speedup floor
+    base_pk = base.get("packed_kernels") or {}
+    cur_pk = cur.get("packed_kernels") or {}
+    min_speedup = base_pk.get("min_speedup")
+    for fmt in ("fp8", "fp4"):
+        base_bps = base_pk.get(f"{fmt}_bytes_per_sec")
+        cur_bps = cur_pk.get(f"{fmt}_bytes_per_sec")
+        if base_bps is None:
+            print(f"kern  gate skipped: baseline {fmt}_bytes_per_sec is null")
+        elif cur_bps is None:
+            failures.append(f"snapshot has no packed_kernels.{fmt}_bytes_per_sec to gate")
+        else:
+            limit = base_bps * (1 - args.max_wall_regress)
+            status = "FAIL" if cur_bps < limit else "ok"
+            print(
+                f"kern  [{status}]: {fmt} fused kernel {cur_bps / 1e9:.2f} GB/s vs "
+                f"baseline {base_bps / 1e9:.2f} GB/s (floor {limit / 1e9:.2f})"
+            )
+            if cur_bps < limit:
+                failures.append(
+                    f"{fmt} packed kernel throughput regressed: {cur_bps:.3e} < {limit:.3e} B/s"
+                )
+        cur_speedup = cur_pk.get(f"{fmt}_speedup")
+        if min_speedup is None:
+            print(f"spdup gate skipped for {fmt}: baseline packed_kernels.min_speedup is null")
+        elif cur_speedup is None:
+            failures.append(f"snapshot has no packed_kernels.{fmt}_speedup to gate")
+        else:
+            status = "FAIL" if cur_speedup < min_speedup else "ok"
+            print(
+                f"spdup [{status}]: {fmt} wide-vs-scalar {cur_speedup:.2f}x "
+                f"(floor {min_speedup:.1f}x)"
+            )
+            if cur_speedup < min_speedup:
+                failures.append(
+                    f"{fmt} word-parallel speedup below floor: "
+                    f"{cur_speedup:.2f}x < {min_speedup:.1f}x"
+                )
 
     if failures:
         print("\nperf gate FAILED:")
