@@ -1,0 +1,243 @@
+//! A complete `pahq serve` client — the README "Serving" example and
+//! the CI serve-smoke driver.
+//!
+//! Speaks the framed wire protocol from `docs/serve_protocol.md` using
+//! the same [`pahq::serve::protocol`] codec the daemon uses: handshake
+//! (`hello` / `hello_ack`), one quick synthetic-substrate submission,
+//! then the streamed `progress` / `record` frames until the job's
+//! terminal `done`. Every received record is parsed back through
+//! [`RunRecord::from_json`], which enforces the record schema version.
+//!
+//! Modes (after the server address):
+//! - *(default)* submit one `submit_run` spec and stream it to `done`
+//! - `--matrix`  submit a two-task synthetic matrix (several cells)
+//! - `--cancel`  submit the matrix, then immediately `cancel` it and
+//!   report how many queued cells the server dropped
+//! - `--shutdown` ask the daemon to drain and exit
+//! - `--json PATH` additionally log every frame payload (sent and
+//!   received) as JSONL for `scripts/check_schema.py --serve-frames`
+//!
+//! Run: `pahq serve --addr 127.0.0.1:7341 &` then
+//! `cargo run --release --example serve_client -- 127.0.0.1:7341`
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use pahq::api::{MatrixSpec, RunSpec, Substrate};
+use pahq::discovery::RunRecord;
+use pahq::serve::protocol::{encode, Message, PROTOCOL_VERSION};
+use pahq::serve::{FrameReader, ReadEvent};
+use pahq::util::json::Json;
+
+/// Sent/received frame payloads, mirrored to `--json PATH` as JSONL so
+/// CI can schema-validate a live conversation.
+struct FrameLog {
+    lines: Vec<String>,
+    path: Option<String>,
+}
+
+impl FrameLog {
+    fn log(&mut self, direction: &str, msg: &Message) {
+        // direction is a comment for humans reading the file; the
+        // schema checker validates the `frame` payload
+        self.lines.push(
+            Json::Obj(
+                [
+                    ("direction".to_string(), Json::from(direction)),
+                    ("frame".to_string(), msg.to_json()),
+                ]
+                .into_iter()
+                .collect(),
+            )
+            .dump(),
+        );
+    }
+
+    fn flush(&self) -> Result<()> {
+        if let Some(path) = &self.path {
+            std::fs::write(path, self.lines.join("\n") + "\n")
+                .with_context(|| format!("writing frame log {path}"))?;
+            println!("frame log: {path} ({} frames)", self.lines.len());
+        }
+        Ok(())
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: FrameReader,
+    log: FrameLog,
+}
+
+impl Client {
+    fn connect(addr: &str, log_path: Option<String>) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+        Ok(Client {
+            stream,
+            reader: FrameReader::new(),
+            log: FrameLog { lines: Vec::new(), path: log_path },
+        })
+    }
+
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.log.log("client->server", msg);
+        self.stream.write_all(&encode(msg)?)?;
+        Ok(())
+    }
+
+    /// Block until the next frame (tolerating read timeouts).
+    fn recv(&mut self) -> Result<Message> {
+        loop {
+            match self.reader.next(&mut self.stream)? {
+                ReadEvent::Frame(msg) => {
+                    self.log.log("server->client", &msg);
+                    return Ok(msg);
+                }
+                ReadEvent::Pending => {}
+                ReadEvent::Eof => bail!("server closed the connection"),
+            }
+        }
+    }
+
+    fn handshake(&mut self) -> Result<()> {
+        self.send(&Message::Hello { protocol: PROTOCOL_VERSION })?;
+        match self.recv()? {
+            Message::HelloAck { protocol, record_schema } => {
+                println!("connected: protocol v{protocol}, record schema v{record_schema}");
+                Ok(())
+            }
+            other => bail!("expected hello_ack, got '{}'", other.kind()),
+        }
+    }
+
+    /// Stream one job's frames to its terminal `done`, validating every
+    /// record through the schema-versioned parser. Returns the records.
+    fn stream_job(&mut self, job_id: u64) -> Result<Vec<RunRecord>> {
+        let mut records = Vec::new();
+        loop {
+            match self.recv()? {
+                Message::Progress { done, total, cell, coalesced, .. } => {
+                    let note = if coalesced > 0 {
+                        format!(" (+{coalesced} coalesced)")
+                    } else {
+                        String::new()
+                    };
+                    println!("  progress {done}/{total}: {cell}{note}");
+                }
+                Message::Record { cell, record, .. } => {
+                    let rec = RunRecord::from_json(&record)
+                        .with_context(|| format!("cell {cell}: invalid record"))?;
+                    println!(
+                        "  record {cell}: kept {}/{} edges, hash {}",
+                        rec.n_kept, rec.n_edges, rec.kept_hash
+                    );
+                    records.push(rec);
+                }
+                Message::CellError { cell, error, .. } => {
+                    println!("  cell {cell} FAILED: {error}");
+                }
+                Message::CancelAck { dropped, .. } => {
+                    println!("  cancel acknowledged: {dropped} queued cell(s) dropped");
+                }
+                Message::Done { ok, failed, cancelled, .. } => {
+                    println!(
+                        "done: job {job_id} — {ok} ok, {failed} failed, {cancelled} cancelled"
+                    );
+                    return Ok(records);
+                }
+                Message::Error { code, message } => {
+                    bail!("server error {:?}: {message}", code)
+                }
+                other => bail!("unexpected frame '{}'", other.kind()),
+            }
+        }
+    }
+
+    fn submit(&mut self, msg: &Message) -> Result<(u64, usize)> {
+        self.send(msg)?;
+        match self.recv()? {
+            Message::Accepted { job_id, cells } => {
+                println!("accepted: job {job_id}, {cells} cell(s)");
+                Ok((job_id, cells))
+            }
+            Message::Error { code, message } => bail!("submission refused {:?}: {message}", code),
+            other => bail!("expected accepted, got '{}'", other.kind()),
+        }
+    }
+}
+
+/// A quick spec the daemon can run anywhere: the synthetic substrate
+/// needs no engine artifacts, so this works in CI and on a laptop.
+fn quick_run_spec() -> Result<RunSpec> {
+    RunSpec::builder("redwood2l-sim", "ioi")
+        .method("pahq".parse()?)
+        .tau(0.01)
+        .substrate(Substrate::Synthetic)
+        .build()
+}
+
+/// A small two-task matrix (several cells) for the cancel/matrix modes.
+fn quick_matrix_spec() -> Result<MatrixSpec> {
+    MatrixSpec::from_wire(&Json::parse(
+        r#"{"models": ["redwood2l-sim"], "tasks": ["ioi", "greater_than"],
+            "methods": ["acdc", "eap"], "policies": ["fp32", "pahq"]}"#,
+    )?)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let addr = args.first().context(
+        "usage: serve_client <ADDR> [--matrix | --cancel | --shutdown] [--json PATH]",
+    )?;
+    let mode = args.iter().find(|a| matches!(a.as_str(), "--matrix" | "--cancel" | "--shutdown"));
+    let log_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let mut client = Client::connect(addr, log_path)?;
+    client.handshake()?;
+
+    match mode.map(String::as_str) {
+        None => {
+            let spec = quick_run_spec()?;
+            let (job_id, _) = client.submit(&Message::SubmitRun { spec })?;
+            let records = client.stream_job(job_id)?;
+            if records.len() != 1 {
+                bail!("expected exactly one record, got {}", records.len());
+            }
+        }
+        Some("--matrix") => {
+            let spec = quick_matrix_spec()?;
+            let (job_id, cells) = client.submit(&Message::SubmitMatrix { spec })?;
+            let records = client.stream_job(job_id)?;
+            if records.len() != cells {
+                bail!("expected {cells} records, got {}", records.len());
+            }
+        }
+        Some("--cancel") => {
+            let spec = quick_matrix_spec()?;
+            let (job_id, cells) = client.submit(&Message::SubmitMatrix { spec })?;
+            client.send(&Message::Cancel { job_id })?;
+            let records = client.stream_job(job_id)?;
+            println!(
+                "cancelled after {} of {cells} cell(s) completed (in-flight cells finish)",
+                records.len()
+            );
+        }
+        Some("--shutdown") => {
+            client.send(&Message::Shutdown)?;
+            match client.recv()? {
+                Message::ShutdownAck => println!("server acknowledged shutdown"),
+                other => bail!("expected shutdown_ack, got '{}'", other.kind()),
+            }
+        }
+        Some(other) => bail!("unknown mode {other}"),
+    }
+
+    client.log.flush()
+}

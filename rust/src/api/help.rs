@@ -57,6 +57,7 @@ pub fn subcommands() -> Vec<(&'static str, &'static str)> {
         ("sim", "DES runtime/memory prediction for a method on real arches"),
         ("bench", "deterministic perf snapshot for CI's perf gate"),
         ("store", "inspect / garbage-collect the durable artifact store"),
+        ("serve", "multi-client discovery daemon (docs/serve_protocol.md)"),
         ("info", "model/artifact inventory"),
         ("help", "this overview, or `pahq help <subcommand>` for flags"),
     ]
@@ -207,6 +208,21 @@ fn store_cmd_flags() -> Vec<(String, String)> {
     ]
 }
 
+fn serve_flags() -> Vec<(String, String)> {
+    vec![
+        (
+            "--addr A".into(),
+            "bind address (default 127.0.0.1:7341; port 0 picks an ephemeral port)".into(),
+        ),
+        (
+            "--workers N".into(),
+            "worker threads draining the shared cell queue across all clients (default 2)".into(),
+        ),
+        store_flag(),
+        gc_horizon_flag(),
+    ]
+}
+
 fn sim_flags() -> Vec<(String, String)> {
     vec![
         ("--arch A".into(), "real architecture to simulate (default gpt2)".into()),
@@ -288,6 +304,7 @@ pub fn subcommand(name: &str) -> Option<String> {
             ],
         ),
         "store" => render("store <ls|gc>", &synopsis("store"), &store_cmd_flags()),
+        "serve" => render("serve", &synopsis("serve"), &serve_flags()),
         "info" => render("info", &synopsis("info"), &[]),
         _ => return None,
     };
@@ -372,6 +389,11 @@ mod tests {
         let s = subcommand("store").unwrap();
         for flag in ["--store", "--gc-horizon"] {
             assert!(s.contains(flag), "store help misses {flag}");
+        }
+        // every flag cmd_serve consults appears in the serve help
+        let v = subcommand("serve").unwrap();
+        for flag in ["--addr", "--workers", "--store", "--gc-horizon"] {
+            assert!(v.contains(flag), "serve help misses {flag}");
         }
         // the --store value spellings come from the StoreSpec list
         for spelling in StoreSpec::SPELLINGS {

@@ -41,6 +41,7 @@ use crate::metrics::Objective;
 use crate::patching::Policy;
 use crate::report::results_dir;
 use crate::util::cli::Args;
+use crate::util::json::{obj, Json};
 
 pub mod help;
 
@@ -185,6 +186,40 @@ pub enum Substrate {
     Real,
     /// The deterministic synthetic surface, unconditionally.
     Synthetic,
+}
+
+impl Substrate {
+    /// The spellings the wire protocol and the docs share.
+    pub const SPELLINGS: [&'static str; 3] = ["auto", "real", "synthetic"];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Substrate::Auto => "auto",
+            Substrate::Real => "real",
+            Substrate::Synthetic => "synthetic",
+        }
+    }
+}
+
+impl std::fmt::Display for Substrate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Substrate {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Substrate> {
+        Ok(match s {
+            "auto" => Substrate::Auto,
+            "real" => Substrate::Real,
+            "synthetic" => Substrate::Synthetic,
+            other => {
+                bail!("unknown substrate '{other}' (expected {})", Substrate::SPELLINGS.join(" | "))
+            }
+        })
+    }
 }
 
 /// Where [`run`] writes the resulting [`RunRecord`].
@@ -467,6 +502,132 @@ impl RunSpec {
             _ => Ok(()),
         }
     }
+
+    /// Serialize this spec as the `pahq serve` wire payload (the
+    /// `submit_run` frame's `spec` object, `docs/serve_protocol.md`).
+    /// Every client-settable field is emitted with its canonical
+    /// spelling; the server-owned fields (`sink`, `store`) never travel
+    /// — [`RunSpec::from_wire`] rejects them by name.
+    ///
+    /// ```
+    /// use pahq::api::RunSpec;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let spec = RunSpec::builder("gpt2s-sim", "ioi").tau(0.05).build()?;
+    /// let back = RunSpec::from_wire(&spec.to_wire())?;
+    /// assert_eq!(spec, back);
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn to_wire(&self) -> Json {
+        obj(vec![
+            ("model", Json::from(self.model.clone())),
+            ("task", Json::from(self.task.clone())),
+            ("method", Json::from(self.method.as_str())),
+            ("policy", Json::from(self.policy.name.clone())),
+            ("tau", Json::from(self.tau as f64)),
+            ("metric", Json::from(self.objective.key())),
+            ("sweep", Json::from(self.sweep.label())),
+            ("seed", Json::from(self.seed as usize)),
+            ("trace", Json::from(self.record_trace)),
+            (
+                "faithfulness",
+                Json::from(match self.faithfulness {
+                    None => "off",
+                    Some(false) => "score",
+                    Some(true) => "normalized",
+                }),
+            ),
+            ("faith_required", Json::from(self.faith_required)),
+            ("substrate", Json::from(self.substrate.as_str())),
+            ("sp_steps", Json::from(self.sp_steps)),
+            ("ep_steps", Json::from(self.ep_steps)),
+        ])
+    }
+
+    /// Parse a `submit_run` wire payload into a validated spec — the
+    /// exact dual of [`RunSpec::to_wire`]. Only `model` and `task` are
+    /// required; everything else keeps the builder defaults. Unknown
+    /// keys are errors (a typo'd field must not silently run with its
+    /// default), and the server-owned `sink`/`store` keys are rejected
+    /// by name. The resulting spec always carries
+    /// [`OutputSink::Memory`] and [`StoreSpec::Memory`]: where records
+    /// land and which artifact store backs the run belong to the
+    /// server, not the submission.
+    pub fn from_wire(j: &Json) -> Result<RunSpec> {
+        const KNOWN: [&str; 15] = [
+            "model", "task", "method", "policy", "bits", "tau", "metric", "sweep", "seed",
+            "trace", "faithfulness", "faith_required", "substrate", "sp_steps", "ep_steps",
+        ];
+        for key in j.as_obj()?.keys() {
+            if matches!(key.as_str(), "sink" | "store" | "gc_horizon" | "out" | "json") {
+                bail!("spec: key '{key}' is server-owned and not accepted on the wire");
+            }
+            if !KNOWN.contains(&key.as_str()) {
+                bail!("spec: unknown key '{key}'");
+            }
+        }
+        let bits = match j.opt("bits") {
+            None => DEFAULT_BITS,
+            Some(b) => b.as_usize()? as u32,
+        };
+        let mut b =
+            RunSpec::builder(j.get("model")?.as_str()?, j.get("task")?.as_str()?).bits(bits);
+        if let Some(m) = j.opt("method") {
+            b = b.method(m.as_str()?.parse()?);
+        }
+        if let Some(p) = j.opt("policy") {
+            b = b.policy(Policy::by_name(p.as_str()?, bits)?);
+        }
+        if let Some(t) = j.opt("tau") {
+            b = b.tau(t.as_f64()? as f32);
+        }
+        if let Some(m) = j.opt("metric") {
+            b = b.objective(m.as_str()?.parse()?);
+        }
+        if let Some(s) = j.opt("sweep") {
+            b = b.sweep(s.as_str()?.parse()?);
+        }
+        if let Some(s) = j.opt("seed") {
+            b = b.seed(wire_seed(s)?);
+        }
+        if let Some(t) = j.opt("trace") {
+            b = b.trace(t.as_bool()?);
+        }
+        if let Some(f) = j.opt("faithfulness") {
+            b = b.faithfulness(match f.as_str()? {
+                "off" => None,
+                "score" => Some(false),
+                "normalized" => Some(true),
+                other => {
+                    bail!("faithfulness: unknown spelling '{other}' (off | score | normalized)")
+                }
+            });
+        }
+        if let Some(f) = j.opt("faith_required") {
+            b = b.faith_required(f.as_bool()?);
+        }
+        if let Some(s) = j.opt("substrate") {
+            b = b.substrate(s.as_str()?.parse()?);
+        }
+        if let Some(s) = j.opt("sp_steps") {
+            b = b.sp_steps(s.as_usize()?);
+        }
+        if let Some(s) = j.opt("ep_steps") {
+            b = b.ep_steps(s.as_usize()?);
+        }
+        b.build()
+    }
+}
+
+/// Wire seeds ride a JSON number (f64): non-negative integers up to
+/// 2^53 round-trip exactly, anything else is refused loudly.
+fn wire_seed(j: &Json) -> Result<u64> {
+    let x = j.as_f64()?;
+    if x.fract() != 0.0 || !(0.0..=(1u64 << 53) as f64).contains(&x) {
+        bail!("seed: must be a non-negative integer <= 2^53, got {x}");
+    }
+    Ok(x as u64)
 }
 
 /// Builder for [`RunSpec`]. Unset fields keep the documented defaults;
@@ -787,6 +948,98 @@ impl MatrixSpec {
     pub fn cells(&self) -> Vec<Cell> {
         matrix::grid(&self.config)
     }
+
+    /// Serialize the grid axes as the `pahq serve` wire payload (the
+    /// `submit_matrix` frame's `spec` object). Only the axes and the
+    /// per-cell knobs travel; orchestration fields (`workers`, `out`,
+    /// `resume`, `store`, ...) are the server's — the daemon runs every
+    /// submission through its own queue, workers, and artifact store.
+    pub fn to_wire(&self) -> Json {
+        let c = &self.config;
+        obj(vec![
+            ("models", Json::from(c.models.clone())),
+            ("tasks", Json::from(c.tasks.clone())),
+            ("methods", Json::from(c.methods.clone())),
+            (
+                "policies",
+                Json::Arr(c.policies.iter().map(|p| Json::from(p.name.clone())).collect()),
+            ),
+            ("tau", Json::from(c.tau as f64)),
+            ("metric", Json::from(c.objective.key())),
+            ("sweep", Json::from(c.sweep.label())),
+            ("seed", Json::from(c.seed as usize)),
+            ("faithfulness", Json::from(c.faithfulness)),
+        ])
+    }
+
+    /// Parse a `submit_matrix` wire payload into a validated spec — the
+    /// dual of [`MatrixSpec::to_wire`], through the same axis validation
+    /// as [`MatrixSpec::builder`]. Every key is optional (the default is
+    /// the acceptance grid); unknown and server-owned keys are errors.
+    pub fn from_wire(j: &Json) -> Result<MatrixSpec> {
+        const KNOWN: [&str; 10] = [
+            "models", "tasks", "methods", "policies", "bits", "tau", "metric", "sweep", "seed",
+            "faithfulness",
+        ];
+        for key in j.as_obj()?.keys() {
+            if matches!(
+                key.as_str(),
+                "workers" | "pool_workers" | "out" | "json" | "store" | "gc_horizon" | "resume"
+                    | "quick"
+            ) {
+                bail!("spec: key '{key}' is server-owned and not accepted on the wire");
+            }
+            if !KNOWN.contains(&key.as_str()) {
+                bail!("spec: unknown key '{key}'");
+            }
+        }
+        let str_vec = |j: &Json| -> Result<Vec<String>> {
+            j.as_arr()?.iter().map(|s| Ok(s.as_str()?.to_string())).collect()
+        };
+        let bits = match j.opt("bits") {
+            None => DEFAULT_BITS,
+            Some(b) => b.as_usize()? as u32,
+        };
+        let mut b = MatrixSpec::builder();
+        if let Some(m) = j.opt("models") {
+            b = b.models(&str_vec(m)?);
+        }
+        if let Some(t) = j.opt("tasks") {
+            b = b.tasks(&str_vec(t)?);
+        }
+        if let Some(m) = j.opt("methods") {
+            b = b.methods(
+                m.as_arr()?
+                    .iter()
+                    .map(|s| s.as_str()?.parse())
+                    .collect::<Result<Vec<MethodKind>>>()?,
+            );
+        }
+        if let Some(p) = j.opt("policies") {
+            b = b.policies(
+                p.as_arr()?
+                    .iter()
+                    .map(|s| Policy::by_name(s.as_str()?, bits))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        if let Some(t) = j.opt("tau") {
+            b = b.tau(t.as_f64()? as f32);
+        }
+        if let Some(m) = j.opt("metric") {
+            b = b.objective(m.as_str()?.parse()?);
+        }
+        if let Some(s) = j.opt("sweep") {
+            b = b.sweep(s.as_str()?.parse()?);
+        }
+        if let Some(s) = j.opt("seed") {
+            b = b.seed(wire_seed(s)?);
+        }
+        if let Some(f) = j.opt("faithfulness") {
+            b = b.faithfulness(f.as_bool()?);
+        }
+        b.build()
+    }
 }
 
 /// Builder for [`MatrixSpec`] — the grid axes plus orchestration knobs,
@@ -1047,6 +1300,25 @@ pub fn run(spec: &RunSpec) -> Result<RunRecord> {
 /// pretty-printing is built on this.
 pub fn run_with_session(spec: &RunSpec) -> Result<(RunRecord, Option<Session>)> {
     spec.validate()?;
+    // The spec's artifact store fronts every launch: in-memory (fresh,
+    // classic behavior) or the durable disk store a grid seeded —
+    // dataset/corrupt-cache/score reuse on hit, publish-back on miss.
+    let store = matrix::open_cache(&spec.store, false)?;
+    run_with_cache(spec, &store)
+}
+
+/// [`run_with_session`] against an externally-owned [`ArtifactCache`]
+/// — how the `pahq serve` daemon keeps ONE shared store (and its
+/// decoded-artifact front) hot across submissions instead of opening a
+/// backend per request. `spec.store` is ignored here: the caller
+/// already opened and owns the backend. Results are bit-identical to
+/// [`run`] by construction — same body, same substrate resolution; only
+/// the cache-hit provenance in `rec.cache` reflects the sharing.
+pub(crate) fn run_with_cache(
+    spec: &RunSpec,
+    store: &crate::matrix::cache::ArtifactCache,
+) -> Result<(RunRecord, Option<Session>)> {
+    spec.validate()?;
     // Substrate resolution mirrors the matrix orchestrator: real when
     // the artifacts resolve AND the engine comes up, synthetic when
     // nothing resolves (or the engine cannot build under Auto), a loud
@@ -1064,10 +1336,6 @@ pub fn run_with_session(spec: &RunSpec) -> Result<(RunRecord, Option<Session>)> 
             std::slice::from_ref(&spec.task),
         )?,
     };
-    // The spec's artifact store fronts every launch: in-memory (fresh,
-    // classic behavior) or the durable disk store a grid seeded —
-    // dataset/corrupt-cache/score reuse on hit, publish-back on miss.
-    let store = matrix::open_cache(&spec.store, false)?;
     if try_real {
         let task = Task::new(&spec.model, &spec.task);
         let cfg = spec.discovery_config();

@@ -13,8 +13,10 @@
 //!   with its cross-run artifact store, and the table/figure harness.
 //!   Everything is launched through the typed [`api`] facade: a validated
 //!   [`api::RunSpec`] / [`api::MatrixSpec`] is the one entry point shared
-//!   by the CLI, the experiment harness, the tests, and library embedders
-//!   (see `examples/embed.rs`).
+//!   by the CLI, the experiment harness, the tests, library embedders
+//!   (see `examples/embed.rs`), and the [`serve`] daemon, which carries
+//!   those same specs as wire frames and streams records back to
+//!   multiple concurrent clients over one hot artifact store.
 //! - **L2 (python/compile/model.py, build-time only)** — the
 //!   graph-decomposed transformer, AOT-lowered per layer to HLO text.
 //! - **L1 (python/compile/kernels/, build-time only)** — Pallas kernels for
@@ -43,6 +45,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod tasks;
 pub mod tensor;
 pub mod experiments;

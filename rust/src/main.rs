@@ -26,6 +26,9 @@
 //!               CI's perf gate — see scripts/bench_gate.py
 //!   store       inspect (`ls`) / garbage-collect (`gc`) the durable
 //!               content-addressed artifact store backing --store disk
+//!   serve       multi-client discovery daemon: RunSpec/MatrixSpec frames
+//!               in, streamed progress + RunRecord frames out, one hot
+//!               artifact store across requests (docs/serve_protocol.md)
 //!   info        model/artifact inventory
 //!   help        generated overview; `pahq help <sub>` / `--help` for flags
 
@@ -81,6 +84,7 @@ fn main() -> Result<()> {
         "sim" => cmd_sim(&args),
         "bench" => cmd_bench(&args),
         "store" => cmd_store(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(),
         _ => {
             print!("{}", help::usage());
@@ -687,6 +691,33 @@ fn cmd_store(args: &Args) -> Result<()> {
         }
         other => bail!("store: unknown action '{other}' (expected ls | gc)"),
     }
+}
+
+/// `pahq serve` — run the multi-client discovery daemon until a client
+/// sends a `shutdown` frame. The wire protocol is documented in
+/// `docs/serve_protocol.md`; `examples/serve_client.rs` is a complete
+/// client.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = pahq::serve::ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7341").to_string(),
+        ..Default::default()
+    };
+    if let Some(w) = args.usize_opt("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(s) = args.get("store") {
+        cfg.store = s.parse()?;
+    }
+    if args.get("gc-horizon").is_some() {
+        let horizon = args.u64_or("gc-horizon", 0)?;
+        match &mut cfg.store {
+            api::StoreSpec::Disk { gc_horizon, .. } => *gc_horizon = Some(horizon),
+            api::StoreSpec::Memory => {
+                bail!("gc_horizon: only meaningful with --store disk[:PATH]")
+            }
+        }
+    }
+    pahq::serve::serve(cfg)
 }
 
 fn cmd_info() -> Result<()> {

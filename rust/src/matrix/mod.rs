@@ -37,9 +37,10 @@
 //! exercising the same queue, store, manifest, and resume machinery.
 
 pub mod cache;
+pub mod queue;
 pub mod store;
 
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -1146,12 +1147,14 @@ pub(crate) fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
             .iter()
             .map(|&i| (cells[i].model.clone(), cells[i].task.clone()))
             .collect();
-        let queue: Mutex<VecDeque<(String, String)>> = Mutex::new(combos.into_iter().collect());
+        let seed_queue = queue::WorkQueue::new();
+        combos.into_iter().for_each(|c| {
+            seed_queue.push(c);
+        });
         std::thread::scope(|s| {
             for _ in 0..cfg.workers.max(1) {
                 s.spawn(|| loop {
-                    let next = queue.lock().unwrap().pop_front();
-                    let Some((model, task)) = next else { break };
+                    let Some((model, task)) = seed_queue.try_pop() else { break };
                     if synthetic {
                         seed_combo_synthetic(cfg, &store, &model, &task);
                     } else if let Err(e) = seed_combo_real(cfg, &store, &model, &task) {
@@ -1163,7 +1166,10 @@ pub(crate) fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
 
         // phase B: work-stealing cell drain; each worker hands its engine
         // pool to the next cell it steals
-        let queue: Mutex<VecDeque<usize>> = Mutex::new(pending.iter().copied().collect());
+        let cell_queue = queue::WorkQueue::new();
+        pending.iter().for_each(|&i| {
+            cell_queue.push(i);
+        });
         let results: Mutex<Vec<Option<CellOutcome>>> =
             Mutex::new((0..cells.len()).map(|_| None).collect());
         std::thread::scope(|s| {
@@ -1173,8 +1179,7 @@ pub(crate) fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
                     // between each other (pool + publishable artifacts)
                     let mut slot = Handoff::default();
                     loop {
-                        let next = queue.lock().unwrap().pop_front();
-                        let Some(i) = next else { break };
+                        let Some(i) = cell_queue.try_pop() else { break };
                         let cell = &cells[i];
                         let t0 = Instant::now();
                         let out = if synthetic {

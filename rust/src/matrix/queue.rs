@@ -1,0 +1,133 @@
+//! The shared work-stealing job queue behind the grid executor and the
+//! `pahq serve` daemon.
+//!
+//! The grid executor (`matrix::run`) drains a pre-filled queue to completion inside one
+//! `thread::scope` (phase A combo seeding, phase B cell execution) —
+//! workers [`try_pop`](WorkQueue::try_pop) until empty and exit. The
+//! serve daemon keeps the *same* queue alive across submissions:
+//! connection handlers [`push`](WorkQueue::push) cells from any client,
+//! a long-lived worker pool blocks on [`pop_wait`](WorkQueue::pop_wait),
+//! and [`close`](WorkQueue::close) drains the backlog then releases the
+//! workers for a clean shutdown. One queue type, two intake patterns —
+//! a grid is just the special case where everything is enqueued before
+//! the first pop.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// An unbounded multi-producer multi-consumer FIFO with a close
+/// handshake. Items pushed before [`close`](WorkQueue::close) are
+/// always drained; after close, pushes are refused and blocked poppers
+/// wake up with `None` once the backlog is empty.
+pub struct WorkQueue<T> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> WorkQueue<T> {
+        WorkQueue { inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }), ready: Condvar::new() }
+    }
+
+    /// Enqueue one item. Returns `false` (dropping the item) when the
+    /// queue is already closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return false;
+        }
+        inner.items.push_back(item);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Non-blocking pop — the drain-until-empty pattern of a pre-filled
+    /// grid queue.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Blocking pop — the daemon worker pattern. Returns `None` only
+    /// after [`close`](WorkQueue::close) once the backlog is drained.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.ready.wait(inner).unwrap();
+        }
+    }
+
+    /// Refuse further pushes and wake every blocked popper. Items
+    /// already queued are still handed out before poppers see `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_and_try_pop_drain() {
+        let q = WorkQueue::new();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn close_drains_backlog_then_releases() {
+        let q = WorkQueue::new();
+        q.push("a");
+        q.close();
+        assert!(!q.push("b"), "push after close must be refused");
+        assert_eq!(q.pop_wait(), Some("a"), "backlog drains before None");
+        assert_eq!(q.pop_wait(), None);
+    }
+
+    #[test]
+    fn pop_wait_blocks_until_push_or_close() {
+        let q = std::sync::Arc::new(WorkQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(x) = q2.pop_wait() {
+                got.push(x);
+            }
+            got
+        });
+        q.push(10);
+        q.push(20);
+        q.close();
+        assert_eq!(h.join().unwrap(), vec![10, 20]);
+    }
+}

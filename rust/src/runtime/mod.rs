@@ -33,6 +33,8 @@ pub struct ExeStats {
     pub total: Duration,
 }
 
+/// The L3-side PJRT runtime: one CPU client plus a lazily-compiled,
+/// per-artifact executable cache with cumulative timing.
 pub struct Engine {
     client: xla::PjRtClient,
     cache: HashMap<PathBuf, CachedExe>,

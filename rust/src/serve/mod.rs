@@ -1,0 +1,44 @@
+//! `pahq serve` — the multi-client discovery daemon.
+//!
+//! The ROADMAP's service north-star, concretely: a long-running TCP
+//! daemon that keeps one [`ArtifactCache`](crate::matrix::cache) hot
+//! across requests (corrupt caches, FP32 attribution scores, disk
+//! artifacts), so a second submission touching the same (task, policy)
+//! pays cache-hit prices instead of cold-starting a whole session. The
+//! daemon is std-only — `std::net` TCP plus `std::thread` — consistent
+//! with the repo's offline/vendored-dependency constraint.
+//!
+//! Three layers, one per module:
+//!
+//! - [`protocol`] — the wire format: length-prefixed, versioned,
+//!   checksummed frames whose JSON payloads carry [`Message`] variants.
+//!   `docs/serve_protocol.md` is the normative spec;
+//!   `docs/serve_protocol.schema.json` mirrors the payload shapes and
+//!   CI validates every frame of a live smoke run against it.
+//! - [`session`] — per-connection plumbing: the bounded [`Outbound`]
+//!   frame queue (slow readers exert backpressure on workers for
+//!   record/error frames, while progress frames coalesce latest-wins),
+//!   and the incremental [`FrameReader`].
+//! - [`server`] — the daemon itself: accept loop, the session state
+//!   machine (`hello` → submit → progress/record stream → `done`),
+//!   per-job cooperative cancellation, and a worker pool draining one
+//!   shared [`WorkQueue`](crate::matrix::queue::WorkQueue) across all
+//!   clients. Cells execute through
+//!   [`api::run_with_cache`](crate::api), the same body as standalone
+//!   [`api::run`](crate::api::run), so streamed records are
+//!   bit-identical to what the CLI would produce for the same spec.
+//!
+//! Quick start (see README § Serving and `examples/serve_client.rs`):
+//!
+//! ```text
+//! pahq serve --addr 127.0.0.1:7341 --workers 4 --store disk
+//! cargo run --release --example serve_client -- 127.0.0.1:7341
+//! ```
+
+pub mod protocol;
+pub mod server;
+pub mod session;
+
+pub use protocol::{ErrorCode, Message, PROTOCOL_VERSION};
+pub use server::{serve, ServeConfig, Server};
+pub use session::{FrameReader, Outbound, ReadEvent};

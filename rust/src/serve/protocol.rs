@@ -1,0 +1,415 @@
+//! The `pahq serve` wire protocol: length-prefixed, versioned,
+//! checksummed frames carrying JSON message payloads.
+//!
+//! Documented normatively in `docs/serve_protocol.md`, with the payload
+//! shapes mirrored by `docs/serve_protocol.schema.json` (validated by
+//! `scripts/check_schema.py`). Bump [`PROTOCOL_VERSION`] on any frame
+//! or message shape change and update both documents in the same
+//! commit.
+//!
+//! A frame is a 20-byte header followed by the payload bytes:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "PQWF"
+//! 4       2     protocol version, little-endian u16 (currently 1)
+//! 6       2     reserved, must be zero
+//! 8       4     payload length, little-endian u32 (<= MAX_PAYLOAD)
+//! 12      8     FNV-1a-64 checksum of the payload, little-endian u64
+//! 20      N     payload: UTF-8 JSON object with a "type" key
+//! ```
+//!
+//! [`decode`] is incremental: it distinguishes *incomplete* input (need
+//! more bytes — `Ok(None)`) from *corrupt* input (bad magic / version /
+//! reserved bits / oversized length / checksum mismatch / malformed
+//! JSON — an error, after which the peer must drop the connection,
+//! since byte alignment is lost). Both directions use the same codec.
+//!
+//! ```
+//! use pahq::serve::protocol::{decode, encode, Message};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let bytes = encode(&Message::Hello { protocol: 1 })?;
+//! let (msg, used) = decode(&bytes)?.expect("complete frame");
+//! assert_eq!(used, bytes.len());
+//! assert_eq!(msg.to_json().dump(), Message::Hello { protocol: 1 }.to_json().dump());
+//! assert!(decode(&bytes[..bytes.len() - 1])?.is_none(), "truncated = incomplete");
+//! # Ok(())
+//! # }
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::api::{MatrixSpec, RunSpec};
+use crate::discovery;
+use crate::util::json::{obj, Json};
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"PQWF";
+/// Version of the frame layout AND the message payload shapes.
+pub const PROTOCOL_VERSION: u16 = 1;
+/// Fixed frame-header length in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Hard ceiling on a frame's payload size. A length field beyond this
+/// is corrupt by definition — a reader never buffers unbounded input on
+/// the promise of a forged header.
+pub const MAX_PAYLOAD: usize = 16 << 20;
+
+/// FNV-1a-64 over raw bytes — the frame checksum (the byte-level analog
+/// of the artifact store's key hash).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable numeric error codes carried by [`Message::Error`] frames.
+/// Codes are part of the protocol contract (`docs/serve_protocol.md`);
+/// never renumber — add.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Frame-level corruption; the server closes the connection.
+    BadFrame = 1,
+    /// Payload parsed as JSON but is not a well-formed message.
+    BadMessage = 2,
+    /// A submitted spec failed validation (message names the field).
+    InvalidSpec = 3,
+    /// `cancel` named a job this connection does not own.
+    UnknownJob = 4,
+    /// Session state-machine violation (e.g. submit before hello, or a
+    /// hello with an unsupported protocol version).
+    Protocol = 5,
+    /// Unexpected server-side failure.
+    Internal = 6,
+    /// Submission refused because the server is shutting down.
+    ShuttingDown = 7,
+}
+
+impl ErrorCode {
+    pub fn code(self) -> u32 {
+        self as u32
+    }
+
+    pub fn from_code(code: u32) -> Result<ErrorCode> {
+        Ok(match code {
+            1 => ErrorCode::BadFrame,
+            2 => ErrorCode::BadMessage,
+            3 => ErrorCode::InvalidSpec,
+            4 => ErrorCode::UnknownJob,
+            5 => ErrorCode::Protocol,
+            6 => ErrorCode::Internal,
+            7 => ErrorCode::ShuttingDown,
+            other => bail!("unknown error code {other}"),
+        })
+    }
+}
+
+/// Every message the protocol carries, both directions. The `type` key
+/// of the JSON payload selects the variant; [`Message::to_json`] /
+/// [`Message::from_json`] are the one (de)serialization path, so the
+/// docs, the schema, and the codec cannot drift apart.
+#[derive(Clone)]
+pub enum Message {
+    // ---- client -> server ------------------------------------------------
+    /// Mandatory first message of a session.
+    Hello { protocol: u16 },
+    /// Submit one discovery run ([`RunSpec::to_wire`] payload).
+    SubmitRun { spec: RunSpec },
+    /// Submit a method x policy x model x task grid
+    /// ([`MatrixSpec::to_wire`] payload); one record streams per cell.
+    SubmitMatrix { spec: MatrixSpec },
+    /// Stop a job's queued cells (in-flight cells finish and still
+    /// stream their records).
+    Cancel { job_id: u64 },
+    /// Ask the server to stop accepting, drain, and exit.
+    Shutdown,
+    // ---- server -> client ------------------------------------------------
+    /// Handshake reply: the server's protocol and RunRecord schema
+    /// versions.
+    HelloAck { protocol: u16, record_schema: usize },
+    /// A submission was decomposed into `cells` queued jobs under
+    /// `job_id`.
+    Accepted { job_id: u64, cells: usize },
+    /// Per-cell progress. Lossy by contract: a slow reader gets later
+    /// frames with `coalesced` counting the superseded ones (see
+    /// `docs/serve_protocol.md` § Backpressure).
+    Progress { job_id: u64, done: usize, total: usize, cell: String, coalesced: usize },
+    /// One completed cell's RunRecord (verbatim `run_record` JSON).
+    Record { job_id: u64, cell: String, record: Json },
+    /// One cell failed; the rest of the job keeps running.
+    CellError { job_id: u64, cell: String, error: String },
+    /// Acknowledges a `cancel`: `dropped` cells were still queued and
+    /// will be skipped.
+    CancelAck { job_id: u64, dropped: usize },
+    /// Terminal per-job frame: every cell accounted for.
+    Done { job_id: u64, ok: usize, failed: usize, cancelled: usize },
+    /// Protocol- or submission-level error (see [`ErrorCode`]).
+    Error { code: ErrorCode, message: String },
+    /// Acknowledges a `shutdown`; the connection then closes.
+    ShutdownAck,
+}
+
+impl Message {
+    /// The payload's `type` discriminator.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "hello",
+            Message::SubmitRun { .. } => "submit_run",
+            Message::SubmitMatrix { .. } => "submit_matrix",
+            Message::Cancel { .. } => "cancel",
+            Message::Shutdown => "shutdown",
+            Message::HelloAck { .. } => "hello_ack",
+            Message::Accepted { .. } => "accepted",
+            Message::Progress { .. } => "progress",
+            Message::Record { .. } => "record",
+            Message::CellError { .. } => "cell_error",
+            Message::CancelAck { .. } => "cancel_ack",
+            Message::Done { .. } => "done",
+            Message::Error { .. } => "error",
+            Message::ShutdownAck => "shutdown_ack",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("type", Json::from(self.kind()))];
+        match self {
+            Message::Hello { protocol } => {
+                pairs.push(("protocol", Json::from(*protocol as usize)));
+            }
+            Message::SubmitRun { spec } => pairs.push(("spec", spec.to_wire())),
+            Message::SubmitMatrix { spec } => pairs.push(("spec", spec.to_wire())),
+            Message::Cancel { job_id } => pairs.push(("job_id", Json::from(*job_id as usize))),
+            Message::Shutdown | Message::ShutdownAck => {}
+            Message::HelloAck { protocol, record_schema } => {
+                pairs.push(("protocol", Json::from(*protocol as usize)));
+                pairs.push(("record_schema", Json::from(*record_schema)));
+            }
+            Message::Accepted { job_id, cells } => {
+                pairs.push(("job_id", Json::from(*job_id as usize)));
+                pairs.push(("cells", Json::from(*cells)));
+            }
+            Message::Progress { job_id, done, total, cell, coalesced } => {
+                pairs.push(("job_id", Json::from(*job_id as usize)));
+                pairs.push(("done", Json::from(*done)));
+                pairs.push(("total", Json::from(*total)));
+                pairs.push(("cell", Json::from(cell.clone())));
+                pairs.push(("coalesced", Json::from(*coalesced)));
+            }
+            Message::Record { job_id, cell, record } => {
+                pairs.push(("job_id", Json::from(*job_id as usize)));
+                pairs.push(("cell", Json::from(cell.clone())));
+                pairs.push(("record", record.clone()));
+            }
+            Message::CellError { job_id, cell, error } => {
+                pairs.push(("job_id", Json::from(*job_id as usize)));
+                pairs.push(("cell", Json::from(cell.clone())));
+                pairs.push(("error", Json::from(error.clone())));
+            }
+            Message::CancelAck { job_id, dropped } => {
+                pairs.push(("job_id", Json::from(*job_id as usize)));
+                pairs.push(("dropped", Json::from(*dropped)));
+            }
+            Message::Done { job_id, ok, failed, cancelled } => {
+                pairs.push(("job_id", Json::from(*job_id as usize)));
+                pairs.push(("ok", Json::from(*ok)));
+                pairs.push(("failed", Json::from(*failed)));
+                pairs.push(("cancelled", Json::from(*cancelled)));
+            }
+            Message::Error { code, message } => {
+                pairs.push(("code", Json::from(code.code() as usize)));
+                pairs.push(("message", Json::from(message.clone())));
+            }
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Message> {
+        let job_id = |j: &Json| -> Result<u64> { Ok(j.get("job_id")?.as_f64()? as u64) };
+        Ok(match j.get("type")?.as_str()? {
+            "hello" => Message::Hello { protocol: j.get("protocol")?.as_usize()? as u16 },
+            "submit_run" => Message::SubmitRun { spec: RunSpec::from_wire(j.get("spec")?)? },
+            "submit_matrix" => {
+                Message::SubmitMatrix { spec: MatrixSpec::from_wire(j.get("spec")?)? }
+            }
+            "cancel" => Message::Cancel { job_id: job_id(j)? },
+            "shutdown" => Message::Shutdown,
+            "hello_ack" => Message::HelloAck {
+                protocol: j.get("protocol")?.as_usize()? as u16,
+                record_schema: j.get("record_schema")?.as_usize()?,
+            },
+            "accepted" => {
+                Message::Accepted { job_id: job_id(j)?, cells: j.get("cells")?.as_usize()? }
+            }
+            "progress" => Message::Progress {
+                job_id: job_id(j)?,
+                done: j.get("done")?.as_usize()?,
+                total: j.get("total")?.as_usize()?,
+                cell: j.get("cell")?.as_str()?.to_string(),
+                coalesced: j.get("coalesced")?.as_usize()?,
+            },
+            "record" => Message::Record {
+                job_id: job_id(j)?,
+                cell: j.get("cell")?.as_str()?.to_string(),
+                record: j.get("record")?.clone(),
+            },
+            "cell_error" => Message::CellError {
+                job_id: job_id(j)?,
+                cell: j.get("cell")?.as_str()?.to_string(),
+                error: j.get("error")?.as_str()?.to_string(),
+            },
+            "cancel_ack" => {
+                Message::CancelAck { job_id: job_id(j)?, dropped: j.get("dropped")?.as_usize()? }
+            }
+            "done" => Message::Done {
+                job_id: job_id(j)?,
+                ok: j.get("ok")?.as_usize()?,
+                failed: j.get("failed")?.as_usize()?,
+                cancelled: j.get("cancelled")?.as_usize()?,
+            },
+            "error" => Message::Error {
+                code: ErrorCode::from_code(j.get("code")?.as_usize()? as u32)?,
+                message: j.get("message")?.as_str()?.to_string(),
+            },
+            "shutdown_ack" => Message::ShutdownAck,
+            other => bail!("unknown message type '{other}'"),
+        })
+    }
+}
+
+/// A [`Message::HelloAck`] for this build.
+pub fn hello_ack() -> Message {
+    Message::HelloAck { protocol: PROTOCOL_VERSION, record_schema: discovery::SCHEMA_VERSION }
+}
+
+/// Encode one message as a complete frame (header + JSON payload).
+pub fn encode(msg: &Message) -> Result<Vec<u8>> {
+    encode_payload(msg.to_json().dump().as_bytes())
+}
+
+/// Frame arbitrary payload bytes — split from [`encode`] so tests can
+/// construct frames with payloads the message layer would never emit.
+pub fn encode_payload(payload: &[u8]) -> Result<Vec<u8>> {
+    if payload.len() > MAX_PAYLOAD {
+        bail!("frame payload {} bytes exceeds MAX_PAYLOAD {MAX_PAYLOAD}", payload.len());
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    out.extend_from_slice(&[0, 0]);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&checksum(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// - `Ok(None)` — `buf` holds a valid prefix of a frame; read more.
+/// - `Ok(Some((msg, consumed)))` — one complete frame; the caller
+///   drops `consumed` bytes and decodes again.
+/// - `Err(_)` — corrupt input (bad magic / version / reserved bits /
+///   oversized length / checksum mismatch / malformed payload). Byte
+///   alignment is lost; the connection must be dropped.
+pub fn decode(buf: &[u8]) -> Result<Option<(Message, usize)>> {
+    match decode_payload(buf)? {
+        None => Ok(None),
+        Some((payload, consumed)) => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|e| anyhow::anyhow!("frame payload is not UTF-8: {e}"))?;
+            let msg = Message::from_json(&Json::parse(text)?)?;
+            Ok(Some((msg, consumed)))
+        }
+    }
+}
+
+/// The frame-layer half of [`decode`]: validate the header and checksum
+/// and return the raw payload slice, without interpreting it.
+pub fn decode_payload(buf: &[u8]) -> Result<Option<(&[u8], usize)>> {
+    // validate the fixed fields as soon as their bytes are present —
+    // garbage is rejected without waiting for a full (forged) length
+    if !buf.is_empty() && buf[..MAGIC.len().min(buf.len())] != MAGIC[..MAGIC.len().min(buf.len())]
+    {
+        bail!("bad frame magic (expected {:?})", MAGIC);
+    }
+    if buf.len() >= 6 {
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != PROTOCOL_VERSION {
+            bail!("unsupported protocol version {version} (this build speaks {PROTOCOL_VERSION})");
+        }
+    }
+    if buf.len() >= 8 && (buf[6] != 0 || buf[7] != 0) {
+        bail!("nonzero reserved bytes in frame header");
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        bail!("frame payload length {len} exceeds MAX_PAYLOAD {MAX_PAYLOAD}");
+    }
+    if buf.len() < HEADER_LEN + len {
+        return Ok(None);
+    }
+    let expect = u64::from_le_bytes([
+        buf[12], buf[13], buf[14], buf[15], buf[16], buf[17], buf[18], buf[19],
+    ]);
+    let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+    let got = checksum(payload);
+    if got != expect {
+        bail!("frame checksum mismatch (header {expect:016x}, payload {got:016x})");
+    }
+    Ok(Some((payload, HEADER_LEN + len)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_matches_fnv1a_vectors() {
+        assert_eq!(checksum(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(checksum(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(checksum(b"ab"), checksum(b"ba"));
+    }
+
+    #[test]
+    fn error_codes_round_trip() {
+        for code in [
+            ErrorCode::BadFrame,
+            ErrorCode::BadMessage,
+            ErrorCode::InvalidSpec,
+            ErrorCode::UnknownJob,
+            ErrorCode::Protocol,
+            ErrorCode::Internal,
+            ErrorCode::ShuttingDown,
+        ] {
+            assert_eq!(ErrorCode::from_code(code.code()).unwrap(), code);
+        }
+        assert!(ErrorCode::from_code(0).is_err());
+        assert!(ErrorCode::from_code(99).is_err());
+    }
+
+    #[test]
+    fn two_frames_back_to_back_decode_in_order() {
+        let mut buf = encode(&Message::Hello { protocol: PROTOCOL_VERSION }).unwrap();
+        buf.extend(encode(&Message::ShutdownAck).unwrap());
+        let (first, used) = decode(&buf).unwrap().unwrap();
+        assert_eq!(first.kind(), "hello");
+        let (second, used2) = decode(&buf[used..]).unwrap().unwrap();
+        assert_eq!(second.kind(), "shutdown_ack");
+        assert_eq!(used + used2, buf.len());
+    }
+
+    #[test]
+    fn unknown_message_type_is_an_error_not_a_panic() {
+        let frame = encode_payload(br#"{"type":"frobnicate"}"#).unwrap();
+        assert!(decode(&frame).is_err());
+        let frame = encode_payload(br#"[1,2,3]"#).unwrap();
+        assert!(decode(&frame).is_err());
+        let frame = encode_payload(&[0xff, 0xfe]).unwrap(); // not UTF-8
+        assert!(decode(&frame).is_err());
+    }
+}

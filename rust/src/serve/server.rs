@@ -1,0 +1,469 @@
+//! The `pahq serve` daemon: accept loop, session state machine, and the
+//! shared worker pool that drains every client's cells from one queue.
+//!
+//! One [`Server`] owns one [`ArtifactCache`] (fronting the configured
+//! [`StoreSpec`] backend) and one [`WorkQueue`] of cell jobs. Every
+//! accepted connection runs a reader thread (frame decode + the session
+//! state machine) and a writer thread (draining that connection's
+//! bounded [`Outbound`]); submissions decompose into per-cell
+//! [`RunSpec`]s that workers execute via `api::run_with_cache` — the
+//! same body as standalone [`api::run`](crate::api::run), so streamed
+//! records are bit-identical to it, with the daemon's cache staying hot
+//! across requests. Cancellation is cooperative: a cancelled job's
+//! queued cells are skipped when a worker pops them, in-flight cells
+//! finish and still stream their record, and the terminal `done` frame
+//! accounts for every cell either way.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::protocol::{self, ErrorCode, Message, PROTOCOL_VERSION};
+use super::session::{FrameReader, Outbound, ReadEvent};
+use crate::api::{self, RunSpec, StoreSpec};
+use crate::matrix::cache::ArtifactCache;
+use crate::matrix::queue::WorkQueue;
+
+/// How often blocked reads wake up to poll the shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(200);
+
+/// Daemon configuration (the `pahq serve` flags).
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests do this).
+    pub addr: String,
+    /// Worker threads draining the shared cell queue.
+    pub workers: usize,
+    /// Artifact-store backend shared across every request.
+    pub store: StoreSpec,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { addr: "127.0.0.1:7341".into(), workers: 2, store: StoreSpec::Memory }
+    }
+}
+
+/// One queued cell: the unit the worker pool executes.
+struct CellJob {
+    job_id: u64,
+    cell: String,
+    spec: RunSpec,
+}
+
+/// Server-side accounting for one accepted submission.
+struct JobState {
+    /// The submitting connection's outbound queue.
+    out: Arc<Outbound>,
+    total: usize,
+    cancelled: AtomicBool,
+    /// Cells a worker has begun executing (cancel cannot stop these).
+    started: AtomicUsize,
+    /// Cells fully accounted for (record, error, or skipped-by-cancel).
+    done: AtomicUsize,
+    ok: AtomicUsize,
+    failed: AtomicUsize,
+    skipped: AtomicUsize,
+}
+
+struct Shared {
+    queue: WorkQueue<CellJob>,
+    jobs: Mutex<HashMap<u64, Arc<JobState>>>,
+    cache: ArtifactCache,
+    /// The bound address — a shutdown self-connects here to unblock the
+    /// accept loop.
+    addr: SocketAddr,
+    next_job: AtomicU64,
+    /// Stop accepting connections and refuse new submissions.
+    shutdown: AtomicBool,
+    /// Backlog drained, outbounds closed — reader threads may exit.
+    halt: AtomicBool,
+}
+
+/// A bound-but-not-yet-running daemon. [`Server::bind`] then
+/// [`Server::run`]; tests grab [`Server::local_addr`] in between.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+/// Bind and run a daemon until a client sends `shutdown` — the
+/// `pahq serve` entry point.
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    let server = Server::bind(cfg)?;
+    println!("serve: listening on {}", server.local_addr()?);
+    server.run()
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("serve: cannot bind {}", cfg.addr))?;
+        let cache = crate::matrix::open_cache(&cfg.store, false)?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                queue: WorkQueue::new(),
+                jobs: Mutex::new(HashMap::new()),
+                cache,
+                addr,
+                next_job: AtomicU64::new(1),
+                shutdown: AtomicBool::new(false),
+                halt: AtomicBool::new(false),
+            }),
+            workers: cfg.workers.max(1),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept clients and drain work until a `shutdown` frame arrives;
+    /// then stop accepting, finish the queued backlog, flush every
+    /// connection, and return. Blocks the calling thread.
+    pub fn run(self) -> Result<()> {
+        let shared = self.shared;
+        std::thread::scope(|scope| -> Result<()> {
+            for _ in 0..self.workers {
+                let shared = Arc::clone(&shared);
+                scope.spawn(move || worker_loop(&shared));
+            }
+            let mut conns: Vec<Arc<Outbound>> = Vec::new();
+            for stream in self.listener.incoming() {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break; // the waking connection (or a late client) is dropped
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                let out = Arc::new(Outbound::new());
+                conns.push(Arc::clone(&out));
+                let shared = Arc::clone(&shared);
+                scope.spawn(move || connection(stream, out, &shared));
+            }
+            // shutdown: refuse new cells, drain the backlog, then let
+            // writers flush and readers notice the halt flag
+            shared.queue.close();
+            while !shared.jobs.lock().unwrap().is_empty() {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            for out in &conns {
+                out.close();
+            }
+            shared.halt.store(true, Ordering::SeqCst);
+            Ok(())
+        })
+    }
+}
+
+/// Unblock a `listener.incoming()` that is parked in `accept` after the
+/// shutdown flag is set.
+fn wake_accept(addr: SocketAddr) {
+    let _ = TcpStream::connect(addr);
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool
+
+fn worker_loop(shared: &Shared) {
+    while let Some(job) = shared.queue.pop_wait() {
+        let state = match shared.jobs.lock().unwrap().get(&job.job_id) {
+            Some(s) => Arc::clone(s),
+            None => continue,
+        };
+        if state.cancelled.load(Ordering::SeqCst) {
+            state.skipped.fetch_add(1, Ordering::SeqCst);
+            finish_cell(shared, job.job_id, &state);
+            continue;
+        }
+        state.started.fetch_add(1, Ordering::SeqCst);
+        match api::run_with_cache(&job.spec, &shared.cache) {
+            Ok((record, _session)) => {
+                state.ok.fetch_add(1, Ordering::SeqCst);
+                state.out.push_frame(Message::Record {
+                    job_id: job.job_id,
+                    cell: job.cell.clone(),
+                    record: record.to_json(),
+                });
+            }
+            Err(e) => {
+                state.failed.fetch_add(1, Ordering::SeqCst);
+                state.out.push_frame(Message::CellError {
+                    job_id: job.job_id,
+                    cell: job.cell.clone(),
+                    error: format!("{e:#}"),
+                });
+            }
+        }
+        let done = finish_cell(shared, job.job_id, &state);
+        if !done {
+            state.out.push_progress(Message::Progress {
+                job_id: job.job_id,
+                done: state.done.load(Ordering::SeqCst),
+                total: state.total,
+                cell: job.cell,
+                coalesced: 0,
+            });
+        }
+    }
+}
+
+/// Account one cell; when it is the job's last, emit the terminal
+/// `done` frame and retire the job. Returns whether the job finished.
+fn finish_cell(shared: &Shared, job_id: u64, state: &JobState) -> bool {
+    let done = state.done.fetch_add(1, Ordering::SeqCst) + 1;
+    if done < state.total {
+        return false;
+    }
+    shared.jobs.lock().unwrap().remove(&job_id);
+    state.out.push_frame(Message::Done {
+        job_id,
+        ok: state.ok.load(Ordering::SeqCst),
+        failed: state.failed.load(Ordering::SeqCst),
+        cancelled: state.skipped.load(Ordering::SeqCst),
+    });
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection session
+
+fn connection(stream: TcpStream, out: Arc<Outbound>, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_nodelay(true);
+    let writer = {
+        let out = Arc::clone(&out);
+        let stream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        std::thread::spawn(move || writer_loop(stream, &out))
+    };
+    let my_jobs = reader_loop(stream, &out, shared);
+    // the client is gone (or the server halted): its queued cells are
+    // dead weight — cancel so workers skip rather than compute into a
+    // closed socket
+    {
+        let jobs = shared.jobs.lock().unwrap();
+        for id in my_jobs {
+            if let Some(state) = jobs.get(&id) {
+                state.cancelled.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+    out.close();
+    let _ = writer.join();
+}
+
+fn writer_loop(mut stream: TcpStream, out: &Outbound) {
+    while let Some(msg) = out.pop() {
+        let bytes = match protocol::encode(&msg) {
+            Ok(b) => b,
+            Err(_) => continue,
+        };
+        if stream.write_all(&bytes).is_err() {
+            out.mark_dead();
+            return;
+        }
+    }
+    let _ = stream.flush();
+}
+
+/// The session state machine. Returns the job ids this connection
+/// submitted (for disconnect cleanup).
+fn reader_loop(mut stream: TcpStream, out: &Arc<Outbound>, shared: &Shared) -> Vec<u64> {
+    let mut reader = FrameReader::new();
+    let mut hello_done = false;
+    let mut my_jobs = Vec::new();
+    loop {
+        match reader.next(&mut stream) {
+            Ok(ReadEvent::Pending) => {
+                if shared.halt.load(Ordering::SeqCst) {
+                    return my_jobs;
+                }
+            }
+            Ok(ReadEvent::Eof) => return my_jobs,
+            Err(e) => {
+                // corrupt frames lose byte alignment: best-effort error,
+                // then drop the connection (docs/serve_protocol.md)
+                out.push_frame(Message::Error {
+                    code: ErrorCode::BadFrame,
+                    message: format!("corrupt frame ({e:#}); closing connection"),
+                });
+                return my_jobs;
+            }
+            Ok(ReadEvent::Frame(msg)) => {
+                if !session_step(msg, &mut hello_done, &mut my_jobs, out, shared) {
+                    return my_jobs;
+                }
+            }
+        }
+    }
+}
+
+/// Handle one decoded client frame. Returns `false` when the session
+/// must end (protocol violation or shutdown handshake).
+fn session_step(
+    msg: Message,
+    hello_done: &mut bool,
+    my_jobs: &mut Vec<u64>,
+    out: &Arc<Outbound>,
+    shared: &Shared,
+) -> bool {
+    let violation = |code: ErrorCode, message: String| {
+        out.push_frame(Message::Error { code, message });
+        false
+    };
+    match msg {
+        Message::Hello { protocol } => {
+            if protocol != PROTOCOL_VERSION {
+                return violation(
+                    ErrorCode::Protocol,
+                    format!("protocol {protocol} unsupported (server speaks {PROTOCOL_VERSION})"),
+                );
+            }
+            *hello_done = true;
+            out.push_frame(protocol::hello_ack());
+            true
+        }
+        Message::SubmitRun { .. } | Message::SubmitMatrix { .. } | Message::Cancel { .. }
+            if !*hello_done =>
+        {
+            violation(ErrorCode::Protocol, "hello required before any other message".into())
+        }
+        Message::SubmitRun { spec } => {
+            submit(vec![(cell_label(&spec), spec)], my_jobs, out, shared);
+            true
+        }
+        Message::SubmitMatrix { spec } => {
+            match matrix_cells(&spec) {
+                Ok(cells) => submit(cells, my_jobs, out, shared),
+                Err(e) => {
+                    out.push_frame(Message::Error {
+                        code: ErrorCode::InvalidSpec,
+                        message: format!("{e:#}"),
+                    });
+                }
+            }
+            true
+        }
+        Message::Cancel { job_id } => {
+            let owned = my_jobs.contains(&job_id);
+            let state = shared.jobs.lock().unwrap().get(&job_id).filter(|_| owned).cloned();
+            match state {
+                None => {
+                    out.push_frame(Message::Error {
+                        code: ErrorCode::UnknownJob,
+                        message: format!("job {job_id} is not an active job of this connection"),
+                    });
+                }
+                Some(state) => {
+                    state.cancelled.store(true, Ordering::SeqCst);
+                    let dropped = state
+                        .total
+                        .saturating_sub(state.started.load(Ordering::SeqCst))
+                        .saturating_sub(state.skipped.load(Ordering::SeqCst));
+                    out.push_frame(Message::CancelAck { job_id, dropped });
+                }
+            }
+            true
+        }
+        Message::Shutdown => {
+            out.push_frame(Message::ShutdownAck);
+            shared.shutdown.store(true, Ordering::SeqCst);
+            wake_accept(shared.addr);
+            true
+        }
+        // server->client frames arriving at the server are a client bug
+        other => violation(
+            ErrorCode::BadMessage,
+            format!("'{}' is a server-to-client message", other.kind()),
+        ),
+    }
+}
+
+/// Register a job for `cells` and enqueue them on the shared queue.
+fn submit(
+    cells: Vec<(String, RunSpec)>,
+    my_jobs: &mut Vec<u64>,
+    out: &Arc<Outbound>,
+    shared: &Shared,
+) {
+    if shared.shutdown.load(Ordering::SeqCst) {
+        out.push_frame(Message::Error {
+            code: ErrorCode::ShuttingDown,
+            message: "server is shutting down; submission refused".into(),
+        });
+        return;
+    }
+    let job_id = shared.next_job.fetch_add(1, Ordering::SeqCst);
+    let state = Arc::new(JobState {
+        out: Arc::clone(out),
+        total: cells.len(),
+        cancelled: AtomicBool::new(false),
+        started: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        ok: AtomicUsize::new(0),
+        failed: AtomicUsize::new(0),
+        skipped: AtomicUsize::new(0),
+    });
+    shared.jobs.lock().unwrap().insert(job_id, Arc::clone(&state));
+    my_jobs.push(job_id);
+    out.push_frame(Message::Accepted { job_id, cells: cells.len() });
+    let mut accepted = true;
+    for (cell, spec) in cells {
+        accepted &= shared.queue.push(CellJob { job_id, cell, spec });
+    }
+    if !accepted {
+        // shutdown raced the submit: cells refused by the closed queue
+        // would leave the job forever unfinished — retire it as skipped
+        let state2 = shared.jobs.lock().unwrap().remove(&job_id);
+        if let Some(state) = state2 {
+            out.push_frame(Message::Done {
+                job_id,
+                ok: 0,
+                failed: 0,
+                cancelled: state.total,
+            });
+        }
+    }
+}
+
+fn cell_label(spec: &RunSpec) -> String {
+    format!(
+        "{}_{}_{}_{}",
+        spec.method.discovery_name(),
+        spec.policy.name,
+        spec.model,
+        spec.task
+    )
+}
+
+/// Decompose a matrix submission into per-cell specs, mirroring
+/// [`crate::matrix::standalone_cell`]'s derivation so each cell is
+/// bit-identical to a standalone `api::run` of the same spec.
+fn matrix_cells(spec: &crate::api::MatrixSpec) -> Result<Vec<(String, RunSpec)>> {
+    let cfg = spec.config();
+    spec.cells()
+        .into_iter()
+        .map(|cell| {
+            let spec = RunSpec::builder(&cell.model, &cell.task)
+                .method(cell.method.parse()?)
+                .policy(cell.policy.clone())
+                .tau(cfg.tau)
+                .objective(cfg.objective)
+                .sweep(cfg.sweep)
+                .seed(cfg.seed)
+                .build()?;
+            Ok((cell.id(), spec))
+        })
+        .collect()
+}

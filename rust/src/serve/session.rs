@@ -1,0 +1,318 @@
+//! Per-connection plumbing: the bounded outbound frame queue (with
+//! progress coalescing) and the incremental frame reader.
+//!
+//! Every accepted connection gets one [`Outbound`] shared between the
+//! worker pool (producers) and a dedicated writer thread (the one
+//! consumer that owns the socket's write half). The queue is bounded:
+//! non-progress frames block the producer when the client reads slowly
+//! (backpressure — a worker stalls rather than the server buffering
+//! records without limit), while progress frames never block and never
+//! accumulate — at most one is pending per job, the latest winning,
+//! with a `coalesced` counter telling the client how many snapshots it
+//! skipped. `docs/serve_protocol.md` § Backpressure is the normative
+//! statement of these semantics.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Read;
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use super::protocol::{self, Message};
+
+/// Upper bound on queued non-progress frames per connection. Small on
+/// purpose: records stream as they finish, so depth beyond a handful
+/// only measures how far a slow reader has fallen behind.
+pub const OUTBOUND_CAP: usize = 64;
+
+struct OutState {
+    /// FIFO of record / error / ack frames — bounded at [`OUTBOUND_CAP`].
+    frames: VecDeque<Message>,
+    /// At most one pending progress snapshot per job, latest wins.
+    progress: BTreeMap<u64, Message>,
+    /// No more frames will be pushed; writer drains and exits.
+    closed: bool,
+    /// The socket broke; producers stop blocking and drop frames.
+    dead: bool,
+}
+
+/// The bounded outbound side of one connection.
+pub struct Outbound {
+    state: Mutex<OutState>,
+    /// Signalled when the writer frees queue space.
+    space: Condvar,
+    /// Signalled when a producer enqueues or the queue closes.
+    ready: Condvar,
+}
+
+impl Default for Outbound {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Outbound {
+    pub fn new() -> Outbound {
+        Outbound {
+            state: Mutex::new(OutState {
+                frames: VecDeque::new(),
+                progress: BTreeMap::new(),
+                closed: false,
+                dead: false,
+            }),
+            space: Condvar::new(),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a guaranteed-delivery frame, blocking while the queue is
+    /// full (this is the backpressure edge: a slow client stalls the
+    /// worker that finished its cell, not the whole server's memory).
+    /// Returns `false` if the connection is closed or dead — the frame
+    /// is dropped and the producer should stop caring about this client.
+    pub fn push_frame(&self, msg: Message) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed || st.dead {
+                return false;
+            }
+            if st.frames.len() < OUTBOUND_CAP {
+                st.frames.push_back(msg);
+                self.ready.notify_one();
+                return true;
+            }
+            st = self.space.wait(st).unwrap();
+        }
+    }
+
+    /// Enqueue a progress snapshot. Never blocks: an undelivered
+    /// snapshot for the same job is replaced, and the replacement's
+    /// `coalesced` counter absorbs the superseded one's count plus one.
+    pub fn push_progress(&self, msg: Message) {
+        let Message::Progress { job_id, done, total, cell, coalesced } = msg else {
+            debug_assert!(false, "push_progress takes Message::Progress");
+            return;
+        };
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.dead {
+            return;
+        }
+        let absorbed = match st.progress.get(&job_id) {
+            Some(Message::Progress { coalesced: prior, .. }) => prior + 1,
+            _ => 0,
+        };
+        st.progress.insert(
+            job_id,
+            Message::Progress { job_id, done, total, cell, coalesced: coalesced + absorbed },
+        );
+        self.ready.notify_one();
+    }
+
+    /// Writer-side pop: guaranteed frames first (FIFO), then pending
+    /// progress snapshots. Blocks until something arrives; `None` means
+    /// closed-and-drained (or dead) — the writer should exit.
+    pub fn pop(&self) -> Option<Message> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.dead {
+                return None;
+            }
+            if let Some(msg) = st.frames.pop_front() {
+                self.space.notify_one();
+                return Some(msg);
+            }
+            if let Some(&job_id) = st.progress.keys().next() {
+                return st.progress.remove(&job_id);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// No further frames; the writer drains what is queued, then exits.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+
+    /// The socket write failed: drop everything and unblock producers.
+    pub fn mark_dead(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.dead = true;
+        st.frames.clear();
+        st.progress.clear();
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Queued guaranteed frames (diagnostics / tests).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().frames.len()
+    }
+}
+
+/// Incremental frame decoder over any [`Read`] — typically a TcpStream
+/// with a read timeout so the owning thread can poll a shutdown flag.
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+/// One poll of [`FrameReader::next`].
+pub enum ReadEvent {
+    /// A complete, valid frame.
+    Frame(Message),
+    /// Nothing decodable yet (short read or timeout); poll again.
+    Pending,
+    /// Peer closed the connection cleanly.
+    Eof,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader { buf: Vec::new() }
+    }
+
+    /// Pull more bytes from `src` and try to decode one frame. Corrupt
+    /// input returns `Err` — the caller must drop the connection, since
+    /// frame alignment is lost (see [`protocol::decode`]).
+    pub fn next(&mut self, src: &mut impl Read) -> Result<ReadEvent> {
+        // a prior read may have buffered more than one frame
+        if let Some(ev) = self.take_buffered()? {
+            return Ok(ev);
+        }
+        let mut chunk = [0u8; 4096];
+        match src.read(&mut chunk) {
+            Ok(0) => {
+                if self.buf.is_empty() {
+                    Ok(ReadEvent::Eof)
+                } else {
+                    anyhow::bail!("connection closed mid-frame ({} bytes buffered)", self.buf.len())
+                }
+            }
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(self.take_buffered()?.unwrap_or(ReadEvent::Pending))
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(ReadEvent::Pending)
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn take_buffered(&mut self) -> Result<Option<ReadEvent>> {
+        match protocol::decode(&self.buf)? {
+            Some((msg, used)) => {
+                self.buf.drain(..used);
+                Ok(Some(ReadEvent::Frame(msg)))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn progress_coalesces_per_job_latest_wins() {
+        let out = Outbound::new();
+        for done in 1..=5 {
+            out.push_progress(Message::Progress {
+                job_id: 7,
+                done,
+                total: 5,
+                cell: format!("c{done}"),
+                coalesced: 0,
+            });
+        }
+        out.close();
+        let Some(Message::Progress { done, coalesced, cell, .. }) = out.pop() else {
+            panic!("expected one coalesced progress frame");
+        };
+        assert_eq!((done, coalesced, cell.as_str()), (5, 4, "c5"));
+        assert!(out.pop().is_none());
+    }
+
+    #[test]
+    fn frames_pop_before_progress_and_fifo_holds() {
+        let out = Outbound::new();
+        out.push_progress(Message::Progress {
+            job_id: 1,
+            done: 1,
+            total: 2,
+            cell: "x".into(),
+            coalesced: 0,
+        });
+        assert!(out.push_frame(Message::Accepted { job_id: 1, cells: 2 }));
+        assert!(out.push_frame(Message::Done { job_id: 1, ok: 2, failed: 0, cancelled: 0 }));
+        out.close();
+        assert_eq!(out.pop().unwrap().kind(), "accepted");
+        assert_eq!(out.pop().unwrap().kind(), "done");
+        assert_eq!(out.pop().unwrap().kind(), "progress");
+        assert!(out.pop().is_none());
+    }
+
+    #[test]
+    fn full_queue_blocks_producer_until_writer_drains() {
+        let out = Arc::new(Outbound::new());
+        for _ in 0..OUTBOUND_CAP {
+            assert!(out.push_frame(Message::ShutdownAck));
+        }
+        assert_eq!(out.depth(), OUTBOUND_CAP);
+        let producer = {
+            let out = Arc::clone(&out);
+            std::thread::spawn(move || out.push_frame(Message::ShutdownAck))
+        };
+        // the producer is parked on the space condvar; one pop frees it
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!producer.is_finished(), "push into a full queue must block");
+        assert!(out.pop().is_some());
+        assert!(producer.join().unwrap());
+    }
+
+    #[test]
+    fn dead_connection_drops_frames_and_unblocks() {
+        let out = Outbound::new();
+        assert!(out.push_frame(Message::ShutdownAck));
+        out.mark_dead();
+        assert!(!out.push_frame(Message::ShutdownAck));
+        assert!(out.pop().is_none());
+        assert_eq!(out.depth(), 0);
+    }
+
+    #[test]
+    fn frame_reader_reassembles_split_frames() {
+        let bytes = protocol::encode(&Message::Hello { protocol: protocol::PROTOCOL_VERSION })
+            .unwrap();
+        let mut rd = FrameReader::new();
+        // feed one byte at a time through a cursor; every prefix is Pending
+        for cut in 1..bytes.len() {
+            let mut src = std::io::Cursor::new(&bytes[cut - 1..cut]);
+            match rd.next(&mut src).unwrap() {
+                ReadEvent::Pending => {}
+                _ => panic!("prefix of {cut} bytes should be Pending"),
+            }
+        }
+        let mut src = std::io::Cursor::new(&bytes[bytes.len() - 1..]);
+        match rd.next(&mut src).unwrap() {
+            ReadEvent::Frame(msg) => assert_eq!(msg.kind(), "hello"),
+            _ => panic!("final byte should complete the frame"),
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! Tests for the `pahq serve` subsystem, pinning the acceptance
+//! criteria of the serve PR:
+//!
+//! - frame-codec round trips, plus corruption tests (truncated,
+//!   oversized, bad-checksum, bit-flipped frames are rejected as errors
+//!   — never panics, never bogus decodes);
+//! - wire round trips for `RunSpec` / `MatrixSpec` payloads, including
+//!   rejection of server-owned and unknown keys;
+//! - server-vs-`api::run` record bit-identity on the synthetic
+//!   substrate (the contract the daemon inherits from matrix cells);
+//! - two concurrent clients interleaving on one daemon, with one
+//!   client's cancellation never dropping the other's job.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use pahq::api::{self, MatrixSpec, RunSpec, Substrate};
+use pahq::discovery::RunRecord;
+use pahq::serve::protocol::{
+    checksum, decode, encode, encode_payload, Message, HEADER_LEN, MAGIC, MAX_PAYLOAD,
+    PROTOCOL_VERSION,
+};
+use pahq::serve::{FrameReader, ReadEvent, ServeConfig, Server};
+use pahq::util::json::Json;
+
+fn quick_spec() -> RunSpec {
+    RunSpec::builder("redwood2l-sim", "ioi")
+        .method("pahq".parse().unwrap())
+        .tau(0.01)
+        .substrate(Substrate::Synthetic)
+        .build()
+        .unwrap()
+}
+
+/// The bit-identity fingerprint the matrix contract pins: kept set,
+/// eval count, and final metric — not wall times or cache provenance.
+fn fingerprint(rec: &RunRecord) -> (String, usize, usize, usize, String) {
+    (
+        rec.kept_hash.clone(),
+        rec.n_evals,
+        rec.n_edges,
+        rec.n_kept,
+        format!("{:.9}", rec.final_metric),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Frame codec
+
+#[test]
+fn every_message_variant_round_trips_through_the_codec() {
+    let variants = vec![
+        Message::Hello { protocol: PROTOCOL_VERSION },
+        Message::HelloAck { protocol: PROTOCOL_VERSION, record_schema: 1 },
+        Message::SubmitRun { spec: quick_spec() },
+        Message::SubmitMatrix { spec: MatrixSpec::builder().build().unwrap() },
+        Message::Accepted { job_id: 3, cells: 8 },
+        Message::Cancel { job_id: 3 },
+        Message::CancelAck { job_id: 3, dropped: 5 },
+        Message::Progress { job_id: 3, done: 2, total: 8, cell: "c".into(), coalesced: 1 },
+        Message::Record { job_id: 3, cell: "c".into(), record: Json::parse("{\"x\":1}").unwrap() },
+        Message::CellError { job_id: 3, cell: "c".into(), error: "boom".into() },
+        Message::Done { job_id: 3, ok: 6, failed: 1, cancelled: 1 },
+        Message::Error {
+            code: pahq::serve::ErrorCode::InvalidSpec,
+            message: "policy: nope".into(),
+        },
+        Message::Shutdown,
+        Message::ShutdownAck,
+    ];
+    for msg in variants {
+        let bytes = encode(&msg).unwrap();
+        let (back, used) = decode(&bytes).unwrap().expect("complete frame decodes");
+        assert_eq!(used, bytes.len(), "{}", msg.kind());
+        // Message carries specs without PartialEq; canonical JSON is the
+        // equality the wire cares about anyway
+        assert_eq!(back.to_json().dump(), msg.to_json().dump(), "{}", msg.kind());
+    }
+}
+
+#[test]
+fn every_truncation_is_incomplete_not_an_error() {
+    let bytes = encode(&Message::Accepted { job_id: 42, cells: 7 }).unwrap();
+    for cut in 0..bytes.len() {
+        match decode(&bytes[..cut]) {
+            Ok(None) => {}
+            Ok(Some(_)) => panic!("prefix of {cut} bytes decoded as a whole frame"),
+            Err(e) => panic!("prefix of {cut} bytes rejected as corrupt: {e}"),
+        }
+    }
+}
+
+#[test]
+fn corrupt_frames_are_errors_not_panics() {
+    let good = encode(&Message::Cancel { job_id: 1 }).unwrap();
+
+    // bad magic — rejected from the very first byte
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    assert!(decode(&bad).is_err(), "bad magic");
+    assert!(decode(&bad[..1]).is_err(), "bad magic, one byte in");
+
+    // unsupported version
+    let mut bad = good.clone();
+    bad[4] = 99;
+    assert!(decode(&bad).is_err(), "bad version");
+
+    // nonzero reserved bytes
+    let mut bad = good.clone();
+    bad[6] = 1;
+    assert!(decode(&bad).is_err(), "reserved bytes");
+
+    // oversized length field: rejected from the header alone, without
+    // waiting to buffer the forged payload
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+    assert!(decode(&bad[..HEADER_LEN]).is_err(), "oversized length");
+
+    // every single-bit flip in the payload breaks the checksum
+    for byte in HEADER_LEN..good.len() {
+        let mut bad = good.clone();
+        bad[byte] ^= 0x40;
+        assert!(decode(&bad).is_err(), "flipped payload byte {byte} slipped through");
+    }
+
+    // valid frame, nonsense payloads: error, not panic
+    for payload in [&b"not json"[..], b"[1,2]", br#"{"type":"nope"}"#, &[0xff, 0xfe][..]] {
+        let framed = encode_payload(payload).unwrap();
+        assert!(decode(&framed).is_err(), "payload {payload:?}");
+    }
+
+    assert!(encode_payload(&vec![0u8; MAX_PAYLOAD + 1]).is_err(), "oversized encode");
+}
+
+#[test]
+fn checksum_is_fnv1a64_and_position_sensitive() {
+    assert_eq!(checksum(b""), 0xcbf2_9ce4_8422_2325);
+    assert_ne!(checksum(b"ab"), checksum(b"ba"));
+    assert_eq!(MAGIC, *b"PQWF");
+}
+
+// ---------------------------------------------------------------------------
+// Wire spec payloads
+
+#[test]
+fn run_spec_wire_round_trips_and_rejects_bad_keys() {
+    let spec = quick_spec();
+    assert_eq!(RunSpec::from_wire(&spec.to_wire()).unwrap(), spec);
+
+    // minimal payload: builder defaults fill everything else
+    let min = RunSpec::from_wire(
+        &Json::parse(r#"{"model": "redwood2l-sim", "task": "ioi"}"#).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(min.policy.name, "pahq-8b");
+
+    let err = RunSpec::from_wire(
+        &Json::parse(r#"{"model": "redwood2l-sim", "task": "ioi", "store": "disk"}"#).unwrap(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("server-owned"), "{err}");
+
+    let err = RunSpec::from_wire(
+        &Json::parse(r#"{"model": "redwood2l-sim", "task": "ioi", "tua": 0.1}"#).unwrap(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("unknown key 'tua'"), "{err}");
+
+    // a wire seed must be an exact non-negative integer
+    for bad in ["-1", "0.5", "1e300"] {
+        let payload = format!(r#"{{"model": "redwood2l-sim", "task": "ioi", "seed": {bad}}}"#);
+        assert!(
+            RunSpec::from_wire(&Json::parse(&payload).unwrap()).is_err(),
+            "seed {bad} accepted"
+        );
+    }
+}
+
+#[test]
+fn matrix_spec_wire_round_trips_and_rejects_bad_keys() {
+    let spec = MatrixSpec::builder().build().unwrap();
+    let back = MatrixSpec::from_wire(&spec.to_wire()).unwrap();
+    let ids = |s: &MatrixSpec| {
+        s.cells().iter().map(|c| c.id()).collect::<Vec<_>>()
+    };
+    assert_eq!(ids(&spec), ids(&back), "wire round trip changed the grid");
+
+    // `{}` is the acceptance grid
+    assert!(!ids(&MatrixSpec::from_wire(&Json::parse("{}").unwrap()).unwrap()).is_empty());
+
+    let err = MatrixSpec::from_wire(&Json::parse(r#"{"workers": 4}"#).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("server-owned"), "{err}");
+    assert!(MatrixSpec::from_wire(&Json::parse(r#"{"modles": []}"#).unwrap()).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Live-server helpers
+
+struct TestClient {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+impl TestClient {
+    fn connect(addr: std::net::SocketAddr) -> TestClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        TestClient { stream, reader: FrameReader::new() }
+    }
+
+    fn send(&mut self, msg: &Message) {
+        self.stream.write_all(&encode(msg).unwrap()).unwrap();
+    }
+
+    fn recv(&mut self) -> Message {
+        let deadline = std::time::Instant::now() + Duration::from_secs(60);
+        loop {
+            match self.reader.next(&mut self.stream).unwrap() {
+                ReadEvent::Frame(msg) => return msg,
+                ReadEvent::Pending => {
+                    assert!(std::time::Instant::now() < deadline, "no frame within 60s");
+                }
+                ReadEvent::Eof => panic!("server closed the connection"),
+            }
+        }
+    }
+
+    fn handshake(&mut self) {
+        self.send(&Message::Hello { protocol: PROTOCOL_VERSION });
+        let ack = self.recv();
+        assert!(matches!(ack, Message::HelloAck { .. }), "got '{}'", ack.kind());
+    }
+
+    fn submit_accepted(&mut self, msg: &Message) -> (u64, usize) {
+        self.send(msg);
+        match self.recv() {
+            Message::Accepted { job_id, cells } => (job_id, cells),
+            other => panic!("expected accepted, got '{}'", other.kind()),
+        }
+    }
+
+    /// Drain one job to `done`, returning (records, ok, failed, cancelled).
+    fn stream_to_done(&mut self, job_id: u64) -> (Vec<RunRecord>, usize, usize, usize) {
+        let mut records = Vec::new();
+        loop {
+            match self.recv() {
+                Message::Record { job_id: j, record, .. } => {
+                    assert_eq!(j, job_id);
+                    records.push(RunRecord::from_json(&record).expect("schema-valid record"));
+                }
+                Message::Progress { job_id: j, .. } | Message::CancelAck { job_id: j, .. } => {
+                    assert_eq!(j, job_id);
+                }
+                Message::CellError { error, .. } => panic!("cell failed: {error}"),
+                Message::Done { job_id: j, ok, failed, cancelled } => {
+                    assert_eq!(j, job_id);
+                    return (records, ok, failed, cancelled);
+                }
+                other => panic!("unexpected '{}'", other.kind()),
+            }
+        }
+    }
+}
+
+fn start_server(workers: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn shutdown(addr: std::net::SocketAddr) {
+    let mut c = TestClient::connect(addr);
+    c.handshake();
+    c.send(&Message::Shutdown);
+    loop {
+        if matches!(c.recv(), Message::ShutdownAck) {
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live-server behavior
+
+#[test]
+fn served_record_is_bit_identical_to_standalone_api_run() {
+    let spec = quick_spec();
+    let standalone = api::run(&spec).unwrap();
+
+    let (addr, handle) = start_server(2);
+    let mut client = TestClient::connect(addr);
+    client.handshake();
+    let (job_id, cells) = client.submit_accepted(&Message::SubmitRun { spec: quick_spec() });
+    assert_eq!(cells, 1);
+    let (records, ok, failed, cancelled) = client.stream_to_done(job_id);
+    assert_eq!((ok, failed, cancelled), (1, 0, 0));
+    assert_eq!(records.len(), 1);
+    assert_eq!(
+        fingerprint(&records[0]),
+        fingerprint(&standalone),
+        "served record diverged from api::run"
+    );
+
+    // second submission on the same connection: the shared store is warm
+    // now, and the kept set must not move (the matrix cache contract)
+    let (job2, _) = client.submit_accepted(&Message::SubmitRun { spec: quick_spec() });
+    let (records2, ..) = client.stream_to_done(job2);
+    assert_eq!(fingerprint(&records2[0]), fingerprint(&standalone), "warm cache moved the circuit");
+
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn two_clients_interleave_and_one_cancel_never_drops_the_other() {
+    let (addr, handle) = start_server(2);
+
+    let mut a = TestClient::connect(addr);
+    let mut b = TestClient::connect(addr);
+    a.handshake();
+    b.handshake();
+
+    // client A submits the full default grid (many cells), then cancels;
+    // client B submits one run that must complete untouched
+    let (job_a, cells_a) =
+        a.submit_accepted(&Message::SubmitMatrix { spec: MatrixSpec::builder().build().unwrap() });
+    assert!(cells_a > 2, "grid should have several cells, got {cells_a}");
+    a.send(&Message::Cancel { job_id: job_a });
+    let (job_b, _) = b.submit_accepted(&Message::SubmitRun { spec: quick_spec() });
+    let (_, ok_a, failed_a, cancelled_a) = a.stream_to_done(job_a);
+    assert_eq!(ok_a + failed_a + cancelled_a, cells_a, "every cell accounted for");
+    assert!(cancelled_a > 0, "cancel arrived first; some cells must have been dropped");
+    assert_eq!(failed_a, 0);
+
+    let (records_b, ok_b, failed_b, cancelled_b) = b.stream_to_done(job_b);
+    assert_eq!(
+        (ok_b, failed_b, cancelled_b),
+        (1, 0, 0),
+        "client A's cancel must never touch client B's job"
+    );
+    assert_eq!(records_b.len(), 1);
+
+    // job ids are server-global and distinct across connections
+    assert_ne!(job_a, job_b);
+
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn protocol_violations_are_reported_per_session() {
+    let (addr, handle) = start_server(1);
+
+    // submit before hello is a protocol error
+    let mut c = TestClient::connect(addr);
+    c.send(&Message::SubmitRun { spec: quick_spec() });
+    match c.recv() {
+        Message::Error { code, .. } => assert_eq!(code, pahq::serve::ErrorCode::Protocol),
+        other => panic!("expected error, got '{}'", other.kind()),
+    }
+
+    // cancelling another client's (or an unknown) job is refused
+    let mut c = TestClient::connect(addr);
+    c.handshake();
+    c.send(&Message::Cancel { job_id: 999 });
+    match c.recv() {
+        Message::Error { code, .. } => assert_eq!(code, pahq::serve::ErrorCode::UnknownJob),
+        other => panic!("expected error, got '{}'", other.kind()),
+    }
+
+    shutdown(addr);
+    handle.join().unwrap();
+}

@@ -10,6 +10,8 @@ Usage:
     python scripts/check_schema.py docs/run_record.schema.json ARTIFACT.json
     python scripts/check_schema.py docs/matrix.schema.json matrix.json \
         [--records docs/run_record.schema.json]
+    python scripts/check_schema.py docs/serve_protocol.schema.json FRAMES.jsonl \
+        --serve-frames [--records docs/run_record.schema.json]
 
 ARTIFACT.json is a bare RunRecord (kind == "run_record"), a bench
 snapshot (kind == "bench_snapshot") whose "records" array holds
@@ -26,6 +28,16 @@ With --completed, bare records (and bench-snapshot records) must also
 pass the cell-completion gate: nonzero evals and n_kept <= n_edges.
 CI uses this on the record `examples/embed.rs` emits, so the embedding
 example is gated on actually *running* a discovery, not just compiling.
+
+With --serve-frames, the artifact is instead the JSONL frame log that
+`examples/serve_client.rs --json PATH` writes from a live `pahq serve`
+conversation: one {"direction", "frame"} object per line. Every frame
+payload is validated against the schema entry its "type" discriminator
+selects (docs/serve_protocol.schema.json `messages` map; unknown types
+fail). With --records, each `record` frame's embedded RunRecord payload
+is additionally validated against the record schema and the completion
+gate — the CI serve-smoke job uses this to pin that the daemon streams
+real, schema-valid discovery results, not just well-shaped envelopes.
 """
 
 import json
@@ -177,6 +189,49 @@ def check_store(doc, schema):
     return len(seen)
 
 
+DIRECTIONS = ("client->server", "server->client")
+
+
+def check_serve_frames(path, schema, records_schema):
+    """Validate every frame of a serve conversation log against the
+    per-type message schemas, returning per-type frame counts."""
+    if schema.get("kind") != "serve_protocol":
+        raise SchemaError(f"schema kind {schema.get('kind')!r} is not 'serve_protocol'")
+    messages = schema.get("messages")
+    if not isinstance(messages, dict) or not messages:
+        raise SchemaError("serve_protocol schema has no `messages` map")
+    counts = {}
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            where = f"{os.path.basename(path)}:{lineno}"
+            try:
+                entry = json.loads(line)
+            except ValueError as e:
+                raise SchemaError(f"{where}: not JSON: {e}")
+            if not isinstance(entry, dict):
+                raise SchemaError(f"{where}: expected a {{direction, frame}} object")
+            if entry.get("direction") not in DIRECTIONS:
+                raise SchemaError(f"{where}: direction {entry.get('direction')!r} invalid")
+            frame = entry.get("frame")
+            if not isinstance(frame, dict):
+                raise SchemaError(f"{where}: missing `frame` object")
+            kind = frame.get("type")
+            msg_schema = messages.get(kind)
+            if msg_schema is None:
+                raise SchemaError(f"{where}: unknown frame type {kind!r}")
+            check(frame, msg_schema, f"{where}.frame")
+            if kind == "record" and records_schema is not None:
+                check(frame["record"], records_schema, f"{where}.frame.record")
+                check_completed(frame["record"], f"{where}.frame.record")
+            counts[kind] = counts.get(kind, 0) + 1
+    if not counts:
+        raise SchemaError(f"{path}: frame log is empty")
+    return counts
+
+
 def check_completed(rec, where):
     """The cell-completion gate, applied to a bare record."""
     if not rec.get("n_evals"):
@@ -190,9 +245,13 @@ def check_completed(rec, where):
 def main(argv):
     records_schema_path = None
     completed = False
+    serve_frames = False
     if "--completed" in argv:
         completed = True
         argv = [a for a in argv if a != "--completed"]
+    if "--serve-frames" in argv:
+        serve_frames = True
+        argv = [a for a in argv if a != "--serve-frames"]
     if "--records" in argv:
         i = argv.index("--records")
         if i + 1 >= len(argv):
@@ -205,12 +264,22 @@ def main(argv):
         return 2
     with open(argv[1]) as f:
         schema = json.load(f)
-    with open(argv[2]) as f:
-        doc = json.load(f)
     records_schema = None
     if records_schema_path is not None:
         with open(records_schema_path) as f:
             records_schema = json.load(f)
+    if serve_frames:
+        try:
+            counts = check_serve_frames(argv[2], schema, records_schema)
+        except SchemaError as e:
+            print(f"schema check FAILED: {e}")
+            return 1
+        total = sum(counts.values())
+        breakdown = ", ".join(f"{k}:{v}" for k, v in sorted(counts.items()))
+        print(f"schema check OK: {total} serve frame(s) valid ({breakdown})")
+        return 0
+    with open(argv[2]) as f:
+        doc = json.load(f)
     try:
         if isinstance(doc, dict) and doc.get("kind") == "store_manifest":
             n_entries = check_store(doc, schema)

@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test for the `pahq serve` daemon (stdlib-only).
+
+Boots the daemon on an ephemeral loopback port, then drives it with the
+real wire client (``examples/serve_client.rs``) exactly the way the
+protocol doc promises it works:
+
+1. two *concurrent* clients — one single-run submission, one matrix
+   submission — stream their jobs to ``done`` at the same time through
+   the shared worker pool and artifact store;
+2. a third client submits the matrix and immediately cancels it,
+   exercising the cancel path (in-flight cells finish, queued cells
+   drop, the terminal ``done`` still accounts for every cell);
+3. every frame of every conversation is schema-validated against
+   ``docs/serve_protocol.schema.json`` (and each streamed RunRecord
+   against ``docs/run_record.schema.json`` plus the completion gate)
+   via ``check_schema.py --serve-frames``;
+4. a ``shutdown`` request drains the daemon, which must exit 0 within
+   the timeout — no orphaned threads, no hung sockets.
+
+Usage:
+    python scripts/serve_smoke.py PAHQ_BIN SERVE_CLIENT_BIN
+    (e.g. target/release/pahq target/release/examples/serve_client)
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+SCHEMA = os.path.join(REPO, "docs", "serve_protocol.schema.json")
+RECORD_SCHEMA = os.path.join(REPO, "docs", "run_record.schema.json")
+
+CLIENT_TIMEOUT = 120  # per client conversation, seconds
+SHUTDOWN_TIMEOUT = 60  # daemon exit after shutdown_ack, seconds
+
+sys.path.insert(0, HERE)
+from check_schema import SchemaError, check_serve_frames  # noqa: E402
+
+
+def free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def wait_listening(addr, proc, deadline):
+    host, port = addr.split(":")
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            sys.exit(f"daemon exited early with code {proc.returncode}")
+        try:
+            with socket.create_connection((host, int(port)), timeout=1):
+                return
+        except OSError:
+            time.sleep(0.1)
+    sys.exit("daemon never started listening")
+
+
+def frames(log_path):
+    with open(log_path) as f:
+        return [json.loads(line)["frame"] for line in f if line.strip()]
+
+
+def validate(log_path):
+    try:
+        with open(SCHEMA) as f:
+            schema = json.load(f)
+        with open(RECORD_SCHEMA) as f:
+            record_schema = json.load(f)
+        counts = check_serve_frames(log_path, schema, record_schema)
+    except SchemaError as e:
+        sys.exit(f"schema check FAILED for {log_path}: {e}")
+    print(f"  {os.path.basename(log_path)}: {sum(counts.values())} frames schema-valid")
+    return counts
+
+
+def check_accounted(log_path, expect_records=None):
+    """The per-job bookkeeping invariant: done accounts for every
+    accepted cell, and nothing failed."""
+    fs = frames(log_path)
+    accepted = [f for f in fs if f["type"] == "accepted"]
+    done = [f for f in fs if f["type"] == "done"]
+    records = [f for f in fs if f["type"] == "record"]
+    if len(accepted) != 1 or len(done) != 1:
+        sys.exit(f"{log_path}: expected one accepted and one done frame")
+    cells = accepted[0]["cells"]
+    d = done[0]
+    if d["ok"] + d["failed"] + d["cancelled"] != cells:
+        sys.exit(f"{log_path}: done {d} does not account for {cells} cells")
+    if d["failed"]:
+        sys.exit(f"{log_path}: {d['failed']} cell(s) failed")
+    if d["ok"] != len(records):
+        sys.exit(f"{log_path}: done.ok {d['ok']} != {len(records)} streamed records")
+    if expect_records is not None and len(records) != expect_records:
+        sys.exit(f"{log_path}: expected {expect_records} records, got {len(records)}")
+    return d
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    pahq, client = argv[1], argv[2]
+    port = free_port()
+    addr = f"127.0.0.1:{port}"
+    tmp = tempfile.mkdtemp(prefix="serve_smoke_")
+    logs = {name: os.path.join(tmp, f"{name}.jsonl") for name in ("run", "matrix", "cancel")}
+
+    daemon = subprocess.Popen([pahq, "serve", "--addr", addr, "--workers", "2"])
+    try:
+        wait_listening(addr, daemon, time.monotonic() + 30)
+        print(f"daemon up on {addr}")
+
+        # 1. two clients, genuinely concurrent: both conversations are
+        # in flight at once, drained by the same shared worker pool
+        a = subprocess.Popen([client, addr, "--json", logs["run"]])
+        b = subprocess.Popen([client, addr, "--matrix", "--json", logs["matrix"]])
+        for name, proc in (("run client", a), ("matrix client", b)):
+            if proc.wait(timeout=CLIENT_TIMEOUT) != 0:
+                sys.exit(f"{name} failed with code {proc.returncode}")
+        print("concurrent run + matrix clients OK")
+
+        # 2. submit-then-cancel: the client asserts the stream stays
+        # coherent; we assert the terminal accounting below
+        subprocess.run(
+            [client, addr, "--cancel", "--json", logs["cancel"]],
+            check=True,
+            timeout=CLIENT_TIMEOUT,
+        )
+        print("cancel client OK")
+
+        # 3. every frame of every conversation against the schema
+        for log in logs.values():
+            validate(log)
+        check_accounted(logs["run"], expect_records=1)
+        d = check_accounted(logs["matrix"], expect_records=8)
+        print(f"matrix job accounted: {d['ok']} ok")
+        d = check_accounted(logs["cancel"])
+        print(f"cancel job accounted: {d['ok']} ok, {d['cancelled']} cancelled")
+        if not any(f["type"] == "cancel_ack" for f in frames(logs["cancel"])):
+            sys.exit("cancel conversation has no cancel_ack frame")
+
+        # 4. clean shutdown within the timeout
+        subprocess.run([client, addr, "--shutdown"], check=True, timeout=CLIENT_TIMEOUT)
+        code = daemon.wait(timeout=SHUTDOWN_TIMEOUT)
+        if code != 0:
+            sys.exit(f"daemon exited {code} after shutdown")
+        print("daemon drained and exited 0")
+    finally:
+        if daemon.poll() is None:
+            daemon.kill()
+            daemon.wait()
+    print("serve smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
