@@ -32,6 +32,9 @@ use pahq::util::rng::Rng;
 fn bench_assembly(c: &mut Criterion) {
     let mut rng = Rng::new(42);
     let mut g = c.benchmark_group("assembly");
+    g.warm_up_time(Duration::from_millis(300))
+        .measurement_time(Duration::from_secs(1))
+        .sample_size(30);
     for n in [20_480usize, 163_840] {
         let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
@@ -100,6 +103,9 @@ fn bench_quant(c: &mut Criterion) {
     let xs: Vec<f32> = (0..65_536).map(|_| rng.normal() * 8.0).collect();
     let mut buf = xs.clone();
     let mut g = c.benchmark_group("quant");
+    g.warm_up_time(Duration::from_millis(300))
+        .measurement_time(Duration::from_secs(1))
+        .sample_size(30);
     g.bench_function("fq_slice_64k_e4m3", |bch| {
         bch.iter(|| {
             buf.copy_from_slice(&xs);
@@ -232,6 +238,44 @@ fn bench_engine(c: &mut Criterion) {
     }
 }
 
+/// The load harness's latency accounting: recording into and merging
+/// the fixed-bucket log2 histogram (the per-request hot path of
+/// `pahq load`), plus expanding a saturate schedule. All three must be
+/// cheap enough to never perturb the latencies being measured.
+fn bench_load_hist(c: &mut Criterion) {
+    let mut rng = Rng::new(7);
+    let samples: Vec<u64> = (0..4096).map(|_| rng.below(1 << 24) as u64).collect();
+    let mut g = c.benchmark_group("load_hist");
+    g.warm_up_time(Duration::from_millis(300))
+        .measurement_time(Duration::from_secs(1))
+        .sample_size(30);
+    g.bench_function("record_4k", |bch| {
+        bch.iter(|| {
+            let mut h = pahq::load::Histogram::new();
+            for &v in black_box(&samples) {
+                h.record_us(v);
+            }
+            black_box(h.quantile_us(0.99))
+        })
+    });
+    let mut base = pahq::load::Histogram::new();
+    for &v in &samples {
+        base.record_us(v);
+    }
+    g.bench_function("merge_pair", |bch| {
+        bch.iter(|| {
+            let mut a = base.clone();
+            a.merge(black_box(&base));
+            black_box(a.count())
+        })
+    });
+    let scenario: pahq::load::Scenario = "saturate".parse().unwrap();
+    g.bench_function("schedule_saturate", |bch| {
+        bch.iter(|| black_box(&scenario).schedule().len())
+    });
+    g.finish();
+}
+
 criterion_group!(
     benches,
     bench_assembly,
@@ -240,6 +284,7 @@ criterion_group!(
     bench_sweep,
     bench_des,
     bench_json,
+    bench_load_hist,
     bench_engine
 );
 criterion_main!(benches);

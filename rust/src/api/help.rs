@@ -58,6 +58,7 @@ pub fn subcommands() -> Vec<(&'static str, &'static str)> {
         ("bench", "deterministic perf snapshot for CI's perf gate"),
         ("store", "inspect / garbage-collect the durable artifact store"),
         ("serve", "multi-client discovery daemon (docs/serve_protocol.md)"),
+        ("load", "scenario-driven load/latency harness against `pahq serve` or in-process"),
         ("info", "model/artifact inventory"),
         ("help", "this overview, or `pahq help <subcommand>` for flags"),
     ]
@@ -223,6 +224,47 @@ fn serve_flags() -> Vec<(String, String)> {
     ]
 }
 
+/// `smoke|steady|burst|saturate` — the load-scenario presets.
+pub fn scenario_spellings() -> String {
+    crate::load::PRESETS.join("|")
+}
+
+fn load_flags() -> Vec<(String, String)> {
+    vec![
+        (
+            "--scenario S".into(),
+            format!(
+                "named preset with overrides: {}[:key=val,...] (default smoke; \
+                 keys: {})",
+                scenario_spellings(),
+                crate::load::OVERRIDE_KEYS.join("|"),
+            ),
+        ),
+        (
+            "--addr A".into(),
+            "wire mode: drive the live `pahq serve` daemon at HOST:PORT".into(),
+        ),
+        (
+            "--direct".into(),
+            "direct mode: execute the same specs in-process (the engine-only \
+             latency floor; mutually exclusive with --addr)"
+                .into(),
+        ),
+        (
+            "--workers N".into(),
+            "override the scenario's client/thread count".into(),
+        ),
+        (
+            "--shutdown".into(),
+            "after the run, ask the daemon to drain and exit (wire mode only)".into(),
+        ),
+        (
+            "--json PATH".into(),
+            "where load_snapshot.json lands (schema: docs/load_snapshot.schema.json)".into(),
+        ),
+    ]
+}
+
 fn sim_flags() -> Vec<(String, String)> {
     vec![
         ("--arch A".into(), "real architecture to simulate (default gpt2)".into()),
@@ -305,6 +347,7 @@ pub fn subcommand(name: &str) -> Option<String> {
         ),
         "store" => render("store <ls|gc>", &synopsis("store"), &store_cmd_flags()),
         "serve" => render("serve", &synopsis("serve"), &serve_flags()),
+        "load" => render("load", &synopsis("load"), &load_flags()),
         "info" => render("info", &synopsis("info"), &[]),
         _ => return None,
     };
@@ -394,6 +437,18 @@ mod tests {
         let v = subcommand("serve").unwrap();
         for flag in ["--addr", "--workers", "--store", "--gc-horizon"] {
             assert!(v.contains(flag), "serve help misses {flag}");
+        }
+        // every flag cmd_load consults appears in the load help, plus
+        // every scenario preset and override key
+        let l = subcommand("load").unwrap();
+        for flag in ["--scenario", "--addr", "--direct", "--workers", "--shutdown", "--json"] {
+            assert!(l.contains(flag), "load help misses {flag}");
+        }
+        for preset in crate::load::PRESETS {
+            assert!(l.contains(preset), "load help misses preset {preset}");
+        }
+        for key in crate::load::OVERRIDE_KEYS {
+            assert!(l.contains(key), "load help misses override key {key}");
         }
         // the --store value spellings come from the StoreSpec list
         for spelling in StoreSpec::SPELLINGS {

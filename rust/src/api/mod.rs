@@ -1440,6 +1440,29 @@ fn write_record(spec: &RunSpec, rec: &RunRecord) -> Result<()> {
     Ok(())
 }
 
+/// Decompose a matrix spec into per-cell [`RunSpec`]s, mirroring
+/// [`crate::matrix::standalone_cell`]'s derivation so each cell is
+/// bit-identical to a standalone [`run`] of the same spec. Shared by
+/// the `serve` daemon (wire submissions) and the `load` harness's
+/// direct mode, so both decompose a grid identically.
+pub(crate) fn matrix_cells(spec: &MatrixSpec) -> Result<Vec<(String, RunSpec)>> {
+    let cfg = spec.config();
+    spec.cells()
+        .into_iter()
+        .map(|cell| {
+            let spec = RunSpec::builder(&cell.model, &cell.task)
+                .method(cell.method.parse()?)
+                .policy(cell.policy.clone())
+                .tau(cfg.tau)
+                .objective(cfg.objective)
+                .sweep(cfg.sweep)
+                .seed(cfg.seed)
+                .build()?;
+            Ok((cell.id(), spec))
+        })
+        .collect()
+}
+
 /// Run a full grid from a validated spec — THE way a matrix is
 /// launched. Returns the manifest plus where it was written.
 pub fn matrix(spec: &MatrixSpec) -> Result<MatrixOutcome> {

@@ -1,0 +1,362 @@
+//! The load drivers: wire-mode clients speaking the `pahq serve`
+//! protocol, and a direct-mode driver calling the in-process run path.
+//!
+//! Both modes execute the same pre-expanded [`Request`] schedule.
+//! Each client is one thread with private [`RunStats`] (merged by the
+//! caller — no locks on the hot path). Wire mode opens one TCP
+//! connection per client, reuses the daemon's own
+//! [`crate::serve::protocol`] codec, and measures submit→`done`
+//! latency per request; direct mode executes the same specs through
+//! [`api::run_with_cache`] against one shared [`ArtifactCache`],
+//! giving an engine-only latency floor to compare the wire numbers
+//! against.
+//!
+//! Clients synchronize on a barrier *after* connecting/handshaking so
+//! the schedule epoch starts with every connection live, then run open
+//! loop: submit times come from the schedule alone, never from server
+//! responses.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::scenario::{ReqKind, Request, Scenario};
+use super::stats::{Outcome, RunStats};
+use crate::api::{self, MatrixSpec, RunSpec, Substrate};
+use crate::matrix::cache::ArtifactCache;
+use crate::serve::protocol::{encode, Message, PROTOCOL_VERSION};
+use crate::serve::{FrameReader, ReadEvent};
+use crate::util::json::Json;
+
+/// Read-timeout granularity: bounds how late a due submission can go
+/// out while the client is blocked waiting for frames.
+const POLL: Duration = Duration::from_millis(5);
+
+/// Extra wall allowed past the scheduled end for in-flight jobs to
+/// drain before a client gives up.
+const DRAIN_GRACE: Duration = Duration::from_secs(30);
+
+/// Synthetic-substrate tasks the run mix alternates between.
+const TASKS: [&str; 2] = ["ioi", "greater_than"];
+
+/// The single-run spec a [`ReqKind::Run`] request submits.
+fn run_spec(task_idx: usize) -> Result<RunSpec> {
+    RunSpec::builder("redwood2l-sim", TASKS[task_idx % TASKS.len()])
+        .method("pahq".parse()?)
+        .tau(0.01)
+        .substrate(Substrate::Synthetic)
+        .build()
+}
+
+/// The small multi-cell grid a [`ReqKind::Matrix`] (or
+/// [`ReqKind::Cancel`]) request submits — 4 synthetic cells, enough to
+/// exercise progress streaming and queued-cell cancellation.
+fn matrix_spec() -> Result<MatrixSpec> {
+    MatrixSpec::from_wire(&Json::parse(
+        r#"{"models": ["redwood2l-sim"], "tasks": ["ioi", "greater_than"],
+            "methods": ["acdc", "eap"], "policies": ["pahq"]}"#,
+    )?)
+}
+
+/// Split the schedule into per-client slices (client ids were assigned
+/// round-robin by [`Scenario::schedule`]).
+fn per_client(schedule: &[Request], clients: usize) -> Vec<Vec<Request>> {
+    let mut out = vec![Vec::new(); clients];
+    for r in schedule {
+        out[r.client % clients].push(*r);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Wire mode
+
+struct WireClient {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+impl WireClient {
+    fn connect(addr: &str) -> Result<WireClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(POLL))?;
+        Ok(WireClient { stream, reader: FrameReader::new() })
+    }
+
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.stream.write_all(&encode(msg)?).context("sending frame")
+    }
+
+    /// One bounded read attempt: `Ok(None)` on timeout.
+    fn poll(&mut self) -> Result<Option<Message>> {
+        match self.reader.next(&mut self.stream)? {
+            ReadEvent::Frame(msg) => Ok(Some(msg)),
+            ReadEvent::Pending => Ok(None),
+            ReadEvent::Eof => bail!("server closed the connection"),
+        }
+    }
+
+    /// Block (bounded by `deadline`) until the next frame.
+    fn recv(&mut self, deadline: Instant) -> Result<Message> {
+        loop {
+            if let Some(msg) = self.poll()? {
+                return Ok(msg);
+            }
+            if Instant::now() > deadline {
+                bail!("timed out waiting for a frame");
+            }
+        }
+    }
+
+    fn handshake(&mut self) -> Result<()> {
+        self.send(&Message::Hello { protocol: PROTOCOL_VERSION })?;
+        match self.recv(Instant::now() + Duration::from_secs(10))? {
+            Message::HelloAck { .. } => Ok(()),
+            other => bail!("expected hello_ack, got '{}'", other.kind()),
+        }
+    }
+}
+
+/// One wire client thread: submit this client's slice of the schedule
+/// open-loop, stream responses, account everything into private stats.
+fn wire_client_loop(
+    addr: &str,
+    reqs: &[Request],
+    scenario: &Scenario,
+    barrier: &Barrier,
+) -> Result<RunStats> {
+    let mut stats = RunStats::new(scenario);
+    let mut client = WireClient::connect(addr)?;
+    client.handshake()?;
+    barrier.wait();
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs_f64(scenario.total_seconds()) + DRAIN_GRACE;
+
+    let mut next = 0usize;
+    // submissions whose `accepted` has not arrived yet (the server
+    // replies in submission order per connection)
+    let mut awaiting: VecDeque<(usize, Instant)> = VecDeque::new();
+    // accepted jobs awaiting their terminal `done`
+    let mut active: HashMap<u64, (usize, Instant)> = HashMap::new();
+
+    loop {
+        let now = Instant::now();
+        if now > deadline {
+            bail!(
+                "client deadline exceeded with {} submission(s) and {} job(s) outstanding",
+                awaiting.len(),
+                active.len()
+            );
+        }
+        // drain every submission that has come due
+        if next < reqs.len() && now.duration_since(t0) >= reqs[next].at {
+            let req = reqs[next];
+            let msg = match req.kind {
+                ReqKind::Run => Message::SubmitRun { spec: run_spec(req.task_idx)? },
+                ReqKind::Matrix | ReqKind::Cancel => {
+                    Message::SubmitMatrix { spec: matrix_spec()? }
+                }
+            };
+            client.send(&msg)?;
+            stats.stages[req.stage].note_submit(t0.elapsed().as_secs_f64());
+            awaiting.push_back((next, Instant::now()));
+            next += 1;
+            continue;
+        }
+        if next >= reqs.len() && awaiting.is_empty() && active.is_empty() {
+            break;
+        }
+        let Some(msg) = client.poll()? else { continue };
+        stats.frames_received += 1;
+        match msg {
+            Message::Accepted { job_id, .. } => {
+                let Some((idx, submitted)) = awaiting.pop_front() else {
+                    bail!("accepted frame with no submission outstanding");
+                };
+                active.insert(job_id, (idx, submitted));
+                if reqs[idx].kind == ReqKind::Cancel {
+                    client.send(&Message::Cancel { job_id })?;
+                }
+            }
+            Message::Progress { coalesced, .. } => {
+                stats.progress_frames += 1;
+                stats.coalesced += coalesced as u64;
+            }
+            Message::Record { job_id, .. } => {
+                if let Some(&(idx, _)) = active.get(&job_id) {
+                    stats.stages[reqs[idx].stage].records += 1;
+                }
+            }
+            Message::CellError { .. } => stats.cell_errors += 1,
+            Message::CancelAck { dropped, .. } => {
+                stats.cancel_acks += 1;
+                stats.dropped_cells += dropped as u64;
+            }
+            Message::Done { job_id, failed, cancelled, .. } => {
+                let Some((idx, submitted)) = active.remove(&job_id) else {
+                    bail!("done frame for unknown job {job_id}");
+                };
+                let outcome = if failed > 0 {
+                    Outcome::Failed
+                } else if cancelled > 0 {
+                    Outcome::Cancelled
+                } else {
+                    Outcome::Ok
+                };
+                stats.stages[reqs[idx].stage].note_done(
+                    outcome,
+                    submitted.elapsed(),
+                    t0.elapsed().as_secs_f64(),
+                );
+            }
+            Message::Error { .. } => {
+                stats.errors += 1;
+                // a submission-level refusal consumes the oldest
+                // outstanding submission; count it as failed
+                if let Some((idx, submitted)) = awaiting.pop_front() {
+                    stats.stages[reqs[idx].stage].note_done(
+                        Outcome::Failed,
+                        submitted.elapsed(),
+                        t0.elapsed().as_secs_f64(),
+                    );
+                }
+            }
+            other => bail!("unexpected frame '{}'", other.kind()),
+        }
+    }
+    Ok(stats)
+}
+
+/// Drive the schedule against a live daemon at `addr`. Returns merged
+/// stats with `wall_seconds` filled.
+pub fn run_wire(scenario: &Scenario, schedule: &[Request], addr: &str) -> Result<RunStats> {
+    let slices = per_client(schedule, scenario.clients);
+    let barrier = Barrier::new(scenario.clients + 1);
+    let (wall, results) = std::thread::scope(|scope| {
+        let handles: Vec<_> = slices
+            .iter()
+            .map(|slice| {
+                let barrier = &barrier;
+                scope.spawn(move || wire_client_loop(addr, slice, scenario, barrier))
+            })
+            .collect();
+        barrier.wait();
+        let t0 = Instant::now();
+        let results: Vec<Result<RunStats>> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| bail_panic()))
+            .collect();
+        (t0.elapsed(), results)
+    });
+    merge_results(scenario, results, wall)
+}
+
+/// Ask the daemon to drain and exit (the `--shutdown` flag); used by
+/// CI so the smoke script can assert a clean daemon exit code.
+pub fn shutdown_daemon(addr: &str) -> Result<()> {
+    let mut client = WireClient::connect(addr)?;
+    client.handshake()?;
+    client.send(&Message::Shutdown)?;
+    match client.recv(Instant::now() + Duration::from_secs(30))? {
+        Message::ShutdownAck => Ok(()),
+        other => bail!("expected shutdown_ack, got '{}'", other.kind()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Direct mode
+
+/// One direct-mode thread: execute this client's slice in-process at
+/// the scheduled times against the shared cache.
+fn direct_client_loop(
+    reqs: &[Request],
+    scenario: &Scenario,
+    cache: &ArtifactCache,
+    barrier: &Barrier,
+) -> Result<RunStats> {
+    let mut stats = RunStats::new(scenario);
+    barrier.wait();
+    let t0 = Instant::now();
+    for req in reqs {
+        if let Some(wait) = req.at.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let stage = &mut stats.stages[req.stage];
+        stage.note_submit(t0.elapsed().as_secs_f64());
+        let started = Instant::now();
+        let outcome = match req.kind {
+            ReqKind::Run => match api::run_with_cache(&run_spec(req.task_idx)?, cache) {
+                Ok(_) => {
+                    stage.records += 1;
+                    Outcome::Ok
+                }
+                Err(_) => Outcome::Failed,
+            },
+            ReqKind::Matrix => {
+                let mut failed = false;
+                for (_, spec) in api::matrix_cells(&matrix_spec()?)? {
+                    match api::run_with_cache(&spec, cache) {
+                        Ok(_) => stage.records += 1,
+                        Err(_) => failed = true,
+                    }
+                }
+                if failed { Outcome::Failed } else { Outcome::Ok }
+            }
+            // no daemon to race a cancel against in-process: account
+            // the request as cancelled without executing its cells
+            ReqKind::Cancel => Outcome::Cancelled,
+        };
+        let stage = &mut stats.stages[req.stage];
+        stage.note_done(outcome, started.elapsed(), t0.elapsed().as_secs_f64());
+    }
+    Ok(stats)
+}
+
+/// Drive the schedule through the in-process run path (no daemon, no
+/// sockets): the engine-only latency floor.
+pub fn run_direct(scenario: &Scenario, schedule: &[Request]) -> Result<RunStats> {
+    let cache = crate::matrix::open_cache(&api::StoreSpec::Memory, false)?;
+    let slices = per_client(schedule, scenario.clients);
+    let barrier = Barrier::new(scenario.clients + 1);
+    let (wall, results) = std::thread::scope(|scope| {
+        let handles: Vec<_> = slices
+            .iter()
+            .map(|slice| {
+                let (barrier, cache) = (&barrier, &cache);
+                scope.spawn(move || direct_client_loop(slice, scenario, cache, barrier))
+            })
+            .collect();
+        barrier.wait();
+        let t0 = Instant::now();
+        let results: Vec<Result<RunStats>> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| bail_panic()))
+            .collect();
+        (t0.elapsed(), results)
+    });
+    merge_results(scenario, results, wall)
+}
+
+fn bail_panic() -> Result<RunStats> {
+    Err(anyhow::anyhow!("load client thread panicked"))
+}
+
+fn merge_results(
+    scenario: &Scenario,
+    results: Vec<Result<RunStats>>,
+    wall: Duration,
+) -> Result<RunStats> {
+    let mut merged = RunStats::new(scenario);
+    for r in results {
+        merged.merge(&r?);
+    }
+    merged.wall_seconds = wall.as_secs_f64();
+    Ok(merged)
+}

@@ -1,0 +1,119 @@
+//! `pahq load` — a scenario-driven load/latency harness.
+//!
+//! Drives a live `pahq serve` daemon over its wire protocol (reusing
+//! the [`crate::serve::protocol`] codec) or the in-process run path
+//! directly, from a named repeatable [`Scenario`]: concurrent clients
+//! × open-loop arrival rate × run/matrix/cancel mix × staged duration.
+//! The request schedule is expanded deterministically *before* any
+//! traffic flows, per-request latency lands in an exact-count log2
+//! [`Histogram`] merged across client threads, and the run emits a
+//! schema'd `load_snapshot.json` (p50/p90/p99/max, throughput,
+//! error/cancel/coalesce counts, and a latency-vs-offered-rate
+//! saturation curve) that `scripts/bench_gate.py --load` gates in CI.
+//!
+//! Layering: [`scenario`] (config + presets + deterministic schedule)
+//! → [`client`] (wire/direct drivers) → [`stats`] (histogram +
+//! aggregation) → [`snapshot`] (serialization + curve rendering).
+
+pub mod client;
+pub mod scenario;
+pub mod snapshot;
+pub mod stats;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+pub use scenario::{Mix, ReqKind, Request, Scenario, OVERRIDE_KEYS, PRESETS};
+pub use stats::{Histogram, RunStats};
+
+use crate::util::json::Json;
+
+/// Where the load goes.
+pub enum LoadMode {
+    /// Drive a live daemon over TCP; `shutdown` asks it to drain and
+    /// exit after the run (so smoke scripts can assert a clean exit).
+    Wire { addr: String, shutdown: bool },
+    /// Execute the same specs in-process (no daemon, no sockets).
+    Direct,
+}
+
+/// The `pahq load` invocation.
+pub struct LoadConfig {
+    pub scenario: Scenario,
+    pub mode: LoadMode,
+    /// Where to write `load_snapshot.json` (stdout summary either way).
+    pub json: Option<PathBuf>,
+}
+
+/// Run one scenario end to end; returns the snapshot document.
+pub fn run(cfg: &LoadConfig) -> Result<Json> {
+    let sc = &cfg.scenario;
+    sc.validate()?;
+    let schedule = sc.schedule();
+    if schedule.is_empty() {
+        bail!(
+            "scenario '{sc}' produced no requests (rate {} x {}s is too sparse)",
+            sc.rate,
+            sc.duration_s
+        );
+    }
+    let (mode_label, addr_label) = match &cfg.mode {
+        LoadMode::Wire { addr, .. } => ("wire", addr.clone()),
+        LoadMode::Direct => ("direct", "in-process".to_string()),
+    };
+    println!(
+        "load: scenario '{sc}' -> {} request(s) over {} stage(s), {} client(s), {} ({addr_label})",
+        schedule.len(),
+        sc.stages,
+        sc.clients,
+        mode_label,
+    );
+
+    let stats = match &cfg.mode {
+        LoadMode::Wire { addr, .. } => client::run_wire(sc, &schedule, addr)?,
+        LoadMode::Direct => client::run_direct(sc, &schedule)?,
+    };
+
+    let overall = stats.overall_latency();
+    println!(
+        "load: {} submitted, {} ok, {} failed, {} cancelled in {:.2}s",
+        stats.submitted(),
+        stats.ok(),
+        stats.failed(),
+        stats.cancelled(),
+        stats.wall_seconds,
+    );
+    println!(
+        "load: latency p50 {}us  p90 {}us  p99 {}us  max {}us ({} sample(s))",
+        overall.quantile_us(0.50),
+        overall.quantile_us(0.90),
+        overall.quantile_us(0.99),
+        overall.max_us(),
+        overall.count(),
+    );
+    if stats.wall_seconds > 0.0 {
+        println!(
+            "load: throughput {:.1} records/s, {:.1} frames/s ({} coalesced progress)",
+            stats.records() as f64 / stats.wall_seconds,
+            stats.frames_received as f64 / stats.wall_seconds,
+            stats.coalesced,
+        );
+    }
+    if sc.stages > 1 {
+        print!("{}", snapshot::render_curve(&stats));
+    }
+
+    if let LoadMode::Wire { addr, shutdown: true } = &cfg.mode {
+        client::shutdown_daemon(addr)?;
+        println!("load: daemon acknowledged shutdown");
+    }
+
+    let doc = snapshot::build(sc, mode_label, &addr_label, &stats);
+    if let Some(path) = &cfg.json {
+        std::fs::write(path, doc.dump() + "\n")
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("load: snapshot -> {}", path.display());
+    }
+    Ok(doc)
+}

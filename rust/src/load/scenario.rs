@@ -1,0 +1,405 @@
+//! Named, repeatable load scenarios.
+//!
+//! A [`Scenario`] pins everything that shapes a load run — concurrent
+//! clients × open-loop arrival rate × spec mix (run/matrix/cancel
+//! ratios) × per-stage duration × stage count — so the same name +
+//! seed always replays the same request schedule. Four presets cover
+//! the common shapes (`smoke`, `steady`, `burst`, `saturate`); the CLI
+//! accepts `--scenario name[:key=val,...]` overrides, validated the
+//! same field-named way `api` validates specs (errors start with the
+//! offending key, e.g. `clients: must be >= 1`).
+//!
+//! [`Scenario::schedule`] expands the config into a concrete
+//! [`Request`] list *before* any traffic flows: per-stage seeded
+//! exponential inter-arrivals (open loop — arrival times never depend
+//! on server responses), kinds drawn from the mix, clients assigned
+//! round-robin. The expansion is a pure function of the scenario, so
+//! identical seed + scenario + worker count produce identical
+//! schedules (pinned by `rust/tests/load.rs`).
+
+use std::fmt;
+use std::str::FromStr;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// The built-in preset names, in help/docs order.
+pub const PRESETS: [&str; 4] = ["smoke", "steady", "burst", "saturate"];
+
+/// Override keys accepted by `--scenario name:key=val,...`.
+pub const OVERRIDE_KEYS: [&str; 8] =
+    ["clients", "rate", "duration", "stages", "rate_step", "burst", "seed", "mix"];
+
+/// Relative run/matrix/cancel weights (raw, not normalized — kept raw
+/// so `Display` → `FromStr` round-trips bit-exactly; [`Mix::draw`]
+/// normalizes on the fly).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mix {
+    pub run: f64,
+    pub matrix: f64,
+    pub cancel: f64,
+}
+
+impl Mix {
+    fn validate(&self) -> Result<()> {
+        for (key, v) in [("run", self.run), ("matrix", self.matrix), ("cancel", self.cancel)] {
+            if !v.is_finite() || v < 0.0 {
+                bail!("mix: {key} weight must be finite and >= 0 (got {v})");
+            }
+        }
+        if self.run + self.matrix + self.cancel <= 0.0 {
+            bail!("mix: weights must not all be zero");
+        }
+        Ok(())
+    }
+
+    /// Map a uniform `u in [0,1)` to a request kind.
+    fn draw(&self, u: f64) -> ReqKind {
+        let total = self.run + self.matrix + self.cancel;
+        let x = u * total;
+        if x < self.run {
+            ReqKind::Run
+        } else if x < self.run + self.matrix {
+            ReqKind::Matrix
+        } else {
+            ReqKind::Cancel
+        }
+    }
+}
+
+impl fmt::Display for Mix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}/{}", self.run, self.matrix, self.cancel)
+    }
+}
+
+impl FromStr for Mix {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Mix> {
+        let parts: Vec<&str> = s.split('/').collect();
+        if parts.len() != 3 {
+            bail!("mix: expected RUN/MATRIX/CANCEL weights (e.g. 0.8/0.1/0.1), got '{s}'");
+        }
+        let mut w = [0.0f64; 3];
+        for (i, p) in parts.iter().enumerate() {
+            w[i] = p.parse().map_err(|_| {
+                anyhow::anyhow!("mix: weight '{p}' is not a number (in '{s}')")
+            })?;
+        }
+        let mix = Mix { run: w[0], matrix: w[1], cancel: w[2] };
+        mix.validate()?;
+        Ok(mix)
+    }
+}
+
+/// What one scheduled request submits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    /// A single synthetic `submit_run`.
+    Run,
+    /// A small multi-cell `submit_matrix`.
+    Matrix,
+    /// A matrix submission cancelled right after it is accepted.
+    Cancel,
+}
+
+impl ReqKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReqKind::Run => "run",
+            ReqKind::Matrix => "matrix",
+            ReqKind::Cancel => "cancel",
+        }
+    }
+}
+
+/// One concrete scheduled request (the unit of the open-loop plan).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// When to submit, relative to the run epoch.
+    pub at: Duration,
+    /// Which stage's accounting this request belongs to.
+    pub stage: usize,
+    /// Which client connection/thread submits it.
+    pub client: usize,
+    pub kind: ReqKind,
+    /// Seeded per-request variety knob (task choice for run specs).
+    pub task_idx: usize,
+}
+
+/// A named, repeatable load configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Preset the scenario is based on (always one of [`PRESETS`]).
+    pub name: String,
+    /// Concurrent client connections (wire) / worker threads (direct).
+    pub clients: usize,
+    /// Stage-0 offered arrival rate, requests/sec across all clients.
+    pub rate: f64,
+    /// Seconds per stage.
+    pub duration_s: f64,
+    /// Open-loop stages; stage `s` offers `rate * rate_step^s`.
+    pub stages: usize,
+    /// Per-stage rate multiplier (the saturation-curve sweep).
+    pub rate_step: f64,
+    /// Arrivals per burst: 1 = Poisson-like singles; N>1 sends N
+    /// back-to-back with correspondingly longer gaps (same mean rate).
+    pub burst: usize,
+    pub mix: Mix,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Look up a built-in preset by name.
+    pub fn preset(name: &str) -> Result<Scenario> {
+        let base = Scenario {
+            name: name.to_string(),
+            clients: 2,
+            rate: 6.0,
+            duration_s: 4.0,
+            stages: 1,
+            rate_step: 2.0,
+            burst: 1,
+            mix: Mix { run: 0.8, matrix: 0.1, cancel: 0.1 },
+            seed: 42,
+        };
+        Ok(match name {
+            // quick CI gate: a few seconds, every request kind exercised
+            "smoke" => base,
+            // sustained mid-rate soak
+            "steady" => Scenario { clients: 4, rate: 16.0, duration_s: 10.0, ..base },
+            // bursty arrivals stress the outbound queues / coalescing
+            "burst" => Scenario { clients: 4, rate: 24.0, duration_s: 6.0, burst: 8, ..base },
+            // rate doubles each stage -> latency-vs-offered-rate curve
+            "saturate" => Scenario {
+                clients: 8,
+                rate: 8.0,
+                duration_s: 3.0,
+                stages: 4,
+                mix: Mix { run: 1.0, matrix: 0.0, cancel: 0.0 },
+                ..base
+            },
+            other => bail!(
+                "scenario: unknown preset '{other}' (expected {})",
+                PRESETS.join(" | ")
+            ),
+        })
+    }
+
+    /// Field-named validation, `api`-builder style.
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 {
+            bail!("clients: must be >= 1");
+        }
+        if self.clients > 256 {
+            bail!("clients: must be <= 256 (got {})", self.clients);
+        }
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            bail!("rate: must be finite and > 0 (got {})", self.rate);
+        }
+        if !self.duration_s.is_finite() || self.duration_s <= 0.0 {
+            bail!("duration: must be finite and > 0 seconds (got {})", self.duration_s);
+        }
+        if self.duration_s > 600.0 {
+            bail!("duration: must be <= 600 seconds per stage (got {})", self.duration_s);
+        }
+        if self.stages == 0 {
+            bail!("stages: must be >= 1");
+        }
+        if self.stages > 16 {
+            bail!("stages: must be <= 16 (got {})", self.stages);
+        }
+        if !self.rate_step.is_finite() || self.rate_step <= 0.0 {
+            bail!("rate_step: must be finite and > 0 (got {})", self.rate_step);
+        }
+        if self.burst == 0 {
+            bail!("burst: must be >= 1");
+        }
+        self.mix.validate()
+    }
+
+    /// Return a copy with `clients` replaced (the `--workers` CLI
+    /// override), re-validated.
+    pub fn with_clients(mut self, clients: usize) -> Result<Scenario> {
+        self.clients = clients;
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Offered rate of stage `s` (requests/sec across all clients).
+    pub fn stage_rate(&self, s: usize) -> f64 {
+        self.rate * self.rate_step.powi(s as i32)
+    }
+
+    /// Total scheduled duration across stages.
+    pub fn total_seconds(&self) -> f64 {
+        self.duration_s * self.stages as f64
+    }
+
+    /// Expand into the concrete open-loop request plan.
+    ///
+    /// Pure function of the scenario: per-stage RNG streams are seeded
+    /// from `seed` and the stage index only, inter-arrival gaps are
+    /// exponential with mean `burst/rate(stage)` (so the mean offered
+    /// rate holds for any burst size), kinds come from [`Mix::draw`],
+    /// and clients are assigned round-robin over the whole run.
+    pub fn schedule(&self) -> Vec<Request> {
+        let mut reqs = Vec::new();
+        let mut idx = 0usize;
+        for stage in 0..self.stages {
+            let rate = self.stage_rate(stage);
+            let start = stage as f64 * self.duration_s;
+            let end = start + self.duration_s;
+            // decorrelate stage streams: splitmix-style odd multiplier
+            let stream = (stage as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut rng = Rng::new(self.seed ^ stream);
+            let mut t = start;
+            loop {
+                let u = rng.f64();
+                t += -(1.0 - u).ln() * self.burst as f64 / rate;
+                if t >= end {
+                    break;
+                }
+                for _ in 0..self.burst {
+                    reqs.push(Request {
+                        at: Duration::from_secs_f64(t),
+                        stage,
+                        client: idx % self.clients,
+                        kind: self.mix.draw(rng.f64()),
+                        task_idx: rng.below(2),
+                    });
+                    idx += 1;
+                }
+            }
+        }
+        reqs
+    }
+}
+
+impl fmt::Display for Scenario {
+    /// Canonical spelling: the preset name plus only the overridden
+    /// keys, so `Display ∘ FromStr` and `FromStr ∘ Display` both
+    /// round-trip (pinned by `rust/tests/load.rs`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)?;
+        let base = match Scenario::preset(&self.name) {
+            Ok(b) => b,
+            // non-preset name (builder-made): force every key to emit
+            Err(_) => Scenario {
+                name: self.name.clone(),
+                clients: usize::MAX,
+                rate: f64::NAN,
+                duration_s: f64::NAN,
+                stages: usize::MAX,
+                rate_step: f64::NAN,
+                burst: usize::MAX,
+                mix: Mix { run: f64::NAN, matrix: f64::NAN, cancel: f64::NAN },
+                seed: u64::MAX,
+            },
+        };
+        let mut sep = ':';
+        let mut emit = |f: &mut fmt::Formatter<'_>, kv: String| -> fmt::Result {
+            write!(f, "{sep}{kv}")?;
+            sep = ',';
+            Ok(())
+        };
+        if self.clients != base.clients {
+            emit(f, format!("clients={}", self.clients))?;
+        }
+        if self.rate != base.rate {
+            emit(f, format!("rate={}", self.rate))?;
+        }
+        if self.duration_s != base.duration_s {
+            emit(f, format!("duration={}", self.duration_s))?;
+        }
+        if self.stages != base.stages {
+            emit(f, format!("stages={}", self.stages))?;
+        }
+        if self.rate_step != base.rate_step {
+            emit(f, format!("rate_step={}", self.rate_step))?;
+        }
+        if self.burst != base.burst {
+            emit(f, format!("burst={}", self.burst))?;
+        }
+        if self.seed != base.seed {
+            emit(f, format!("seed={}", self.seed))?;
+        }
+        if self.mix != base.mix {
+            emit(f, format!("mix={}", self.mix))?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for Scenario {
+    type Err = anyhow::Error;
+
+    /// Parse `name[:key=val,...]` — the `--scenario` grammar.
+    fn from_str(s: &str) -> Result<Scenario> {
+        let (name, overrides) = match s.split_once(':') {
+            Some((n, o)) => (n, Some(o)),
+            None => (s, None),
+        };
+        let mut sc = Scenario::preset(name)?;
+        if let Some(overrides) = overrides {
+            if overrides.is_empty() {
+                bail!("scenario: trailing ':' with no overrides in '{s}'");
+            }
+            for part in overrides.split(',') {
+                let Some((key, val)) = part.split_once('=') else {
+                    bail!(
+                        "scenario: expected key=value override, got '{part}' (keys: {})",
+                        OVERRIDE_KEYS.join(" | ")
+                    );
+                };
+                match key {
+                    "clients" => {
+                        sc.clients = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("clients: '{val}' is not an integer"))?
+                    }
+                    "rate" => {
+                        sc.rate = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("rate: '{val}' is not a number"))?
+                    }
+                    "duration" => {
+                        sc.duration_s = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("duration: '{val}' is not a number"))?
+                    }
+                    "stages" => {
+                        sc.stages = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("stages: '{val}' is not an integer"))?
+                    }
+                    "rate_step" => {
+                        sc.rate_step = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("rate_step: '{val}' is not a number"))?
+                    }
+                    "burst" => {
+                        sc.burst = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("burst: '{val}' is not an integer"))?
+                    }
+                    "seed" => {
+                        sc.seed = val
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("seed: '{val}' is not an integer"))?
+                    }
+                    "mix" => sc.mix = val.parse()?,
+                    other => bail!(
+                        "scenario: unknown override key '{other}' (keys: {})",
+                        OVERRIDE_KEYS.join(" | ")
+                    ),
+                }
+            }
+        }
+        sc.validate()?;
+        Ok(sc)
+    }
+}

@@ -1,0 +1,196 @@
+//! `load_snapshot.json` — the schema'd artifact a load run emits.
+//!
+//! Shape is pinned by `docs/load_snapshot.schema.json` and validated
+//! in CI by `scripts/check_schema.py --load`; `scripts/bench_gate.py
+//! --load` gates p99/throughput floors from the `load` section of
+//! `BENCH_baseline.json` against it. Everything here is derived from
+//! the merged [`RunStats`] — the snapshot is a pure serialization, no
+//! further measurement happens at emit time.
+//!
+//! The `saturation` array is the latency-vs-offered-rate curve: one
+//! point per stage, x = the stage's offered rate, y = its p99. For
+//! multi-stage presets (`saturate`) [`render_curve`] draws it as an
+//! ASCII chart for terminals and `EXPERIMENTS.md`.
+
+use crate::util::json::Json;
+
+use super::scenario::Scenario;
+use super::stats::{Histogram, RunStats};
+
+/// Schema version of the emitted snapshot (bump on shape changes,
+/// mirroring `run_record` / `bench_snapshot` versioning).
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn int(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Round to 3 decimals for human-diffable rates/walls.
+fn round3(v: f64) -> f64 {
+    (v * 1000.0).round() / 1000.0
+}
+
+fn latency_obj(h: &Histogram) -> Json {
+    Json::obj(vec![
+        ("count", int(h.count())),
+        ("p50", int(h.quantile_us(0.50))),
+        ("p90", int(h.quantile_us(0.90))),
+        ("p99", int(h.quantile_us(0.99))),
+        ("max", int(h.max_us())),
+        ("mean", num(round3(h.mean_us()))),
+    ])
+}
+
+fn per_sec(count: u64, wall: f64) -> f64 {
+    if wall > 0.0 { round3(count as f64 / wall) } else { 0.0 }
+}
+
+fn scenario_obj(sc: &Scenario) -> Json {
+    Json::obj(vec![
+        ("name", Json::from(sc.name.as_str())),
+        ("spec", Json::from(sc.to_string().as_str())),
+        ("clients", int(sc.clients as u64)),
+        ("rate", num(sc.rate)),
+        ("duration_s", num(sc.duration_s)),
+        ("stages", int(sc.stages as u64)),
+        ("rate_step", num(sc.rate_step)),
+        ("burst", int(sc.burst as u64)),
+        ("seed", int(sc.seed)),
+        (
+            "mix",
+            Json::obj(vec![
+                ("run", num(sc.mix.run)),
+                ("matrix", num(sc.mix.matrix)),
+                ("cancel", num(sc.mix.cancel)),
+            ]),
+        ),
+    ])
+}
+
+/// Build the full snapshot document.
+///
+/// `mode` is `"wire"` or `"direct"`; `addr` is the daemon address in
+/// wire mode and `"in-process"` in direct mode.
+pub fn build(scenario: &Scenario, mode: &str, addr: &str, stats: &RunStats) -> Json {
+    let overall = stats.overall_latency();
+    let wall = stats.wall_seconds;
+
+    let stages: Vec<Json> = stats
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let stage_wall = s.wall_seconds();
+            Json::obj(vec![
+                ("stage", int(i as u64)),
+                ("offered_rate", num(round3(s.offered_rate))),
+                ("submitted", int(s.submitted)),
+                ("ok", int(s.ok)),
+                ("failed", int(s.failed)),
+                ("cancelled", int(s.cancelled)),
+                ("records", int(s.records)),
+                ("wall_seconds", num(round3(stage_wall))),
+                ("records_per_sec", num(per_sec(s.records, stage_wall))),
+                ("latency_us", latency_obj(&s.latency)),
+            ])
+        })
+        .collect();
+
+    let saturation: Vec<Json> = stats
+        .stages
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("offered_rate", num(round3(s.offered_rate))),
+                ("p50_us", int(s.latency.quantile_us(0.50))),
+                ("p99_us", int(s.latency.quantile_us(0.99))),
+            ])
+        })
+        .collect();
+
+    Json::obj(vec![
+        ("kind", Json::from("load_snapshot")),
+        ("schema_version", int(SNAPSHOT_SCHEMA_VERSION)),
+        ("mode", Json::from(mode)),
+        ("addr", Json::from(addr)),
+        ("scenario", scenario_obj(scenario)),
+        ("wall_seconds", num(round3(wall))),
+        (
+            "requests",
+            Json::obj(vec![
+                ("submitted", int(stats.submitted())),
+                ("ok", int(stats.ok())),
+                ("failed", int(stats.failed())),
+                ("cancelled", int(stats.cancelled())),
+            ]),
+        ),
+        (
+            "frames",
+            Json::obj(vec![
+                ("received", int(stats.frames_received)),
+                ("records", int(stats.records())),
+                ("progress", int(stats.progress_frames)),
+                ("coalesced", int(stats.coalesced)),
+                ("cell_errors", int(stats.cell_errors)),
+                ("errors", int(stats.errors)),
+                ("cancel_acks", int(stats.cancel_acks)),
+                ("dropped_cells", int(stats.dropped_cells)),
+            ]),
+        ),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("requests_per_sec", num(per_sec(stats.submitted(), wall))),
+                ("records_per_sec", num(per_sec(stats.records(), wall))),
+                ("frames_per_sec", num(per_sec(stats.frames_received, wall))),
+            ]),
+        ),
+        ("latency_us", latency_obj(&overall)),
+        ("stages", Json::Arr(stages)),
+        ("saturation", Json::Arr(saturation)),
+        (
+            "histogram",
+            Json::obj(vec![
+                ("unit", Json::from("us")),
+                (
+                    "counts",
+                    Json::Arr(overall.bucket_counts().iter().map(|&c| int(c)).collect()),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Render the saturation curve (p99 latency vs offered rate) as an
+/// ASCII chart — one row per stage, bar length log-scaled so a 10x
+/// latency cliff reads as a visibly longer bar, not an off-screen one.
+pub fn render_curve(stats: &RunStats) -> String {
+    const WIDTH: usize = 40;
+    let points: Vec<(f64, u64)> = stats
+        .stages
+        .iter()
+        .filter(|s| s.latency.count() > 0)
+        .map(|s| (s.offered_rate, s.latency.quantile_us(0.99)))
+        .collect();
+    if points.is_empty() {
+        return "saturation: no completed requests\n".to_string();
+    }
+    let max_log = points
+        .iter()
+        .map(|&(_, p99)| ((p99.max(1)) as f64).ln())
+        .fold(1.0f64, f64::max);
+    let w = WIDTH;
+    let mut out = String::from("offered req/s   p99\n");
+    for (rate, p99) in points {
+        let frac = ((p99.max(1)) as f64).ln() / max_log;
+        let bar = "#".repeat(((frac * w as f64).round() as usize).clamp(1, w));
+        let (value, unit) =
+            if p99 >= 1000 { (p99 as f64 / 1000.0, "ms") } else { (p99 as f64, "us") };
+        out.push_str(&format!("{rate:>11.1}   {bar:<w$} {value:>8.1} {unit}\n"));
+    }
+    out
+}

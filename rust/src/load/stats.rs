@@ -1,0 +1,306 @@
+//! Exact-count latency statistics for the load harness.
+//!
+//! [`Histogram`] is a fixed-bucket log2 histogram over microseconds:
+//! bucket `i` counts samples whose value lies in `[2^i, 2^(i+1))`
+//! (bucket 0 also absorbs 0 and 1). Every sample lands in exactly one
+//! bucket — no sampling, no reservoir — so merging per-client-thread
+//! histograms is plain element-wise addition and quantiles are exact to
+//! bucket resolution: [`Histogram::quantile_bounds`] brackets the true
+//! nearest-rank quantile between the bucket's bounds (clamped to the
+//! observed min/max), which `rust/tests/load.rs` pins against a
+//! sorted-vector oracle.
+//!
+//! [`StageStats`] / [`RunStats`] aggregate one scenario stage / one
+//! whole run; both merge the same way the histogram does, so each
+//! client thread accumulates privately and the harness folds the
+//! results together at the end without locks on the hot path.
+
+use std::time::Duration;
+
+use super::scenario::Scenario;
+
+/// Number of log2 buckets — enough for any u64 microsecond value.
+pub const BUCKETS: usize = 64;
+
+/// Fixed-bucket log2 histogram over `u64` microsecond samples.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `floor(log2(v))` for `v >= 2`; 0 and 1 share bucket 0.
+fn bucket_of(v: u64) -> usize {
+    if v < 2 { 0 } else { 63 - v.leading_zeros() as usize }
+}
+
+/// Inclusive lower bound of bucket `i`.
+fn bucket_lo(i: usize) -> u64 {
+    if i == 0 { 0 } else { 1u64 << i }
+}
+
+/// Inclusive upper bound of bucket `i`.
+fn bucket_hi(i: usize) -> u64 {
+    if i >= 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: [0; BUCKETS], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record_us(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Element-wise merge — the mergeability contract that lets every
+    /// client thread keep a private histogram. Associative and
+    /// commutative (pinned by `rust/tests/load.rs`).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact observed maximum (`0` when empty).
+    pub fn max_us(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.max }
+    }
+
+    /// Exact observed minimum (`0` when empty).
+    pub fn min_us(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum as f64 / self.total as f64 }
+    }
+
+    /// Bracket the nearest-rank `q`-quantile (`0 < q <= 1`):
+    /// `(lo, hi)` such that `lo <= sorted[ceil(q*n)-1] <= hi`, where the
+    /// bounds are the chosen bucket's range clamped to the exact
+    /// observed min/max. `None` when empty.
+    pub fn quantile_bounds(&self, q: f64) -> Option<(u64, u64)> {
+        if self.total == 0 {
+            return None;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some((bucket_lo(i).max(self.min), bucket_hi(i).min(self.max)));
+            }
+        }
+        unreachable!("cumulative count {cum} never reached rank {rank}");
+    }
+
+    /// The reported quantile value: the bracket's upper bound (a
+    /// pessimistic-by-at-most-2x estimate, exact for single-valued
+    /// buckets and at the extremes).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        self.quantile_bounds(q).map(|(_, hi)| hi).unwrap_or(0)
+    }
+
+    /// The raw bucket counts (snapshot serialization).
+    pub fn bucket_counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-stage and per-run aggregation
+
+/// How one request terminated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Every cell completed with a record.
+    Ok,
+    /// At least one cell errored.
+    Failed,
+    /// At least one cell was cancelled (and none failed).
+    Cancelled,
+}
+
+/// Accounting for one open-loop stage of a scenario.
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    /// Requests/sec this stage *offered* (the saturation-curve x axis).
+    pub offered_rate: f64,
+    pub submitted: u64,
+    pub ok: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Record frames (wire) / completed cells (direct) for this stage's
+    /// requests.
+    pub records: u64,
+    /// Submit→done latency of this stage's requests.
+    pub latency: Histogram,
+    /// First submit / last done, seconds relative to the run epoch.
+    pub first_submit_s: Option<f64>,
+    pub last_done_s: Option<f64>,
+}
+
+impl StageStats {
+    fn new(offered_rate: f64) -> StageStats {
+        StageStats {
+            offered_rate,
+            submitted: 0,
+            ok: 0,
+            failed: 0,
+            cancelled: 0,
+            records: 0,
+            latency: Histogram::new(),
+            first_submit_s: None,
+            last_done_s: None,
+        }
+    }
+
+    pub fn note_submit(&mut self, at_s: f64) {
+        self.submitted += 1;
+        self.first_submit_s =
+            Some(self.first_submit_s.map_or(at_s, |t| if at_s < t { at_s } else { t }));
+    }
+
+    pub fn note_done(&mut self, outcome: Outcome, latency: Duration, at_s: f64) {
+        match outcome {
+            Outcome::Ok => self.ok += 1,
+            Outcome::Failed => self.failed += 1,
+            Outcome::Cancelled => self.cancelled += 1,
+        }
+        self.latency.record(latency);
+        self.last_done_s =
+            Some(self.last_done_s.map_or(at_s, |t| if at_s > t { at_s } else { t }));
+    }
+
+    /// First-submit → last-done span (the stage's achieved wall).
+    pub fn wall_seconds(&self) -> f64 {
+        match (self.first_submit_s, self.last_done_s) {
+            (Some(a), Some(b)) if b > a => b - a,
+            _ => 0.0,
+        }
+    }
+
+    fn merge(&mut self, other: &StageStats) {
+        self.submitted += other.submitted;
+        self.ok += other.ok;
+        self.failed += other.failed;
+        self.cancelled += other.cancelled;
+        self.records += other.records;
+        self.latency.merge(&other.latency);
+        self.first_submit_s = match (self.first_submit_s, other.first_submit_s) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.last_done_s = match (self.last_done_s, other.last_done_s) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+}
+
+/// One client thread's (and, after merging, the whole run's) view of a
+/// load run.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub stages: Vec<StageStats>,
+    /// Every frame received, all types (wire mode; 0 direct).
+    pub frames_received: u64,
+    pub progress_frames: u64,
+    /// Sum of `coalesced` counters across progress frames: how many
+    /// snapshots the server's latest-wins coalescing absorbed.
+    pub coalesced: u64,
+    pub cell_errors: u64,
+    /// `error` frames (protocol / refused submissions).
+    pub errors: u64,
+    pub cancel_acks: u64,
+    /// Queued cells the server reported dropped on cancel.
+    pub dropped_cells: u64,
+    /// Filled by the harness after the run completes.
+    pub wall_seconds: f64,
+}
+
+impl RunStats {
+    pub fn new(scenario: &Scenario) -> RunStats {
+        RunStats {
+            stages: (0..scenario.stages).map(|s| StageStats::new(scenario.stage_rate(s))).collect(),
+            frames_received: 0,
+            progress_frames: 0,
+            coalesced: 0,
+            cell_errors: 0,
+            errors: 0,
+            cancel_acks: 0,
+            dropped_cells: 0,
+            wall_seconds: 0.0,
+        }
+    }
+
+    pub fn merge(&mut self, other: &RunStats) {
+        debug_assert_eq!(self.stages.len(), other.stages.len());
+        for (a, b) in self.stages.iter_mut().zip(other.stages.iter()) {
+            a.merge(b);
+        }
+        self.frames_received += other.frames_received;
+        self.progress_frames += other.progress_frames;
+        self.coalesced += other.coalesced;
+        self.cell_errors += other.cell_errors;
+        self.errors += other.errors;
+        self.cancel_acks += other.cancel_acks;
+        self.dropped_cells += other.dropped_cells;
+    }
+
+    /// All stages' latency folded into one histogram.
+    pub fn overall_latency(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for s in &self.stages {
+            h.merge(&s.latency);
+        }
+        h
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.stages.iter().map(|s| s.submitted).sum()
+    }
+
+    pub fn ok(&self) -> u64 {
+        self.stages.iter().map(|s| s.ok).sum()
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.stages.iter().map(|s| s.failed).sum()
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.stages.iter().map(|s| s.cancelled).sum()
+    }
+
+    pub fn records(&self) -> u64 {
+        self.stages.iter().map(|s| s.records).sum()
+    }
+}

@@ -29,6 +29,10 @@
 //!   serve       multi-client discovery daemon: RunSpec/MatrixSpec frames
 //!               in, streamed progress + RunRecord frames out, one hot
 //!               artifact store across requests (docs/serve_protocol.md)
+//!   load        scenario-driven load/latency harness: drives a live
+//!               `pahq serve` daemon (or the in-process run path) from a
+//!               named preset and emits a schema'd load_snapshot.json
+//!               that CI's load-gate diffs (scripts/bench_gate.py --load)
 //!   info        model/artifact inventory
 //!   help        generated overview; `pahq help <sub>` / `--help` for flags
 
@@ -85,6 +89,7 @@ fn main() -> Result<()> {
         "bench" => cmd_bench(&args),
         "store" => cmd_store(&args),
         "serve" => cmd_serve(&args),
+        "load" => cmd_load(&args),
         "info" => cmd_info(),
         _ => {
             print!("{}", help::usage());
@@ -718,6 +723,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     pahq::serve::serve(cfg)
+}
+
+/// `pahq load` — drive a scenario against a live daemon (`--addr`) or
+/// the in-process run path (`--direct`) and emit a schema'd
+/// `load_snapshot.json`. Scenarios are named presets with
+/// `name[:key=val,...]` overrides; see `pahq help load`.
+fn cmd_load(args: &Args) -> Result<()> {
+    let mut scenario: pahq::load::Scenario = args.get_or("scenario", "smoke").parse()?;
+    if let Some(w) = args.usize_opt("workers")? {
+        scenario = scenario.with_clients(w)?;
+    }
+    let mode = match (args.get("addr"), args.flag("direct")) {
+        (Some(_), true) => bail!("mode: --addr and --direct are mutually exclusive"),
+        (Some(addr), false) => pahq::load::LoadMode::Wire {
+            addr: addr.to_string(),
+            shutdown: args.flag("shutdown"),
+        },
+        (None, true) => {
+            if args.flag("shutdown") {
+                bail!("shutdown: only meaningful with --addr (wire mode)");
+            }
+            pahq::load::LoadMode::Direct
+        }
+        (None, false) => bail!("mode: pass --addr HOST:PORT (wire) or --direct (in-process)"),
+    };
+    let cfg = pahq::load::LoadConfig {
+        scenario,
+        mode,
+        json: args.json_path().map(PathBuf::from),
+    };
+    pahq::load::run(&cfg).map(|_| ())
 }
 
 fn cmd_info() -> Result<()> {

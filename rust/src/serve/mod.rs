@@ -40,5 +40,5 @@ pub mod server;
 pub mod session;
 
 pub use protocol::{ErrorCode, Message, PROTOCOL_VERSION};
-pub use server::{serve, ServeConfig, Server};
-pub use session::{FrameReader, Outbound, ReadEvent};
+pub use server::{serve, DrainReport, ServeConfig, Server};
+pub use session::{DeliveryStats, FrameReader, Outbound, ReadEvent};

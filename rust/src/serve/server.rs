@@ -24,7 +24,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::protocol::{self, ErrorCode, Message, PROTOCOL_VERSION};
-use super::session::{FrameReader, Outbound, ReadEvent};
+use super::session::{DeliveryStats, FrameReader, Outbound, ReadEvent};
 use crate::api::{self, RunSpec, StoreSpec};
 use crate::matrix::cache::ArtifactCache;
 use crate::matrix::queue::WorkQueue;
@@ -82,6 +82,28 @@ struct Shared {
     shutdown: AtomicBool,
     /// Backlog drained, outbounds closed — reader threads may exit.
     halt: AtomicBool,
+    /// Lifetime totals of retired jobs/cells (the drain report).
+    jobs_retired: AtomicUsize,
+    cells_ok: AtomicUsize,
+    cells_failed: AtomicUsize,
+    cells_cancelled: AtomicUsize,
+}
+
+/// What a daemon did over its lifetime, returned by [`Server::run`]
+/// after a graceful drain: every retired job and cell accounted for,
+/// plus delivery stats merged across all connections. `pahq serve`
+/// prints it on exit; the load harness smoke path asserts a clean one.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainReport {
+    /// Jobs accepted and fully retired (terminal `done` emitted).
+    pub jobs: usize,
+    pub cells_ok: usize,
+    pub cells_failed: usize,
+    pub cells_cancelled: usize,
+    /// Connections accepted over the daemon's lifetime.
+    pub connections: usize,
+    /// Frame/progress delivery accounting summed across connections.
+    pub delivery: DeliveryStats,
 }
 
 /// A bound-but-not-yet-running daemon. [`Server::bind`] then
@@ -97,7 +119,25 @@ pub struct Server {
 pub fn serve(cfg: ServeConfig) -> Result<()> {
     let server = Server::bind(cfg)?;
     println!("serve: listening on {}", server.local_addr()?);
-    server.run()
+    let report = server.run()?;
+    println!(
+        "serve: drained {} job(s) — {} ok / {} failed / {} cancelled cell(s) \
+         across {} connection(s)",
+        report.jobs,
+        report.cells_ok,
+        report.cells_failed,
+        report.cells_cancelled,
+        report.connections,
+    );
+    println!(
+        "serve: delivered {} frame(s) + {} progress snapshot(s) ({} coalesced), \
+         max queue delay {:.1}ms",
+        report.delivery.frames_sent,
+        report.delivery.progress_sent,
+        report.delivery.progress_coalesced,
+        report.delivery.queued_max.as_secs_f64() * 1000.0,
+    );
+    Ok(())
 }
 
 impl Server {
@@ -116,6 +156,10 @@ impl Server {
                 next_job: AtomicU64::new(1),
                 shutdown: AtomicBool::new(false),
                 halt: AtomicBool::new(false),
+                jobs_retired: AtomicUsize::new(0),
+                cells_ok: AtomicUsize::new(0),
+                cells_failed: AtomicUsize::new(0),
+                cells_cancelled: AtomicUsize::new(0),
             }),
             workers: cfg.workers.max(1),
         })
@@ -127,15 +171,16 @@ impl Server {
 
     /// Accept clients and drain work until a `shutdown` frame arrives;
     /// then stop accepting, finish the queued backlog, flush every
-    /// connection, and return. Blocks the calling thread.
-    pub fn run(self) -> Result<()> {
+    /// connection, and return this daemon's [`DrainReport`]. Blocks the
+    /// calling thread.
+    pub fn run(self) -> Result<DrainReport> {
         let shared = self.shared;
+        let mut conns: Vec<Arc<Outbound>> = Vec::new();
         std::thread::scope(|scope| -> Result<()> {
             for _ in 0..self.workers {
                 let shared = Arc::clone(&shared);
                 scope.spawn(move || worker_loop(&shared));
             }
-            let mut conns: Vec<Arc<Outbound>> = Vec::new();
             for stream in self.listener.incoming() {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break; // the waking connection (or a late client) is dropped
@@ -160,6 +205,20 @@ impl Server {
             }
             shared.halt.store(true, Ordering::SeqCst);
             Ok(())
+        })?;
+        // the scope has joined every worker/reader/writer thread, so
+        // the per-connection delivery stats are final
+        let mut delivery = DeliveryStats::default();
+        for out in &conns {
+            delivery.merge(&out.delivery_stats());
+        }
+        Ok(DrainReport {
+            jobs: shared.jobs_retired.load(Ordering::SeqCst),
+            cells_ok: shared.cells_ok.load(Ordering::SeqCst),
+            cells_failed: shared.cells_failed.load(Ordering::SeqCst),
+            cells_cancelled: shared.cells_cancelled.load(Ordering::SeqCst),
+            connections: conns.len(),
+            delivery,
         })
     }
 }
@@ -224,12 +283,16 @@ fn finish_cell(shared: &Shared, job_id: u64, state: &JobState) -> bool {
         return false;
     }
     shared.jobs.lock().unwrap().remove(&job_id);
-    state.out.push_frame(Message::Done {
-        job_id,
-        ok: state.ok.load(Ordering::SeqCst),
-        failed: state.failed.load(Ordering::SeqCst),
-        cancelled: state.skipped.load(Ordering::SeqCst),
-    });
+    let (ok, failed, cancelled) = (
+        state.ok.load(Ordering::SeqCst),
+        state.failed.load(Ordering::SeqCst),
+        state.skipped.load(Ordering::SeqCst),
+    );
+    shared.jobs_retired.fetch_add(1, Ordering::SeqCst);
+    shared.cells_ok.fetch_add(ok, Ordering::SeqCst);
+    shared.cells_failed.fetch_add(failed, Ordering::SeqCst);
+    shared.cells_cancelled.fetch_add(cancelled, Ordering::SeqCst);
+    state.out.push_frame(Message::Done { job_id, ok, failed, cancelled });
     true
 }
 
@@ -344,7 +407,7 @@ fn session_step(
             true
         }
         Message::SubmitMatrix { spec } => {
-            match matrix_cells(&spec) {
+            match api::matrix_cells(&spec) {
                 Ok(cells) => submit(cells, my_jobs, out, shared),
                 Err(e) => {
                     out.push_frame(Message::Error {
@@ -447,23 +510,3 @@ fn cell_label(spec: &RunSpec) -> String {
     )
 }
 
-/// Decompose a matrix submission into per-cell specs, mirroring
-/// [`crate::matrix::standalone_cell`]'s derivation so each cell is
-/// bit-identical to a standalone `api::run` of the same spec.
-fn matrix_cells(spec: &crate::api::MatrixSpec) -> Result<Vec<(String, RunSpec)>> {
-    let cfg = spec.config();
-    spec.cells()
-        .into_iter()
-        .map(|cell| {
-            let spec = RunSpec::builder(&cell.model, &cell.task)
-                .method(cell.method.parse()?)
-                .policy(cell.policy.clone())
-                .tau(cfg.tau)
-                .objective(cfg.objective)
-                .sweep(cfg.sweep)
-                .seed(cfg.seed)
-                .build()?;
-            Ok((cell.id(), spec))
-        })
-        .collect()
-}

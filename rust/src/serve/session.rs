@@ -15,6 +15,7 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::io::Read;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -25,11 +26,50 @@ use super::protocol::{self, Message};
 /// only measures how far a slow reader has fallen behind.
 pub const OUTBOUND_CAP: usize = 64;
 
+/// Per-connection delivery accounting, snapshotted at drain time into
+/// the server's [`super::server::DrainReport`]. Queue-delay fields
+/// measure enqueue→dequeue residency; for a coalesced progress entry
+/// the clock starts at the *oldest* superseded snapshot, so `queued_max`
+/// bounds the staleness of any progress a client ever observed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeliveryStats {
+    /// Guaranteed (record/ack/error/done) frames handed to the writer.
+    pub frames_sent: u64,
+    /// Progress snapshots handed to the writer.
+    pub progress_sent: u64,
+    /// Superseded progress snapshots absorbed by coalescing.
+    pub progress_coalesced: u64,
+    /// Summed queue residency across all delivered frames.
+    pub queued_total: Duration,
+    /// Worst single-frame queue residency.
+    pub queued_max: Duration,
+}
+
+impl DeliveryStats {
+    /// Fold another connection's stats in (drain-report aggregation).
+    pub fn merge(&mut self, other: &DeliveryStats) {
+        self.frames_sent += other.frames_sent;
+        self.progress_sent += other.progress_sent;
+        self.progress_coalesced += other.progress_coalesced;
+        self.queued_total += other.queued_total;
+        self.queued_max = self.queued_max.max(other.queued_max);
+    }
+
+    fn note(&mut self, queued: Duration) {
+        self.queued_total += queued;
+        self.queued_max = self.queued_max.max(queued);
+    }
+}
+
 struct OutState {
-    /// FIFO of record / error / ack frames — bounded at [`OUTBOUND_CAP`].
-    frames: VecDeque<Message>,
-    /// At most one pending progress snapshot per job, latest wins.
-    progress: BTreeMap<u64, Message>,
+    /// FIFO of record / error / ack frames — bounded at [`OUTBOUND_CAP`],
+    /// each stamped at enqueue time so delivery delay is measurable.
+    frames: VecDeque<(Message, Instant)>,
+    /// At most one pending progress snapshot per job, latest wins; the
+    /// stamp is the *earliest* undelivered snapshot's enqueue time.
+    progress: BTreeMap<u64, (Message, Instant)>,
+    /// Delivery accounting for this connection.
+    stats: DeliveryStats,
     /// No more frames will be pushed; writer drains and exits.
     closed: bool,
     /// The socket broke; producers stop blocking and drop frames.
@@ -57,6 +97,7 @@ impl Outbound {
             state: Mutex::new(OutState {
                 frames: VecDeque::new(),
                 progress: BTreeMap::new(),
+                stats: DeliveryStats::default(),
                 closed: false,
                 dead: false,
             }),
@@ -77,7 +118,7 @@ impl Outbound {
                 return false;
             }
             if st.frames.len() < OUTBOUND_CAP {
-                st.frames.push_back(msg);
+                st.frames.push_back((msg, Instant::now()));
                 self.ready.notify_one();
                 return true;
             }
@@ -97,14 +138,16 @@ impl Outbound {
         if st.closed || st.dead {
             return;
         }
-        let absorbed = match st.progress.get(&job_id) {
-            Some(Message::Progress { coalesced: prior, .. }) => prior + 1,
-            _ => 0,
+        // keep the oldest superseded snapshot's enqueue stamp: the
+        // measured delay then bounds progress staleness, not just the
+        // final snapshot's queue residency
+        let (absorbed, since) = match st.progress.get(&job_id) {
+            Some((Message::Progress { coalesced: prior, .. }, t0)) => (prior + 1, *t0),
+            _ => (0, Instant::now()),
         };
-        st.progress.insert(
-            job_id,
-            Message::Progress { job_id, done, total, cell, coalesced: coalesced + absorbed },
-        );
+        let coalesced = coalesced + absorbed;
+        st.progress
+            .insert(job_id, (Message::Progress { job_id, done, total, cell, coalesced }, since));
         self.ready.notify_one();
     }
 
@@ -117,12 +160,20 @@ impl Outbound {
             if st.dead {
                 return None;
             }
-            if let Some(msg) = st.frames.pop_front() {
+            if let Some((msg, queued_at)) = st.frames.pop_front() {
+                st.stats.frames_sent += 1;
+                st.stats.note(queued_at.elapsed());
                 self.space.notify_one();
                 return Some(msg);
             }
             if let Some(&job_id) = st.progress.keys().next() {
-                return st.progress.remove(&job_id);
+                let (msg, queued_at) = st.progress.remove(&job_id)?;
+                st.stats.progress_sent += 1;
+                if let Message::Progress { coalesced, .. } = &msg {
+                    st.stats.progress_coalesced += *coalesced as u64;
+                }
+                st.stats.note(queued_at.elapsed());
+                return Some(msg);
             }
             if st.closed {
                 return None;
@@ -152,6 +203,12 @@ impl Outbound {
     /// Queued guaranteed frames (diagnostics / tests).
     pub fn depth(&self) -> usize {
         self.state.lock().unwrap().frames.len()
+    }
+
+    /// Snapshot this connection's delivery accounting (drain reports,
+    /// load-harness instrumentation).
+    pub fn delivery_stats(&self) -> DeliveryStats {
+        self.state.lock().unwrap().stats
     }
 }
 
@@ -294,6 +351,29 @@ mod tests {
         assert!(!out.push_frame(Message::ShutdownAck));
         assert!(out.pop().is_none());
         assert_eq!(out.depth(), 0);
+    }
+
+    #[test]
+    fn delivery_stats_account_frames_progress_and_coalescing() {
+        let out = Outbound::new();
+        assert!(out.push_frame(Message::Accepted { job_id: 1, cells: 2 }));
+        assert!(out.push_frame(Message::Done { job_id: 1, ok: 2, failed: 0, cancelled: 0 }));
+        for done in 1..=3 {
+            out.push_progress(Message::Progress {
+                job_id: 1,
+                done,
+                total: 3,
+                cell: format!("c{done}"),
+                coalesced: 0,
+            });
+        }
+        out.close();
+        while out.pop().is_some() {}
+        let stats = out.delivery_stats();
+        assert_eq!(stats.frames_sent, 2);
+        assert_eq!(stats.progress_sent, 1);
+        assert_eq!(stats.progress_coalesced, 2);
+        assert!(stats.queued_total >= stats.queued_max);
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Load-harness contracts: histogram quantiles against a sorted-vector
+//! oracle, scenario `FromStr`/`Display` round-trips with field-named
+//! validation errors, deterministic open-loop schedules, and small
+//! end-to-end runs in both direct and wire mode.
+
+use std::time::Duration;
+
+use pahq::load::{self, Histogram, LoadConfig, LoadMode, ReqKind, Scenario};
+use pahq::serve::{ServeConfig, Server};
+use pahq::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Histogram vs sorted-vector oracle
+
+/// Nearest-rank quantile over the raw samples — the ground truth the
+/// log2 histogram's bounds must bracket.
+fn oracle(samples: &mut [u64], q: f64) -> u64 {
+    samples.sort_unstable();
+    let n = samples.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    samples[rank - 1]
+}
+
+fn check_bounds(samples: &[u64], q: f64) {
+    let mut h = Histogram::new();
+    for &v in samples {
+        h.record_us(v);
+    }
+    let mut sorted = samples.to_vec();
+    let truth = oracle(&mut sorted, q);
+    let (lo, hi) = h.quantile_bounds(q).expect("non-empty histogram");
+    assert!(
+        lo <= truth && truth <= hi,
+        "q={q}: oracle {truth} outside bracket [{lo}, {hi}] for {} samples",
+        samples.len()
+    );
+    // the reported value is the bracket's upper bound
+    assert_eq!(h.quantile_us(q), hi);
+}
+
+#[test]
+fn quantile_bounds_bracket_the_oracle_on_random_samples() {
+    let mut rng = Rng::new(0x10ad);
+    for _trial in 0..50 {
+        let n = 1 + rng.below(400);
+        // mix scales: sub-microsecond ties, mid-range, and huge tails
+        let samples: Vec<u64> = (0..n)
+            .map(|_| match rng.below(3) {
+                0 => rng.below(16) as u64,
+                1 => rng.below(100_000) as u64,
+                _ => (rng.below(1_000_000) as u64) * 4096,
+            })
+            .collect();
+        for q in [0.01, 0.5, 0.9, 0.99, 1.0] {
+            check_bounds(&samples, q);
+        }
+    }
+}
+
+#[test]
+fn single_sample_and_all_equal_quantiles_are_exact() {
+    for v in [0u64, 1, 7, 1023, 1024, u64::from(u32::MAX)] {
+        let mut h = Histogram::new();
+        h.record_us(v);
+        for q in [0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_bounds(q), Some((v, v)), "single sample {v}");
+            assert_eq!(h.quantile_us(q), v);
+        }
+    }
+    let mut h = Histogram::new();
+    for _ in 0..57 {
+        h.record_us(12_345);
+    }
+    assert_eq!(h.quantile_bounds(0.5), Some((12_345, 12_345)));
+    assert_eq!(h.quantile_us(0.99), 12_345);
+    assert_eq!(h.max_us(), 12_345);
+    assert_eq!(h.min_us(), 12_345);
+}
+
+#[test]
+fn merge_is_associative_and_matches_whole() {
+    let mut rng = Rng::new(99);
+    let parts: Vec<Vec<u64>> = (0..3)
+        .map(|_| (0..rng.below(200)).map(|_| rng.below(1 << 20) as u64).collect())
+        .collect();
+
+    let hist = |vals: &[u64]| {
+        let mut h = Histogram::new();
+        for &v in vals {
+            h.record_us(v);
+        }
+        h
+    };
+    let (a, b, c) = (hist(&parts[0]), hist(&parts[1]), hist(&parts[2]));
+
+    // (a ⊕ b) ⊕ c
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    // a ⊕ (b ⊕ c)
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a.clone();
+    right.merge(&bc);
+    assert_eq!(left, right, "merge must be associative");
+
+    // merging per-thread parts equals recording everything in one
+    let all: Vec<u64> = parts.iter().flatten().copied().collect();
+    assert_eq!(left, hist(&all), "merged parts must equal the whole");
+    if !all.is_empty() {
+        check_bounds(&all, 0.99);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario parsing
+
+#[test]
+fn preset_display_round_trips_bare() {
+    for name in load::PRESETS {
+        let sc: Scenario = name.parse().unwrap();
+        assert_eq!(sc.to_string(), name, "bare preset must display as its name");
+        let again: Scenario = sc.to_string().parse().unwrap();
+        assert_eq!(again, sc);
+    }
+}
+
+#[test]
+fn overrides_round_trip_through_display() {
+    for spec in [
+        "smoke:clients=4",
+        "smoke:rate=12.5,duration=2.5",
+        "steady:clients=8,seed=7",
+        "burst:burst=16,mix=1/0/0",
+        "saturate:stages=2,rate_step=1.5",
+        "smoke:mix=0.5/0.25/0.25",
+    ] {
+        let sc: Scenario = spec.parse().unwrap();
+        let shown = sc.to_string();
+        let again: Scenario = shown.parse().unwrap();
+        assert_eq!(again, sc, "{spec} -> {shown} must round-trip");
+    }
+    // display emits only the overridden keys
+    let sc: Scenario = "smoke:clients=4".parse().unwrap();
+    assert_eq!(sc.to_string(), "smoke:clients=4");
+}
+
+#[test]
+fn validation_errors_are_field_named() {
+    for (spec, field) in [
+        ("smoke:clients=0", "clients:"),
+        ("smoke:clients=banana", "clients:"),
+        ("smoke:rate=-1", "rate:"),
+        ("smoke:duration=0", "duration:"),
+        ("smoke:stages=0", "stages:"),
+        ("smoke:rate_step=0", "rate_step:"),
+        ("smoke:burst=0", "burst:"),
+        ("smoke:mix=1/0", "mix:"),
+        ("smoke:mix=0/0/0", "mix:"),
+        ("smoke:mix=a/b/c", "mix:"),
+        ("warp", "scenario:"),
+        ("smoke:warp=1", "scenario:"),
+        ("smoke:", "scenario:"),
+        ("smoke:clients", "scenario:"),
+    ] {
+        let err = spec.parse::<Scenario>().expect_err(spec).to_string();
+        assert!(
+            err.starts_with(field),
+            "'{spec}' must fail with a '{field}'-prefixed error, got: {err}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic schedules
+
+#[test]
+fn identical_seed_scenario_and_workers_give_identical_schedules() {
+    let sc: Scenario = "saturate:duration=2".parse().unwrap();
+    assert_eq!(sc.schedule(), sc.schedule(), "schedule must be a pure function");
+
+    let again: Scenario = "saturate:duration=2".parse().unwrap();
+    assert_eq!(sc.schedule(), again.schedule());
+
+    // a different seed must actually change the plan
+    let reseeded: Scenario = "saturate:duration=2,seed=1".parse().unwrap();
+    assert_ne!(sc.schedule(), reseeded.schedule());
+}
+
+#[test]
+fn workers_override_changes_only_client_assignment() {
+    let base: Scenario = "smoke:duration=8,rate=12".parse().unwrap();
+    let wide = base.clone().with_clients(7).unwrap();
+    let (a, b) = (base.schedule(), wide.schedule());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!((x.at, x.stage, x.kind, x.task_idx), (y.at, y.stage, y.kind, y.task_idx));
+        assert!(y.client < 7);
+    }
+}
+
+#[test]
+fn schedule_covers_stages_and_respects_the_mix() {
+    let sc: Scenario = "saturate:duration=2,stages=3".parse().unwrap();
+    let plan = sc.schedule();
+    assert!(!plan.is_empty());
+    for stage in 0..3 {
+        assert!(plan.iter().any(|r| r.stage == stage), "stage {stage} must schedule work");
+    }
+    // saturate's mix is run-only
+    assert!(plan.iter().all(|r| r.kind == ReqKind::Run));
+    // arrivals are time-ordered within a stage
+    for w in plan.windows(2) {
+        if w[0].stage == w[1].stage {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+    // offered rate doubles per stage
+    assert_eq!(sc.stage_rate(0), 8.0);
+    assert_eq!(sc.stage_rate(2), 32.0);
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end (small): direct mode and wire mode against a live server
+
+fn snapshot_invariants(doc: &pahq::util::json::Json) {
+    let get = |path: &[&str]| {
+        let mut cur = doc;
+        for k in path {
+            cur = cur.get(k).unwrap();
+        }
+        cur.as_f64().unwrap()
+    };
+    assert_eq!(doc.get("kind").unwrap().as_str().unwrap(), "load_snapshot");
+    let submitted = get(&["requests", "submitted"]);
+    assert!(submitted > 0.0);
+    assert_eq!(
+        submitted,
+        get(&["requests", "ok"]) + get(&["requests", "failed"]) + get(&["requests", "cancelled"]),
+        "every submitted request must be accounted for"
+    );
+    assert_eq!(get(&["requests", "failed"]), 0.0, "no request may fail");
+    assert_eq!(get(&["frames", "errors"]), 0.0);
+    let p99 = get(&["latency_us", "p99"]);
+    assert!(get(&["latency_us", "p50"]) <= p99 && p99 <= get(&["latency_us", "max"]));
+}
+
+#[test]
+fn direct_mode_runs_a_tiny_scenario_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("pahq_load_direct_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = LoadConfig {
+        scenario: "smoke:clients=2,rate=10,duration=1,mix=1/0/0".parse().unwrap(),
+        mode: LoadMode::Direct,
+        json: Some(dir.join("load_snapshot.json")),
+    };
+    let doc = load::run(&cfg).unwrap();
+    snapshot_invariants(&doc);
+    assert_eq!(doc.get("mode").unwrap().as_str().unwrap(), "direct");
+    // the snapshot on disk is byte-identical to the returned document
+    let disk =
+        pahq::util::json::Json::parse_file(&dir.join("load_snapshot.json")).unwrap();
+    assert_eq!(disk, doc);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wire_mode_drives_a_live_daemon_and_drains_it() {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let cfg = LoadConfig {
+        scenario: "smoke:clients=2,rate=10,duration=1".parse().unwrap(),
+        mode: LoadMode::Wire { addr: addr.to_string(), shutdown: true },
+        json: None,
+    };
+    let doc = load::run(&cfg).unwrap();
+    snapshot_invariants(&doc);
+    assert_eq!(doc.get("mode").unwrap().as_str().unwrap(), "wire");
+    assert!(doc.get("frames").unwrap().get("received").unwrap().as_f64().unwrap() > 0.0);
+
+    // --shutdown asked the daemon to drain; its run() must return a
+    // report that accounts for the jobs the load run submitted
+    let report = handle.join().unwrap();
+    assert!(report.jobs > 0);
+    assert_eq!(report.cells_failed, 0);
+    assert!(report.connections >= 2, "one connection per load client plus the shutdown one");
+    std::thread::sleep(Duration::from_millis(10));
+}

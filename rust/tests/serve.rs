@@ -275,7 +275,9 @@ fn start_server(workers: usize) -> (std::net::SocketAddr, std::thread::JoinHandl
     })
     .unwrap();
     let addr = server.local_addr().unwrap();
-    let handle = std::thread::spawn(move || server.run().unwrap());
+    let handle = std::thread::spawn(move || {
+        server.run().unwrap();
+    });
     (addr, handle)
 }
 

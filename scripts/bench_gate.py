@@ -7,6 +7,7 @@ Usage:
         [--max-wall-regress 0.25] [--max-mem-regress 0.10]
     python scripts/bench_gate.py BENCH_baseline.json matrix.json --matrix \
         [--max-wall-regress 0.25]
+    python scripts/bench_gate.py BENCH_baseline.json load_snapshot.json --load
 
 Checks (stdlib only):
 
@@ -37,6 +38,20 @@ With --matrix the current artifact is a `pahq matrix` manifest instead:
 6. **matrix_quick_wall** — the grid's `wall_seconds_total` against the
    baseline's `matrix_quick_wall` field, same regress bound as the
    sweep wall gate.
+
+With --load the current artifact is the `load_snapshot.json` a
+`pahq load --json` run emits (see docs/load_snapshot.schema.json):
+
+7. **Correctness floor (always on)** — any failed request, protocol
+   error frame, or cell error fails the gate regardless of baseline
+   values: a load run against a healthy daemon completes everything
+   it submits.
+8. **Latency / throughput floors** — per-scenario bounds from the
+   baseline's `load` section, keyed by scenario name: `max_p99_us`
+   (overall p99 must stay under it) and `min_records_per_sec`
+   (streamed-record throughput must stay above it). A scenario the
+   baseline does not know is reported and skipped, so exploratory
+   runs of new presets do not fail CI.
 
 A baseline field set to null skips its check (used to stage new fields
 before the first trustworthy baseline lands).
@@ -111,6 +126,79 @@ def gate_matrix(base, current_path, max_wall_regress):
     return 0
 
 
+def gate_load(base, current_path):
+    """Load-snapshot mode: hard correctness floor + per-scenario
+    latency/throughput floors from the baseline's `load` section."""
+    with open(current_path) as f:
+        cur = json.load(f)
+    if cur.get("kind") != "load_snapshot":
+        sys.exit(f"{current_path}: not a load_snapshot")
+    failures = []
+
+    # 7. correctness floor: always on, no baseline needed
+    req = cur.get("requests", {})
+    frames = cur.get("frames", {})
+    for what, count in (
+        ("failed request(s)", req.get("failed", 0)),
+        ("protocol error frame(s)", frames.get("errors", 0)),
+        ("cell error(s)", frames.get("cell_errors", 0)),
+    ):
+        if count:
+            failures.append(f"{count} {what} in the load run")
+    status = "FAIL" if failures else "ok"
+    print(
+        f"loadc [{status}]: {req.get('submitted', 0)} submitted, "
+        f"{req.get('ok', 0)} ok, {req.get('failed', 0)} failed, "
+        f"{frames.get('errors', 0)} error frames, "
+        f"{frames.get('cell_errors', 0)} cell errors"
+    )
+
+    # 8. per-scenario floors from the baseline `load` section
+    scenario = cur.get("scenario", {}).get("name")
+    floors = (base.get("load") or {}).get(scenario)
+    if floors is None:
+        print(f"load floors skipped: baseline has no load.{scenario} section")
+    else:
+        p99 = cur.get("latency_us", {}).get("p99")
+        max_p99 = floors.get("max_p99_us")
+        if max_p99 is None:
+            print("p99   gate skipped: baseline max_p99_us is null")
+        elif p99 is None:
+            failures.append("snapshot has no latency_us.p99 to gate")
+        else:
+            status = "FAIL" if p99 > max_p99 else "ok"
+            print(
+                f"p99   [{status}]: {p99 / 1000.0:.1f} ms vs ceiling "
+                f"{max_p99 / 1000.0:.1f} ms ({scenario})"
+            )
+            if p99 > max_p99:
+                failures.append(f"{scenario} p99 regressed: {p99} > {max_p99} us")
+        rps = cur.get("throughput", {}).get("records_per_sec")
+        min_rps = floors.get("min_records_per_sec")
+        if min_rps is None:
+            print("rps   gate skipped: baseline min_records_per_sec is null")
+        elif rps is None:
+            failures.append("snapshot has no throughput.records_per_sec to gate")
+        else:
+            status = "FAIL" if rps < min_rps else "ok"
+            print(
+                f"rps   [{status}]: {rps:.2f} records/s vs floor "
+                f"{min_rps:.2f} ({scenario})"
+            )
+            if rps < min_rps:
+                failures.append(
+                    f"{scenario} record throughput below floor: {rps:.2f} < {min_rps:.2f}"
+                )
+
+    if failures:
+        print("\nperf gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nperf gate OK")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
@@ -122,11 +210,18 @@ def main():
         action="store_true",
         help="current is a pahq matrix manifest: gate cache effectiveness + quick wall",
     )
+    ap.add_argument(
+        "--load",
+        action="store_true",
+        help="current is a pahq load snapshot: gate correctness + p99/throughput floors",
+    )
     args = ap.parse_args()
 
     base = load(args.baseline)
     if args.matrix:
         return gate_matrix(base, args.current, args.max_wall_regress)
+    if args.load:
+        return gate_load(base, args.current)
     cur = load(args.current)
     failures = []
 

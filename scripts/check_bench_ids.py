@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Lint the criterion bench suites for ID hygiene (stdlib-only).
+
+Walks every ``rust/benches/*.rs`` file and enforces three rules the
+compiler cannot:
+
+1. **No duplicate bench IDs.** Criterion silently lets two
+   ``bench_function`` calls share a name; the second one's results then
+   overwrite the first in reports and the bench-smoke logs become
+   ambiguous. Duplicates are checked per group (``group/id``) and
+   across bare (group-less) ``c.bench_function`` calls.
+2. **No duplicate group names.** Two ``benchmark_group("x")`` scopes —
+   in the same file or across files — would interleave their results
+   under one heading.
+3. **CI timing discipline.** Every ``benchmark_group`` must configure
+   the 300 ms warm-up / 1 s measurement / 30 samples discipline the CI
+   bench-smoke job budget assumes (see .github/workflows/ci.yml): a
+   group that omits it silently runs criterion's defaults (3 s + 5 s,
+   100 samples) and blows the job budget ~10x.
+
+The scan is textual, not a Rust parse: ``benchmark_group("name")``
+opens a scope that the next ``.finish()`` closes, and bench IDs are
+collected from ``bench_function("lit"`` string literals and
+``BenchmarkId::new(<expr>, <param>)`` first arguments (kept as the
+source expression — two identical expressions with different params
+are fine, identical expression+scope twice is what we catch via the
+literal form). Dynamic IDs built from ``format!`` are recorded by
+their source text, which still catches copy-paste duplicates.
+
+Usage:
+    python scripts/check_bench_ids.py [BENCH_DIR]
+"""
+
+import os
+import re
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_DIR = os.path.join(os.path.dirname(HERE), "rust", "benches")
+
+DISCIPLINE = [
+    "warm_up_time(Duration::from_millis(300))",
+    "measurement_time(Duration::from_secs(1))",
+    "sample_size(30)",
+]
+
+GROUP_RE = re.compile(r'benchmark_group\(\s*"([^"]+)"\s*\)')
+LIT_ID_RE = re.compile(r'bench_function\(\s*"([^"]+)"')
+BENCHMARK_ID_RE = re.compile(r"BenchmarkId::new\(\s*([^,]+?)\s*,")
+FINISH_RE = re.compile(r"\.finish\(\)")
+
+
+def strip_comments(text):
+    """Drop // line comments so commented-out benches don't count."""
+    return "\n".join(line.split("//", 1)[0] for line in text.splitlines())
+
+
+def lint_file(path, groups_seen, bare_ids_seen):
+    """Scan one bench source; returns a list of problem strings."""
+    with open(path) as f:
+        text = strip_comments(f.read())
+    name = os.path.basename(path)
+    problems = []
+
+    # Split the file into group scopes: benchmark_group(..) .. .finish()
+    # with everything outside a scope treated as bare-Criterion territory.
+    events = []
+    for m in GROUP_RE.finditer(text):
+        events.append((m.start(), "open", m.group(1)))
+    for m in FINISH_RE.finditer(text):
+        events.append((m.start(), "close", None))
+    events.sort()
+
+    current = None  # (group_name, scope_start)
+    scopes = []  # (group_name, start, end)
+    bare_ranges = []
+    last_end = 0
+    for pos, kind, gname in events:
+        if kind == "open":
+            if current is not None:
+                problems.append(
+                    f"{name}: group '{current[0]}' is never .finish()ed "
+                    f"before group '{gname}' opens"
+                )
+                scopes.append((current[0], current[1], pos))
+            bare_ranges.append((last_end, pos))
+            current = (gname, pos)
+        else:
+            if current is None:
+                continue  # .finish() on something else (no open group)
+            scopes.append((current[0], current[1], pos))
+            last_end = pos
+            current = None
+    if current is not None:
+        problems.append(f"{name}: group '{current[0]}' is never .finish()ed")
+        scopes.append((current[0], current[1], len(text)))
+        last_end = len(text)
+    bare_ranges.append((last_end, len(text)))
+
+    for gname, start, end in scopes:
+        if gname in groups_seen:
+            problems.append(
+                f"{name}: duplicate group name '{gname}' (also in {groups_seen[gname]})"
+            )
+        else:
+            groups_seen[gname] = name
+        body = text[start:end]
+        for call in DISCIPLINE:
+            if call not in body:
+                problems.append(
+                    f"{name}: group '{gname}' is missing the CI timing "
+                    f"discipline call .{call}"
+                )
+        ids = {}
+        for m in LIT_ID_RE.finditer(body):
+            ids.setdefault(m.group(1), 0)
+            ids[m.group(1)] += 1
+        for m in BENCHMARK_ID_RE.finditer(body):
+            # parameterized IDs: the (expr, param) pair disambiguates,
+            # so only flag a *literal* expression repeated verbatim
+            # when it is a plain string literal (same id, same scope)
+            expr = m.group(1)
+            if expr.startswith('"') and expr.endswith('"'):
+                ids.setdefault(expr, 0)
+        dupes = sorted(k for k, n in ids.items() if n > 1)
+        for d in dupes:
+            problems.append(f"{name}: duplicate bench id '{gname}/{d}'")
+
+    for start, end in bare_ranges:
+        for m in LIT_ID_RE.finditer(text[start:end]):
+            bid = m.group(1)
+            if bid in bare_ids_seen:
+                problems.append(
+                    f"{name}: duplicate bare bench id '{bid}' "
+                    f"(also in {bare_ids_seen[bid]})"
+                )
+            else:
+                bare_ids_seen[bid] = name
+    return problems
+
+
+def main(argv):
+    bench_dir = argv[1] if len(argv) > 1 else DEFAULT_DIR
+    files = sorted(
+        os.path.join(bench_dir, f) for f in os.listdir(bench_dir) if f.endswith(".rs")
+    )
+    if not files:
+        print(f"bench-id lint: no .rs files under {bench_dir}")
+        return 1
+    groups_seen = {}
+    bare_ids_seen = {}
+    problems = []
+    for path in files:
+        problems.extend(lint_file(path, groups_seen, bare_ids_seen))
+    if problems:
+        print("bench-id lint FAILED:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(
+        f"bench-id lint OK: {len(files)} file(s), {len(groups_seen)} group(s), "
+        f"{len(bare_ids_seen)} bare id(s), discipline present everywhere"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -12,6 +12,8 @@ Usage:
         [--records docs/run_record.schema.json]
     python scripts/check_schema.py docs/serve_protocol.schema.json FRAMES.jsonl \
         --serve-frames [--records docs/run_record.schema.json]
+    python scripts/check_schema.py docs/load_snapshot.schema.json \
+        load_snapshot.json --load
 
 ARTIFACT.json is a bare RunRecord (kind == "run_record"), a bench
 snapshot (kind == "bench_snapshot") whose "records" array holds
@@ -38,6 +40,17 @@ fail). With --records, each `record` frame's embedded RunRecord payload
 is additionally validated against the record schema and the completion
 gate — the CI serve-smoke job uses this to pin that the daemon streams
 real, schema-valid discovery results, not just well-shaped envelopes.
+
+With --load, the artifact is the `load_snapshot.json` a `pahq load
+--json` run emits. Beyond the schema subset, the gate asserts the
+cross-field invariants the validator cannot express: the latency
+quantiles are monotone (p50 <= p90 <= p99 <= max when any request
+completed), every submitted request is accounted for
+(submitted == ok + failed + cancelled), the per-stage array matches
+the scenario's stage count, and the log2 histogram's bucket counts
+sum to the overall latency count. The CI load-gate job runs this on
+the smoke-scenario snapshot before the perf floors in bench_gate.py
+--load are applied.
 """
 
 import json
@@ -232,6 +245,50 @@ def check_serve_frames(path, schema, records_schema):
     return counts
 
 
+def check_load(doc, schema):
+    """Validate a load snapshot plus the cross-field invariants the
+    subset validator cannot express."""
+    if doc.get("kind") != "load_snapshot":
+        raise SchemaError(f"artifact kind {doc.get('kind')!r} is not 'load_snapshot'")
+    check(doc, schema, "$")
+
+    lat = doc["latency_us"]
+    if lat["count"] > 0:
+        if not lat["p50"] <= lat["p90"] <= lat["p99"] <= lat["max"]:
+            raise SchemaError(
+                f"$.latency_us: quantiles not monotone: p50 {lat['p50']} / "
+                f"p90 {lat['p90']} / p99 {lat['p99']} / max {lat['max']}"
+            )
+
+    req = doc["requests"]
+    if req["submitted"] != req["ok"] + req["failed"] + req["cancelled"]:
+        raise SchemaError(
+            f"$.requests: submitted {req['submitted']} != "
+            f"ok {req['ok']} + failed {req['failed']} + cancelled {req['cancelled']}"
+        )
+
+    stages = doc["stages"]
+    want = doc["scenario"]["stages"]
+    if not stages:
+        raise SchemaError("$.stages: empty — a load run always has >= 1 stage")
+    if len(stages) != want:
+        raise SchemaError(
+            f"$.stages: {len(stages)} stage row(s) but scenario.stages is {want}"
+        )
+    for i, st in enumerate(stages):
+        slat = st["latency_us"]
+        if slat["count"] > 0 and not slat["p50"] <= slat["p99"] <= slat["max"]:
+            raise SchemaError(f"$.stages[{i}].latency_us: quantiles not monotone")
+
+    hist_total = sum(doc["histogram"]["counts"])
+    if hist_total != lat["count"]:
+        raise SchemaError(
+            f"$.histogram: bucket counts sum to {hist_total} but "
+            f"latency_us.count is {lat['count']}"
+        )
+    return req["submitted"], lat["count"]
+
+
 def check_completed(rec, where):
     """The cell-completion gate, applied to a bare record."""
     if not rec.get("n_evals"):
@@ -246,12 +303,16 @@ def main(argv):
     records_schema_path = None
     completed = False
     serve_frames = False
+    load_snapshot = False
     if "--completed" in argv:
         completed = True
         argv = [a for a in argv if a != "--completed"]
     if "--serve-frames" in argv:
         serve_frames = True
         argv = [a for a in argv if a != "--serve-frames"]
+    if "--load" in argv:
+        load_snapshot = True
+        argv = [a for a in argv if a != "--load"]
     if "--records" in argv:
         i = argv.index("--records")
         if i + 1 >= len(argv):
@@ -280,6 +341,18 @@ def main(argv):
         return 0
     with open(argv[2]) as f:
         doc = json.load(f)
+    if load_snapshot:
+        try:
+            submitted, completed_reqs = check_load(doc, schema)
+        except SchemaError as e:
+            print(f"schema check FAILED: {e}")
+            return 1
+        print(
+            f"schema check OK: load snapshot "
+            f"({doc['scenario']['spec']}, mode {doc['mode']}): "
+            f"{submitted} request(s) submitted, {completed_reqs} latency sample(s)"
+        )
+        return 0
     try:
         if isinstance(doc, dict) and doc.get("kind") == "store_manifest":
             n_entries = check_store(doc, schema)

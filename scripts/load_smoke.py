@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test for the `pahq load` harness (stdlib-only).
+
+Boots a `pahq serve` daemon on an ephemeral loopback port, drives it
+with the smoke scenario in wire mode, and then closes the loop on the
+whole measurement pipeline:
+
+1. `pahq load --scenario smoke --addr ... --json ... --shutdown` must
+   exit 0 and drain the daemon, which must itself exit 0 — the load
+   run's --shutdown is the only shutdown request sent;
+2. the emitted ``load_snapshot.json`` validates against
+   ``docs/load_snapshot.schema.json`` plus the cross-field invariants
+   (``check_schema.py --load``);
+3. ``bench_gate.py --load`` passes against the committed
+   ``BENCH_baseline.json`` floors;
+4. the gate's failure path is demonstrably live: re-gating the same
+   snapshot against a temporary baseline with an impossible 1 us p99
+   ceiling must exit nonzero. A gate that cannot fail gates nothing.
+
+Usage:
+    python scripts/load_smoke.py PAHQ_BIN [OUT_DIR]
+    (e.g. target/release/pahq load-logs)
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+SCHEMA = os.path.join(REPO, "docs", "load_snapshot.schema.json")
+BASELINE = os.path.join(REPO, "BENCH_baseline.json")
+
+LOAD_TIMEOUT = 120  # the whole smoke scenario run, seconds
+SHUTDOWN_TIMEOUT = 60  # daemon exit after the load run's shutdown, seconds
+
+sys.path.insert(0, HERE)
+from check_schema import SchemaError, check_load  # noqa: E402
+
+
+def free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def wait_listening(addr, proc, deadline):
+    host, port = addr.split(":")
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            sys.exit(f"daemon exited early with code {proc.returncode}")
+        try:
+            with socket.create_connection((host, int(port)), timeout=1):
+                return
+        except OSError:
+            time.sleep(0.1)
+    sys.exit("daemon never started listening")
+
+
+def main(argv):
+    if len(argv) not in (2, 3):
+        print(__doc__)
+        return 2
+    pahq = argv[1]
+    out_dir = argv[2] if len(argv) == 3 else tempfile.mkdtemp(prefix="load_smoke_")
+    os.makedirs(out_dir, exist_ok=True)
+    snapshot = os.path.join(out_dir, "load_snapshot.json")
+
+    port = free_port()
+    addr = f"127.0.0.1:{port}"
+    daemon = subprocess.Popen([pahq, "serve", "--addr", addr, "--workers", "2"])
+    try:
+        wait_listening(addr, daemon, time.monotonic() + 30)
+        print(f"daemon up on {addr}")
+
+        # 1. the smoke scenario end to end, draining the daemon on exit
+        subprocess.run(
+            [
+                pahq,
+                "load",
+                "--scenario",
+                "smoke",
+                "--addr",
+                addr,
+                "--json",
+                snapshot,
+                "--shutdown",
+            ],
+            check=True,
+            timeout=LOAD_TIMEOUT,
+        )
+        code = daemon.wait(timeout=SHUTDOWN_TIMEOUT)
+        if code != 0:
+            sys.exit(f"daemon exited {code} after the load run's shutdown")
+        print("load run completed and daemon drained to exit 0")
+    finally:
+        if daemon.poll() is None:
+            daemon.kill()
+            daemon.wait()
+
+    # 2. schema + cross-field invariants
+    with open(SCHEMA) as f:
+        schema = json.load(f)
+    with open(snapshot) as f:
+        doc = json.load(f)
+    try:
+        submitted, completed = check_load(doc, schema)
+    except SchemaError as e:
+        sys.exit(f"schema check FAILED for {snapshot}: {e}")
+    print(f"snapshot schema-valid: {submitted} submitted, {completed} latency samples")
+
+    # 3. the committed floors must pass on a healthy run
+    gate = [sys.executable, os.path.join(HERE, "bench_gate.py")]
+    subprocess.run(gate + [BASELINE, snapshot, "--load"], check=True)
+    print("load gate OK against the committed baseline")
+
+    # 4. and the gate must actually be able to fail: an impossible p99
+    # ceiling on the very same snapshot has to exit nonzero
+    with open(BASELINE) as f:
+        base = json.load(f)
+    base.setdefault("load", {}).setdefault("smoke", {})["max_p99_us"] = 1.0
+    tight = os.path.join(out_dir, "baseline_tight.json")
+    with open(tight, "w") as f:
+        json.dump(base, f)
+    bad = subprocess.run(gate + [tight, snapshot, "--load"])
+    if bad.returncode == 0:
+        sys.exit("load gate accepted an impossible 1 us p99 ceiling — the gate is dead")
+    print(f"load gate correctly fails on an impossible floor (exit {bad.returncode})")
+
+    print("load smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

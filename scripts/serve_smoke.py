@@ -19,8 +19,12 @@ protocol doc promises it works:
    the timeout — no orphaned threads, no hung sockets.
 
 Usage:
-    python scripts/serve_smoke.py PAHQ_BIN SERVE_CLIENT_BIN
+    python scripts/serve_smoke.py PAHQ_BIN SERVE_CLIENT_BIN [LOG_DIR]
     (e.g. target/release/pahq target/release/examples/serve_client)
+
+LOG_DIR is where the per-conversation frame logs land (created if
+missing); CI passes a workspace path so the logs upload as artifacts
+even when a step fails. Without it, a fresh temp dir is used.
 """
 
 import json
@@ -103,13 +107,17 @@ def check_accounted(log_path, expect_records=None):
 
 
 def main(argv):
-    if len(argv) != 3:
+    if len(argv) not in (3, 4):
         print(__doc__)
         return 2
     pahq, client = argv[1], argv[2]
     port = free_port()
     addr = f"127.0.0.1:{port}"
-    tmp = tempfile.mkdtemp(prefix="serve_smoke_")
+    if len(argv) == 4:
+        tmp = argv[3]
+        os.makedirs(tmp, exist_ok=True)
+    else:
+        tmp = tempfile.mkdtemp(prefix="serve_smoke_")
     logs = {name: os.path.join(tmp, f"{name}.jsonl") for name in ("run", "matrix", "cancel")}
 
     daemon = subprocess.Popen([pahq, "serve", "--addr", addr, "--workers", "2"])
