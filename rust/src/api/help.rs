@@ -59,6 +59,7 @@ pub fn subcommands() -> Vec<(&'static str, &'static str)> {
         ("store", "inspect / garbage-collect the durable artifact store"),
         ("serve", "multi-client discovery daemon (docs/serve_protocol.md)"),
         ("load", "scenario-driven load/latency harness against `pahq serve` or in-process"),
+        ("lint", "in-repo static analysis: panic ratchets, lock hygiene, doc drift"),
         ("info", "model/artifact inventory"),
         ("help", "this overview, or `pahq help <subcommand>` for flags"),
     ]
@@ -265,6 +266,31 @@ fn load_flags() -> Vec<(String, String)> {
     ]
 }
 
+fn lint_flags() -> Vec<(String, String)> {
+    vec![
+        (
+            "--json PATH".into(),
+            "where the findings artifact lands (schema: docs/lint_findings.schema.json)".into(),
+        ),
+        (
+            "--update-baseline".into(),
+            "regenerate LINT_baseline.json from the current ratchet counts \
+             (full-repo pass only)"
+                .into(),
+        ),
+        (
+            "--paths A,B".into(),
+            "lint only these repo-relative files (skips the repo-wide drift \
+             rules; how tests and CI reach the known-bad fixtures)"
+                .into(),
+        ),
+        (
+            "--root DIR".into(),
+            "checkout root (default: ascend from the working directory)".into(),
+        ),
+    ]
+}
+
 fn sim_flags() -> Vec<(String, String)> {
     vec![
         ("--arch A".into(), "real architecture to simulate (default gpt2)".into()),
@@ -348,6 +374,7 @@ pub fn subcommand(name: &str) -> Option<String> {
         "store" => render("store <ls|gc>", &synopsis("store"), &store_cmd_flags()),
         "serve" => render("serve", &synopsis("serve"), &serve_flags()),
         "load" => render("load", &synopsis("load"), &load_flags()),
+        "lint" => render("lint", &synopsis("lint"), &lint_flags()),
         "info" => render("info", &synopsis("info"), &[]),
         _ => return None,
     };
@@ -449,6 +476,11 @@ mod tests {
         }
         for key in crate::load::OVERRIDE_KEYS {
             assert!(l.contains(key), "load help misses override key {key}");
+        }
+        // every flag cmd_lint consults appears in the lint help
+        let t = subcommand("lint").unwrap();
+        for flag in ["--json", "--update-baseline", "--paths", "--root"] {
+            assert!(t.contains(flag), "lint help misses {flag}");
         }
         // the --store value spellings come from the StoreSpec list
         for spelling in StoreSpec::SPELLINGS {

@@ -37,6 +37,7 @@ pub mod baselines;
 pub mod discovery;
 pub mod eval;
 pub mod gpu_sim;
+pub mod lint;
 pub mod load;
 pub mod matrix;
 pub mod metrics;

@@ -1,0 +1,4 @@
+// Lint fixture: a poison-propagating lock acquisition. Never compiled.
+fn poisoned(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

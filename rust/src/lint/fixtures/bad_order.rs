@@ -1,0 +1,8 @@
+// Lint fixture: acquires `inner` (rank 2) before `outer` (rank 1). Never
+// compiled; rust/tests/lint.rs runs check_lock_order over it with a
+// fixture-local lock table.
+fn wrong(t: &Pair) {
+    let second = crate::util::sync::lock_recover(&t.inner);
+    let first = crate::util::sync::lock_recover(&t.outer);
+    let _ = (second, first);
+}

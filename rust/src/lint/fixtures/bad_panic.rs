@@ -1,0 +1,10 @@
+// Lint fixture: every panic-surface rule fires here. Never compiled.
+fn risky(xs: &[u32], x: Option<u32>, y: Option<u32>) -> u32 {
+    let head = xs[0];
+    let v = x.unwrap();
+    let w = y.expect("present");
+    if head > 3 {
+        panic!("boom");
+    }
+    v + w + head
+}

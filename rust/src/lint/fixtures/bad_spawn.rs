@@ -1,0 +1,6 @@
+// Lint fixture: a detached thread outside the allowed directories. Never compiled.
+fn detached() {
+    std::thread::spawn(|| {
+        let _ = 1 + 1;
+    });
+}

@@ -1,0 +1,4 @@
+// Lint fixture: the poison-recovering counterpart of bad_lock.rs. Never compiled.
+fn recovered(m: &std::sync::Mutex<u32>) -> u32 {
+    *crate::util::sync::lock_recover(m)
+}

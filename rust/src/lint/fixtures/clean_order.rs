@@ -1,0 +1,7 @@
+// Lint fixture: nested acquisition in declared rank order (outer=1 then
+// inner=2). Never compiled; exercised by rust/tests/lint.rs.
+fn right(t: &Pair) {
+    let first = crate::util::sync::lock_recover(&t.outer);
+    let second = crate::util::sync::lock_recover(&t.inner);
+    let _ = (first, second);
+}

@@ -1,0 +1,10 @@
+// Lint fixture: the panic-free counterpart of bad_panic.rs. Never compiled.
+fn careful(xs: &[u32], x: Option<u32>, y: Option<u32>) -> Option<u32> {
+    let head = xs.first().copied()?;
+    let v = x?;
+    let w = y?;
+    if head > 3 {
+        return None;
+    }
+    Some(v + w + head)
+}

@@ -1,0 +1,8 @@
+// Lint fixture: scoped threads join at scope exit, so no bare-spawn. Never compiled.
+fn scoped() {
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let _ = 1 + 1;
+        });
+    });
+}

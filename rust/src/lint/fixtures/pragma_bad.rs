@@ -1,0 +1,9 @@
+// Lint fixture: malformed pragmas must not suppress anything. Never compiled.
+fn unjustified(x: Option<u32>) -> u32 {
+    // pahq-lint: allow(panic-unwrap)
+    x.unwrap()
+}
+
+fn misspelled(y: Option<u32>) -> u32 {
+    y.unwrap() // pahq-lint: allow(not-a-rule): rule ids must come from the registry
+}

@@ -1,0 +1,5 @@
+// Lint fixture: a justified pragma suppresses the finding. Never compiled.
+fn suppressed(x: Option<u32>) -> u32 {
+    // pahq-lint: allow(panic-unwrap): fixture proving justified pragmas suppress
+    x.unwrap()
+}

@@ -1,0 +1,306 @@
+//! A lightweight Rust source masker: the lexical layer under every
+//! lint rule.
+//!
+//! Rules in this subsystem are byte-pattern scans (`.unwrap()`,
+//! `.lock()`, `thread::spawn`, ...). Scanning raw source would fire
+//! inside string literals, doc comments, and char literals — e.g. the
+//! very message strings that *describe* a rule. So rules never see raw
+//! source: they see the [`Lexed::masked`] buffer, where every byte of
+//! comment and literal *content* is replaced by a space (newlines are
+//! kept so byte offsets and line numbers survive masking, and string
+//! quote delimiters are kept so the code shape stays readable).
+//!
+//! Handled: line comments, nested block comments, string literals with
+//! escapes, raw strings (`r"…"`, `r#"…"#`, any hash depth), byte
+//! strings/chars (`b"…"`, `b'…'`, `br#"…"#`), char literals, and the
+//! char-literal/lifetime ambiguity (`'x'` masks, `'a` in `&'a str`
+//! does not).
+//!
+//! This is *not* a full lexer — it does not tokenize identifiers or
+//! operators — and that is deliberate: the mask pass is ~100 lines,
+//! has no dependencies, and is exactly strong enough for the rule set
+//! (see `docs/lint_rules.md` § Scope and limits).
+
+/// Masked view of one source file.
+pub struct Lexed {
+    /// Same length as the input; comment/literal content blanked.
+    pub masked: Vec<u8>,
+    /// Byte spans `(start, end)` of every comment, including the
+    /// `//` / `/*` delimiters. Pragma parsing reads these.
+    pub comments: Vec<(usize, usize)>,
+}
+
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Can a raw string start here? True when the previous byte is not an
+/// identifier byte, or is a `b` prefix that itself starts a token.
+fn raw_ok(b: &[u8], i: usize) -> bool {
+    if i == 0 {
+        return true;
+    }
+    let p = b[i - 1];
+    if !is_ident(p) {
+        return true;
+    }
+    p == b'b' && (i < 2 || !is_ident(b[i - 2]))
+}
+
+/// Mask one source file. See the module docs for what gets blanked.
+pub fn analyze(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut comments = Vec::new();
+
+    fn blank(out: &mut [u8], start: usize, end: usize) {
+        let end = end.min(out.len());
+        for slot in out.iter_mut().take(end).skip(start) {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+    }
+
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        let nxt = if i + 1 < n { b[i + 1] } else { 0 };
+        // line comment
+        if c == b'/' && nxt == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push((i, j));
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // block comment (nesting counts, as in Rust)
+        if c == b'/' && nxt == b'*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            comments.push((i, j));
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // raw string r"..." / r#"..."# (possibly after a b prefix)
+        if c == b'r' && raw_ok(b, i) {
+            let mut j = i + 1;
+            let mut hashes = 0;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                let mut end = n;
+                let mut k = j;
+                while k < n {
+                    let closes = b[k] == b'"'
+                        && k + hashes < n
+                        && b[k + 1..k + 1 + hashes].iter().all(|&h| h == b'#');
+                    if closes {
+                        end = k + 1 + hashes;
+                        break;
+                    }
+                    k += 1;
+                }
+                blank(&mut out, i + 1, end);
+                i = end;
+                continue;
+            }
+        }
+        // byte-string / byte-char / raw-byte-string prefix: step over
+        // the b, the next iteration handles the literal itself
+        let byte_prefix = nxt == b'"' || nxt == b'\'' || nxt == b'r';
+        if c == b'b' && byte_prefix && (i == 0 || !is_ident(b[i - 1])) {
+            i += 1;
+            continue;
+        }
+        // string literal
+        if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            blank(&mut out, i + 1, j.saturating_sub(1));
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if nxt == b'\\' {
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i + 1, j);
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' && nxt != b'\'' {
+                blank(&mut out, i + 1, i + 2);
+                i += 3;
+                continue;
+            }
+            // lifetime ('a, 'static): just skip the quote
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    Lexed { masked: out, comments }
+}
+
+/// Byte spans of `#[cfg(test)] mod … { … }` blocks, computed on the
+/// masked buffer (so braces inside literals cannot unbalance the
+/// match). Rules do not fire inside these spans: test code is allowed
+/// to unwrap.
+pub fn test_spans(masked: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut idx = 0;
+    while let Some(a) = find(masked, b"#[cfg(test)]", idx) {
+        let Some(m) = find(masked, b"mod ", a) else { break };
+        let Some(o) = find(masked, b"{", m) else { break };
+        let mut depth = 0usize;
+        let mut j = o;
+        while j < masked.len() {
+            match masked[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let end = (j + 1).min(masked.len());
+        spans.push((a, end));
+        idx = end.max(a + 1);
+    }
+    spans
+}
+
+pub fn in_spans(pos: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= pos && pos < b)
+}
+
+/// 1-based line number of a byte offset.
+pub fn line_of(src: &[u8], pos: usize) -> usize {
+    src.iter().take(pos).filter(|&&b| b == b'\n').count() + 1
+}
+
+/// First occurrence of `needle` in `hay` at or after `from`.
+pub fn find(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from >= hay.len() || hay.len() - from < needle.len() {
+        return None;
+    }
+    hay[from..].windows(needle.len()).position(|w| w == needle).map(|p| p + from)
+}
+
+/// Every occurrence of `needle` in `hay` (non-overlapping).
+pub fn find_all(hay: &[u8], needle: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while let Some(p) = find(hay, needle, i) {
+        out.push(p);
+        i = p + needle.len();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn masked(src: &str) -> String {
+        String::from_utf8(analyze(src).masked).unwrap()
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let m = masked("let x = \"call .unwrap() here\"; // .unwrap()\nx.unwrap();\n");
+        assert!(!m[..m.find('\n').unwrap()].contains(".unwrap()"));
+        assert!(m.ends_with("x.unwrap();\n"));
+        assert_eq!(m.len(), "let x = \"call .unwrap() here\"; // .unwrap()\nx.unwrap();\n".len());
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let m = masked("/* a /* b */ still comment */ code()");
+        assert!(m.ends_with(" code()"));
+        assert!(!m.contains("still"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let m = masked("let f = br#\"{\"k\": \".unwrap()\"}\"#; f.len()");
+        assert!(!m.contains(".unwrap()"));
+        assert!(m.contains("f.len()"));
+        let m = masked("let r = r\"panic!\"; ok()");
+        assert!(!m.contains("panic!"));
+    }
+
+    #[test]
+    fn char_literals_mask_but_lifetimes_survive() {
+        let m = masked("fn f<'a>(s: &'a str) -> char { '!' }");
+        assert!(m.contains("<'a>"));
+        assert!(m.contains("&'a str"));
+        assert!(!m.contains("'!'"));
+        let m = masked("let q = '\"'; let s = \"x\"; s.len()");
+        // the quote char literal must not open a phantom string
+        assert!(m.contains("s.len()"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let m = masked("let s = \"a\\\"b.unwrap()c\"; done()");
+        assert!(!m.contains(".unwrap()"));
+        assert!(m.contains("done()"));
+    }
+
+    #[test]
+    fn newlines_survive_masking() {
+        let src = "// one\n\"two\nthree\"\nfour";
+        let m = masked(src);
+        assert_eq!(m.matches('\n').count(), src.matches('\n').count());
+        assert_eq!(line_of(m.as_bytes(), m.find("four").unwrap()), 4);
+    }
+
+    #[test]
+    fn test_spans_cover_cfg_test_mods() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() { x.unwrap(); }\n}\nfn c() {}\n";
+        let lx = analyze(src);
+        let spans = test_spans(&lx.masked);
+        assert_eq!(spans.len(), 1);
+        let pos = src.find(".unwrap()").unwrap();
+        assert!(in_spans(pos, &spans));
+        assert!(!in_spans(src.find("fn c").unwrap(), &spans));
+    }
+}

@@ -1,0 +1,451 @@
+//! `pahq lint` — the in-repo static-analysis subsystem.
+//!
+//! Three layers:
+//!
+//! - [`lexer`] — masks comments and literals out of Rust source so
+//!   rules scan only code.
+//! - [`rules`] — the rule registry: panic-surface (ratcheted),
+//!   concurrency hygiene, and doc/code drift, plus the
+//!   `// pahq-lint: allow(<rule>): <why>` suppression pragmas.
+//! - this module — the engine: the source walk, the ratchet baseline
+//!   (`LINT_baseline.json`, counts may only go down; regenerate with
+//!   `pahq lint --update-baseline`), the gate, and the JSON findings
+//!   artifact (`docs/lint_findings.schema.json`, validated in CI by
+//!   `scripts/check_schema.py --lint`).
+//!
+//! Everything is hand-rolled on `std` + the in-repo `util::json`,
+//! matching the vendored-offline constraint; there is deliberately no
+//! `syn`-grade parser here (see `docs/lint_rules.md` § Scope and
+//! limits for what that buys and costs).
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Version of the findings-artifact shape. Mirrored by
+/// `docs/lint_findings.schema.json` (the `schema-version` drift rule
+/// checks this very pair).
+pub const LINT_SCHEMA_VERSION: usize = 1;
+
+/// Ratchet-baseline filename, at the repo root next to Cargo.toml.
+pub const BASELINE_NAME: &str = "LINT_baseline.json";
+
+/// Rule severity. `Error` findings fail the gate outright; `Ratchet`
+/// findings fail it only when a per-(rule, file) count exceeds the
+/// committed baseline.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Severity {
+    Error,
+    Ratchet,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Ratchet => "ratchet",
+        }
+    }
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+    /// Suppressed by a justified pragma: reported but never gated.
+    pub suppressed: bool,
+    /// The pragma's justification, when suppressed.
+    pub justification: Option<String>,
+}
+
+/// Output of one lint pass.
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// Unsuppressed ratchet counts, keyed `(rule, file)`.
+    pub fn ratchet_counts(&self) -> BTreeMap<(String, String), usize> {
+        let mut counts = BTreeMap::new();
+        for f in &self.findings {
+            if f.severity == Severity::Ratchet && !f.suppressed {
+                *counts.entry((f.rule.to_string(), f.file.clone())).or_insert(0) += 1;
+            }
+        }
+        counts
+    }
+}
+
+/// Ascend from `start` to the checkout root (the directory holding
+/// `rust/src` and `docs`).
+pub fn repo_root_from(start: &Path) -> Result<PathBuf> {
+    let mut dir = start
+        .canonicalize()
+        .with_context(|| format!("lint: resolving {}", start.display()))?;
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() && dir.join("docs").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            bail!(
+                "lint: {} is not inside the repo (no rust/src/lib.rs above it); \
+                 pass --root explicitly",
+                start.display()
+            );
+        }
+    }
+}
+
+/// Checkout root for the current process (ascend from the cwd).
+pub fn repo_root() -> Result<PathBuf> {
+    repo_root_from(Path::new("."))
+}
+
+/// Every lintable source file under `rust/src`, repo-relative with
+/// forward slashes, sorted. The lint fixtures directory is excluded:
+/// its files are deliberately bad and reachable only via `--paths`
+/// (that asymmetry is what gives CI its negative-path proof).
+pub fn walk_sources(root: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let base = root.join("rust/src");
+    let mut stack = vec![base.clone()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&dir).with_context(|| format!("lint: listing {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                if path.file_name().map(|n| n == "fixtures").unwrap_or(false) {
+                    continue;
+                }
+                stack.push(path);
+            } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push(rel);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint the whole repo: every source file plus the repo-wide drift
+/// rules.
+pub fn lint_repo(root: &Path) -> Result<Report> {
+    let files = walk_sources(root)?;
+    let mut report = lint_files(root, &files)?;
+    report.findings.extend(rules::drift::scan(root)?);
+    sort_findings(&mut report.findings);
+    Ok(report)
+}
+
+/// Lint only `paths` (repo-relative). Drift rules are skipped — this
+/// is the fixture/negative-path mode, and partial file sets cannot
+/// prove repo-wide properties either way.
+pub fn lint_paths(root: &Path, paths: &[String]) -> Result<Report> {
+    let mut report = lint_files(root, paths)?;
+    sort_findings(&mut report.findings);
+    Ok(report)
+}
+
+fn lint_files(root: &Path, files: &[String]) -> Result<Report> {
+    let mut findings = Vec::new();
+    for rel in files {
+        let src = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("lint: reading {rel}"))?;
+        findings.extend(rules::lint_source(rel, &src));
+    }
+    Ok(Report { files_scanned: files.len(), findings })
+}
+
+fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+}
+
+// ---------------------------------------------------------------------------
+// Ratchet baseline
+
+/// Committed per-(rule, file) counts for ratcheted rules. The gate
+/// fails any count above its baseline; counts below baseline pass and
+/// are reported as stale (regenerate to tighten the ratchet).
+#[derive(Default)]
+pub struct Baseline {
+    /// rule id -> file -> count.
+    pub rules: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+impl Baseline {
+    /// Load `LINT_baseline.json`. A missing file is an empty baseline:
+    /// every ratchet finding then counts as a regression, which is
+    /// exactly right for fixture runs and for a freshly nuked ratchet.
+    pub fn load(path: &Path) -> Result<Baseline> {
+        if !path.exists() {
+            return Ok(Baseline::default());
+        }
+        let doc = Json::parse_file(path)
+            .with_context(|| format!("lint: parsing {}", path.display()))?;
+        let kind = doc.get("kind")?.as_str()?;
+        if kind != "lint_baseline" {
+            bail!("lint: {} has kind {kind:?}, expected \"lint_baseline\"", path.display());
+        }
+        let version = doc.get("schema_version")?.as_usize()?;
+        if version != LINT_SCHEMA_VERSION {
+            bail!("lint: baseline schema_version {version} != {LINT_SCHEMA_VERSION}");
+        }
+        let mut rules = BTreeMap::new();
+        for (rule_id, files) in doc.get("rules")?.as_obj()? {
+            let mut per_file = BTreeMap::new();
+            for (file, count) in files.as_obj()? {
+                per_file.insert(file.clone(), count.as_usize()?);
+            }
+            rules.insert(rule_id.clone(), per_file);
+        }
+        Ok(Baseline { rules })
+    }
+
+    /// Snapshot a report's unsuppressed ratchet counts.
+    pub fn from_report(report: &Report) -> Baseline {
+        let mut rules: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+        for ((rule_id, file), count) in report.ratchet_counts() {
+            rules.entry(rule_id).or_default().insert(file, count);
+        }
+        Baseline { rules }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rules = Json::Obj(
+            self.rules
+                .iter()
+                .map(|(rule_id, files)| {
+                    let files = files
+                        .iter()
+                        .map(|(f, c)| (f.clone(), Json::Num(*c as f64)))
+                        .collect::<BTreeMap<_, _>>();
+                    (rule_id.clone(), Json::Obj(files))
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("kind", Json::Str("lint_baseline".into())),
+            ("schema_version", Json::Num(LINT_SCHEMA_VERSION as f64)),
+            (
+                "comment",
+                Json::Str(
+                    "Ratchet baseline for pahq lint: per-file counts of ratcheted findings. \
+                     Counts may only go down; regenerate with `pahq lint --update-baseline` \
+                     after burning sites down. See docs/lint_rules.md."
+                        .into(),
+                ),
+            ),
+            ("rules", rules),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump() + "\n")
+            .with_context(|| format!("lint: writing {}", path.display()))
+    }
+
+    fn count(&self, rule_id: &str, file: &str) -> usize {
+        self.rules.get(rule_id).and_then(|m| m.get(file)).copied().unwrap_or(0)
+    }
+}
+
+/// One (rule, file) ratchet comparison.
+pub struct RatchetRow {
+    pub rule: String,
+    pub file: String,
+    pub count: usize,
+    pub baseline: usize,
+}
+
+/// Gate verdict for one report against one baseline.
+pub struct GateSummary {
+    /// Unsuppressed error-severity findings.
+    pub errors: usize,
+    /// Suppressed findings (any severity).
+    pub suppressed: usize,
+    /// Rows with `count > baseline`.
+    pub regressions: usize,
+    /// Rows with `count < baseline` (ratchet can tighten).
+    pub stale: usize,
+    /// Every (rule, file) row where either side is nonzero.
+    pub rows: Vec<RatchetRow>,
+}
+
+impl GateSummary {
+    pub fn passed(&self) -> bool {
+        self.errors == 0 && self.regressions == 0
+    }
+}
+
+/// Compare a report against the committed baseline.
+pub fn gate(report: &Report, baseline: &Baseline) -> GateSummary {
+    let counts = report.ratchet_counts();
+    let mut keys: Vec<(String, String)> = counts.keys().cloned().collect();
+    for (rule_id, files) in &baseline.rules {
+        for file in files.keys() {
+            keys.push((rule_id.clone(), file.clone()));
+        }
+    }
+    keys.sort();
+    keys.dedup();
+
+    let mut rows = Vec::new();
+    let (mut regressions, mut stale) = (0, 0);
+    for (rule_id, file) in keys {
+        let count = counts.get(&(rule_id.clone(), file.clone())).copied().unwrap_or(0);
+        let base = baseline.count(&rule_id, &file);
+        if count > base {
+            regressions += 1;
+        } else if count < base {
+            stale += 1;
+        }
+        rows.push(RatchetRow { rule: rule_id, file, count, baseline: base });
+    }
+    let errors =
+        report.findings.iter().filter(|f| f.severity == Severity::Error && !f.suppressed).count();
+    let suppressed = report.findings.iter().filter(|f| f.suppressed).count();
+    GateSummary { errors, suppressed, regressions, stale, rows }
+}
+
+/// The machine-readable findings artifact
+/// (`docs/lint_findings.schema.json`).
+pub fn report_json(report: &Report, summary: &GateSummary) -> Json {
+    let findings = report
+        .findings
+        .iter()
+        .map(|f| {
+            let mut pairs = vec![
+                ("rule", Json::Str(f.rule.to_string())),
+                ("severity", Json::Str(f.severity.as_str().to_string())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("message", Json::Str(f.message.clone())),
+                ("suppressed", Json::Bool(f.suppressed)),
+            ];
+            if let Some(j) = &f.justification {
+                pairs.push(("justification", Json::Str(j.clone())));
+            }
+            obj(pairs)
+        })
+        .collect();
+    let ratchet = summary
+        .rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("rule", Json::Str(r.rule.clone())),
+                ("file", Json::Str(r.file.clone())),
+                ("count", Json::Num(r.count as f64)),
+                ("baseline", Json::Num(r.baseline as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("kind", Json::Str("lint_findings".into())),
+        ("schema_version", Json::Num(LINT_SCHEMA_VERSION as f64)),
+        ("files_scanned", Json::Num(report.files_scanned as f64)),
+        (
+            "summary",
+            obj(vec![
+                ("findings", Json::Num(report.findings.len() as f64)),
+                ("errors", Json::Num(summary.errors as f64)),
+                ("suppressed", Json::Num(summary.suppressed as f64)),
+                ("regressions", Json::Num(summary.regressions as f64)),
+                ("stale_baseline", Json::Num(summary.stale as f64)),
+            ]),
+        ),
+        ("findings", Json::Arr(findings)),
+        ("ratchet", Json::Arr(ratchet)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(findings: Vec<Finding>) -> Report {
+        Report { files_scanned: 1, findings }
+    }
+
+    fn ratchet(rule: &'static str, file: &str, suppressed: bool) -> Finding {
+        Finding {
+            rule,
+            severity: Severity::Ratchet,
+            file: file.to_string(),
+            line: 1,
+            message: "m".into(),
+            suppressed,
+            justification: None,
+        }
+    }
+
+    #[test]
+    fn gate_regresses_above_baseline_and_stales_below() {
+        let report = report_with(vec![
+            ratchet("panic-unwrap", "a.rs", false),
+            ratchet("panic-unwrap", "a.rs", false),
+            ratchet("panic-unwrap", "a.rs", true), // suppressed: not counted
+        ]);
+        let mut baseline = Baseline::default();
+        baseline.rules.entry("panic-unwrap".into()).or_default().insert("a.rs".into(), 2);
+        let s = gate(&report, &baseline);
+        assert!(s.passed());
+        assert_eq!(s.suppressed, 1);
+
+        baseline.rules.get_mut("panic-unwrap").unwrap().insert("a.rs".into(), 1);
+        assert!(!gate(&report, &baseline).passed());
+
+        baseline.rules.get_mut("panic-unwrap").unwrap().insert("a.rs".into(), 3);
+        let s = gate(&report, &baseline);
+        assert!(s.passed());
+        assert_eq!(s.stale, 1);
+    }
+
+    #[test]
+    fn baseline_round_trips_through_json() {
+        let report = report_with(vec![
+            ratchet("panic-unwrap", "a.rs", false),
+            ratchet("slice-index", "b.rs", false),
+            ratchet("slice-index", "b.rs", false),
+        ]);
+        let b = Baseline::from_report(&report);
+        let dir = std::env::temp_dir().join("pahq_lint_baseline_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(BASELINE_NAME);
+        b.save(&path).unwrap();
+        let b2 = Baseline::load(&path).unwrap();
+        assert_eq!(b2.count("panic-unwrap", "a.rs"), 1);
+        assert_eq!(b2.count("slice-index", "b.rs"), 2);
+        assert!(gate(&report, &b2).passed());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_baseline_means_everything_regresses() {
+        let report = report_with(vec![ratchet("panic-unwrap", "a.rs", false)]);
+        let s = gate(&report, &Baseline::default());
+        assert!(!s.passed());
+        assert_eq!(s.regressions, 1);
+    }
+}

@@ -1,0 +1,362 @@
+//! Concurrency-hygiene rules: poison handling, lock ordering, and
+//! thread spawning discipline for the hand-rolled concurrent layers
+//! (matrix queue/cache/store, serve sessions, load clients).
+
+use super::super::lexer;
+use super::panic_surface::Hit;
+
+/// One declared lock in the repo-wide acquisition order.
+pub struct LockDecl {
+    /// Repo-relative source file holding the `Mutex` field.
+    pub file: &'static str,
+    /// Field or binding name as it appears at acquisition sites
+    /// (`self.<field>.lock()` / `lock_recover(&….<field>)`).
+    pub field: &'static str,
+    /// Global acquisition rank, outermost-first: while holding a lock
+    /// of rank R, only locks with rank > R may be acquired.
+    pub rank: usize,
+    /// Owning type, for docs and messages.
+    pub holder: &'static str,
+}
+
+/// The declared lock-ordering table. `docs/lint_rules.md` § lock-order
+/// renders this same table; every `Mutex` in the concurrent layers
+/// must appear here, and nested acquisitions must descend it.
+///
+/// Rationale for the order: `Shared.jobs` is the server's registry and
+/// may need any downstream structure while held; `Outbound.state` is
+/// per-connection; the matrix executor's `results` may push into the
+/// queue; `WorkQueue.inner`, the cache map, and the store states are
+/// leaves that never call back out while locked.
+pub const LOCK_ORDER: &[LockDecl] = &[
+    LockDecl { file: "rust/src/serve/server.rs", field: "jobs", rank: 1, holder: "Shared" },
+    LockDecl { file: "rust/src/serve/session.rs", field: "state", rank: 2, holder: "Outbound" },
+    LockDecl { file: "rust/src/matrix/mod.rs", field: "results", rank: 3, holder: "run_matrix" },
+    LockDecl { file: "rust/src/matrix/queue.rs", field: "inner", rank: 4, holder: "WorkQueue" },
+    LockDecl { file: "rust/src/matrix/cache.rs", field: "map", rank: 5, holder: "Store" },
+    LockDecl { file: "rust/src/matrix/store.rs", field: "map", rank: 6, holder: "MemoryStore" },
+    LockDecl { file: "rust/src/matrix/store.rs", field: "state", rank: 7, holder: "DiskStore" },
+];
+
+/// Directories whose daemon/harness threads legitimately outlive a
+/// scope (reader/writer threads parked on blocking I/O).
+const SPAWN_ALLOWED: [&str; 2] = ["rust/src/serve/", "rust/src/load/"];
+
+/// Scan one masked file with every concurrency rule.
+pub fn scan(rel: &str, masked: &[u8]) -> Vec<Hit> {
+    let mut hits = Vec::new();
+
+    for pos in lexer::find_all(masked, b".lock().unwrap()") {
+        let msg = ".lock().unwrap() panics on poison and wedges every later locker; \
+                   use util::sync::lock_recover"
+            .to_string();
+        hits.push(("lock-unwrap", pos, msg));
+    }
+    for pos in lexer::find_all(masked, b".lock().expect(") {
+        let msg = ".lock().expect(..) panics on poison; use util::sync::lock_recover".to_string();
+        hits.push(("lock-unwrap", pos, msg));
+    }
+
+    if !SPAWN_ALLOWED.iter().any(|d| rel.starts_with(d)) {
+        for pos in lexer::find_all(masked, b"thread::spawn") {
+            if pos > 0 && lexer::is_ident(masked[pos - 1]) {
+                continue;
+            }
+            let msg = "bare thread::spawn detaches panics; use std::thread::scope \
+                       (bare spawns are only allowed under serve/ and load/)"
+                .to_string();
+            hits.push(("bare-spawn", pos, msg));
+        }
+    }
+
+    hits.extend(check_lock_order(LOCK_ORDER, rel, masked));
+    hits
+}
+
+/// One detected lock acquisition in a masked file.
+struct Acq {
+    /// Offset of the acquisition expression.
+    pos: usize,
+    /// Offset just past the acquisition expression.
+    end: usize,
+    /// Offset past which the guard is definitely dead (heuristic).
+    span_end: usize,
+    /// Resolved lock name (field/binding before `.lock()` or inside
+    /// `lock_recover(&…)`), if the receiver is a simple path.
+    name: Option<String>,
+}
+
+/// Check every acquisition in `rel` against the declared `table`:
+/// undeclared locks are flagged, and nested acquisitions must descend
+/// the declared rank order. Exposed with an explicit table so fixture
+/// tests can exercise the checker against synthetic orders.
+pub fn check_lock_order(table: &[LockDecl], rel: &str, masked: &[u8]) -> Vec<Hit> {
+    if !table.iter().any(|d| d.file == rel) {
+        return Vec::new();
+    }
+    let mut acqs = Vec::new();
+    for pos in lexer::find_all(masked, b".lock()") {
+        let end = pos + ".lock()".len();
+        let name = ident_before(masked, pos);
+        acqs.push(Acq { pos, end, span_end: guard_span_end(masked, pos, end), name });
+    }
+    for pos in lexer::find_all(masked, b"lock_recover(") {
+        if pos > 0 && lexer::is_ident(masked[pos - 1]) {
+            continue;
+        }
+        let open = pos + "lock_recover(".len() - 1;
+        let close = match_paren(masked, open);
+        let arg = std::str::from_utf8(&masked[open + 1..close]).unwrap_or("");
+        let end = (close + 1).min(masked.len());
+        let name = resolve_arg(arg);
+        acqs.push(Acq { pos, end, span_end: guard_span_end(masked, pos, end), name });
+    }
+    acqs.sort_by_key(|a| a.pos);
+
+    let rank_of = |name: &Option<String>| -> Option<usize> {
+        let n = name.as_deref()?;
+        table.iter().find(|d| d.file == rel && d.field == n).map(|d| d.rank)
+    };
+
+    let mut hits = Vec::new();
+    for a in &acqs {
+        if rank_of(&a.name).is_none() {
+            let shown = a.name.as_deref().unwrap_or("<unresolved receiver>");
+            let msg = format!(
+                "acquisition of undeclared lock `{shown}` — declare it in the \
+                 lock-ordering table (lint/rules/concurrency.rs) and docs/lint_rules.md"
+            );
+            hits.push(("lock-order", a.pos, msg));
+        }
+    }
+    for (i, outer) in acqs.iter().enumerate() {
+        let (Some(outer_rank), Some(outer_name)) = (rank_of(&outer.name), outer.name.as_deref())
+        else {
+            continue;
+        };
+        for inner in acqs.iter().skip(i + 1) {
+            if inner.pos < outer.end || inner.pos >= outer.span_end {
+                continue;
+            }
+            let (Some(inner_rank), Some(inner_name)) = (rank_of(&inner.name), inner.name.as_deref())
+            else {
+                continue;
+            };
+            if inner_name == outer_name {
+                let msg = format!(
+                    "nested acquisition of `{inner_name}` while it may still be held \
+                     (self-deadlock)"
+                );
+                hits.push(("lock-order", inner.pos, msg));
+            } else if inner_rank <= outer_rank {
+                let msg = format!(
+                    "lock `{inner_name}` (rank {inner_rank}) acquired while holding \
+                     `{outer_name}` (rank {outer_rank}) — violates the declared lock order"
+                );
+                hits.push(("lock-order", inner.pos, msg));
+            }
+        }
+    }
+    hits
+}
+
+/// The identifier immediately before `pos` (receiver of `.lock()`).
+fn ident_before(masked: &[u8], pos: usize) -> Option<String> {
+    let mut j = pos;
+    while j > 0 && lexer::is_ident(masked[j - 1]) {
+        j -= 1;
+    }
+    if j == pos {
+        return None;
+    }
+    std::str::from_utf8(&masked[j..pos]).ok().map(str::to_string)
+}
+
+/// Resolve a `lock_recover` argument like `&self.state` / `&results`
+/// to the final path segment; `None` for anything fancier.
+fn resolve_arg(arg: &str) -> Option<String> {
+    let arg = arg.trim().trim_start_matches('&').trim();
+    let last = arg.rsplit('.').next()?;
+    if last.is_empty() || !last.bytes().all(lexer::is_ident) {
+        return None;
+    }
+    let prefix = &arg[..arg.len() - last.len()];
+    let prefix_ok = prefix.is_empty()
+        || (prefix.ends_with('.') && prefix[..prefix.len() - 1].bytes().all(lexer::is_ident));
+    if prefix_ok {
+        Some(last.to_string())
+    } else {
+        None
+    }
+}
+
+/// Offset of the `)` matching the `(` at `open` (or end of buffer).
+fn match_paren(masked: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < masked.len() {
+        match masked[j] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    masked.len().saturating_sub(1)
+}
+
+/// Heuristic end of the guard's live range.
+///
+/// - `let [mut] g = <acq>;` binds the guard: live to the end of the
+///   enclosing block, or to an explicit `drop(g)`.
+/// - Anything else treats the guard as a temporary: live to the end of
+///   the current statement (`;` at depth 0), or through a trailing
+///   block (`match <acq> { … }`) — the first `}` that returns brace
+///   depth to 0, or the `}` closing the enclosing block.
+///
+/// Over-approximates (an `if` condition temp is dropped before the
+/// block runs, but we extend through it); for a lint that is the safe
+/// direction.
+fn guard_span_end(masked: &[u8], pos: usize, acq_end: usize) -> usize {
+    let n = masked.len();
+    // statement start: byte after the previous `;`, `{`, or `}`
+    let mut s = pos;
+    while s > 0 && !matches!(masked[s - 1], b';' | b'{' | b'}') {
+        s -= 1;
+    }
+    let stmt = std::str::from_utf8(&masked[s..pos]).unwrap_or("").trim_start();
+    let direct_let = stmt.starts_with("let ") && {
+        // direct binding only: nothing but whitespace between the
+        // acquisition expression and the statement's `;`
+        let mut k = acq_end;
+        while k < n && (masked[k] == b' ' || masked[k] == b'\t' || masked[k] == b'\n') {
+            k += 1;
+        }
+        k < n && masked[k] == b';'
+    };
+    if direct_let {
+        let name: String = {
+            let rest = stmt["let ".len()..].trim_start();
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+            rest.bytes().take_while(|&b| lexer::is_ident(b)).map(char::from).collect()
+        };
+        let drop_pat = format!("drop({name})");
+        let mut depth = 0i32;
+        let mut j = acq_end;
+        while j < n {
+            if !name.is_empty() && masked[j..].starts_with(drop_pat.as_bytes()) {
+                return j;
+            }
+            match masked[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return j;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        return n;
+    }
+    // temporary: end of statement or trailing block
+    let mut depth = 0i32;
+    let mut j = acq_end;
+    while j < n {
+        match masked[j] {
+            b';' if depth == 0 => return j + 1,
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth <= 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits_for(rel: &str, src: &str) -> Vec<(&'static str, String)> {
+        let lx = lexer::analyze(src);
+        scan(rel, &lx.masked).into_iter().map(|h| (h.0, h.2)).collect()
+    }
+
+    #[test]
+    fn lock_unwrap_flagged_everywhere() {
+        let h = hits_for("rust/src/foo.rs", "let g = m.lock().unwrap();");
+        assert!(h.iter().any(|(r, _)| *r == "lock-unwrap"));
+        let h = hits_for("rust/src/foo.rs", "let g = m.lock().expect(\"poisoned\");");
+        assert!(h.iter().any(|(r, _)| *r == "lock-unwrap"));
+    }
+
+    #[test]
+    fn bare_spawn_scoped_by_directory() {
+        let src = "let h = std::thread::spawn(|| {});";
+        assert!(hits_for("rust/src/acdc/sweep.rs", src).iter().any(|(r, _)| *r == "bare-spawn"));
+        assert!(hits_for("rust/src/serve/server.rs", src).is_empty());
+        assert!(hits_for("rust/src/load/client.rs", src).is_empty());
+    }
+
+    const TABLE: &[LockDecl] = &[
+        LockDecl { file: "f.rs", field: "outer", rank: 1, holder: "T" },
+        LockDecl { file: "f.rs", field: "inner", rank: 2, holder: "T" },
+    ];
+
+    #[test]
+    fn ordered_nesting_passes_reversed_nesting_fails() {
+        let good = "fn ok(t: &T) { let a = lock_recover(&t.outer); \
+                    let b = lock_recover(&t.inner); }";
+        let lx = lexer::analyze(good);
+        assert!(check_lock_order(TABLE, "f.rs", &lx.masked).is_empty());
+
+        let bad = "fn no(t: &T) { let a = lock_recover(&t.inner); \
+                   let b = lock_recover(&t.outer); }";
+        let lx = lexer::analyze(bad);
+        let hits = check_lock_order(TABLE, "f.rs", &lx.masked);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].2.contains("violates the declared lock order"));
+    }
+
+    #[test]
+    fn undeclared_and_self_nesting_flagged() {
+        let src = "fn f(t: &T) { let g = t.mystery.lock(); }";
+        let lx = lexer::analyze(src);
+        let hits = check_lock_order(TABLE, "f.rs", &lx.masked);
+        assert!(hits.iter().any(|h| h.2.contains("undeclared lock `mystery`")));
+
+        let src = "fn f(t: &T) { let a = lock_recover(&t.outer); let b = lock_recover(&t.outer); }";
+        let lx = lexer::analyze(src);
+        let hits = check_lock_order(TABLE, "f.rs", &lx.masked);
+        assert!(hits.iter().any(|h| h.2.contains("self-deadlock")));
+    }
+
+    #[test]
+    fn statement_temporaries_do_not_nest() {
+        // guard dropped at end of statement; the next acquisition is fine
+        let src = "fn f(t: &T) { lock_recover(&t.inner).push(1); lock_recover(&t.outer).pop(); }";
+        let lx = lexer::analyze(src);
+        assert!(check_lock_order(TABLE, "f.rs", &lx.masked).is_empty());
+    }
+
+    #[test]
+    fn explicit_drop_ends_a_bound_guard() {
+        let src = "fn f(t: &T) { let b = lock_recover(&t.inner); drop(b); \
+                   let a = lock_recover(&t.outer); a.touch(); }";
+        let lx = lexer::analyze(src);
+        assert!(check_lock_order(TABLE, "f.rs", &lx.masked).is_empty());
+    }
+}

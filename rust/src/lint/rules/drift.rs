@@ -1,0 +1,394 @@
+//! Drift rules: places where the same fact lives in two files and CI
+//! must prove the copies agree.
+//!
+//! Three checks, all repo-wide (they read multiple files, so they run
+//! once per lint pass rather than per file):
+//!
+//! - `doc-error-codes` — the error-code table in
+//!   `docs/serve_protocol.md` must match `ErrorCode` in
+//!   `serve/protocol.rs`, both directions.
+//! - `schema-orphan` — every `docs/*.schema.json` must be referenced
+//!   by `scripts/check_schema.py`; an orphan schema means CI validates
+//!   nothing against it.
+//! - `schema-version` — every schema-version constant in source must
+//!   equal the version pinned in its schema file.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::super::lexer;
+use super::super::{Finding, Severity};
+use crate::util::json::Json;
+
+/// Where each version constant lives and which schema pins it.
+struct VersionPin {
+    source: &'static str,
+    constant: &'static str,
+    schema: &'static str,
+    /// Dotted path to the pinned value inside the schema JSON; the
+    /// final `enum` segment means "first element of that array".
+    path: &'static [&'static str],
+}
+
+const VERSION_PINS: &[VersionPin] = &[
+    VersionPin {
+        source: "rust/src/discovery/record.rs",
+        constant: "SCHEMA_VERSION",
+        schema: "docs/run_record.schema.json",
+        path: &["properties", "schema_version", "enum"],
+    },
+    VersionPin {
+        source: "rust/src/matrix/mod.rs",
+        constant: "MATRIX_SCHEMA_VERSION",
+        schema: "docs/matrix.schema.json",
+        path: &["properties", "schema_version", "enum"],
+    },
+    VersionPin {
+        source: "rust/src/matrix/store.rs",
+        constant: "STORE_SCHEMA_VERSION",
+        schema: "docs/store_manifest.schema.json",
+        path: &["properties", "schema_version", "enum"],
+    },
+    VersionPin {
+        source: "rust/src/matrix/store.rs",
+        constant: "CODEC_VERSION",
+        schema: "docs/store_manifest.schema.json",
+        path: &["properties", "codec_version", "enum"],
+    },
+    VersionPin {
+        source: "rust/src/load/snapshot.rs",
+        constant: "SNAPSHOT_SCHEMA_VERSION",
+        schema: "docs/load_snapshot.schema.json",
+        path: &["properties", "schema_version", "enum"],
+    },
+    VersionPin {
+        source: "rust/src/serve/protocol.rs",
+        constant: "PROTOCOL_VERSION",
+        schema: "docs/serve_protocol.schema.json",
+        path: &["protocol_version"],
+    },
+    VersionPin {
+        source: "rust/src/lint/mod.rs",
+        constant: "LINT_SCHEMA_VERSION",
+        schema: "docs/lint_findings.schema.json",
+        path: &["properties", "schema_version", "enum"],
+    },
+];
+
+fn finding(rule: &'static str, file: &str, line: usize, message: String) -> Finding {
+    Finding {
+        rule,
+        severity: Severity::Error,
+        file: file.to_string(),
+        line,
+        message,
+        suppressed: false,
+        justification: None,
+    }
+}
+
+/// Run every drift check against the repo at `root`.
+pub fn scan(root: &Path) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    out.extend(check_error_codes(root)?);
+    out.extend(check_schema_orphans(root)?);
+    out.extend(check_version_pins(root)?);
+    Ok(out)
+}
+
+fn read(root: &Path, rel: &str) -> Result<String> {
+    std::fs::read_to_string(root.join(rel)).with_context(|| format!("lint: reading {rel}"))
+}
+
+// ---------------------------------------------------------------------------
+// doc-error-codes
+
+/// `(code, snake_case_name, line)` pairs from the `ErrorCode` enum.
+fn enum_codes(src: &str) -> Vec<(u64, String, usize)> {
+    let lx = lexer::analyze(src);
+    let masked = &lx.masked;
+    let Some(start) = lexer::find(masked, b"pub enum ErrorCode", 0) else {
+        return Vec::new();
+    };
+    let Some(open) = lexer::find(masked, b"{", start) else { return Vec::new() };
+    let mut depth = 0usize;
+    let mut end = open;
+    for (k, &b) in masked.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = k;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let body = std::str::from_utf8(&masked[open..end]).unwrap_or("");
+    let mut out = Vec::new();
+    let base_line = lexer::line_of(src.as_bytes(), open);
+    for (i, raw) in body.lines().enumerate() {
+        let line = raw.trim().trim_end_matches(',');
+        let Some((name, value)) = line.split_once('=') else { continue };
+        let (name, value) = (name.trim(), value.trim());
+        let named_ok = !name.is_empty()
+            && name.as_bytes()[0].is_ascii_uppercase()
+            && name.bytes().all(lexer::is_ident);
+        if !named_ok {
+            continue;
+        }
+        let Ok(code) = value.parse::<u64>() else { continue };
+        out.push((code, snake_case(name), base_line + i));
+    }
+    out
+}
+
+fn snake_case(name: &str) -> String {
+    let mut out = String::new();
+    for (i, ch) in name.chars().enumerate() {
+        if ch.is_ascii_uppercase() && i > 0 {
+            out.push('_');
+        }
+        out.push(ch.to_ascii_lowercase());
+    }
+    out
+}
+
+/// `(code, name, line)` rows of the markdown error-code table: cells
+/// shaped `| <digits> | `name` | … |`.
+fn doc_codes(md: &str) -> Vec<(u64, String, usize)> {
+    let mut out = Vec::new();
+    for (i, raw) in md.lines().enumerate() {
+        let line = raw.trim();
+        if !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').collect();
+        if cells.len() < 3 {
+            continue;
+        }
+        let c1 = cells[1].trim();
+        let c2 = cells[2].trim();
+        if c1.is_empty() || !c1.bytes().all(|b| b.is_ascii_digit()) {
+            continue;
+        }
+        let name = c2.strip_prefix('`').and_then(|s| s.strip_suffix('`'));
+        let Some(name) = name else { continue };
+        if name.is_empty() || !name.bytes().all(|b| lexer::is_ident(b) && b != b'`') {
+            continue;
+        }
+        let Ok(code) = c1.parse::<u64>() else { continue };
+        out.push((code, name.to_string(), i + 1));
+    }
+    out
+}
+
+const PROTOCOL_RS: &str = "rust/src/serve/protocol.rs";
+const PROTOCOL_MD: &str = "docs/serve_protocol.md";
+
+fn check_error_codes(root: &Path) -> Result<Vec<Finding>> {
+    let enum_side = enum_codes(&read(root, PROTOCOL_RS)?);
+    let doc_side = doc_codes(&read(root, PROTOCOL_MD)?);
+    let mut out = Vec::new();
+    if enum_side.is_empty() {
+        out.push(finding(
+            "doc-error-codes",
+            PROTOCOL_RS,
+            1,
+            "could not locate the ErrorCode enum (did it move or lose its discriminants?)"
+                .to_string(),
+        ));
+        return Ok(out);
+    }
+    if doc_side.is_empty() {
+        out.push(finding(
+            "doc-error-codes",
+            PROTOCOL_MD,
+            1,
+            "could not locate the error-code table (| code | `name` | rows)".to_string(),
+        ));
+        return Ok(out);
+    }
+    for (code, name, line) in &enum_side {
+        match doc_side.iter().find(|(c, _, _)| c == code) {
+            None => out.push(finding(
+                "doc-error-codes",
+                PROTOCOL_MD,
+                1,
+                format!("error code {code} (`{name}`) is missing from the table"),
+            )),
+            Some((_, doc_name, doc_line)) if doc_name != name => out.push(finding(
+                "doc-error-codes",
+                PROTOCOL_MD,
+                *doc_line,
+                format!(
+                    "error code {code} is `{doc_name}` in the docs but `{name}` in \
+                     {PROTOCOL_RS}:{line}"
+                ),
+            )),
+            Some(_) => {}
+        }
+    }
+    for (code, name, line) in &doc_side {
+        if !enum_side.iter().any(|(c, _, _)| c == code) {
+            out.push(finding(
+                "doc-error-codes",
+                PROTOCOL_MD,
+                *line,
+                format!("documents error code {code} (`{name}`) which ErrorCode does not define"),
+            ));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// schema-orphan
+
+const CHECK_SCHEMA_PY: &str = "scripts/check_schema.py";
+
+fn check_schema_orphans(root: &Path) -> Result<Vec<Finding>> {
+    let script = read(root, CHECK_SCHEMA_PY)?;
+    let mut names: Vec<String> = Vec::new();
+    let docs = root.join("docs");
+    let entries =
+        std::fs::read_dir(&docs).with_context(|| format!("lint: listing {}", docs.display()))?;
+    for entry in entries {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".schema.json") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    let mut out = Vec::new();
+    for name in names {
+        if !script.contains(&name) {
+            out.push(finding(
+                "schema-orphan",
+                &format!("docs/{name}"),
+                1,
+                format!(
+                    "docs/{name} is not referenced by {CHECK_SCHEMA_PY}: CI validates \
+                     nothing against it"
+                ),
+            ));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// schema-version
+
+/// `pub const <name>: <ty> = <int>;` in masked source.
+fn const_value(src: &str, name: &str) -> Option<(u64, usize)> {
+    let lx = lexer::analyze(src);
+    let pat = format!("pub const {name}:");
+    let pos = lexer::find(&lx.masked, pat.as_bytes(), 0)?;
+    let rest = &lx.masked[pos + pat.len()..];
+    let eq = rest.iter().position(|&b| b == b'=')?;
+    let digits: Vec<u8> = rest[eq + 1..]
+        .iter()
+        .copied()
+        .skip_while(|b| b.is_ascii_whitespace())
+        .take_while(|b| b.is_ascii_digit())
+        .collect();
+    let value = std::str::from_utf8(&digits).ok()?.parse().ok()?;
+    Some((value, lexer::line_of(src.as_bytes(), pos)))
+}
+
+fn pinned_value(schema: &Json, path: &[&str]) -> Result<u64> {
+    let mut cur = schema;
+    for seg in path {
+        cur = cur.get(seg)?;
+    }
+    if path.last() == Some(&"enum") {
+        cur = cur
+            .as_arr()?
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("empty enum in schema version pin"))?;
+    }
+    Ok(cur.as_f64()? as u64)
+}
+
+fn check_version_pins(root: &Path) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    for pin in VERSION_PINS {
+        let src = read(root, pin.source)?;
+        let Some((value, line)) = const_value(&src, pin.constant) else {
+            out.push(finding(
+                "schema-version",
+                pin.source,
+                1,
+                format!(
+                    "constant `{}` not found (renamed without updating the lint pin table?)",
+                    pin.constant
+                ),
+            ));
+            continue;
+        };
+        let schema = Json::parse_file(&root.join(pin.schema))
+            .with_context(|| format!("lint: parsing {}", pin.schema))?;
+        match pinned_value(&schema, pin.path) {
+            Err(e) => out.push(finding(
+                "schema-version",
+                pin.schema,
+                1,
+                format!("cannot read version pin at {}: {e}", pin.path.join(".")),
+            )),
+            Ok(pinned) if pinned != value => out.push(finding(
+                "schema-version",
+                pin.source,
+                line,
+                format!(
+                    "`{}` = {value} but {} pins {pinned} — bump them together",
+                    pin.constant, pin.schema
+                ),
+            )),
+            Ok(_) => {}
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_and_doc_parsers_agree_on_shapes() {
+        let src = "pub enum ErrorCode {\n    BadFrame = 1,\n    ShuttingDown = 7,\n}\n";
+        let codes = enum_codes(src);
+        assert_eq!(codes.len(), 2);
+        assert_eq!(codes[0].0, 1);
+        assert_eq!(codes[0].1, "bad_frame");
+        assert_eq!(codes[1].1, "shutting_down");
+
+        let md = "| code | name | meaning |\n|---|---|---|\n| 1 | `bad_frame` | x |\n\
+                  | 9 | not_ticked | y |\n| 7 | `shutting_down` | z |\n";
+        let rows = doc_codes(md);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], (1, "bad_frame".to_string(), 3));
+        assert_eq!(rows[1].0, 7);
+    }
+
+    #[test]
+    fn const_parser_reads_typed_int_consts() {
+        let src = "pub const PROTOCOL_VERSION: u16 = 3;\n";
+        assert_eq!(const_value(src, "PROTOCOL_VERSION"), Some((3, 1)));
+        assert_eq!(const_value(src, "MISSING"), None);
+        // a prefixed name must not match
+        let src = "pub const STORE_SCHEMA_VERSION: usize = 2;\n";
+        assert_eq!(const_value(src, "SCHEMA_VERSION"), None);
+    }
+
+    #[test]
+    fn snake_case_handles_runs() {
+        assert_eq!(snake_case("BadFrame"), "bad_frame");
+        assert_eq!(snake_case("Internal"), "internal");
+        assert_eq!(snake_case("ShuttingDown"), "shutting_down");
+    }
+}

@@ -1,0 +1,280 @@
+//! The rule registry and the per-file rule driver.
+//!
+//! Three rule families (see `docs/lint_rules.md` for the per-rule
+//! contract):
+//!
+//! - **panic-surface** ([`panic_surface`]) — ratcheted: counts live in
+//!   `LINT_baseline.json` and may only go down.
+//! - **concurrency** ([`concurrency`]) — hard errors: poison handling,
+//!   the declared lock-ordering table, thread-spawn discipline.
+//! - **drift** ([`drift`]) — hard errors: docs/schemas/source version
+//!   agreement, checked repo-wide rather than per-file.
+//!
+//! Any rule can be suppressed at a single site with
+//! `// pahq-lint: allow(<rule-id>): <justification>` — the
+//! justification is mandatory, and a malformed or unknown pragma is
+//! itself a `bad-pragma` error.
+
+pub mod concurrency;
+pub mod drift;
+pub mod panic_surface;
+
+use super::lexer::{self, Lexed};
+use super::{Finding, Severity};
+
+/// One registered rule.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+}
+
+/// Every rule the engine knows. `docs/lint_rules.md` has one section
+/// per entry (asserted by `rust/tests/lint.rs`).
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "panic-unwrap",
+        severity: Severity::Ratchet,
+        summary: ".unwrap() in non-test library code",
+    },
+    RuleInfo {
+        id: "panic-expect",
+        severity: Severity::Ratchet,
+        summary: ".expect(..) in non-test library code",
+    },
+    RuleInfo {
+        id: "panic-macro",
+        severity: Severity::Ratchet,
+        summary: "panic!/unreachable!/todo!/unimplemented! in non-test library code",
+    },
+    RuleInfo {
+        id: "slice-index",
+        severity: Severity::Ratchet,
+        summary: "panicking slice/map index in non-test library code",
+    },
+    RuleInfo {
+        id: "lock-unwrap",
+        severity: Severity::Error,
+        summary: ".lock().unwrap() / .lock().expect(..) poison propagation",
+    },
+    RuleInfo {
+        id: "lock-order",
+        severity: Severity::Error,
+        summary: "undeclared lock or nested acquisition against the declared order",
+    },
+    RuleInfo {
+        id: "bare-spawn",
+        severity: Severity::Error,
+        summary: "bare std::thread::spawn outside serve/ and load/",
+    },
+    RuleInfo {
+        id: "doc-error-codes",
+        severity: Severity::Error,
+        summary: "docs/serve_protocol.md error-code table out of sync with ErrorCode",
+    },
+    RuleInfo {
+        id: "schema-orphan",
+        severity: Severity::Error,
+        summary: "docs/*.schema.json not referenced by scripts/check_schema.py",
+    },
+    RuleInfo {
+        id: "schema-version",
+        severity: Severity::Error,
+        summary: "schema-version constant disagrees with the pinned schema file",
+    },
+    RuleInfo {
+        id: "bad-pragma",
+        severity: Severity::Error,
+        summary: "malformed pahq-lint pragma (unknown rule or missing justification)",
+    },
+];
+
+pub fn rule(id: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// A well-formed suppression pragma.
+pub struct Pragma {
+    /// Line whose findings this pragma suppresses (the comment's own
+    /// line when trailing code, else the next line carrying code).
+    pub target_line: usize,
+    /// Line the comment itself sits on.
+    pub decl_line: usize,
+    pub rule: String,
+    pub justification: String,
+}
+
+/// Parse every `// pahq-lint:` comment. Well-formed pragmas come back
+/// in the first slot; malformed ones surface as `bad-pragma` findings
+/// in the second. Pragmas inside `#[cfg(test)]` blocks are ignored,
+/// matching the rules they would suppress.
+pub fn parse_pragmas(
+    rel: &str,
+    src: &[u8],
+    lexed: &Lexed,
+    tspans: &[(usize, usize)],
+) -> (Vec<Pragma>, Vec<Finding>) {
+    let mut pragmas = Vec::new();
+    let mut bad = Vec::new();
+    for &(s, e) in &lexed.comments {
+        if lexer::in_spans(s, tspans) || !src[s..].starts_with(b"//") {
+            continue;
+        }
+        let text = std::str::from_utf8(&src[s + 2..e]).unwrap_or("").trim();
+        let Some(rest) = text.strip_prefix("pahq-lint:") else { continue };
+        let decl_line = lexer::line_of(src, s);
+        let mut fail = |msg: String| {
+            bad.push(Finding {
+                rule: "bad-pragma",
+                severity: Severity::Error,
+                file: rel.to_string(),
+                line: decl_line,
+                message: msg,
+                suppressed: false,
+                justification: None,
+            });
+        };
+        let rest = rest.trim();
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            fail(format!("expected `allow(<rule>): <justification>`, got `{rest}`"));
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            fail("unclosed `allow(` in pragma".to_string());
+            continue;
+        };
+        let rule_id = inner[..close].trim();
+        let after = inner[close + 1..].trim_start();
+        let justification = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        if rule(rule_id).is_none() {
+            fail(format!("unknown rule `{rule_id}` in pragma"));
+            continue;
+        }
+        if justification.is_empty() {
+            fail(format!(
+                "pragma must carry a justification: `// pahq-lint: allow({rule_id}): <why>`"
+            ));
+            continue;
+        }
+        pragmas.push(Pragma {
+            target_line: pragma_target_line(&lexed.masked, s, e, decl_line),
+            decl_line,
+            rule: rule_id.to_string(),
+            justification: justification.to_string(),
+        });
+    }
+    (pragmas, bad)
+}
+
+/// Trailing pragma (code earlier on the same line) applies to its own
+/// line; a standalone pragma applies to the next line carrying code.
+fn pragma_target_line(masked: &[u8], start: usize, end: usize, decl_line: usize) -> usize {
+    let mut j = start;
+    while j > 0 && masked[j - 1] != b'\n' {
+        j -= 1;
+        if masked[j] != b' ' && masked[j] != b'\t' {
+            return decl_line;
+        }
+    }
+    // skip to the end of the comment's line, then find the next line
+    // with any code on it
+    let mut k = end;
+    while k < masked.len() && masked[k] != b'\n' {
+        k += 1;
+    }
+    let mut line = decl_line;
+    while k < masked.len() {
+        if masked[k] == b'\n' {
+            line += 1;
+        } else if masked[k] != b' ' && masked[k] != b'\t' {
+            return line;
+        }
+        k += 1;
+    }
+    decl_line
+}
+
+/// Run every per-file rule over one source file. `rel` is the
+/// repo-relative path (forward slashes) — directory-scoped rules and
+/// the lock-order table key off it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::analyze(src);
+    let sb = src.as_bytes();
+    let tspans = lexer::test_spans(&lexed.masked);
+    let (pragmas, mut findings) = parse_pragmas(rel, sb, &lexed, &tspans);
+
+    let mut hits = panic_surface::scan(&lexed.masked);
+    hits.extend(concurrency::scan(rel, &lexed.masked));
+    hits.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+
+    for (rule_id, pos, message) in hits {
+        if lexer::in_spans(pos, &tspans) {
+            continue;
+        }
+        let line = lexer::line_of(sb, pos);
+        let severity = rule(rule_id).map(|r| r.severity).unwrap_or(Severity::Error);
+        let pragma = pragmas.iter().find(|p| p.rule == rule_id && p.target_line == line);
+        findings.push(Finding {
+            rule: rule_id,
+            severity,
+            file: rel.to_string(),
+            line,
+            message,
+            suppressed: pragma.is_some(),
+            justification: pragma.map(|p| p.justification.clone()),
+        });
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_kebab() {
+        for (i, r) in RULES.iter().enumerate() {
+            assert!(r.id.bytes().all(|b| b.is_ascii_lowercase() || b == b'-'), "{}", r.id);
+            assert!(!RULES[..i].iter().any(|o| o.id == r.id), "duplicate {}", r.id);
+        }
+    }
+
+    #[test]
+    fn trailing_and_standalone_pragmas_target_the_right_line() {
+        let src = "// pahq-lint: allow(panic-unwrap): covered by caller check\n\
+                   x.unwrap();\n\
+                   y.unwrap(); // pahq-lint: allow(panic-unwrap): loop invariant\n\
+                   z.unwrap();\n";
+        let fs = lint_source("rust/src/x.rs", src);
+        let unwraps: Vec<_> = fs.iter().filter(|f| f.rule == "panic-unwrap").collect();
+        assert_eq!(unwraps.len(), 3);
+        assert!(unwraps[0].suppressed && unwraps[0].line == 2);
+        assert!(unwraps[1].suppressed && unwraps[1].line == 3);
+        assert!(!unwraps[2].suppressed && unwraps[2].line == 4);
+        assert_eq!(unwraps[0].justification.as_deref(), Some("covered by caller check"));
+    }
+
+    #[test]
+    fn pragma_without_justification_is_rejected_and_does_not_suppress() {
+        let src = "// pahq-lint: allow(panic-unwrap)\nx.unwrap();\n";
+        let fs = lint_source("rust/src/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "bad-pragma" && f.line == 1));
+        let u = fs.iter().find(|f| f.rule == "panic-unwrap").unwrap();
+        assert!(!u.suppressed);
+    }
+
+    #[test]
+    fn unknown_rule_pragma_is_rejected() {
+        let src = "// pahq-lint: allow(no-such-rule): because\nx.unwrap();\n";
+        let fs = lint_source("rust/src/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "bad-pragma"));
+        assert!(!fs.iter().find(|f| f.rule == "panic-unwrap").unwrap().suppressed);
+    }
+
+    #[test]
+    fn test_mod_findings_are_skipped() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(lint_source("rust/src/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,97 @@
+//! Panic-surface rules: every construct that can abort a worker thread
+//! in non-test library code.
+//!
+//! PAHQ's pitch over linear-approximation methods is *exactness* — and
+//! an aborted worker silently truncating a sweep is the cheapest way
+//! to lose it. These rules are ratcheted (counts in
+//! `LINT_baseline.json` may only go down) rather than hard errors:
+//! the seed code has hundreds of historical sites, and the ratchet
+//! turns them into a monotone burn-down instead of a flag day. See
+//! `docs/lint_rules.md` for the per-rule rationale and the hot-path
+//! zero policy (serve/load/matrix hold no unsuppressed findings for
+//! the non-slice rules).
+
+use super::super::lexer;
+
+/// A raw hit: rule id, byte offset, message.
+pub type Hit = (&'static str, usize, String);
+
+const PANIC_MACROS: [&str; 4] = ["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// Scan one masked source buffer. Offsets are into the masked buffer,
+/// which is byte-for-byte aligned with the raw source.
+pub fn scan(masked: &[u8]) -> Vec<Hit> {
+    let mut hits = Vec::new();
+    for pos in lexer::find_all(masked, b".unwrap()") {
+        hits.push(("panic-unwrap", pos, ".unwrap() can panic; bubble a Result or justify".into()));
+    }
+    for pos in lexer::find_all(masked, b".expect(") {
+        let msg = ".expect(..) can panic; bubble a Result or justify".to_string();
+        hits.push(("panic-expect", pos, msg));
+    }
+    for mac in PANIC_MACROS {
+        for pos in lexer::find_all(masked, mac.as_bytes()) {
+            // `foo_panic!` is not `panic!`
+            if pos > 0 && lexer::is_ident(masked[pos - 1]) {
+                continue;
+            }
+            hits.push(("panic-macro", pos, format!("{mac} aborts the thread; return an error")));
+        }
+    }
+    // slice indexing: `[` whose previous non-whitespace byte ends an
+    // expression (identifier, `)`, or `]`) — array/type syntax,
+    // attributes, and macro brackets do not match
+    for pos in lexer::find_all(masked, b"[") {
+        let mut j = pos;
+        while j > 0 {
+            j -= 1;
+            match masked[j] {
+                b' ' | b'\t' | b'\n' => continue,
+                b => {
+                    if lexer::is_ident(b) || b == b')' || b == b']' {
+                        let msg = "slice/map indexing can panic; prefer .get(..)".to_string();
+                        hits.push(("slice-index", pos, msg));
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_in(src: &str) -> Vec<&'static str> {
+        let lx = lexer::analyze(src);
+        let mut ids: Vec<&'static str> = scan(&lx.masked).into_iter().map(|h| h.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    #[test]
+    fn flags_each_family() {
+        assert_eq!(rules_in("x.unwrap();"), vec!["panic-unwrap"]);
+        assert_eq!(rules_in("x.expect(\"m\");"), vec!["panic-expect"]);
+        assert_eq!(rules_in("unreachable!()"), vec!["panic-macro"]);
+        assert_eq!(rules_in("let y = xs[0];"), vec!["slice-index"]);
+    }
+
+    #[test]
+    fn ignores_literals_and_lookalikes() {
+        assert!(rules_in("let s = \".unwrap() panic! xs[0]\";").is_empty());
+        assert!(rules_in("my_panic!()").is_empty());
+        assert!(rules_in("#[derive(Clone)] struct S;").is_empty());
+        assert!(rules_in("let a: [u8; 4] = *b;").is_empty());
+        assert!(rules_in("x.unwrap_or(0);").is_empty());
+    }
+
+    #[test]
+    fn chained_index_after_call_or_index() {
+        assert_eq!(rules_in("f()[0];"), vec!["slice-index"]);
+        assert_eq!(rules_in("g[0][1];"), vec!["slice-index"]);
+    }
+}

@@ -33,6 +33,10 @@
 //!               `pahq serve` daemon (or the in-process run path) from a
 //!               named preset and emits a schema'd load_snapshot.json
 //!               that CI's load-gate diffs (scripts/bench_gate.py --load)
+//!   lint        in-repo static analysis: panic-surface ratchets,
+//!               concurrency hygiene (poison handling, lock order,
+//!               spawn discipline), doc/schema drift; emits a schema'd
+//!               findings JSON that CI's static-analysis job gates on
 //!   info        model/artifact inventory
 //!   help        generated overview; `pahq help <sub>` / `--help` for flags
 
@@ -90,6 +94,7 @@ fn main() -> Result<()> {
         "store" => cmd_store(&args),
         "serve" => cmd_serve(&args),
         "load" => cmd_load(&args),
+        "lint" => cmd_lint(&args),
         "info" => cmd_info(),
         _ => {
             print!("{}", help::usage());
@@ -754,6 +759,78 @@ fn cmd_load(args: &Args) -> Result<()> {
         json: args.json_path().map(PathBuf::from),
     };
     pahq::load::run(&cfg).map(|_| ())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use pahq::lint::{self, Severity};
+
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => lint::repo_root()?,
+    };
+    let paths = args.list("paths").unwrap_or_default();
+    let report = if paths.is_empty() {
+        lint::lint_repo(&root)?
+    } else {
+        lint::lint_paths(&root, &paths)?
+    };
+    let baseline_path = root.join(lint::BASELINE_NAME);
+
+    if args.flag("update-baseline") {
+        if !paths.is_empty() {
+            bail!("lint: --update-baseline needs a full-repo pass; drop --paths");
+        }
+        let baseline = lint::Baseline::from_report(&report);
+        baseline.save(&baseline_path)?;
+        let sites: usize = baseline.rules.values().flat_map(|m| m.values()).sum();
+        println!(
+            "lint: wrote {} ({} ratcheted sites across {} files scanned)",
+            baseline_path.display(),
+            sites,
+            report.files_scanned
+        );
+        return Ok(());
+    }
+
+    let baseline = lint::Baseline::load(&baseline_path)?;
+    let summary = lint::gate(&report, &baseline);
+    if let Some(p) = args.json_path() {
+        let body = lint::report_json(&report, &summary).dump() + "\n";
+        std::fs::write(p, body).with_context(|| format!("lint: writing {p}"))?;
+    }
+
+    for f in &report.findings {
+        if f.severity == Severity::Error && !f.suppressed {
+            println!("error[{}] {}:{}: {}", f.rule, f.file, f.line, f.message);
+        }
+    }
+    for row in &summary.rows {
+        if row.count > row.baseline {
+            println!(
+                "regression[{}] {}: {} findings vs baseline {} — fix them or justify with \
+                 a pragma (see docs/lint_rules.md)",
+                row.rule, row.file, row.count, row.baseline
+            );
+        }
+    }
+    println!(
+        "lint: {} files, {} findings ({} suppressed), {} errors, {} ratchet regressions, \
+         {} stale baseline rows",
+        report.files_scanned,
+        report.findings.len(),
+        summary.suppressed,
+        summary.errors,
+        summary.regressions,
+        summary.stale
+    );
+    if !summary.passed() {
+        bail!(
+            "lint: gate failed ({} errors, {} ratchet regressions)",
+            summary.errors,
+            summary.regressions
+        );
+    }
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {

@@ -34,6 +34,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::util::sync::lock_recover;
+
 use anyhow::{bail, Result};
 
 use crate::acdc::sweep::SyntheticSurface;
@@ -119,7 +121,7 @@ impl<V> Default for Store<V> {
 impl<V> Store<V> {
     /// Counted lookup — the cell-facing entry point.
     pub fn get(&self, key: &str) -> Option<Arc<V>> {
-        let got = self.map.lock().unwrap().get(key).cloned();
+        let got = lock_recover(&self.map).get(key).cloned();
         if got.is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -131,12 +133,12 @@ impl<V> Store<V> {
     /// Uncounted lookup — the seeding phase peeks without skewing the
     /// cell-facing hit/miss statistics.
     pub fn peek(&self, key: &str) -> Option<Arc<V>> {
-        self.map.lock().unwrap().get(key).cloned()
+        lock_recover(&self.map).get(key).cloned()
     }
 
     /// Insert; the first writer wins (values are deterministic per key).
     pub fn put(&self, key: &str, v: Arc<V>) {
-        self.map.lock().unwrap().entry(key.to_string()).or_insert(v);
+        lock_recover(&self.map).entry(key.to_string()).or_insert(v);
     }
 
     pub fn hits(&self) -> usize {
@@ -192,6 +194,7 @@ impl<'a> Rd<'a> {
     }
 
     fn u64(&mut self) -> Result<u64> {
+        // pahq-lint: allow(panic-unwrap): bytes(8) returned exactly 8 bytes
         Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 
@@ -205,6 +208,7 @@ impl<'a> Rd<'a> {
     }
 
     fn f32(&mut self) -> Result<f32> {
+        // pahq-lint: allow(panic-unwrap): bytes(4) returned exactly 4 bytes
         Ok(f32::from_bits(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap())))
     }
 

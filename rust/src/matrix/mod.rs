@@ -62,6 +62,7 @@ use crate::quant::FP8_E4M3;
 use crate::report::{mmss, results_dir, Table};
 use crate::scheduler::{predict_matrix_wall, predict_run, StreamConfig};
 use crate::util::json::{obj, Json};
+use crate::util::sync::lock_recover;
 
 use crate::api::StoreSpec;
 use cache::ArtifactCache;
@@ -578,6 +579,7 @@ pub fn synthetic_cell_record(
     let t0 = Instant::now();
     let g = synthetic_graph();
     let channels = g.channels();
+    // pahq-lint: allow(panic-unwrap): cells only name channels drawn from this graph
     let chan_of = |ch: &crate::model::Channel| channels.iter().position(|c| c == ch).unwrap();
     let plan: Vec<Vec<Candidate>> = if cell.method == "acdc" {
         // reverse-topological channel groups, mirroring acdc::sweep_plan
@@ -1207,12 +1209,13 @@ pub(crate) fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
                                 error: Some(e.to_string()),
                             },
                         };
-                        results.lock().unwrap()[i] = Some(outcome);
+                        lock_recover(&results)[i] = Some(outcome);
                     }
                 });
             }
         });
-        for (i, slot) in results.into_inner().unwrap().into_iter().enumerate() {
+        let merged = results.into_inner().unwrap_or_else(|e| e.into_inner());
+        for (i, slot) in merged.into_iter().enumerate() {
             if let Some(o) = slot {
                 outcomes[i] = Some(o);
             }
@@ -1232,6 +1235,7 @@ pub(crate) fn run(cfg: &MatrixConfig) -> Result<MatrixOutcome> {
         &["cell", "status", "kept", "evals", "wall (s)", "cache d/c/s"],
     );
     for (cell, outcome) in cells.iter().zip(&outcomes) {
+        // pahq-lint: allow(panic-expect): the scope above joined every worker, all slots filled
         let o = outcome.as_ref().expect("every cell has an outcome");
         match o.status {
             CellStatus::Ok => n_ok += 1,

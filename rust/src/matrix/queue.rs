@@ -15,6 +15,8 @@
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
+use crate::util::sync::{lock_recover, wait_recover};
+
 /// An unbounded multi-producer multi-consumer FIFO with a close
 /// handshake. Items pushed before [`close`](WorkQueue::close) are
 /// always drained; after close, pushes are refused and blocked poppers
@@ -43,7 +45,7 @@ impl<T> WorkQueue<T> {
     /// Enqueue one item. Returns `false` (dropping the item) when the
     /// queue is already closed.
     pub fn push(&self, item: T) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if inner.closed {
             return false;
         }
@@ -55,13 +57,13 @@ impl<T> WorkQueue<T> {
     /// Non-blocking pop — the drain-until-empty pattern of a pre-filled
     /// grid queue.
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().items.pop_front()
+        lock_recover(&self.inner).items.pop_front()
     }
 
     /// Blocking pop — the daemon worker pattern. Returns `None` only
     /// after [`close`](WorkQueue::close) once the backlog is drained.
     pub fn pop_wait(&self) -> Option<T> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         loop {
             if let Some(item) = inner.items.pop_front() {
                 return Some(item);
@@ -69,19 +71,19 @@ impl<T> WorkQueue<T> {
             if inner.closed {
                 return None;
             }
-            inner = self.ready.wait(inner).unwrap();
+            inner = wait_recover(&self.ready, inner);
         }
     }
 
     /// Refuse further pushes and wake every blocked popper. Items
     /// already queued are still handed out before poppers see `None`.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_recover(&self.inner).closed = true;
         self.ready.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        lock_recover(&self.inner).items.len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -43,6 +43,7 @@ use std::sync::Mutex;
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::{obj, Json};
+use crate::util::sync::lock_recover;
 
 /// Version of the on-disk layout (file header + manifest shape).
 pub const STORE_SCHEMA_VERSION: usize = 1;
@@ -99,26 +100,26 @@ pub struct MemoryStore {
 
 impl ArtifactStore for MemoryStore {
     fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
-        Ok(self.map.lock().unwrap().get(key).cloned())
+        Ok(lock_recover(&self.map).get(key).cloned())
     }
 
     fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
-        self.map.lock().unwrap().entry(key.to_string()).or_insert_with(|| bytes.to_vec());
+        lock_recover(&self.map).entry(key.to_string()).or_insert_with(|| bytes.to_vec());
         Ok(())
     }
 
     fn contains(&self, key: &str) -> Result<bool> {
-        Ok(self.map.lock().unwrap().contains_key(key))
+        Ok(lock_recover(&self.map).contains_key(key))
     }
 
     fn list(&self) -> Result<Vec<String>> {
-        let mut keys: Vec<String> = self.map.lock().unwrap().keys().cloned().collect();
+        let mut keys: Vec<String> = lock_recover(&self.map).keys().cloned().collect();
         keys.sort();
         Ok(keys)
     }
 
     fn remove(&self, key: &str) -> Result<bool> {
-        Ok(self.map.lock().unwrap().remove(key).is_some())
+        Ok(lock_recover(&self.map).remove(key).is_some())
     }
 }
 
@@ -243,7 +244,7 @@ impl DiskStore {
     /// manifest, merge stamps (max wins), write tmp + rename. Keeps
     /// concurrent handles from erasing each other's GC stamps.
     fn persist(&self) -> Result<()> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_recover(&self.state);
         let manifest = self.root.join(MANIFEST_NAME);
         let mut generation = self.generation;
         if let Ok((disk_gen, disk_entries)) = parse_manifest(&manifest) {
@@ -311,7 +312,7 @@ impl DiskStore {
             "store: quarantined corrupt entry {address} ({why}){}",
             if moved.is_err() { " — move failed, treating as miss" } else { "" }
         );
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_recover(&self.state);
         state.entries.remove(address);
         state.dead.insert(address.to_string());
         drop(state);
@@ -321,7 +322,7 @@ impl DiskStore {
     /// Stamp an entry as used at this handle's generation.
     fn touch(&self, address: &str, key: &str, bytes: usize) -> Result<()> {
         {
-            let mut state = self.state.lock().unwrap();
+            let mut state = lock_recover(&self.state);
             state.dead.remove(address);
             let gen = self.generation;
             let e = state.entries.entry(address.to_string()).or_insert(StoreEntry {
@@ -339,7 +340,7 @@ impl DiskStore {
     /// Every manifest entry (merged view), keyed by address.
     pub fn entries(&self) -> BTreeMap<String, StoreEntry> {
         self.persist().ok();
-        self.state.lock().unwrap().entries.clone()
+        lock_recover(&self.state).entries.clone()
     }
 
     /// Collect entries whose `last_used` stamp is more than `horizon`
@@ -349,7 +350,7 @@ impl DiskStore {
         // merge the freshest stamps from disk before deciding anything
         self.persist()?;
         let mut report = GcReport::default();
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_recover(&self.state);
         let mut doomed: Vec<String> = Vec::new();
         for (addr, e) in state.entries.iter() {
             if !self.shard_path(addr).exists() {
@@ -396,11 +397,14 @@ fn decode_file(key: &str, b: &[u8]) -> Result<Vec<u8>> {
     if b.len() < 8 + 4 + 4 + 4 || &b[..8] != MAGIC {
         bail!("bad magic");
     }
+    // pahq-lint: allow(panic-unwrap): 4-byte subslice, length checked above
     let schema = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+    // pahq-lint: allow(panic-unwrap): 4-byte subslice, length checked above
     let codec = u32::from_le_bytes(b[12..16].try_into().unwrap()) as usize;
     if schema != STORE_SCHEMA_VERSION || codec != CODEC_VERSION {
         bail!("schema/codec v{schema}/v{codec}, expected v{STORE_SCHEMA_VERSION}/v{CODEC_VERSION}");
     }
+    // pahq-lint: allow(panic-unwrap): 4-byte subslice, length checked above
     let klen = u32::from_le_bytes(b[16..20].try_into().unwrap()) as usize;
     if b.len() < 20 + klen + 8 + 8 {
         bail!("truncated header");
@@ -412,11 +416,13 @@ fn decode_file(key: &str, b: &[u8]) -> Result<Vec<u8>> {
         bail!("address collision: file holds key '{stored_key}'");
     }
     let at = 20 + klen;
+    // pahq-lint: allow(panic-unwrap): 8-byte subslice, length checked above
     let plen = u64::from_le_bytes(b[at..at + 8].try_into().unwrap()) as usize;
     if b.len() != at + 8 + plen + 8 {
         bail!("payload length mismatch");
     }
     let payload = &b[at + 8..at + 8 + plen];
+    // pahq-lint: allow(panic-unwrap): trailing 8-byte checksum, length checked above
     let sum = u64::from_le_bytes(b[at + 8 + plen..].try_into().unwrap());
     if sum != fnv64_bytes(payload) {
         bail!("checksum mismatch");
@@ -460,13 +466,13 @@ impl ArtifactStore for DiskStore {
 
     fn list(&self) -> Result<Vec<String>> {
         self.persist()?;
-        Ok(self.state.lock().unwrap().entries.values().map(|e| e.key.clone()).collect())
+        Ok(lock_recover(&self.state).entries.values().map(|e| e.key.clone()).collect())
     }
 
     fn remove(&self, key: &str) -> Result<bool> {
         let addr = address(key);
         let existed = std::fs::remove_file(self.shard_path(&addr)).is_ok();
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_recover(&self.state);
         let had_entry = state.entries.remove(&addr).is_some();
         state.dead.insert(addr);
         drop(state);

@@ -28,6 +28,7 @@ use super::session::{DeliveryStats, FrameReader, Outbound, ReadEvent};
 use crate::api::{self, RunSpec, StoreSpec};
 use crate::matrix::cache::ArtifactCache;
 use crate::matrix::queue::WorkQueue;
+use crate::util::sync::lock_recover;
 
 /// How often blocked reads wake up to poll the shutdown flag.
 const READ_POLL: Duration = Duration::from_millis(200);
@@ -197,7 +198,7 @@ impl Server {
             // shutdown: refuse new cells, drain the backlog, then let
             // writers flush and readers notice the halt flag
             shared.queue.close();
-            while !shared.jobs.lock().unwrap().is_empty() {
+            while !lock_recover(&shared.jobs).is_empty() {
                 std::thread::sleep(Duration::from_millis(10));
             }
             for out in &conns {
@@ -234,7 +235,7 @@ fn wake_accept(addr: SocketAddr) {
 
 fn worker_loop(shared: &Shared) {
     while let Some(job) = shared.queue.pop_wait() {
-        let state = match shared.jobs.lock().unwrap().get(&job.job_id) {
+        let state = match lock_recover(&shared.jobs).get(&job.job_id) {
             Some(s) => Arc::clone(s),
             None => continue,
         };
@@ -282,7 +283,7 @@ fn finish_cell(shared: &Shared, job_id: u64, state: &JobState) -> bool {
     if done < state.total {
         return false;
     }
-    shared.jobs.lock().unwrap().remove(&job_id);
+    lock_recover(&shared.jobs).remove(&job_id);
     let (ok, failed, cancelled) = (
         state.ok.load(Ordering::SeqCst),
         state.failed.load(Ordering::SeqCst),
@@ -315,7 +316,7 @@ fn connection(stream: TcpStream, out: Arc<Outbound>, shared: &Shared) {
     // dead weight — cancel so workers skip rather than compute into a
     // closed socket
     {
-        let jobs = shared.jobs.lock().unwrap();
+        let jobs = lock_recover(&shared.jobs);
         for id in my_jobs {
             if let Some(state) = jobs.get(&id) {
                 state.cancelled.store(true, Ordering::SeqCst);
@@ -420,7 +421,7 @@ fn session_step(
         }
         Message::Cancel { job_id } => {
             let owned = my_jobs.contains(&job_id);
-            let state = shared.jobs.lock().unwrap().get(&job_id).filter(|_| owned).cloned();
+            let state = lock_recover(&shared.jobs).get(&job_id).filter(|_| owned).cloned();
             match state {
                 None => {
                     out.push_frame(Message::Error {
@@ -478,7 +479,7 @@ fn submit(
         failed: AtomicUsize::new(0),
         skipped: AtomicUsize::new(0),
     });
-    shared.jobs.lock().unwrap().insert(job_id, Arc::clone(&state));
+    lock_recover(&shared.jobs).insert(job_id, Arc::clone(&state));
     my_jobs.push(job_id);
     out.push_frame(Message::Accepted { job_id, cells: cells.len() });
     let mut accepted = true;
@@ -488,7 +489,7 @@ fn submit(
     if !accepted {
         // shutdown raced the submit: cells refused by the closed queue
         // would leave the job forever unfinished — retire it as skipped
-        let state2 = shared.jobs.lock().unwrap().remove(&job_id);
+        let state2 = lock_recover(&shared.jobs).remove(&job_id);
         if let Some(state) = state2 {
             out.push_frame(Message::Done {
                 job_id,

@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::protocol::{self, Message};
+use crate::util::sync::{lock_recover, wait_recover};
 
 /// Upper bound on queued non-progress frames per connection. Small on
 /// purpose: records stream as they finish, so depth beyond a handful
@@ -112,7 +113,7 @@ impl Outbound {
     /// Returns `false` if the connection is closed or dead — the frame
     /// is dropped and the producer should stop caring about this client.
     pub fn push_frame(&self, msg: Message) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if st.closed || st.dead {
                 return false;
@@ -122,7 +123,7 @@ impl Outbound {
                 self.ready.notify_one();
                 return true;
             }
-            st = self.space.wait(st).unwrap();
+            st = wait_recover(&self.space, st);
         }
     }
 
@@ -134,7 +135,7 @@ impl Outbound {
             debug_assert!(false, "push_progress takes Message::Progress");
             return;
         };
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if st.closed || st.dead {
             return;
         }
@@ -155,7 +156,7 @@ impl Outbound {
     /// progress snapshots. Blocks until something arrives; `None` means
     /// closed-and-drained (or dead) — the writer should exit.
     pub fn pop(&self) -> Option<Message> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if st.dead {
                 return None;
@@ -178,13 +179,13 @@ impl Outbound {
             if st.closed {
                 return None;
             }
-            st = self.ready.wait(st).unwrap();
+            st = wait_recover(&self.ready, st);
         }
     }
 
     /// No further frames; the writer drains what is queued, then exits.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.closed = true;
         self.ready.notify_all();
         self.space.notify_all();
@@ -192,7 +193,7 @@ impl Outbound {
 
     /// The socket write failed: drop everything and unblock producers.
     pub fn mark_dead(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.dead = true;
         st.frames.clear();
         st.progress.clear();
@@ -202,13 +203,13 @@ impl Outbound {
 
     /// Queued guaranteed frames (diagnostics / tests).
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().frames.len()
+        lock_recover(&self.state).frames.len()
     }
 
     /// Snapshot this connection's delivery accounting (drain reports,
     /// load-harness instrumentation).
     pub fn delivery_stats(&self) -> DeliveryStats {
-        self.state.lock().unwrap().stats
+        lock_recover(&self.state).stats
     }
 }
 

@@ -1,0 +1,66 @@
+//! Poison-recovering lock helpers.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking worker into a wedged
+//! process: every later locker sees `PoisonError` and panics too, which
+//! for `pahq serve` means connected clients hang instead of getting an
+//! `internal` error frame. All the state guarded by mutexes in this
+//! crate is kept consistent *before* any code that can panic runs (the
+//! guards protect plain maps/queues whose invariants hold between
+//! statements), so recovering the guard from a poison error is safe.
+//!
+//! Policy (enforced by `pahq lint`, rule `lock-unwrap`): library code
+//! never calls `.lock().unwrap()` / `.lock().expect(..)`; it calls
+//! [`lock_recover`] (and [`wait_recover`] for `Condvar` waits) instead.
+//! See `docs/lint_rules.md` § `lock-unwrap`.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Block on `cv` releasing `guard`, recovering the guard on poison.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 1);
+    }
+
+    #[test]
+    fn wait_recover_wakes_after_poisoned_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut flag = m.lock().unwrap();
+            *flag = true;
+            cv.notify_all();
+            panic!("poison while holding the lock");
+        })
+        .join();
+        let (m, cv) = &*pair;
+        let mut flag = lock_recover(m);
+        while !*flag {
+            flag = wait_recover(cv, flag);
+        }
+        assert!(*flag);
+    }
+}

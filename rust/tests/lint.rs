@@ -1,0 +1,195 @@
+//! Integration tests for the `pahq lint` subsystem: every rule family
+//! against its fixture pair under rust/src/lint/fixtures/, the pragma
+//! grammar, the ratchet baseline round trip, and — the acceptance pin
+//! — the repo itself linting clean at HEAD against the committed
+//! `LINT_baseline.json`.
+
+use std::path::{Path, PathBuf};
+
+use pahq::lint::lexer;
+use pahq::lint::rules::concurrency::{check_lock_order, LockDecl};
+use pahq::lint::rules::{self, lint_source};
+use pahq::lint::{
+    gate, lint_paths, lint_repo, repo_root_from, Baseline, Finding, Severity, BASELINE_NAME,
+};
+
+/// Checkout root, reached by ascending from the crate directory.
+fn root() -> PathBuf {
+    repo_root_from(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap()
+}
+
+const FIXDIR: &str = "rust/src/lint/fixtures";
+
+fn fixture_src(name: &str) -> (String, String) {
+    let rel = format!("{FIXDIR}/{name}");
+    let src = std::fs::read_to_string(root().join(&rel)).unwrap();
+    (rel, src)
+}
+
+fn lint_fixture(name: &str) -> Vec<Finding> {
+    let (rel, src) = fixture_src(name);
+    lint_source(&rel, &src)
+}
+
+#[test]
+fn bad_panic_fixture_fires_every_panic_surface_rule() {
+    let fs = lint_fixture("bad_panic.rs");
+    for rule in ["panic-unwrap", "panic-expect", "panic-macro", "slice-index"] {
+        assert!(fs.iter().any(|f| f.rule == rule && !f.suppressed), "missing {rule}");
+    }
+    assert!(fs.iter().all(|f| f.severity == Severity::Ratchet), "panic rules are ratcheted");
+}
+
+#[test]
+fn clean_panic_fixture_is_silent() {
+    assert!(lint_fixture("clean_panic.rs").is_empty());
+}
+
+#[test]
+fn bad_lock_fixture_fires_lock_unwrap_as_an_error() {
+    let fs = lint_fixture("bad_lock.rs");
+    let hit = fs.iter().find(|f| f.rule == "lock-unwrap").expect("lock-unwrap fires");
+    assert_eq!(hit.severity, Severity::Error);
+    assert!(!hit.suppressed);
+}
+
+#[test]
+fn clean_lock_fixture_is_silent() {
+    assert!(lint_fixture("clean_lock.rs").is_empty());
+}
+
+#[test]
+fn bad_spawn_fixture_fires_bare_spawn_outside_allowed_dirs() {
+    let fs = lint_fixture("bad_spawn.rs");
+    let hit = fs.iter().find(|f| f.rule == "bare-spawn").expect("bare-spawn fires");
+    assert_eq!(hit.severity, Severity::Error);
+    // the same source under serve/ is allowed
+    let (_, src) = fixture_src("bad_spawn.rs");
+    assert!(lint_source("rust/src/serve/writer.rs", &src).is_empty());
+}
+
+#[test]
+fn clean_spawn_fixture_is_silent() {
+    assert!(lint_fixture("clean_spawn.rs").is_empty());
+}
+
+#[test]
+fn justified_pragma_suppresses_and_records_its_justification() {
+    let fs = lint_fixture("pragma_ok.rs");
+    assert!(!fs.iter().any(|f| f.rule == "bad-pragma"));
+    let u = fs.iter().find(|f| f.rule == "panic-unwrap").expect("finding still reported");
+    assert!(u.suppressed, "justified pragma suppresses");
+    assert!(u.justification.as_deref().unwrap_or("").contains("fixture"));
+    assert!(fs.iter().all(|f| f.suppressed), "nothing unsuppressed in pragma_ok.rs");
+}
+
+#[test]
+fn unjustified_or_unknown_pragmas_are_rejected_and_do_not_suppress() {
+    let fs = lint_fixture("pragma_bad.rs");
+    let bad: Vec<_> = fs.iter().filter(|f| f.rule == "bad-pragma").collect();
+    assert_eq!(bad.len(), 2, "missing justification + unknown rule");
+    assert!(bad.iter().all(|f| f.severity == Severity::Error));
+    let unwraps: Vec<_> = fs.iter().filter(|f| f.rule == "panic-unwrap").collect();
+    assert_eq!(unwraps.len(), 2);
+    assert!(unwraps.iter().all(|f| !f.suppressed), "malformed pragmas never suppress");
+}
+
+fn fixture_table(file: &'static str) -> Vec<LockDecl> {
+    vec![
+        LockDecl { file, field: "outer", rank: 1, holder: "Pair" },
+        LockDecl { file, field: "inner", rank: 2, holder: "Pair" },
+    ]
+}
+
+#[test]
+fn lock_order_fixture_pair_separates_good_from_bad_nesting() {
+    let (_, src) = fixture_src("bad_order.rs");
+    let rel: &'static str = "rust/src/lint/fixtures/bad_order.rs";
+    let lx = lexer::analyze(&src);
+    let hits = check_lock_order(&fixture_table(rel), rel, &lx.masked);
+    assert!(
+        hits.iter().any(|h| h.2.contains("violates the declared lock order")),
+        "reversed nesting must be flagged: {hits:?}"
+    );
+
+    let (_, src) = fixture_src("clean_order.rs");
+    let rel: &'static str = "rust/src/lint/fixtures/clean_order.rs";
+    let lx = lexer::analyze(&src);
+    assert!(check_lock_order(&fixture_table(rel), rel, &lx.masked).is_empty());
+}
+
+#[test]
+fn ratchet_regresses_against_empty_baseline_and_passes_against_its_own() {
+    let rel = format!("{FIXDIR}/bad_panic.rs");
+    let report = lint_paths(&root(), &[rel]).unwrap();
+    let s = gate(&report, &Baseline::default());
+    assert!(!s.passed(), "fixture findings regress an empty baseline");
+    assert!(s.regressions > 0);
+    assert_eq!(s.errors, 0, "bad_panic.rs carries only ratcheted findings");
+
+    let own = Baseline::from_report(&report);
+    assert!(gate(&report, &own).passed(), "a report passes its own snapshot");
+}
+
+#[test]
+fn baseline_round_trips_through_disk() {
+    let report = lint_paths(&root(), &[format!("{FIXDIR}/bad_panic.rs")]).unwrap();
+    let dir = std::env::temp_dir().join("pahq_lint_integration_baseline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(BASELINE_NAME);
+    Baseline::from_report(&report).save(&path).unwrap();
+    let loaded = Baseline::load(&path).unwrap();
+    assert!(gate(&report, &loaded).passed(), "saved counts reload exactly");
+
+    // the same report against a clean file's (empty) snapshot regresses
+    let clean = lint_paths(&root(), &[format!("{FIXDIR}/clean_panic.rs")]).unwrap();
+    assert!(!gate(&report, &Baseline::from_report(&clean)).passed());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn repo_is_lint_clean_at_head() {
+    let root = root();
+    let report = lint_repo(&root).unwrap();
+    let baseline = Baseline::load(&root.join(BASELINE_NAME)).unwrap();
+    let s = gate(&report, &baseline);
+    for f in report.findings.iter().filter(|f| f.severity == Severity::Error && !f.suppressed) {
+        eprintln!("error[{}] {}:{}: {}", f.rule, f.file, f.line, f.message);
+    }
+    for r in s.rows.iter().filter(|r| r.count > r.baseline) {
+        eprintln!("regression[{}] {}: {} > baseline {}", r.rule, r.file, r.count, r.baseline);
+    }
+    assert!(s.passed(), "{} errors, {} ratchet regressions at HEAD", s.errors, s.regressions);
+}
+
+#[test]
+fn hot_paths_carry_no_unsuppressed_panic_surface_beyond_slice_index() {
+    let report = lint_repo(&root()).unwrap();
+    for ((rule, file), n) in report.ratchet_counts() {
+        if rule == "slice-index" {
+            continue;
+        }
+        for dir in ["rust/src/serve/", "rust/src/load/", "rust/src/matrix/"] {
+            assert!(!file.starts_with(dir), "{n} unsuppressed {rule} in hot path {file}");
+        }
+    }
+}
+
+#[test]
+fn committed_baseline_lists_only_ratcheted_rules() {
+    let baseline = Baseline::load(&root().join(BASELINE_NAME)).unwrap();
+    assert!(!baseline.rules.is_empty(), "LINT_baseline.json missing or empty");
+    for rule_id in baseline.rules.keys() {
+        let info = rules::rule(rule_id).expect("baseline rule is registered");
+        assert_eq!(info.severity, Severity::Ratchet, "{rule_id} is not ratcheted");
+    }
+}
+
+#[test]
+fn lint_rules_doc_has_a_section_per_registered_rule() {
+    let doc = std::fs::read_to_string(root().join("docs/lint_rules.md")).unwrap();
+    for r in rules::RULES {
+        let header = format!("## `{}`", r.id);
+        assert!(doc.contains(&header), "docs/lint_rules.md missing section {header}");
+    }
+}

@@ -141,11 +141,20 @@ def lint_file(path, groups_seen, bare_ids_seen):
 
 def main(argv):
     bench_dir = argv[1] if len(argv) > 1 else DEFAULT_DIR
-    files = sorted(
-        os.path.join(bench_dir, f) for f in os.listdir(bench_dir) if f.endswith(".rs")
-    )
+    try:
+        names = os.listdir(bench_dir)
+    except OSError:
+        print(
+            f"bench-id lint FAILED: zero input files — {bench_dir!r} is not "
+            f"a readable directory (path typo? an empty input set never passes)"
+        )
+        return 1
+    files = sorted(os.path.join(bench_dir, f) for f in names if f.endswith(".rs"))
     if not files:
-        print(f"bench-id lint: no .rs files under {bench_dir}")
+        print(
+            f"bench-id lint FAILED: zero input files — no .rs files under "
+            f"{bench_dir!r} (path typo? an empty input set never passes)"
+        )
         return 1
     groups_seen = {}
     bare_ids_seen = {}

@@ -14,6 +14,12 @@ Usage:
         --serve-frames [--records docs/run_record.schema.json]
     python scripts/check_schema.py docs/load_snapshot.schema.json \
         load_snapshot.json --load
+    python scripts/check_schema.py docs/lint_findings.schema.json \
+        lint_findings.json --lint
+
+The ARTIFACT argument may be a glob (quote it so the shell does not
+expand it). Zero matching input files is always a failure with a
+one-line summary — a glob typo must not pass vacuously.
 
 ARTIFACT.json is a bare RunRecord (kind == "run_record"), a bench
 snapshot (kind == "bench_snapshot") whose "records" array holds
@@ -41,6 +47,16 @@ is additionally validated against the record schema and the completion
 gate — the CI serve-smoke job uses this to pin that the daemon streams
 real, schema-valid discovery results, not just well-shaped envelopes.
 
+With --lint, the artifact is the findings JSON a `pahq lint --json`
+run emits (docs/lint_findings.schema.json). Beyond the schema subset,
+the gate asserts the summary block agrees with the findings array
+(total / unsuppressed-error / suppressed counts), that every
+suppressed finding carries its pragma justification, and that the
+ratchet rows' regression and stale counts match the summary. It does
+NOT fail on errors or regressions — that verdict is `pahq lint`'s own
+exit code; this check pins that the artifact CI uploads is internally
+consistent either way.
+
 With --load, the artifact is the `load_snapshot.json` a `pahq load
 --json` run emits. Beyond the schema subset, the gate asserts the
 cross-field invariants the validator cannot express: the latency
@@ -53,6 +69,7 @@ the smoke-scenario snapshot before the perf floors in bench_gate.py
 --load are applied.
 """
 
+import glob
 import json
 import os
 import re
@@ -289,6 +306,62 @@ def check_load(doc, schema):
     return req["submitted"], lat["count"]
 
 
+def check_lint(doc, schema):
+    """Validate a `pahq lint --json` findings artifact plus the
+    cross-field invariants the subset validator cannot express."""
+    if doc.get("kind") != "lint_findings":
+        raise SchemaError(f"artifact kind {doc.get('kind')!r} is not 'lint_findings'")
+    check(doc, schema, "$")
+
+    summary = doc["summary"]
+    findings = doc["findings"]
+    if summary["findings"] != len(findings):
+        raise SchemaError(
+            f"$.summary.findings is {summary['findings']} but the findings "
+            f"array has {len(findings)} entries"
+        )
+    errors = sum(1 for f in findings if f["severity"] == "error" and not f["suppressed"])
+    if summary["errors"] != errors:
+        raise SchemaError(
+            f"$.summary.errors is {summary['errors']} but {errors} unsuppressed "
+            f"error finding(s) are listed"
+        )
+    suppressed = sum(1 for f in findings if f["suppressed"])
+    if summary["suppressed"] != suppressed:
+        raise SchemaError(
+            f"$.summary.suppressed is {summary['suppressed']} but {suppressed} "
+            f"finding(s) are marked suppressed"
+        )
+    for i, f in enumerate(findings):
+        if f["suppressed"] and not f.get("justification"):
+            raise SchemaError(
+                f"$.findings[{i}]: suppressed without a justification — the "
+                f"pragma contract requires one"
+            )
+    regressions = sum(1 for r in doc["ratchet"] if r["count"] > r["baseline"])
+    if summary["regressions"] != regressions:
+        raise SchemaError(
+            f"$.summary.regressions is {summary['regressions']} but the ratchet "
+            f"rows show {regressions} regression(s)"
+        )
+    stale = sum(1 for r in doc["ratchet"] if r["count"] < r["baseline"])
+    if summary["stale_baseline"] != stale:
+        raise SchemaError(
+            f"$.summary.stale_baseline is {summary['stale_baseline']} but the "
+            f"ratchet rows show {stale} stale row(s)"
+        )
+    return len(findings), errors, regressions
+
+
+def expand_artifacts(arg):
+    """The artifact paths an argument names: a glob expansion when it
+    contains glob metacharacters, else the literal path if it exists.
+    Empty means zero inputs — the caller must fail, not pass."""
+    if any(ch in arg for ch in "*?["):
+        return sorted(glob.glob(arg))
+    return [arg] if os.path.exists(arg) else []
+
+
 def check_completed(rec, where):
     """The cell-completion gate, applied to a bare record."""
     if not rec.get("n_evals"):
@@ -299,11 +372,65 @@ def check_completed(rec, where):
         )
 
 
+def check_one(path, schema, records_schema, completed, serve_frames, load_snapshot, lint):
+    if serve_frames:
+        counts = check_serve_frames(path, schema, records_schema)
+        total = sum(counts.values())
+        breakdown = ", ".join(f"{k}:{v}" for k, v in sorted(counts.items()))
+        print(f"schema check OK: {total} serve frame(s) valid ({breakdown})")
+        return
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        raise SchemaError(f"cannot read artifact {path!r}: {e}")
+    if lint:
+        n_findings, errors, regressions = check_lint(doc, schema)
+        print(
+            f"schema check OK: lint findings artifact consistent "
+            f"({n_findings} finding(s), {errors} error(s), "
+            f"{regressions} regression(s))"
+        )
+        return
+    if load_snapshot:
+        submitted, completed_reqs = check_load(doc, schema)
+        print(
+            f"schema check OK: load snapshot "
+            f"({doc['scenario']['spec']}, mode {doc['mode']}): "
+            f"{submitted} request(s) submitted, {completed_reqs} latency sample(s)"
+        )
+        return
+    if isinstance(doc, dict) and doc.get("kind") == "store_manifest":
+        n_entries = check_store(doc, schema)
+        print(
+            f"schema check OK: store manifest at generation "
+            f"{doc['generation']} with {n_entries} entr(y/ies)"
+        )
+        return
+    if isinstance(doc, dict) and doc.get("kind") == "matrix_manifest":
+        n_cells, n_records = check_matrix(doc, schema, path, records_schema, completed)
+        print(
+            f"schema check OK: matrix manifest with {n_cells} completed cell(s)"
+            + (f", {n_records} record(s) valid" if records_schema else "")
+        )
+        return
+    records = extract_records(doc)
+    if not records:
+        raise SchemaError("artifact contains no RunRecords to validate")
+    for i, rec in enumerate(records):
+        check(rec, schema, f"records[{i}]")
+        if completed:
+            check_completed(rec, f"records[{i}]")
+    version = schema["properties"]["schema_version"]["enum"][0]
+    print(f"schema check OK: {len(records)} record(s) valid against v{version}")
+
+
 def main(argv):
     records_schema_path = None
     completed = False
     serve_frames = False
     load_snapshot = False
+    lint = False
     if "--completed" in argv:
         completed = True
         argv = [a for a in argv if a != "--completed"]
@@ -313,6 +440,9 @@ def main(argv):
     if "--load" in argv:
         load_snapshot = True
         argv = [a for a in argv if a != "--load"]
+    if "--lint" in argv:
+        lint = True
+        argv = [a for a in argv if a != "--lint"]
     if "--records" in argv:
         i = argv.index("--records")
         if i + 1 >= len(argv):
@@ -329,56 +459,21 @@ def main(argv):
     if records_schema_path is not None:
         with open(records_schema_path) as f:
             records_schema = json.load(f)
-    if serve_frames:
-        try:
-            counts = check_serve_frames(argv[2], schema, records_schema)
-        except SchemaError as e:
-            print(f"schema check FAILED: {e}")
-            return 1
-        total = sum(counts.values())
-        breakdown = ", ".join(f"{k}:{v}" for k, v in sorted(counts.items()))
-        print(f"schema check OK: {total} serve frame(s) valid ({breakdown})")
-        return 0
-    with open(argv[2]) as f:
-        doc = json.load(f)
-    if load_snapshot:
-        try:
-            submitted, completed_reqs = check_load(doc, schema)
-        except SchemaError as e:
-            print(f"schema check FAILED: {e}")
-            return 1
+    artifacts = expand_artifacts(argv[2])
+    if not artifacts:
         print(
-            f"schema check OK: load snapshot "
-            f"({doc['scenario']['spec']}, mode {doc['mode']}): "
-            f"{submitted} request(s) submitted, {completed_reqs} latency sample(s)"
+            f"schema check FAILED: zero input files for {argv[2]!r} "
+            f"(glob typo? an empty input set never passes)"
         )
-        return 0
-    try:
-        if isinstance(doc, dict) and doc.get("kind") == "store_manifest":
-            n_entries = check_store(doc, schema)
-            print(
-                f"schema check OK: store manifest at generation "
-                f"{doc['generation']} with {n_entries} entr(y/ies)"
-            )
-            return 0
-        if isinstance(doc, dict) and doc.get("kind") == "matrix_manifest":
-            n_cells, n_records = check_matrix(doc, schema, argv[2], records_schema, completed)
-            print(
-                f"schema check OK: matrix manifest with {n_cells} completed cell(s)"
-                + (f", {n_records} record(s) valid" if records_schema else "")
-            )
-            return 0
-        records = extract_records(doc)
-        if not records:
-            raise SchemaError("artifact contains no RunRecords to validate")
-        for i, rec in enumerate(records):
-            check(rec, schema, f"records[{i}]")
-            if completed:
-                check_completed(rec, f"records[{i}]")
-    except SchemaError as e:
-        print(f"schema check FAILED: {e}")
         return 1
-    print(f"schema check OK: {len(records)} record(s) valid against v{schema['properties']['schema_version']['enum'][0]}")
+    for path in artifacts:
+        try:
+            check_one(
+                path, schema, records_schema, completed, serve_frames, load_snapshot, lint
+            )
+        except SchemaError as e:
+            print(f"schema check FAILED: {path}: {e}")
+            return 1
     return 0
 
 
